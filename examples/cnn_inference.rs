@@ -1,0 +1,86 @@
+//! **End-to-end driver**: a small CNN runs inference with every conv
+//! layer executed *instruction-by-instruction* on the simulated
+//! OpenEdgeCGRA (WP mapping), host-side ReLU between layers, and — when
+//! `artifacts/` exists — the same network replayed through the
+//! AOT-compiled JAX/Pallas artifact via PJRT for a three-way bit-exact
+//! check (simulator ⇔ Rust golden ⇔ XLA).
+//!
+//! This is experiment E7 in DESIGN.md; the run is recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example cnn_inference
+//! ```
+
+use openedge_cgra::cgra::{Cgra, CgraConfig};
+use openedge_cgra::conv::random_input;
+use openedge_cgra::coordinator::{golden_network, run_network, ConvNet};
+use openedge_cgra::prop::Rng;
+use openedge_cgra::runtime::{ArtifactKind, Manifest, Runtime};
+use openedge_cgra::util::fmt::Table;
+
+fn main() -> anyhow::Result<()> {
+    // Mirror the AOT CNN artifact: depth 3, c0=3, k=8, 12x12 input
+    // (see python/compile/aot.py CNN_SPEC), weights seeded 1234 exactly
+    // like runtime::verify.
+    let net = ConvNet::random(3, 3, 8, 12, 12, 1234);
+    let mut rng = Rng::new(2026);
+    let input = random_input(&net.layers[0].shape, 8, &mut rng);
+
+    println!(
+        "CNN inference on the simulated OpenEdgeCGRA — {} layers, {} MACs\n",
+        net.layers.len(),
+        net.macs()
+    );
+
+    let cgra = Cgra::new(CgraConfig::default())?;
+    let out = run_network(&cgra, &net, &input)?;
+
+    let mut table = Table::new(&[
+        "layer", "shape", "mapping", "cycles", "MAC/cycle", "energy_uJ", "launches",
+    ]);
+    for (i, (l, r)) in net.layers.iter().zip(out.layers.iter()).enumerate() {
+        table.row(vec![
+            i.to_string(),
+            l.shape.id(),
+            r.mapping.label().into(),
+            r.latency_cycles.to_string(),
+            format!("{:.3}", r.mac_per_cycle),
+            format!("{:.2}", r.energy_uj),
+            r.launches.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\ntotals: {} cycles ({:.3} MAC/cycle incl. host ReLU), {:.2} uJ",
+        out.total_cycles,
+        out.mac_per_cycle(&net),
+        out.total_energy_uj
+    );
+
+    // Check 1: Rust golden model.
+    let golden = golden_network(&net, &input)?;
+    assert_eq!(out.output.data, golden.data);
+    println!("check 1: CGRA simulator == Rust golden model ✔");
+
+    // Check 2: the AOT JAX/Pallas artifact, when built.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir)?;
+        let spec = manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Cnn)
+            .expect("cnn artifact in manifest");
+        let rt = Runtime::cpu()?;
+        let loaded = rt.load(&dir, spec)?;
+        let ws: Vec<&openedge_cgra::conv::Weights> =
+            net.layers.iter().map(|l| &l.weights).collect();
+        let xla_out = loaded.execute_cnn(&input, &ws)?;
+        assert_eq!(out.output.data, xla_out);
+        println!("check 2: CGRA simulator == XLA artifact ({}) ✔", spec.name);
+    } else {
+        println!("check 2 skipped: run `make artifacts` to enable the XLA cross-check");
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Mapping explorer: compare all four CGRA mapping strategies and the
+//! CPU baseline on a layer of your choice — the Figure 4 experiment as
+//! a library-driven tool.
+//!
+//! ```sh
+//! cargo run --release --example mapping_explorer -- [C] [K] [OX] [OY]
+//! cargo run --release --example mapping_explorer -- 16 17 16 16   # K=17 imbalance
+//! ```
+
+use openedge_cgra::cgra::{Cgra, CgraConfig};
+use openedge_cgra::conv::{conv2d, random_input, random_weights, ConvShape};
+use openedge_cgra::energy::EnergyModel;
+use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::metrics::MappingReport;
+use openedge_cgra::prop::Rng;
+use openedge_cgra::util::fmt::{bar_chart, kib, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<usize> =
+        std::env::args().skip(1).map(|a| a.parse().unwrap_or(16)).collect();
+    let get = |i: usize| args.get(i).copied().unwrap_or(16);
+    let shape = ConvShape::new3x3(get(0), get(1), get(2), get(3));
+    shape.validate()?;
+
+    let mut rng = Rng::new(7);
+    let input = random_input(&shape, 30, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
+    let golden = conv2d(&shape, &input, &weights);
+    let cgra = Cgra::new(CgraConfig::default())?;
+    let model = EnergyModel::default();
+
+    println!("exploring {shape} — {} MACs\n", shape.macs());
+    let mut table = Table::new(&[
+        "mapping", "cycles", "MAC/cycle", "energy_uJ", "power_mW", "memory", "launches", "exact",
+    ]);
+    let mut reports = Vec::new();
+    for m in Mapping::ALL {
+        let out = run_mapping(&cgra, m, &shape, &input, &weights)?;
+        let exact = out.output.data == golden.data;
+        let r = MappingReport::from_outcome(&out, &model);
+        table.row(vec![
+            m.label().into(),
+            r.latency_cycles.to_string(),
+            format!("{:.3}", r.mac_per_cycle),
+            format!("{:.2}", r.energy_uj),
+            format!("{:.2}", r.avg_power_mw),
+            kib(r.footprint_bytes),
+            r.launches.to_string(),
+            if exact { "yes".into() } else { "NO".into() },
+        ]);
+        reports.push(r);
+    }
+    print!("{}", table.render());
+
+    println!("\nMAC/cycle:");
+    print!(
+        "{}",
+        bar_chart(
+            &reports
+                .iter()
+                .map(|r| (r.mapping.label().to_string(), r.mac_per_cycle))
+                .collect::<Vec<_>>(),
+            40
+        )
+    );
+    let best = reports
+        .iter()
+        .max_by(|a, b| a.mac_per_cycle.total_cmp(&b.mac_per_cycle))
+        .unwrap();
+    println!("\nbest mapping for this layer: {}", best.mapping);
+    Ok(())
+}

@@ -1,0 +1,18 @@
+// Perf-profiling driver: run many WP launches in a tight loop.
+use openedge_cgra::cgra::{Cgra, CgraConfig, Memory};
+use openedge_cgra::conv::{random_input, random_weights, ConvShape};
+use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::prop::Rng;
+
+fn main() {
+    let shape = ConvShape::baseline();
+    let mut rng = Rng::new(1);
+    let input = random_input(&shape, 10, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
+    let cgra = Cgra::new(CgraConfig::default()).unwrap();
+    let _ = Memory::new(16, 4);
+    for _ in 0..5 {
+        let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
+        std::hint::black_box(out);
+    }
+}

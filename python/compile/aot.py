@@ -1,0 +1,110 @@
+"""AOT bridge: lower the Layer-2 JAX functions to HLO **text** artifacts
+plus a JSON manifest the Rust runtime consumes.
+
+HLO text (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit-instruction-id
+protos, while the text parser reassigns ids (see
+/opt/xla-example/README.md). Python runs ONLY here — never on the Rust
+request path.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+import jax.numpy as jnp
+
+from .model import cnn_fwd, conv_fwd
+
+# Conv artifact shapes: (C, K, OX, OY). Small ones verify cheaply; the
+# baseline is the paper's Fig. 4 layer.
+CONV_SHAPES = [
+    (2, 3, 4, 5),
+    (4, 4, 8, 8),
+    (5, 17, 4, 3),
+    (16, 16, 16, 16),
+]
+
+# CNN artifact: mirrors ConvNet::random(depth=3, c0=3, k=8, h=w=12).
+CNN_SPEC = {"c0": 3, "k": 8, "h": 12, "w": 12, "depth": 3}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_conv(c, k, ox, oy, kind):
+    fn = functools.partial(conv_fwd, kind=kind)
+    return jax.jit(fn).lower(i32(c, ox + 2, oy + 2), i32(k, c, 3, 3))
+
+
+def lower_cnn(spec, kind):
+    args = [i32(spec["c0"], spec["h"], spec["w"])]
+    c, h, w = spec["c0"], spec["h"], spec["w"]
+    for _ in range(spec["depth"]):
+        args.append(i32(spec["k"], c, 3, 3))
+        c, h, w = spec["k"], h - 2, w - 2
+    fn = functools.partial(cnn_fwd, kind=kind)
+    return jax.jit(fn).lower(*args)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": 1, "artifacts": []}
+
+    for c, k, ox, oy in CONV_SHAPES:
+        for kind in ("direct", "im2col"):
+            name = f"conv_{kind}_c{c}k{k}o{ox}x{oy}"
+            path = f"{name}.hlo.txt"
+            text = to_hlo_text(lower_conv(c, k, ox, oy, kind))
+            with open(os.path.join(args.out, path), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "file": path,
+                    "kind": "conv",
+                    "kernel": kind,
+                    "c": c,
+                    "k": k,
+                    "ox": ox,
+                    "oy": oy,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    name = "cnn_direct"
+    path = f"{name}.hlo.txt"
+    text = to_hlo_text(lower_cnn(CNN_SPEC, "direct"))
+    with open(os.path.join(args.out, path), "w") as f:
+        f.write(text)
+    manifest["artifacts"].append(
+        {"name": name, "file": path, "kind": "cnn", "kernel": "direct", **CNN_SPEC}
+    )
+    print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

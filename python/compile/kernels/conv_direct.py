@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: direct convolution, weight-stationary (WP).
+
+The TPU re-expression of the paper's winning mapping (DESIGN.md
+§Hardware-Adaptation): instead of pinning one 3x3 tap per PE, the kernel
+pins one output channel's full filter bank in VMEM while the spatial
+extent streams through — the same "maximal weight reuse, CHW layout"
+insight, tiled for a scratchpad + vector-unit machine rather than a 4x4
+torus.
+
+Grid: one program instance per output channel K. Per instance:
+  - x block:  the whole CHW input  (C x IH x IW) resident in VMEM;
+  - w block:  that channel's filters (1 x C x 3 x 3) — weight-stationary;
+  - o block:  the channel's output plane (1 x OX x OY).
+
+`interpret=True` is mandatory on this CPU-only install: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+VMEM-footprint / MXU-utilization estimates for a real TPU are in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, ox: int, oy: int):
+    """One output channel: accumulate the nine shifted tap products."""
+    x = x_ref[...]  # [C, IH, IW] in VMEM
+    w = w_ref[...]  # [1, C, 3, 3] stationary
+    acc = jnp.zeros((ox, oy), jnp.int32)
+    for dy in range(3):
+        for dx in range(3):
+            patch = x[:, dy : dy + ox, dx : dx + oy]  # [C, OX, OY]
+            taps = w[0, :, dy, dx]  # [C]
+            acc = acc + jnp.sum(patch * taps[:, None, None], axis=0, dtype=jnp.int32)
+    o_ref[0, :, :] = acc
+
+
+def conv2d_direct(x, w):
+    """Direct convolution via the weight-stationary Pallas kernel.
+
+    Args / returns as `ref.conv2d_ref` (int32, CHW in, KHW out).
+    """
+    c, ih, iw = x.shape
+    k = w.shape[0]
+    ox, oy = ih - 2, iw - 2
+    kern = functools.partial(_kernel, ox=ox, oy=oy)
+    return pl.pallas_call(
+        kern,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((c, ih, iw), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, c, 3, 3), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ox, oy), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, ox, oy), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_words(c: int, ih: int, iw: int) -> int:
+    """Estimated VMEM residency (32-bit words) of one grid step — the
+    number the real-TPU feasibility table in DESIGN.md §Perf reports."""
+    ox, oy = ih - 2, iw - 2
+    return c * ih * iw + c * 9 + ox * oy

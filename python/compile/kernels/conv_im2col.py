@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: im2col + matmul (the IP/OP paradigm).
+
+The paper's alternative implementation: trade extra memory and reorder
+work for purely sequential access and a dense matrix multiply. On TPU
+terms (DESIGN.md §Hardware-Adaptation) the patch matrix is staged into
+VMEM and fed to an MXU-shaped contraction; on this CPU-only install the
+kernel runs under `interpret=True` and the contraction is an int32
+`jnp.dot` (integer convolutions don't use the bf16 MXU path anyway —
+documented as part of the adaptation).
+
+Grid: one program instance per K-tile of output channels (tile = 16,
+mirroring the paper's 16-PE output-channel parallelism).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_TILE = 16
+
+
+def _im2col(x, ox, oy):
+    """Patch matrix [OX*OY, C*9] in (fy, fx, c) column order — the same
+    HWC-friendly order as the Rust `conv::im2col_patch`."""
+    c = x.shape[0]
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(x[:, dy : dy + ox, dx : dx + oy].reshape(c, ox * oy))
+    # [9, C, P] -> [P, 9*C] with channel fastest within each tap.
+    stacked = jnp.stack(cols, axis=0)
+    return stacked.transpose(2, 0, 1).reshape(ox * oy, 9 * c)
+
+
+def _kernel(x_ref, w_ref, o_ref, *, ox: int, oy: int):
+    """One K-tile: build the patch matrix, contract with the tile's
+    weight rows."""
+    x = x_ref[...]  # [C, IH, IW]
+    wm = w_ref[...]  # [K_TILE, 9*C] (padded rows for the last tile)
+    patches = _im2col(x, ox, oy)  # [P, 9*C]
+    out = jnp.dot(patches, wm.T, preferred_element_type=jnp.int32)  # [P, K_TILE]
+    o_ref[...] = out.T.reshape(K_TILE, ox, oy)
+
+
+def _weights_matrix(w):
+    """KCFF weights -> im2col rows [(fy*3+fx)*C + c], padded to a
+    multiple of K_TILE rows (matching the Rust `Weights::to_im2col_matrix`
+    order and the idle-lane padding of the CGRA kernels)."""
+    k, c = w.shape[0], w.shape[1]
+    wm = w.transpose(0, 2, 3, 1).reshape(k, 9 * c)  # [(fy,fx,c)] order
+    pad = (-k) % K_TILE
+    if pad:
+        wm = jnp.concatenate([wm, jnp.zeros((pad, 9 * c), jnp.int32)], axis=0)
+    return wm
+
+
+def conv2d_im2col(x, w):
+    """Im2col convolution via the Pallas kernel.
+
+    Args / returns as `ref.conv2d_ref` (int32, CHW in, KHW out).
+    """
+    c, ih, iw = x.shape
+    k = w.shape[0]
+    ox, oy = ih - 2, iw - 2
+    wm = _weights_matrix(w)
+    ktiles = wm.shape[0] // K_TILE
+    kern = functools.partial(_kernel, ox=ox, oy=oy)
+    out = pl.pallas_call(
+        kern,
+        grid=(ktiles,),
+        in_specs=[
+            pl.BlockSpec((c, ih, iw), lambda i: (0, 0, 0)),
+            pl.BlockSpec((K_TILE, 9 * c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((K_TILE, ox, oy), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ktiles * K_TILE, ox, oy), jnp.int32),
+        interpret=True,
+    )(x, wm)
+    return out[:k]
+
+
+def buffer_words(c: int, ih: int, iw: int) -> int:
+    """Estimated VMEM residency (words) of one grid step: input + patch
+    matrix + weight tile + output tile."""
+    ox, oy = ih - 2, iw - 2
+    p = ox * oy
+    return c * ih * iw + p * 9 * c + K_TILE * 9 * c + K_TILE * p

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the convolution kernels.
+
+This is the CORE correctness signal of the Python layer: both Pallas
+kernels (direct and im2col) must match it bit-exactly, and the Rust side
+verifies the CGRA simulator against the AOT artifact lowered from the
+same functions.
+
+All data is int32 with wrapping (two's-complement) semantics, matching
+the paper's 32-bit integer kernels and the Rust simulator exactly.
+"""
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w):
+    """Direct 3x3 valid convolution, stride 1, groups 1.
+
+    Args:
+      x: int32[C, IH, IW]   input, CHW.
+      w: int32[K, C, 3, 3]  weights.
+
+    Returns:
+      int32[K, OX, OY] with OX = IH-2, OY = IW-2.
+    """
+    c, ih, iw = x.shape
+    k, cw, fy, fx = w.shape
+    assert cw == c and fy == 3 and fx == 3, (x.shape, w.shape)
+    ox, oy = ih - 2, iw - 2
+    acc = jnp.zeros((k, ox, oy), jnp.int32)
+    for dy in range(3):
+        for dx in range(3):
+            patch = x[:, dy : dy + ox, dx : dx + oy]  # [C, OX, OY]
+            # [K, C] x [C, OX*OY] contraction in int32.
+            taps = w[:, :, dy, dx]  # [K, C]
+            acc = acc + jnp.einsum(
+                "kc,cxy->kxy", taps, patch, preferred_element_type=jnp.int32
+            )
+    return acc
+
+
+def relu_ref(x):
+    """Integer ReLU."""
+    return jnp.maximum(x, 0)
+
+
+def cnn_ref(x, weights, relu_mask):
+    """Reference forward pass of a conv stack.
+
+    Args:
+      x: int32[C0, H, W].
+      weights: list of int32[K, C, 3, 3].
+      relu_mask: list of bool, whether ReLU follows each layer.
+    """
+    for w, relu in zip(weights, relu_mask):
+        x = conv2d_ref(x, w)
+        if relu:
+            x = relu_ref(x)
+    return x

@@ -1,0 +1,40 @@
+"""Layer-2 JAX model: the conv layers / CNN forward pass that get
+AOT-lowered to HLO artifacts, built on the Layer-1 Pallas kernels.
+
+The CNN mirrors `coordinator::network::ConvNet` on the Rust side: a
+stack of 3x3 valid convolutions with integer ReLU between layers (none
+after the last). Weights are *arguments*, so the Rust runtime can feed
+the exact tensors it used on the CGRA simulator and compare bit-exactly.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.conv_direct import conv2d_direct
+from .kernels.conv_im2col import conv2d_im2col
+
+
+def conv_layer(x, w, kind: str = "direct"):
+    """One conv layer through the chosen Pallas kernel."""
+    if kind == "direct":
+        return conv2d_direct(x, w)
+    if kind == "im2col":
+        return conv2d_im2col(x, w)
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def cnn_fwd(x, *weights, kind: str = "direct"):
+    """Forward pass of the conv stack; ReLU after all but the last layer.
+
+    Returns a 1-tuple (the AOT bridge lowers with return_tuple=True).
+    """
+    n = len(weights)
+    for i, w in enumerate(weights):
+        x = conv_layer(x, w, kind=kind)
+        if i + 1 < n:
+            x = jnp.maximum(x, 0)
+    return (x,)
+
+
+def conv_fwd(x, w, kind: str = "direct"):
+    """Single conv layer entry point (1-tuple for the AOT bridge)."""
+    return (conv_layer(x, w, kind=kind),)

@@ -1,0 +1,95 @@
+"""Pallas kernels vs the pure-jnp oracle — exact int32 equality,
+including hypothesis sweeps over shapes and value ranges."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.conv_direct import conv2d_direct
+from compile.kernels.conv_im2col import conv2d_im2col
+from compile.kernels.ref import cnn_ref, conv2d_ref
+
+
+def rand(shape, mag, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(-mag, mag + 1, size=shape, dtype=np.int64).astype(np.int32))
+
+
+KERNELS = [("direct", conv2d_direct), ("im2col", conv2d_im2col)]
+
+
+@pytest.mark.parametrize("name,fn", KERNELS)
+@pytest.mark.parametrize(
+    "c,k,ox,oy",
+    [(1, 1, 2, 2), (2, 3, 4, 5), (4, 4, 8, 8), (5, 17, 4, 3), (16, 16, 8, 8), (16, 2, 16, 16)],
+)
+def test_kernel_matches_ref(name, fn, c, k, ox, oy):
+    x = rand((c, ox + 2, oy + 2), 50, seed=c * 131 + k * 17 + ox)
+    w = rand((k, c, 3, 3), 9, seed=k * 7 + oy)
+    got = fn(x, w)
+    want = conv2d_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want), err_msg=name)
+
+
+@pytest.mark.parametrize("name,fn", KERNELS)
+def test_kernel_wraps_like_int32(name, fn):
+    # Large magnitudes force wraparound; the kernel must wrap identically
+    # to the oracle (and to the Rust simulator's wrapping arithmetic).
+    x = rand((3, 6, 6), 2**30, seed=1)
+    w = rand((2, 3, 3, 3), 2**20, seed=2)
+    got = np.asarray(fn(x, w))
+    want = np.asarray(conv2d_ref(x, w))
+    np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    k=st.integers(1, 20),
+    ox=st.integers(1, 10),
+    oy=st.integers(1, 10),
+    mag=st.sampled_from([1, 7, 100, 10_000]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_direct_vs_ref(c, k, ox, oy, mag, seed):
+    x = rand((c, ox + 2, oy + 2), mag, seed)
+    w = rand((k, c, 3, 3), mag, seed ^ 0x5EED)
+    np.testing.assert_array_equal(
+        np.asarray(conv2d_direct(x, w)), np.asarray(conv2d_ref(x, w))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    k=st.integers(1, 20),
+    ox=st.integers(1, 10),
+    oy=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_im2col_vs_ref(c, k, ox, oy, seed):
+    x = rand((c, ox + 2, oy + 2), 60, seed)
+    w = rand((k, c, 3, 3), 9, seed ^ 0xABCD)
+    np.testing.assert_array_equal(
+        np.asarray(conv2d_im2col(x, w)), np.asarray(conv2d_ref(x, w))
+    )
+
+
+def test_kernels_agree_with_each_other():
+    x = rand((6, 10, 9), 40, seed=11)
+    w = rand((18, 6, 3, 3), 8, seed=12)
+    np.testing.assert_array_equal(
+        np.asarray(conv2d_direct(x, w)), np.asarray(conv2d_im2col(x, w))
+    )
+
+
+def test_cnn_ref_relu_chain():
+    x = rand((3, 12, 12), 10, seed=3)
+    ws = [rand((8, 3, 3, 3), 4, seed=4), rand((8, 8, 3, 3), 4, seed=5)]
+    out = cnn_ref(x, ws, [True, False])
+    assert out.shape == (8, 8, 8)
+    # Intermediate ReLU: recomputing with clamped intermediate matches.
+    mid = jnp.maximum(conv2d_ref(x, ws[0]), 0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(conv2d_ref(mid, ws[1])))

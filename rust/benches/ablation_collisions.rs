@@ -1,0 +1,69 @@
+//! Ablation: how much of WP's advantage comes from *collision avoidance*?
+//!
+//! The paper attributes WP's win to "the reduced number of memory
+//! accesses and their distribution over time [which] avoids collisions
+//! between PEs". This ablation re-runs Figure 4's latency comparison
+//! with the contention model progressively disabled:
+//!
+//!   A. calibrated model (DMA-port serialization + bank conflicts)
+//!   B. no bank conflicts (bank_penalty = 0)
+//!   C. ideal memory (mem_latency = 1, no serialization effect beyond
+//!      one cycle per access)
+//!
+//! If the paper's causal story holds, the WP-vs-lane-mapping gap should
+//! shrink dramatically from A to C.
+//!
+//! `cargo bench --bench ablation_collisions`
+
+use openedge_cgra::cgra::{Cgra, CgraConfig};
+use openedge_cgra::conv::{random_input, random_weights, ConvShape};
+use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::prop::Rng;
+use openedge_cgra::util::fmt::Table;
+
+fn main() {
+    let shape = ConvShape::baseline();
+    let mut rng = Rng::new(12);
+    let input = random_input(&shape, 20, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
+
+    let mut variants: Vec<(&str, CgraConfig)> = Vec::new();
+    variants.push(("A: calibrated (ports+banks)", CgraConfig::default()));
+    let mut b = CgraConfig::default();
+    b.bank_penalty = 0;
+    variants.push(("B: no bank conflicts", b));
+    let mut c = CgraConfig::default();
+    c.bank_penalty = 0;
+    c.mem_latency = 1;
+    variants.push(("C: ideal memory", c));
+
+    let mut table =
+        Table::new(&["contention model", "mapping", "cycles", "MAC/cycle", "vs WP"]);
+    for (label, cfg) in &variants {
+        let cgra = Cgra::new(cfg.clone()).expect("cgra");
+        let mut wp_cycles = 0u64;
+        for m in [Mapping::Wp, Mapping::OpIm2col, Mapping::OpDirect, Mapping::Ip] {
+            let out = run_mapping(&cgra, m, &shape, &input, &weights).expect("run");
+            let cycles = out.latency.total_cycles();
+            if m == Mapping::Wp {
+                wp_cycles = cycles;
+            }
+            table.row(vec![
+                label.to_string(),
+                m.label().into(),
+                cycles.to_string(),
+                format!("{:.3}", out.macs_per_cycle()),
+                format!("{:.2}x", cycles as f64 / wp_cycles as f64),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "reading the table: bank conflicts (A->B) hit the lane mappings hardest\n\
+         (their 16-PE same-address bursts collide; WP barely moves) — the paper's\n\
+         §3.1 collision story. Under ideal memory (C) a structural gap remains\n\
+         (per-pixel prologue/epilogue of the lane loops vs WP's 4-slot pipeline),\n\
+         and Im2col-IP stays flat: it is launch/CPU-im2col bound, not memory\n\
+         bound — exactly why the paper singles it out."
+    );
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Figure 3 (operation distribution / utilization of
+//! the four mapping strategies on the baseline layer) and time it.
+//!
+//! `cargo bench --bench fig3_opmix`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::cgra::CgraConfig;
+use openedge_cgra::coordinator::default_workers;
+use openedge_cgra::report;
+
+fn main() {
+    let cfg = CgraConfig::default();
+    let workers = default_workers();
+
+    // Print the figure once (the artifact of this bench)...
+    let fig = report::fig3(&cfg, workers).expect("fig3");
+    println!("{}", fig.text);
+
+    // ...then time the regeneration.
+    let b = Bench::new(1, 5);
+    b.run("report/fig3 (baseline layer, 4 mappings)", None, || {
+        report::fig3(&cfg, workers).expect("fig3")
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Figure 4 (energy vs latency, baseline layer, all
+//! five strategies) — the paper's headline experiment — and time the
+//! individual mappings.
+//!
+//! `cargo bench --bench fig4_energy_latency`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::cgra::{Cgra, CgraConfig};
+use openedge_cgra::conv::{random_input, random_weights, ConvShape};
+use openedge_cgra::coordinator::default_workers;
+use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::prop::Rng;
+use openedge_cgra::report;
+
+fn main() {
+    let cfg = CgraConfig::default();
+    let fig = report::fig4(&cfg, default_workers()).expect("fig4");
+    println!("{}", fig.text);
+
+    // Per-mapping simulation throughput (simulated MACs per host second).
+    let shape = ConvShape::baseline();
+    let mut rng = Rng::new(4);
+    let input = random_input(&shape, 30, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
+    let cgra = Cgra::new(cfg).expect("cgra");
+    let b = Bench::new(1, 3);
+    for m in Mapping::ALL {
+        b.run(
+            &format!("simulate baseline layer / {}", m.label()),
+            Some(shape.macs() as f64),
+            || run_mapping(&cgra, m, &shape, &input, &weights).expect("run"),
+        );
+    }
+}

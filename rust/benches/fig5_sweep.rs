@@ -1,0 +1,36 @@
+//! Bench: regenerate Figure 5 (hyper-parameter robustness sweep).
+//!
+//! By default runs the *quick* grid (the interesting points: baseline,
+//! the =17 imbalance points, tile multiples). Set `FIG5_FULL=1` for the
+//! paper's complete protocol (C,K ∈ 16..32 step 1 then ..144 step 16;
+//! Ox=Oy ∈ 16..32 step 1 then ..64 step 16) — minutes, not seconds.
+//!
+//! `cargo bench --bench fig5_sweep`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::cgra::CgraConfig;
+use openedge_cgra::coordinator::{default_workers, SweepSpec};
+use openedge_cgra::report;
+
+fn main() {
+    let cfg = CgraConfig::default();
+    let workers = default_workers();
+    let full = std::env::var("FIG5_FULL").map(|v| v == "1").unwrap_or(false);
+    let spec = if full { SweepSpec::paper() } else { SweepSpec::quick() };
+    println!(
+        "sweep grid: {} points x {} mappings ({})\n",
+        spec.points().len() / spec.mappings.len(),
+        spec.mappings.len(),
+        if full { "paper protocol" } else { "quick; FIG5_FULL=1 for the full grid" }
+    );
+
+    let fig = report::fig5(&cfg, &spec, workers).expect("fig5");
+    println!("{}", fig.text);
+
+    let b = Bench::new(0, if full { 1 } else { 3 });
+    b.run(
+        &format!("fig5 sweep ({} points)", spec.points().len()),
+        Some(spec.points().len() as f64),
+        || report::fig5(&cfg, &spec, workers).expect("fig5"),
+    );
+}

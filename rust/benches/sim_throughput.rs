@@ -1,0 +1,49 @@
+//! Bench: raw simulator performance — PE-slots per host second on the
+//! WP steady-state loop, plus program-generation cost. The target of
+//! the §Perf optimization pass (EXPERIMENTS.md): the Fig. 5 full sweep
+//! must complete in minutes.
+//!
+//! `cargo bench --bench sim_throughput`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::cgra::{Cgra, CgraConfig, Memory};
+use openedge_cgra::conv::{random_input, random_weights, ConvShape};
+use openedge_cgra::isa::N_PES;
+use openedge_cgra::kernels::{wp, MemLayout};
+use openedge_cgra::prop::Rng;
+
+fn main() {
+    let cfg = CgraConfig::default();
+    let shape = ConvShape::baseline();
+    let layout = MemLayout::new(&shape, 0, &cfg).expect("layout");
+    let mut rng = Rng::new(1);
+    let input = random_input(&shape, 10, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
+    let cgra = Cgra::new(cfg.clone()).expect("cgra");
+
+    // Steady-state stepping rate: one WP launch, measured in PE slots.
+    let prog = wp::build_program(&shape, &layout, wp::WpLaunch { k: 0, ci: 1, acc: true });
+    let mut mem = Memory::new(cfg.mem_words, cfg.n_banks);
+    mem.poke_slice(layout.input, &input.data);
+    mem.poke_slice(layout.weights, &weights.data);
+    let steps = cgra.run(&prog, &mut mem).expect("run").steps;
+
+    let b = Bench::default();
+    b.run(
+        &format!("executor: WP launch ({} steps x {} PEs)", steps, N_PES),
+        Some((steps * N_PES as u64) as f64),
+        || cgra.run(&prog, &mut mem).expect("run"),
+    );
+
+    // Program generation (relaunch) cost — the host-side hot path.
+    b.run("program generation: WP (per launch)", Some(1.0), || {
+        wp::build_program(&shape, &layout, wp::WpLaunch { k: 3, ci: 7, acc: true })
+    });
+
+    // Full convolution including all 256 launches.
+    b.run(
+        "end-to-end: WP baseline conv (256 launches)",
+        Some(shape.macs() as f64),
+        || wp::run(&cgra, &shape, &input, &weights).expect("conv"),
+    );
+}

@@ -1,0 +1,383 @@
+//! Text assembler for the OpenEdgeCGRA ISA.
+//!
+//! Lets tests, examples and the `cgra asm` subcommand write array
+//! programs as text instead of constructing [`crate::isa::Instr`] values
+//! by hand. Round-trips with [`crate::isa::Program::disassemble`]'s
+//! instruction syntax.
+//!
+//! # Syntax
+//!
+//! ```text
+//! ; comment (also '#' at line start)
+//! .pe 0 0              ; start the program of PE(row=0, col=0)
+//!     mov r0, #5       ; dst, src
+//! loop:
+//!     add out, r0, e   ; dst, a, b  (e = east neighbour's ROUT)
+//!     sub r0, r0, #1
+//!     bne r0, zero, loop
+//!     setaddr #100
+//!     swinc own, #1    ; store own ROUT via addr, post-increment 1
+//!     exit
+//! ```
+//!
+//! Operand tokens: `zero`, `#<imm>`, `r0`..`r3`, `own`, `n`/`s`/`e`/`w`,
+//! `addr`. Destinations: `out`, `r0`..`r3`, `out+r0`..`out+r3`, `_`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::isa::{Dir, Dst, Instr, Op, PeId, PeProgram, Program, Src};
+
+/// Assemble a full array program from text.
+pub fn assemble(text: &str) -> Result<Program> {
+    let mut prog = Program::new("asm");
+    let mut current: Option<PeId> = None;
+    // Per-PE: instructions + (slot, label) fixups + label table.
+    let mut instrs: Vec<Instr> = Vec::new();
+    let mut labels: HashMap<String, usize> = HashMap::new();
+    let mut fixups: Vec<(usize, String, usize)> = Vec::new(); // (slot, label, line_no)
+
+    let flush = |prog: &mut Program,
+                     current: &mut Option<PeId>,
+                     instrs: &mut Vec<Instr>,
+                     labels: &mut HashMap<String, usize>,
+                     fixups: &mut Vec<(usize, String, usize)>|
+     -> Result<()> {
+        if let Some(id) = current.take() {
+            for (slot, label, line) in fixups.drain(..) {
+                let target = *labels
+                    .get(&label)
+                    .with_context(|| format!("line {line}: undefined label '{label}'"))?;
+                instrs[slot].target = target as u8;
+            }
+            prog.set_pe(id, PeProgram::from_instrs(std::mem::take(instrs)));
+            labels.clear();
+        }
+        Ok(())
+    };
+
+    for (line_no, raw) in text.lines().enumerate() {
+        let line_no = line_no + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(".pe") {
+            flush(&mut prog, &mut current, &mut instrs, &mut labels, &mut fixups)?;
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            if parts.len() != 2 {
+                bail!("line {line_no}: '.pe' expects ROW COL");
+            }
+            let row: usize = parts[0].parse().with_context(|| format!("line {line_no}"))?;
+            let col: usize = parts[1].parse().with_context(|| format!("line {line_no}"))?;
+            if row >= crate::isa::ROWS || col >= crate::isa::COLS {
+                bail!("line {line_no}: PE ({row},{col}) out of range");
+            }
+            current = Some(PeId::new(row, col));
+            continue;
+        }
+        if current.is_none() {
+            bail!("line {line_no}: instruction before any '.pe' section");
+        }
+        // Leading `label:` (possibly with an instruction after it).
+        let mut body = line;
+        while let Some(idx) = body.find(':') {
+            let (head, tail) = body.split_at(idx);
+            let head = head.trim();
+            if head.is_empty() || !head.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                break;
+            }
+            if labels.insert(head.to_string(), instrs.len()).is_some() {
+                bail!("line {line_no}: duplicate label '{head}'");
+            }
+            body = tail[1..].trim();
+        }
+        if body.is_empty() {
+            continue;
+        }
+        let instr = parse_instr(body, line_no, instrs.len(), &mut fixups)?;
+        if instrs.len() >= crate::isa::PROG_CAPACITY {
+            bail!(
+                "line {line_no}: PE program exceeds {} words",
+                crate::isa::PROG_CAPACITY
+            );
+        }
+        instrs.push(instr);
+    }
+    flush(&mut prog, &mut current, &mut instrs, &mut labels, &mut fixups)?;
+    Ok(prog)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let cut = line.find(';').unwrap_or(line.len());
+    let s = &line[..cut];
+    if s.trim_start().starts_with('#') && !s.trim_start().starts_with("#-") {
+        // Allow full-line '#' comments but not to clash with immediates —
+        // immediates only appear after a mnemonic, so a line *starting*
+        // with '#' is a comment.
+        ""
+    } else {
+        s
+    }
+}
+
+fn parse_instr(
+    body: &str,
+    line: usize,
+    slot: usize,
+    fixups: &mut Vec<(usize, String, usize)>,
+) -> Result<Instr> {
+    let (mn, rest) = match body.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r.trim()),
+        None => (body, ""),
+    };
+    let ops: Vec<&str> =
+        rest.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+    let need = |n: usize| -> Result<()> {
+        if ops.len() != n {
+            bail!("line {line}: '{mn}' expects {n} operand(s), got {}", ops.len());
+        }
+        Ok(())
+    };
+
+    let alu = |op: Op, ops: &[&str]| -> Result<Instr> {
+        Ok(Instr::new(op, src(ops[1], line)?, src(ops[2], line)?, dst(ops[0], line)?))
+    };
+
+    match mn.to_ascii_lowercase().as_str() {
+        "nop" => {
+            need(0)?;
+            Ok(Instr::nop())
+        }
+        "exit" => {
+            need(0)?;
+            Ok(Instr::exit())
+        }
+        "mov" => {
+            need(2)?;
+            Ok(Instr::mov(dst(ops[0], line)?, src(ops[1], line)?))
+        }
+        "add" | "sub" | "mul" | "shl" | "shr" | "and" | "or" | "xor" | "min" | "max" => {
+            need(3)?;
+            let op = match mn {
+                "add" => Op::Add,
+                "sub" => Op::Sub,
+                "mul" => Op::Mul,
+                "shl" => Op::Shl,
+                "shr" => Op::Shr,
+                "and" => Op::And,
+                "or" => Op::Or,
+                "xor" => Op::Xor,
+                "min" => Op::Min,
+                _ => Op::Max,
+            };
+            alu(op, &ops)
+        }
+        "setaddr" => {
+            // setaddr a [, b]
+            if ops.is_empty() || ops.len() > 2 {
+                bail!("line {line}: 'setaddr' expects 1 or 2 operands");
+            }
+            let b = if ops.len() == 2 { src(ops[1], line)? } else { Src::Zero };
+            Ok(Instr::new(Op::SetAddr, src(ops[0], line)?, b, Dst::None))
+        }
+        "lw" => {
+            // lw dst, a [, b]
+            if ops.len() < 2 || ops.len() > 3 {
+                bail!("line {line}: 'lw' expects dst, a [, b]");
+            }
+            let b = if ops.len() == 3 { src(ops[2], line)? } else { Src::Zero };
+            Ok(Instr::new(Op::Lw, src(ops[1], line)?, b, dst(ops[0], line)?))
+        }
+        "lwinc" => {
+            // lwinc dst, inc_a [, inc_b]
+            if ops.len() < 2 || ops.len() > 3 {
+                bail!("line {line}: 'lwinc' expects dst, inc [, inc2]");
+            }
+            let b = if ops.len() == 3 { src(ops[2], line)? } else { Src::Zero };
+            Ok(Instr::new(Op::LwInc, src(ops[1], line)?, b, dst(ops[0], line)?))
+        }
+        "swinc" => {
+            // swinc value, inc
+            need(2)?;
+            Ok(Instr::new(Op::SwInc, src(ops[0], line)?, src(ops[1], line)?, Dst::None))
+        }
+        "swat" => {
+            // swat a [, b] — stores own ROUT at a+b
+            if ops.is_empty() || ops.len() > 2 {
+                bail!("line {line}: 'swat' expects 1 or 2 operands");
+            }
+            let b = if ops.len() == 2 { src(ops[1], line)? } else { Src::Zero };
+            Ok(Instr::new(Op::SwAt, src(ops[0], line)?, b, Dst::None))
+        }
+        "beq" | "bne" | "blt" | "bge" => {
+            need(3)?;
+            let op = match mn {
+                "beq" => Op::Beq,
+                "bne" => Op::Bne,
+                "blt" => Op::Blt,
+                _ => Op::Bge,
+            };
+            let mut i = Instr::new(op, src(ops[0], line)?, src(ops[1], line)?, Dst::None);
+            fixups.push((slot, ops[2].to_string(), line));
+            i.target = 0;
+            Ok(i)
+        }
+        "jump" => {
+            need(1)?;
+            let mut i = Instr::new(Op::Jump, Src::Zero, Src::Zero, Dst::None);
+            fixups.push((slot, ops[0].to_string(), line));
+            i.target = 0;
+            Ok(i)
+        }
+        other => bail!("line {line}: unknown mnemonic '{other}'"),
+    }
+}
+
+fn src(tok: &str, line: usize) -> Result<Src> {
+    let t = tok.to_ascii_lowercase();
+    Ok(match t.as_str() {
+        "zero" => Src::Zero,
+        "own" => Src::Own,
+        "addr" => Src::Addr,
+        "n" => Src::Neigh(Dir::North),
+        "s" => Src::Neigh(Dir::South),
+        "e" => Src::Neigh(Dir::East),
+        "w" => Src::Neigh(Dir::West),
+        "r0" => Src::Reg(0),
+        "r1" => Src::Reg(1),
+        "r2" => Src::Reg(2),
+        "r3" => Src::Reg(3),
+        _ => {
+            if let Some(imm) = t.strip_prefix('#') {
+                Src::Imm(
+                    imm.parse::<i32>()
+                        .with_context(|| format!("line {line}: bad immediate '{tok}'"))?,
+                )
+            } else {
+                bail!("line {line}: unknown operand '{tok}'")
+            }
+        }
+    })
+}
+
+fn dst(tok: &str, line: usize) -> Result<Dst> {
+    let t = tok.to_ascii_lowercase();
+    Ok(match t.as_str() {
+        "out" => Dst::Out,
+        "_" => Dst::None,
+        "r0" => Dst::Reg(0),
+        "r1" => Dst::Reg(1),
+        "r2" => Dst::Reg(2),
+        "r3" => Dst::Reg(3),
+        "out+r0" => Dst::Both(0),
+        "out+r1" => Dst::Both(1),
+        "out+r2" => Dst::Both(2),
+        "out+r3" => Dst::Both(3),
+        _ => bail!("line {line}: unknown destination '{tok}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::{Cgra, CgraConfig, Memory};
+
+    #[test]
+    fn assemble_and_run_countdown() {
+        let prog = assemble(
+            r#"
+            ; sum 1..=4 on one PE
+            .pe 2 1
+                mov r0, #4
+                mov r1, zero
+            loop:
+                add r1, r1, r0
+                sub r0, r0, #1
+                bne r0, zero, loop
+                mov out, r1
+                swat #33
+                exit
+            "#,
+        )
+        .unwrap();
+        let mut mem = Memory::new(128, 4);
+        let cgra = Cgra::new(CgraConfig::functional()).unwrap();
+        cgra.run(&prog, &mut mem).unwrap();
+        assert_eq!(mem.peek(33), 10);
+    }
+
+    #[test]
+    fn multi_pe_neighbour_program() {
+        let prog = assemble(
+            r#"
+            .pe 0 0
+                mov out, #21
+                nop
+                nop
+            .pe 0 1
+                nop
+                add out, w, w    ; 21 + 21 read from west
+                swat #5
+                exit
+            "#,
+        )
+        .unwrap();
+        let mut mem = Memory::new(64, 4);
+        let cgra = Cgra::new(CgraConfig::functional()).unwrap();
+        cgra.run(&prog, &mut mem).unwrap();
+        assert_eq!(mem.peek(5), 42);
+    }
+
+    #[test]
+    fn lwinc_swinc_syntax() {
+        let prog = assemble(
+            r#"
+            .pe 3 3
+                setaddr #10
+                lwinc r0, #1
+                lwinc r1, #1
+                add out, r0, r1
+                setaddr #20
+                swinc own, #1
+                exit
+            "#,
+        )
+        .unwrap();
+        let mut mem = Memory::new(64, 4);
+        mem.poke(10, 40);
+        mem.poke(11, 2);
+        let cgra = Cgra::new(CgraConfig::functional()).unwrap();
+        cgra.run(&prog, &mut mem).unwrap();
+        assert_eq!(mem.peek(20), 42);
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = assemble(".pe 0 0\n  frob r0, r1\n").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        let e = assemble(".pe 9 0\n").unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        let e = assemble(".pe 0 0\n bne r0, zero, nowhere\n").unwrap_err().to_string();
+        assert!(e.contains("undefined label"), "{e}");
+        let e = assemble("add out, r0, r1\n").unwrap_err().to_string();
+        assert!(e.contains("before any"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_label_rejected() {
+        let e = assemble(".pe 0 0\nx:\nx:\n nop\n").unwrap_err().to_string();
+        assert!(e.contains("duplicate label"), "{e}");
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut text = String::from(".pe 0 0\n");
+        for _ in 0..33 {
+            text.push_str(" nop\n");
+        }
+        let e = assemble(&text).unwrap_err().to_string();
+        assert!(e.contains("exceeds"), "{e}");
+    }
+}

@@ -1,0 +1,166 @@
+//! Minimal benchmarking harness (no `criterion` offline).
+//!
+//! Warmup + fixed-sample measurement with median / MAD / min reporting,
+//! plus optional throughput units. Used by the `rust/benches/*.rs`
+//! targets (built with `harness = false`).
+
+use std::time::Instant;
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark label.
+    pub name: String,
+    /// Seconds per iteration, sorted ascending.
+    pub samples: Vec<f64>,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// Median seconds/iteration.
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 0.5)
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let m = self.median();
+        let mut d: Vec<f64> = self.samples.iter().map(|s| (s - m).abs()).collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&d, 0.5)
+    }
+
+    /// Fastest sample.
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+
+    /// criterion-like one-line report.
+    pub fn report(&self) -> String {
+        let med = self.median();
+        let mut line = format!(
+            "{:<40} time: [{} {} {}]",
+            self.name,
+            fmt_time(self.min()),
+            fmt_time(med),
+            fmt_time(percentile(&self.samples, 0.95)),
+        );
+        if let Some(items) = self.items_per_iter {
+            line.push_str(&format!("  thrpt: {}/s", crate::util::fmt::si(items / med)));
+        }
+        line
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner: warms up then measures `samples` timed iterations.
+pub struct Bench {
+    warmup_iters: usize,
+    samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Env overrides let `make bench` trade accuracy for speed.
+        let warmup = env_usize("BENCH_WARMUP", 3);
+        let samples = env_usize("BENCH_SAMPLES", 10);
+        Bench { warmup_iters: warmup, samples }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl Bench {
+    /// Runner with explicit warmup/sample counts.
+    pub fn new(warmup_iters: usize, samples: usize) -> Bench {
+        Bench { warmup_iters, samples }
+    }
+
+    /// Measure `f`, printing the report line. `items` (optional) enables
+    /// throughput output. Returns the measurement for further use.
+    pub fn run<T>(
+        &self,
+        name: &str,
+        items: Option<f64>,
+        mut f: impl FnMut() -> T,
+    ) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement { name: name.to_string(), samples, items_per_iter: items };
+        println!("{}", m.report());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new(0, 3);
+        let m = b.run("spin", Some(1000.0), || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.median() >= 0.0);
+        assert!(m.report().contains("spin"));
+        assert!(m.report().contains("thrpt"));
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+    }
+
+    #[test]
+    fn time_formats() {
+        assert!(fmt_time(2.0).contains('s'));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Timing/geometry configuration of the simulated OpenEdgeCGRA instance.
+
+/// Cycle-level timing knobs.
+///
+/// The defaults are the *calibrated* values used throughout the
+/// reproduction; see `energy::calibration` and EXPERIMENTS.md for how they
+/// were anchored to the paper's reported numbers (WP ≈ 0.6 MAC/cycle on
+/// the baseline layer, CPU-only ≈ 9.9× slower, non-WP mappings dominated
+/// by DMA-port collisions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CgraConfig {
+    /// Cycles for a plain ALU / mov / control slot.
+    pub alu_latency: u64,
+    /// Cycles for a 32-bit multiply (the ALU is not pipelined for
+    /// multiplies on this class of low-power PE).
+    pub mul_latency: u64,
+    /// Cycles for one memory access through a column DMA port, conflict
+    /// free. Multiple accesses from the same column in one step serialize
+    /// at this cost each (the port is the paper's collision point).
+    pub mem_latency: u64,
+    /// Extra cycles per additional access hitting the same memory bank in
+    /// the same step (cross-column interleave conflicts).
+    pub bank_penalty: u64,
+    /// Number of word-interleaved memory banks in the subsystem.
+    pub n_banks: usize,
+    /// Memory size in 32-bit words. The paper's HEEPsilon instance has
+    /// 512 KiB of RAM = 131072 words; the Fig. 5 sweep is bounded by it.
+    pub mem_words: usize,
+    /// Cycles charged per CGRA kernel launch (CPU writes the
+    /// configuration registers and triggers execution). The paper counts
+    /// this overhead — it is what sinks Im2col-IP, which launches per
+    /// output position.
+    pub launch_overhead: u64,
+    /// Cycles to load the instruction memories before the *first* launch.
+    /// The paper neglects it ("the time required to load the instructions
+    /// before the first iteration is neglected"), so the default is 0,
+    /// but it is kept as a knob for ablations.
+    pub instruction_load_overhead: u64,
+    /// Safety watchdog: abort execution after this many steps.
+    pub max_steps: u64,
+}
+
+impl Default for CgraConfig {
+    fn default() -> Self {
+        CgraConfig {
+            alu_latency: 1,
+            mul_latency: 1,
+            mem_latency: 4,
+            bank_penalty: 1,
+            n_banks: 4,
+            mem_words: 512 * 1024 / 4,
+            launch_overhead: 24,
+            instruction_load_overhead: 0,
+            max_steps: 2_000_000_000,
+        }
+    }
+}
+
+impl CgraConfig {
+    /// Configuration with contention disabled — used by unit tests that
+    /// check functional behaviour only, and by the `no-collision`
+    /// ablation bench.
+    pub fn functional() -> Self {
+        CgraConfig {
+            alu_latency: 1,
+            mul_latency: 1,
+            mem_latency: 1,
+            bank_penalty: 0,
+            launch_overhead: 0,
+            ..Default::default()
+        }
+    }
+
+    /// Validate invariants (positive latencies, at least one bank, …).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.alu_latency >= 1, "alu_latency must be >= 1");
+        anyhow::ensure!(self.mul_latency >= 1, "mul_latency must be >= 1");
+        anyhow::ensure!(self.mem_latency >= 1, "mem_latency must be >= 1");
+        anyhow::ensure!(self.n_banks >= 1, "need at least one memory bank");
+        anyhow::ensure!(self.mem_words >= 1, "need a non-empty memory");
+        anyhow::ensure!(self.max_steps >= 1, "watchdog must allow progress");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        CgraConfig::default().validate().unwrap();
+        CgraConfig::functional().validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = CgraConfig::default();
+        c.n_banks = 0;
+        assert!(c.validate().is_err());
+        let mut c = CgraConfig::default();
+        c.mem_latency = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn default_memory_is_512kib() {
+        assert_eq!(CgraConfig::default().mem_words * 4, 512 * 1024);
+    }
+}

@@ -1,0 +1,163 @@
+//! The shared memory subsystem seen through the column DMA ports.
+//!
+//! Word-addressed int32 memory with word-interleaved banking. The
+//! simulator models *timing* contention in the executor; this module
+//! provides storage, bounds checking and access accounting (the access
+//! counts feed the energy model — the paper identifies memory dynamic
+//! energy as the discriminator between mapping strategies).
+
+use anyhow::{bail, Result};
+
+/// Running totals of memory traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// Number of word loads served.
+    pub loads: u64,
+    /// Number of word stores served.
+    pub stores: u64,
+}
+
+impl MemStats {
+    /// Total accesses (loads + stores).
+    pub fn total(&self) -> u64 {
+        self.loads + self.stores
+    }
+}
+
+/// Word-addressed memory with access accounting.
+#[derive(Clone, Debug)]
+pub struct Memory {
+    words: Vec<i32>,
+    n_banks: usize,
+    stats: MemStats,
+}
+
+impl Memory {
+    /// Zero-initialized memory of `words` 32-bit words with `n_banks`
+    /// word-interleaved banks.
+    pub fn new(words: usize, n_banks: usize) -> Self {
+        assert!(n_banks >= 1);
+        Memory { words: vec![0; words], n_banks, stats: MemStats::default() }
+    }
+
+    /// Size in words.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// True if zero-sized (never for valid configs).
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Bank index serving word address `addr` (word-interleaved).
+    pub fn bank_of(&self, addr: usize) -> usize {
+        addr % self.n_banks
+    }
+
+    /// Load the word at `addr` (counted).
+    pub fn load(&mut self, addr: i32) -> Result<i32> {
+        let a = self.check(addr, "load")?;
+        self.stats.loads += 1;
+        Ok(self.words[a])
+    }
+
+    /// Store `value` at `addr` (counted).
+    pub fn store(&mut self, addr: i32, value: i32) -> Result<()> {
+        let a = self.check(addr, "store")?;
+        self.stats.stores += 1;
+        self.words[a] = value;
+        Ok(())
+    }
+
+    /// Uncounted read (host/debug access — e.g. the test harness reading
+    /// back results; does not pollute the energy accounting).
+    pub fn peek(&self, addr: usize) -> i32 {
+        self.words[addr]
+    }
+
+    /// Uncounted slice read starting at `addr`.
+    pub fn peek_slice(&self, addr: usize, len: usize) -> &[i32] {
+        &self.words[addr..addr + len]
+    }
+
+    /// Uncounted write (host initialization — the paper's CPU preloads
+    /// inputs/weights before launching; that traffic is charged separately
+    /// by the host-side cost models, not here).
+    pub fn poke(&mut self, addr: usize, value: i32) {
+        self.words[addr] = value;
+    }
+
+    /// Uncounted bulk write starting at `addr`.
+    pub fn poke_slice(&mut self, addr: usize, values: &[i32]) {
+        self.words[addr..addr + values.len()].copy_from_slice(values);
+    }
+
+    /// Access totals so far.
+    pub fn stats(&self) -> MemStats {
+        self.stats
+    }
+
+    /// Reset the access counters (e.g. between measured regions).
+    pub fn reset_stats(&mut self) {
+        self.stats = MemStats::default();
+    }
+
+    fn check(&self, addr: i32, what: &str) -> Result<usize> {
+        if addr < 0 || addr as usize >= self.words.len() {
+            bail!(
+                "CGRA {what} out of bounds: word address {addr} (memory is {} words)",
+                self.words.len()
+            );
+        }
+        Ok(addr as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_store_roundtrip_and_counts() {
+        let mut m = Memory::new(16, 4);
+        m.store(3, -7).unwrap();
+        assert_eq!(m.load(3).unwrap(), -7);
+        assert_eq!(m.stats(), MemStats { loads: 1, stores: 1 });
+    }
+
+    #[test]
+    fn peek_poke_uncounted() {
+        let mut m = Memory::new(16, 4);
+        m.poke(0, 42);
+        assert_eq!(m.peek(0), 42);
+        m.poke_slice(4, &[1, 2, 3]);
+        assert_eq!(m.peek_slice(4, 3), &[1, 2, 3]);
+        assert_eq!(m.stats().total(), 0);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut m = Memory::new(8, 4);
+        assert!(m.load(-1).is_err());
+        assert!(m.load(8).is_err());
+        assert!(m.store(8, 0).is_err());
+        assert!(m.load(7).is_ok());
+    }
+
+    #[test]
+    fn bank_interleave() {
+        let m = Memory::new(16, 4);
+        assert_eq!(m.bank_of(0), 0);
+        assert_eq!(m.bank_of(5), 1);
+        assert_eq!(m.bank_of(7), 3);
+    }
+
+    #[test]
+    fn reset_stats_zeroes() {
+        let mut m = Memory::new(8, 2);
+        m.store(0, 1).unwrap();
+        m.reset_stats();
+        assert_eq!(m.stats().total(), 0);
+    }
+}

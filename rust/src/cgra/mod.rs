@@ -1,0 +1,16 @@
+//! Cycle-level simulator of the OpenEdgeCGRA 4×4 array.
+//!
+//! The paper's hardware substrate, rebuilt in software: PEs with private
+//! 32-word programs, torus neighbour links, per-column program counters
+//! and DMA ports, a banked memory subsystem, and the timing model whose
+//! collision behaviour drives the paper's Figure 4/5 results.
+
+mod config;
+mod exec;
+mod memory;
+mod stats;
+
+pub use config::CgraConfig;
+pub use exec::{column_pes, Cgra, StepTrace};
+pub use memory::{MemStats, Memory};
+pub use stats::{OpClass, RunStats};

@@ -1,0 +1,201 @@
+//! Execution statistics: per-PE operation mix, utilization, cycle counts.
+//!
+//! These feed Figure 3 (operation distribution / PE utilization) and the
+//! latency / MAC-per-cycle numbers of Figures 4 and 5.
+
+use crate::isa::{Op, N_PES};
+
+use super::memory::MemStats;
+
+/// Operation classes as plotted in the paper's Figure 3.
+///
+/// Classification convention (see `kernels::common`): generators use
+/// `Add` **only** for genuine accumulation ("sum"); index arithmetic uses
+/// `Sub`/`SetAddr`/auto-increment addressing, so the static class of an
+/// instruction matches its semantic role.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, PartialOrd, Ord, Hash)]
+pub enum OpClass {
+    /// Memory loads (`lw`, `lwinc`).
+    Load,
+    /// Multiplications.
+    Mul,
+    /// Accumulations (`add`).
+    Sum,
+    /// Memory stores (`swinc`, `swat`).
+    Store,
+    /// Index updates, moves, branches, comparisons, `exit` — the paper's
+    /// "Other".
+    Other,
+    /// Idle slots.
+    Nop,
+}
+
+impl OpClass {
+    /// Number of classes (array sizing).
+    pub const COUNT: usize = 6;
+
+    /// All classes in plot order.
+    pub const ALL: [OpClass; 6] =
+        [OpClass::Load, OpClass::Mul, OpClass::Sum, OpClass::Store, OpClass::Other, OpClass::Nop];
+
+    /// Static classification of an op.
+    pub fn classify(op: Op) -> OpClass {
+        match op {
+            Op::Lw | Op::LwInc => OpClass::Load,
+            Op::Mul => OpClass::Mul,
+            Op::Add => OpClass::Sum,
+            Op::SwInc | Op::SwAt => OpClass::Store,
+            Op::Nop => OpClass::Nop,
+            _ => OpClass::Other,
+        }
+    }
+
+    /// Plot label.
+    pub fn label(self) -> &'static str {
+        match self {
+            OpClass::Load => "load",
+            OpClass::Mul => "mul",
+            OpClass::Sum => "sum",
+            OpClass::Store => "store",
+            OpClass::Other => "other",
+            OpClass::Nop => "nop",
+        }
+    }
+
+    /// Index into `[u64; COUNT]` histograms.
+    pub fn idx(self) -> usize {
+        match self {
+            OpClass::Load => 0,
+            OpClass::Mul => 1,
+            OpClass::Sum => 2,
+            OpClass::Store => 3,
+            OpClass::Other => 4,
+            OpClass::Nop => 5,
+        }
+    }
+}
+
+/// Statistics of one CGRA run (one launch).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunStats {
+    /// Instruction steps executed (array-wide issue slots).
+    pub steps: u64,
+    /// Cycles consumed (≥ steps; includes multi-cycle ops + contention).
+    pub cycles: u64,
+    /// Cycles lost to DMA-port / bank contention specifically (the
+    /// "collision" cost the paper attributes the WP advantage to).
+    pub contention_cycles: u64,
+    /// Per-PE op-class histogram, indexed `[pe][OpClass::idx()]`.
+    pub op_mix: Vec<[u64; OpClass::COUNT]>,
+    /// Memory traffic issued by the array during the run.
+    pub mem: MemStats,
+    /// Whether the program terminated via `exit` (vs the watchdog).
+    pub exited: bool,
+}
+
+impl RunStats {
+    /// Fresh zeroed stats.
+    pub fn new() -> Self {
+        RunStats { op_mix: vec![[0; OpClass::COUNT]; N_PES], ..Default::default() }
+    }
+
+    /// Total slots of a class across all PEs.
+    pub fn class_total(&self, c: OpClass) -> u64 {
+        self.op_mix.iter().map(|h| h[c.idx()]).sum()
+    }
+
+    /// Total issue slots (steps × 16 when all PEs have code).
+    pub fn total_slots(&self) -> u64 {
+        self.op_mix.iter().map(|h| h.iter().sum::<u64>()).sum()
+    }
+
+    /// PE utilization as in Fig. 3: fraction of non-nop slots.
+    pub fn utilization(&self) -> f64 {
+        let total = self.total_slots();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.class_total(OpClass::Nop) as f64 / total as f64
+    }
+
+    /// Class fractions in plot order (sums to 1 for non-empty runs).
+    pub fn class_fractions(&self) -> [f64; OpClass::COUNT] {
+        let total = self.total_slots().max(1) as f64;
+        let mut out = [0.0; OpClass::COUNT];
+        for c in OpClass::ALL {
+            out[c.idx()] = self.class_total(c) as f64 / total;
+        }
+        out
+    }
+
+    /// Merge another run into this one (host drivers aggregate the
+    /// per-launch stats of a full convolution).
+    pub fn merge(&mut self, other: &RunStats) {
+        self.steps += other.steps;
+        self.cycles += other.cycles;
+        self.contention_cycles += other.contention_cycles;
+        if self.op_mix.len() < other.op_mix.len() {
+            self.op_mix.resize(other.op_mix.len(), [0; OpClass::COUNT]);
+        }
+        for (a, b) in self.op_mix.iter_mut().zip(other.op_mix.iter()) {
+            for k in 0..OpClass::COUNT {
+                a[k] += b[k];
+            }
+        }
+        self.mem.loads += other.mem.loads;
+        self.mem.stores += other.mem.stores;
+        self.exited &= other.exited;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_matches_convention() {
+        assert_eq!(OpClass::classify(Op::LwInc), OpClass::Load);
+        assert_eq!(OpClass::classify(Op::Add), OpClass::Sum);
+        assert_eq!(OpClass::classify(Op::Sub), OpClass::Other);
+        assert_eq!(OpClass::classify(Op::SwInc), OpClass::Store);
+        assert_eq!(OpClass::classify(Op::Mul), OpClass::Mul);
+        assert_eq!(OpClass::classify(Op::Nop), OpClass::Nop);
+        assert_eq!(OpClass::classify(Op::Bne), OpClass::Other);
+    }
+
+    #[test]
+    fn utilization_and_fractions() {
+        let mut s = RunStats::new();
+        s.op_mix[0][OpClass::Mul.idx()] = 3;
+        s.op_mix[0][OpClass::Nop.idx()] = 1;
+        assert!((s.utilization() - 0.75).abs() < 1e-12);
+        let f = s.class_fractions();
+        assert!((f[OpClass::Mul.idx()] - 0.75).abs() < 1e-12);
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RunStats::new();
+        a.exited = true;
+        a.steps = 2;
+        a.cycles = 5;
+        let mut b = RunStats::new();
+        b.exited = true;
+        b.steps = 3;
+        b.cycles = 7;
+        b.op_mix[4][OpClass::Load.idx()] = 2;
+        b.mem.loads = 2;
+        a.merge(&b);
+        assert_eq!(a.steps, 5);
+        assert_eq!(a.cycles, 12);
+        assert_eq!(a.class_total(OpClass::Load), 2);
+        assert_eq!(a.mem.loads, 2);
+        assert!(a.exited);
+    }
+
+    #[test]
+    fn empty_stats_have_zero_utilization() {
+        assert_eq!(RunStats::new().utilization(), 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Golden direct convolution — the bit-exact functional reference every
+//! mapping kernel and the XLA artifact are checked against.
+
+use super::shape::ConvShape;
+use super::tensor::{TensorChw, Weights};
+
+/// Direct 2-D convolution (valid padding, stride 1, groups 1), wrapping
+/// int32 arithmetic. Input CHW `(C, ih, iw)`, weights `(K, C, Fy, Fx)`,
+/// output CHW `(K, Ox, Oy)`.
+pub fn conv2d(shape: &ConvShape, input: &TensorChw, weights: &Weights) -> TensorChw {
+    assert_eq!(input.c, shape.c, "input channel mismatch");
+    assert_eq!(input.h, shape.ih(), "input height mismatch");
+    assert_eq!(input.w, shape.iw(), "input width mismatch");
+    assert_eq!(weights.k, shape.k);
+    assert_eq!(weights.c, shape.c);
+    assert_eq!(weights.fy, shape.fx, "weights fy must equal shape fx (rows)");
+    assert_eq!(weights.fx, shape.fy, "weights fx must equal shape fy (cols)");
+
+    let mut out = TensorChw::zeros(shape.k, shape.ox, shape.oy);
+    for k in 0..shape.k {
+        for y in 0..shape.ox {
+            for x in 0..shape.oy {
+                let mut acc: i32 = 0;
+                for c in 0..shape.c {
+                    for fy in 0..shape.fx {
+                        for fx in 0..shape.fy {
+                            let iv = input.at(c, y + fy, x + fx);
+                            let wv = weights.at(k, c, fy, fx);
+                            acc = acc.wrapping_add(iv.wrapping_mul(wv));
+                        }
+                    }
+                }
+                out.set(k, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+
+    /// Identity kernel (single 1 at the filter center) copies the
+    /// interior of the input.
+    #[test]
+    fn identity_kernel() {
+        let s = ConvShape::new3x3(1, 1, 3, 3);
+        let mut rng = Rng::new(1);
+        let input = TensorChw::random(1, 5, 5, 50, &mut rng);
+        let mut w = Weights::zeros(1, 1, 3, 3);
+        w.set(0, 0, 1, 1, 1);
+        let out = conv2d(&s, &input, &w);
+        for y in 0..3 {
+            for x in 0..3 {
+                assert_eq!(out.at(0, y, x), input.at(0, y + 1, x + 1));
+            }
+        }
+    }
+
+    /// All-ones kernel computes 3×3 box sums.
+    #[test]
+    fn box_sum_kernel() {
+        let s = ConvShape::new3x3(1, 1, 2, 2);
+        let input = TensorChw::from_vec(1, 4, 4, (1..=16).collect());
+        let w = Weights::from_vec(1, 1, 3, 3, vec![1; 9]);
+        let out = conv2d(&s, &input, &w);
+        // Top-left 3x3 sum of 1..=16 grid: rows 1,2,3 / 5,6,7 / 9,10,11.
+        assert_eq!(out.at(0, 0, 0), 1 + 2 + 3 + 5 + 6 + 7 + 9 + 10 + 11);
+        assert_eq!(out.at(0, 1, 1), 6 + 7 + 8 + 10 + 11 + 12 + 14 + 15 + 16);
+    }
+
+    /// Linearity: conv(a+b) = conv(a) + conv(b) (wrapping).
+    #[test]
+    fn linear_in_input() {
+        let s = ConvShape::new3x3(2, 2, 3, 4);
+        let mut rng = Rng::new(7);
+        let a = TensorChw::random(2, 5, 6, 100, &mut rng);
+        let b = TensorChw::random(2, 5, 6, 100, &mut rng);
+        let w = Weights::random(2, 2, 3, 3, 10, &mut rng);
+        let mut ab = a.clone();
+        for (x, y) in ab.data.iter_mut().zip(b.data.iter()) {
+            *x = x.wrapping_add(*y);
+        }
+        let ca = conv2d(&s, &a, &w);
+        let cb = conv2d(&s, &b, &w);
+        let cab = conv2d(&s, &ab, &w);
+        for i in 0..cab.data.len() {
+            assert_eq!(cab.data[i], ca.data[i].wrapping_add(cb.data[i]));
+        }
+    }
+
+    /// Channels accumulate: a 2-channel conv equals the sum of two
+    /// 1-channel convs.
+    #[test]
+    fn channels_accumulate() {
+        let s2 = ConvShape::new3x3(2, 1, 3, 3);
+        let s1 = ConvShape::new3x3(1, 1, 3, 3);
+        let mut rng = Rng::new(9);
+        let input = TensorChw::random(2, 5, 5, 20, &mut rng);
+        let w = Weights::random(1, 2, 3, 3, 5, &mut rng);
+        let full = conv2d(&s2, &input, &w);
+
+        let in0 = TensorChw::from_vec(1, 5, 5, input.data[..25].to_vec());
+        let in1 = TensorChw::from_vec(1, 5, 5, input.data[25..].to_vec());
+        let w0 = Weights::from_vec(1, 1, 3, 3, w.data[..9].to_vec());
+        let w1 = Weights::from_vec(1, 1, 3, 3, w.data[9..].to_vec());
+        let c0 = conv2d(&s1, &in0, &w0);
+        let c1 = conv2d(&s1, &in1, &w1);
+        for i in 0..full.data.len() {
+            assert_eq!(full.data[i], c0.data[i].wrapping_add(c1.data[i]));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let s = ConvShape::new3x3(1, 1, 3, 3);
+        let input = TensorChw::zeros(1, 4, 5); // wrong height
+        let w = Weights::zeros(1, 1, 3, 3);
+        let _ = conv2d(&s, &input, &w);
+    }
+}

@@ -1,0 +1,137 @@
+//! The Image-to-Column transformation (paper §2.2).
+//!
+//! Turns each 3-D input patch (C × Fx × Fy) into a 1-D vector so the
+//! convolution becomes a vector–matrix product with sequential memory
+//! accesses. Following the paper (citing CMSIS-NN), the reorder buffer is
+//! built from the **HWC** layout; the patch vector order is
+//! `(fy, fx, c)` — consecutive channels innermost — which makes each
+//! patch a gather of `Fx·Fy` contiguous C-element runs.
+
+use super::shape::ConvShape;
+use super::tensor::TensorHwc;
+
+/// Number of elements in one im2col patch vector: C × Fx × Fy.
+pub fn patch_len(shape: &ConvShape) -> usize {
+    shape.c * shape.fx * shape.fy
+}
+
+/// Write the patch vector for output pixel `(oy_row, ox_col)` —
+/// i.e. input window rows `oy_row..oy_row+Fx`, cols `ox_col..ox_col+Fy` —
+/// into `out` (must have length [`patch_len`]).
+///
+/// Returns the number of *CPU element copies* performed (= patch_len);
+/// the host cost model charges im2col creation per copied element.
+pub fn im2col_patch(
+    shape: &ConvShape,
+    input: &TensorHwc,
+    oy_row: usize,
+    ox_col: usize,
+    out: &mut [i32],
+) -> usize {
+    assert_eq!(out.len(), patch_len(shape));
+    let mut idx = 0;
+    for fy in 0..shape.fx {
+        for fx in 0..shape.fy {
+            let base = input.offset(oy_row + fy, ox_col + fx, 0);
+            out[idx..idx + shape.c].copy_from_slice(&input.data[base..base + shape.c]);
+            idx += shape.c;
+        }
+    }
+    idx
+}
+
+/// Build the full im2col matrix for all output pixels (row-major over
+/// output pixels, each row one patch). Used by tests and the golden
+/// im2col matmul; the mapping kernels stage patches incrementally the way
+/// the paper describes (per output position for IP, per 16-output strip
+/// for OP).
+pub fn im2col_full(shape: &ConvShape, input: &TensorHwc) -> Vec<i32> {
+    let pl = patch_len(shape);
+    let mut m = vec![0i32; shape.ox * shape.oy * pl];
+    for y in 0..shape.ox {
+        for x in 0..shape.oy {
+            let row = y * shape.oy + x;
+            im2col_patch(shape, input, y, x, &mut m[row * pl..(row + 1) * pl]);
+        }
+    }
+    m
+}
+
+/// Golden im2col convolution: im2col matrix × weight matrix, wrapping
+/// int32. Output is CHW-ordered `(K, Ox, Oy)` flattened, matching
+/// [`super::golden::conv2d`]'s layout so results compare directly.
+pub fn conv2d_im2col(shape: &ConvShape, input: &TensorHwc, w_matrix: &[i32]) -> Vec<i32> {
+    let pl = patch_len(shape);
+    assert_eq!(w_matrix.len(), shape.k * pl);
+    let patches = im2col_full(shape, input);
+    let n_pix = shape.ox * shape.oy;
+    let mut out = vec![0i32; shape.k * n_pix];
+    for k in 0..shape.k {
+        let wrow = &w_matrix[k * pl..(k + 1) * pl];
+        for p in 0..n_pix {
+            let patch = &patches[p * pl..(p + 1) * pl];
+            let mut acc = 0i32;
+            for i in 0..pl {
+                acc = acc.wrapping_add(patch[i].wrapping_mul(wrow[i]));
+            }
+            out[k * n_pix + p] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::golden::conv2d;
+    use crate::conv::tensor::{random_input, random_weights};
+    use crate::prop::Rng;
+
+    #[test]
+    fn patch_is_window_in_hwc_order() {
+        let s = ConvShape::new3x3(2, 1, 2, 2);
+        let mut input = TensorHwc::zeros(4, 4, 2);
+        // Tag every element with a unique value y*100 + x*10 + c.
+        for y in 0..4 {
+            for x in 0..4 {
+                for c in 0..2 {
+                    input.set(y, x, c, (y * 100 + x * 10 + c) as i32);
+                }
+            }
+        }
+        let mut patch = vec![0; patch_len(&s)];
+        im2col_patch(&s, &input, 1, 1, &mut patch);
+        // First run: window element (fy=0, fx=0) = input (1,1): 110, 111.
+        assert_eq!(&patch[..2], &[110, 111]);
+        // Element (fy=2, fx=1) = input (3,2): index (2*3+1)*2 = 14.
+        assert_eq!(&patch[14..16], &[320, 321]);
+    }
+
+    #[test]
+    fn im2col_conv_matches_direct_conv() {
+        let s = ConvShape::new3x3(3, 4, 5, 6);
+        let mut rng = Rng::new(42);
+        let input = random_input(&s, 50, &mut rng);
+        let weights = random_weights(&s, 9, &mut rng);
+        let direct = conv2d(&s, &input, &weights);
+        let via_im2col = conv2d_im2col(&s, &input.to_hwc(), &weights.to_im2col_matrix());
+        assert_eq!(direct.data, via_im2col);
+    }
+
+    #[test]
+    fn full_matrix_dimensions() {
+        let s = ConvShape::new3x3(2, 1, 3, 4);
+        let input = TensorHwc::zeros(s.ih(), s.iw(), s.c);
+        let m = im2col_full(&s, &input);
+        assert_eq!(m.len(), 3 * 4 * patch_len(&s));
+    }
+
+    #[test]
+    fn patch_copy_count_charged() {
+        let s = ConvShape::new3x3(4, 1, 2, 2);
+        let input = TensorHwc::zeros(s.ih(), s.iw(), s.c);
+        let mut patch = vec![0; patch_len(&s)];
+        let copied = im2col_patch(&s, &input, 0, 0, &mut patch);
+        assert_eq!(copied, 36);
+    }
+}

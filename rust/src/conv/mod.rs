@@ -1,0 +1,11 @@
+//! Convolution substrate: shapes, tensors/layouts, golden models, im2col.
+
+mod golden;
+mod im2col;
+mod shape;
+mod tensor;
+
+pub use golden::conv2d;
+pub use im2col::{conv2d_im2col, im2col_full, im2col_patch, patch_len};
+pub use shape::ConvShape;
+pub use tensor::{random_input, random_weights, TensorChw, TensorHwc, Weights};

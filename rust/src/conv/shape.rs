@@ -1,0 +1,139 @@
+//! Convolution layer hyper-parameters (the paper's sweep axes).
+
+use anyhow::{ensure, Result};
+
+/// Shape of a 2D convolution, groups = 1, stride 1, no padding, as in
+/// the paper (§2.2: "we always consider convolutions with groups = 1 and
+/// a filter of dimension Fx × Fy = 3 × 3").
+///
+/// Naming follows the paper: `C` input channels, `K` output channels,
+/// `Ox` output rows, `Oy` output columns, `Fx`/`Fy` filter rows/columns.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ConvShape {
+    /// Input channels (C).
+    pub c: usize,
+    /// Output channels (K).
+    pub k: usize,
+    /// Output rows (Ox).
+    pub ox: usize,
+    /// Output columns (Oy).
+    pub oy: usize,
+    /// Filter rows (Fx).
+    pub fx: usize,
+    /// Filter columns (Fy).
+    pub fy: usize,
+}
+
+impl ConvShape {
+    /// The paper's baseline layer: C = K = Ox = Oy = 16, 3×3 filter.
+    pub fn baseline() -> ConvShape {
+        ConvShape { c: 16, k: 16, ox: 16, oy: 16, fx: 3, fy: 3 }
+    }
+
+    /// A 3×3 convolution with the given C/K/Ox/Oy.
+    pub fn new3x3(c: usize, k: usize, ox: usize, oy: usize) -> ConvShape {
+        ConvShape { c, k, ox, oy, fx: 3, fy: 3 }
+    }
+
+    /// Input rows (valid convolution): Ox + Fx − 1.
+    pub fn ih(&self) -> usize {
+        self.ox + self.fx - 1
+    }
+
+    /// Input columns: Oy + Fy − 1.
+    pub fn iw(&self) -> usize {
+        self.oy + self.fy - 1
+    }
+
+    /// Total multiply-accumulate operations of the layer.
+    pub fn macs(&self) -> u64 {
+        (self.c * self.k * self.ox * self.oy * self.fx * self.fy) as u64
+    }
+
+    /// Input tensor elements (C × ih × iw).
+    pub fn input_elems(&self) -> usize {
+        self.c * self.ih() * self.iw()
+    }
+
+    /// Weight tensor elements (K × C × Fx × Fy).
+    pub fn weight_elems(&self) -> usize {
+        self.k * self.c * self.fx * self.fy
+    }
+
+    /// Output tensor elements (K × Ox × Oy).
+    pub fn output_elems(&self) -> usize {
+        self.k * self.ox * self.oy
+    }
+
+    /// Baseline memory footprint in bytes (int32): inputs + weights +
+    /// outputs. Mapping strategies add their reorder buffers on top (see
+    /// `metrics::memory_footprint`).
+    pub fn base_bytes(&self) -> usize {
+        4 * (self.input_elems() + self.weight_elems() + self.output_elems())
+    }
+
+    /// Validity for the kernels in this repo.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.c >= 1 && self.k >= 1, "need at least one channel");
+        ensure!(self.ox >= 1 && self.oy >= 1, "need a non-empty output");
+        ensure!(
+            self.fx == 3 && self.fy == 3,
+            "the paper's kernels target 3x3 filters (got {}x{})",
+            self.fx,
+            self.fy
+        );
+        Ok(())
+    }
+
+    /// Short display id, e.g. `c16k16o16x16`.
+    pub fn id(&self) -> String {
+        format!("c{}k{}o{}x{}", self.c, self.k, self.ox, self.oy)
+    }
+}
+
+impl std::fmt::Display for ConvShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "C={} K={} Ox={} Oy={} F={}x{}",
+            self.c, self.k, self.ox, self.oy, self.fx, self.fy
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_paper() {
+        let s = ConvShape::baseline();
+        assert_eq!((s.c, s.k, s.ox, s.oy), (16, 16, 16, 16));
+        assert_eq!(s.ih(), 18);
+        assert_eq!(s.iw(), 18);
+        assert_eq!(s.macs(), 16 * 16 * 16 * 16 * 9);
+    }
+
+    #[test]
+    fn element_counts() {
+        let s = ConvShape::new3x3(2, 3, 4, 5);
+        assert_eq!(s.input_elems(), 2 * 6 * 7);
+        assert_eq!(s.weight_elems(), 3 * 2 * 9);
+        assert_eq!(s.output_elems(), 3 * 4 * 5);
+        assert_eq!(s.base_bytes(), 4 * (84 + 54 + 60));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(ConvShape::baseline().validate().is_ok());
+        assert!(ConvShape { fx: 5, ..ConvShape::baseline() }.validate().is_err());
+        assert!(ConvShape { c: 0, ..ConvShape::baseline() }.validate().is_err());
+    }
+
+    #[test]
+    fn display_and_id() {
+        let s = ConvShape::baseline();
+        assert_eq!(s.id(), "c16k16o16x16");
+        assert!(s.to_string().contains("F=3x3"));
+    }
+}

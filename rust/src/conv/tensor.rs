@@ -1,0 +1,282 @@
+//! Int32 tensors with the two data layouts the paper compares.
+//!
+//! - **CHW** (channel-major): the layout that minimizes addressing
+//!   overhead for *direct* convolution (paper §2.2, citing CMSIS-NN);
+//!   used by `WP` and `OP-direct`.
+//! - **HWC** (channel-last): the layout the Im2col reorder buffer is
+//!   cheapest to build from; used by `IP` and `OP-im2col`.
+//!
+//! All data is `i32` (the paper's kernels use 32-bit integer data) and
+//! all arithmetic downstream is wrapping, so the simulator, the Rust
+//! golden model and the XLA artifact agree bit-exactly.
+
+use crate::prop::Rng;
+
+use super::shape::ConvShape;
+
+/// Dense 3-D int32 tensor in **CHW** order: index `(c, y, x)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorChw {
+    /// Channels.
+    pub c: usize,
+    /// Rows.
+    pub h: usize,
+    /// Columns.
+    pub w: usize,
+    /// Row-major storage, length `c*h*w`.
+    pub data: Vec<i32>,
+}
+
+impl TensorChw {
+    /// Zero-filled tensor.
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        TensorChw { c, h, w, data: vec![0; c * h * w] }
+    }
+
+    /// From existing data (length-checked).
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), c * h * w, "CHW data length mismatch");
+        TensorChw { c, h, w, data }
+    }
+
+    /// Linear offset of `(ci, y, x)`.
+    #[inline]
+    pub fn offset(&self, ci: usize, y: usize, x: usize) -> usize {
+        debug_assert!(ci < self.c && y < self.h && x < self.w);
+        (ci * self.h + y) * self.w + x
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn at(&self, ci: usize, y: usize, x: usize) -> i32 {
+        self.data[self.offset(ci, y, x)]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, ci: usize, y: usize, x: usize, v: i32) {
+        let o = self.offset(ci, y, x);
+        self.data[o] = v;
+    }
+
+    /// Convert to HWC.
+    pub fn to_hwc(&self) -> TensorHwc {
+        let mut out = TensorHwc::zeros(self.h, self.w, self.c);
+        for ci in 0..self.c {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    out.set(y, x, ci, self.at(ci, y, x));
+                }
+            }
+        }
+        out
+    }
+
+    /// Deterministic random tensor with bounded magnitude (|v| ≤ `mag`).
+    pub fn random(c: usize, h: usize, w: usize, mag: i32, rng: &mut Rng) -> Self {
+        let data =
+            (0..c * h * w).map(|_| rng.range_i64(-mag as i64, mag as i64) as i32).collect();
+        TensorChw { c, h, w, data }
+    }
+}
+
+/// Dense 3-D int32 tensor in **HWC** order: index `(y, x, c)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorHwc {
+    /// Rows.
+    pub h: usize,
+    /// Columns.
+    pub w: usize,
+    /// Channels.
+    pub c: usize,
+    /// Storage, length `h*w*c`.
+    pub data: Vec<i32>,
+}
+
+impl TensorHwc {
+    /// Zero-filled tensor.
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        TensorHwc { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    /// Linear offset of `(y, x, ci)`.
+    #[inline]
+    pub fn offset(&self, y: usize, x: usize, ci: usize) -> usize {
+        debug_assert!(y < self.h && x < self.w && ci < self.c);
+        (y * self.w + x) * self.c + ci
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ci: usize) -> i32 {
+        self.data[self.offset(y, x, ci)]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ci: usize, v: i32) {
+        let o = self.offset(y, x, ci);
+        self.data[o] = v;
+    }
+
+    /// Convert to CHW.
+    pub fn to_chw(&self) -> TensorChw {
+        let mut out = TensorChw::zeros(self.c, self.h, self.w);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for ci in 0..self.c {
+                    out.set(ci, y, x, self.at(y, x, ci));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Convolution weights in **K-C-Fy-Fx** order (the CHW-direct layout):
+/// index `(k, c, fy, fx)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Weights {
+    /// Output channels.
+    pub k: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Filter rows.
+    pub fy: usize,
+    /// Filter columns.
+    pub fx: usize,
+    /// Storage, length `k*c*fy*fx`.
+    pub data: Vec<i32>,
+}
+
+impl Weights {
+    /// Zero-filled weights.
+    pub fn zeros(k: usize, c: usize, fy: usize, fx: usize) -> Self {
+        Weights { k, c, fy, fx, data: vec![0; k * c * fy * fx] }
+    }
+
+    /// From existing data (length-checked).
+    pub fn from_vec(k: usize, c: usize, fy: usize, fx: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), k * c * fy * fx, "weight data length mismatch");
+        Weights { k, c, fy, fx, data }
+    }
+
+    /// Linear offset of `(k, c, fy, fx)`.
+    #[inline]
+    pub fn offset(&self, ki: usize, ci: usize, fyi: usize, fxi: usize) -> usize {
+        debug_assert!(ki < self.k && ci < self.c && fyi < self.fy && fxi < self.fx);
+        ((ki * self.c + ci) * self.fy + fyi) * self.fx + fxi
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn at(&self, ki: usize, ci: usize, fyi: usize, fxi: usize) -> i32 {
+        self.data[self.offset(ki, ci, fyi, fxi)]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, ki: usize, ci: usize, fyi: usize, fxi: usize, v: i32) {
+        let o = self.offset(ki, ci, fyi, fxi);
+        self.data[o] = v;
+    }
+
+    /// Deterministic random weights with |v| ≤ `mag`.
+    pub fn random(k: usize, c: usize, fy: usize, fx: usize, mag: i32, rng: &mut Rng) -> Self {
+        let data =
+            (0..k * c * fy * fx).map(|_| rng.range_i64(-mag as i64, mag as i64) as i32).collect();
+        Weights { k, c, fy, fx, data }
+    }
+
+    /// Re-order into the Im2col weight matrix `[K][(fy*Fx+fx)*C + c]`,
+    /// matching the HWC patch vector order of
+    /// [`super::im2col::im2col_patch`].
+    pub fn to_im2col_matrix(&self) -> Vec<i32> {
+        let cols = self.c * self.fy * self.fx;
+        let mut m = vec![0i32; self.k * cols];
+        for ki in 0..self.k {
+            for fyi in 0..self.fy {
+                for fxi in 0..self.fx {
+                    for ci in 0..self.c {
+                        let col = (fyi * self.fx + fxi) * self.c + ci;
+                        m[ki * cols + col] = self.at(ki, ci, fyi, fxi);
+                    }
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Deterministic random input for a conv shape (CHW). Magnitudes are
+/// bounded so that a full 3×3×C accumulation cannot overflow i32 even in
+/// the CPU oracle; exactness tests rely on wrapping semantics anyway.
+pub fn random_input(shape: &ConvShape, mag: i32, rng: &mut Rng) -> TensorChw {
+    TensorChw::random(shape.c, shape.ih(), shape.iw(), mag, rng)
+}
+
+/// Deterministic random weights for a conv shape.
+pub fn random_weights(shape: &ConvShape, mag: i32, rng: &mut Rng) -> Weights {
+    Weights::random(shape.k, shape.c, shape.fy, shape.fx, mag, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chw_indexing_roundtrip() {
+        let mut t = TensorChw::zeros(2, 3, 4);
+        t.set(1, 2, 3, 42);
+        assert_eq!(t.at(1, 2, 3), 42);
+        assert_eq!(t.offset(0, 0, 1), 1);
+        assert_eq!(t.offset(1, 0, 0), 12);
+    }
+
+    #[test]
+    fn hwc_indexing_roundtrip() {
+        let mut t = TensorHwc::zeros(3, 4, 2);
+        t.set(2, 3, 1, 7);
+        assert_eq!(t.at(2, 3, 1), 7);
+        assert_eq!(t.offset(0, 0, 1), 1);
+        assert_eq!(t.offset(0, 1, 0), 2);
+    }
+
+    #[test]
+    fn layout_conversion_is_inverse() {
+        let mut rng = Rng::new(11);
+        let t = TensorChw::random(3, 5, 4, 100, &mut rng);
+        assert_eq!(t.to_hwc().to_chw(), t);
+    }
+
+    #[test]
+    fn weights_offsets() {
+        let mut w = Weights::zeros(2, 3, 3, 3);
+        w.set(1, 2, 0, 1, 9);
+        assert_eq!(w.at(1, 2, 0, 1), 9);
+        assert_eq!(w.offset(0, 0, 0, 1), 1);
+        assert_eq!(w.offset(0, 1, 0, 0), 9);
+        assert_eq!(w.offset(1, 0, 0, 0), 27);
+    }
+
+    #[test]
+    fn im2col_matrix_order_matches_patch_order() {
+        // Weight value at (k=0, c, fy, fx) must land at column
+        // (fy*3+fx)*C + c.
+        let c = 2;
+        let mut w = Weights::zeros(1, c, 3, 3);
+        w.set(0, 1, 2, 0, 55); // c=1, fy=2, fx=0 -> col (2*3+0)*2+1 = 13
+        let m = w.to_im2col_matrix();
+        assert_eq!(m[13], 55);
+        assert_eq!(m.len(), 18);
+    }
+
+    #[test]
+    fn random_is_bounded_and_deterministic() {
+        let s = ConvShape::new3x3(2, 2, 4, 4);
+        let a = random_input(&s, 8, &mut Rng::new(3));
+        let b = random_input(&s, 8, &mut Rng::new(3));
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|&v| (-8..=8).contains(&v)));
+    }
+}

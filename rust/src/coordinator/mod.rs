@@ -1,0 +1,10 @@
+//! Orchestration layer: worker pool, the Figure-5 sweep, and the
+//! layer-wise CNN runner.
+
+pub mod network;
+pub mod pool;
+pub mod sweep;
+
+pub use network::{golden_network, run_network, ConvLayer, ConvNet, NetworkOutcome};
+pub use pool::{default_workers, run_jobs};
+pub use sweep::{auto_mapping, paper_axis_values, run_sweep, Axis, SweepPoint, SweepRow, SweepSpec};

@@ -1,0 +1,226 @@
+//! Layer-wise CNN runner: chains convolutions through the CGRA with
+//! host-side ReLU between layers — the end-to-end driver behind
+//! `examples/cnn_inference.rs`.
+//!
+//! Every conv layer executes on the simulated CGRA with its chosen
+//! mapping (by default the paper's WP); activations run on the CPU cost
+//! model. The runtime verifier can replay the same network through the
+//! AOT-compiled JAX/Pallas artifact and compare bit-exactly.
+
+use anyhow::{ensure, Result};
+
+use crate::cgra::Cgra;
+use crate::conv::{ConvShape, TensorChw, Weights};
+use crate::energy::EnergyModel;
+use crate::kernels::{run_mapping, Mapping};
+use crate::metrics::MappingReport;
+use crate::prop::Rng;
+
+/// One convolutional layer of the network.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    /// Layer shape (input channels must match the previous layer's K).
+    pub shape: ConvShape,
+    /// Mapping strategy for this layer.
+    pub mapping: Mapping,
+    /// Layer weights.
+    pub weights: Weights,
+    /// Apply ReLU (host-side) after the convolution.
+    pub relu: bool,
+}
+
+/// A feed-forward stack of conv layers.
+#[derive(Clone, Debug)]
+pub struct ConvNet {
+    /// Layers, in execution order.
+    pub layers: Vec<ConvLayer>,
+}
+
+impl ConvNet {
+    /// Validate inter-layer shape compatibility.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "network has no layers");
+        for w in self.layers.windows(2) {
+            let (a, b) = (&w[0].shape, &w[1].shape);
+            ensure!(
+                a.k == b.c,
+                "layer output channels K={} do not match next layer C={}",
+                a.k,
+                b.c
+            );
+            ensure!(
+                a.ox == b.ih() && a.oy == b.iw(),
+                "layer output {}x{} does not match next layer input {}x{}",
+                a.ox,
+                a.oy,
+                b.ih(),
+                b.iw()
+            );
+        }
+        Ok(())
+    }
+
+    /// Build a small random CNN: `depth` 3×3 conv+ReLU layers, starting
+    /// from a `c0 × (h, w)` input, all with `k` output channels.
+    /// Deterministic in `seed`.
+    pub fn random(depth: usize, c0: usize, k: usize, h: usize, w: usize, seed: u64) -> ConvNet {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        let (mut c, mut ih, mut iw) = (c0, h, w);
+        for d in 0..depth {
+            let shape = ConvShape::new3x3(c, k, ih - 2, iw - 2);
+            let weights = crate::conv::random_weights(&shape, 4, &mut rng);
+            layers.push(ConvLayer {
+                shape,
+                mapping: super::sweep::auto_mapping(&shape),
+                weights,
+                relu: d + 1 < depth, // no activation after the last layer
+            });
+            c = k;
+            ih = shape.ox;
+            iw = shape.oy;
+        }
+        ConvNet { layers }
+    }
+
+    /// Total MACs across layers.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.shape.macs()).sum()
+    }
+}
+
+/// Per-layer and aggregate results of one network inference.
+#[derive(Clone, Debug)]
+pub struct NetworkOutcome {
+    /// Per-layer metric rows.
+    pub layers: Vec<MappingReport>,
+    /// Final feature map.
+    pub output: TensorChw,
+    /// Total latency in cycles (conv + host ReLU).
+    pub total_cycles: u64,
+    /// Total energy, µJ.
+    pub total_energy_uj: f64,
+    /// Cycles spent in host-side activations.
+    pub relu_cycles: u64,
+}
+
+impl NetworkOutcome {
+    /// Aggregate MAC/cycle of the whole network.
+    pub fn mac_per_cycle(&self, net: &ConvNet) -> f64 {
+        net.macs() as f64 / self.total_cycles.max(1) as f64
+    }
+}
+
+/// Host-side ReLU cost: one load + compare + store per element.
+const RELU_CYCLES_PER_ELEM: u64 = 3;
+
+/// Run the network on the CGRA.
+pub fn run_network(cgra: &Cgra, net: &ConvNet, input: &TensorChw) -> Result<NetworkOutcome> {
+    net.validate()?;
+    let model = EnergyModel::default();
+    let mut x = input.clone();
+    let mut layers = Vec::new();
+    let mut total_cycles = 0u64;
+    let mut total_energy = 0.0f64;
+    let mut relu_cycles_total = 0u64;
+
+    for layer in &net.layers {
+        let out = run_mapping(cgra, layer.mapping, &layer.shape, &x, &layer.weights)?;
+        let report = MappingReport::from_outcome(&out, &model);
+        total_cycles += report.latency_cycles;
+        total_energy += report.energy_uj;
+        x = out.output;
+        if layer.relu {
+            for v in x.data.iter_mut() {
+                *v = (*v).max(0);
+            }
+            let relu_cycles = RELU_CYCLES_PER_ELEM * x.data.len() as u64;
+            relu_cycles_total += relu_cycles;
+            total_cycles += relu_cycles;
+            // ReLU energy: CPU active + memory traffic.
+            let t_s = relu_cycles as f64 / model.clock_hz;
+            total_energy += (model.p_cpu_active_mw + model.p_mem_static_mw) * t_s * 1e3
+                + 2.0 * x.data.len() as f64 * model.e_mem_access_pj * 1e-6;
+        }
+        layers.push(report);
+    }
+
+    Ok(NetworkOutcome {
+        layers,
+        output: x,
+        total_cycles,
+        total_energy_uj: total_energy,
+        relu_cycles: relu_cycles_total,
+    })
+}
+
+/// Golden CPU reference of the same network (wrapping int32 + ReLU),
+/// for verification.
+pub fn golden_network(net: &ConvNet, input: &TensorChw) -> Result<TensorChw> {
+    net.validate()?;
+    let mut x = input.clone();
+    for layer in &net.layers {
+        x = crate::conv::conv2d(&layer.shape, &x, &layer.weights);
+        if layer.relu {
+            for v in x.data.iter_mut() {
+                *v = (*v).max(0);
+            }
+        }
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::conv::random_input;
+
+    #[test]
+    fn random_net_validates_and_chains() {
+        let net = ConvNet::random(3, 3, 8, 12, 12, 7);
+        net.validate().unwrap();
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.layers[0].shape.c, 3);
+        assert_eq!(net.layers[1].shape.c, 8);
+        assert_eq!(net.layers[1].shape.ih(), net.layers[0].shape.ox);
+        assert!(net.layers[0].relu && !net.layers[2].relu);
+    }
+
+    #[test]
+    fn cgra_network_matches_golden() {
+        let net = ConvNet::random(2, 2, 4, 8, 8, 11);
+        let mut rng = Rng::new(5);
+        let input = random_input(&net.layers[0].shape, 8, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run_network(&cgra, &net, &input).unwrap();
+        let golden = golden_network(&net, &input).unwrap();
+        assert_eq!(out.output.data, golden.data);
+        assert_eq!(out.layers.len(), 2);
+        assert!(out.total_cycles > 0 && out.total_energy_uj > 0.0);
+        assert!(out.relu_cycles > 0);
+    }
+
+    #[test]
+    fn mismatched_layers_rejected() {
+        let mut net = ConvNet::random(2, 2, 4, 8, 8, 1);
+        net.layers[1].shape.c = 5; // break the channel chain
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut net = ConvNet::random(1, 1, 1, 4, 4, 2);
+        net.layers[0].relu = true;
+        // All-negative weights force negative pre-activations.
+        for w in net.layers[0].weights.data.iter_mut() {
+            *w = -3;
+        }
+        let shape = net.layers[0].shape;
+        let input = TensorChw::from_vec(1, 4, 4, vec![1; 16]);
+        assert_eq!(shape.ih(), 4);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run_network(&cgra, &net, &input).unwrap();
+        assert!(out.output.data.iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,96 @@
+//! Scoped worker pool over `std::thread` (no tokio in the offline
+//! environment — the workload is CPU-bound simulation, so OS threads are
+//! the right tool regardless).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` across up to `workers` threads, preserving result order.
+///
+/// Each job runs at most once; panics inside jobs propagate after all
+/// workers finish (fail-fast is deliberately avoided so sweep results
+/// stay complete).
+pub fn run_jobs<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    // Jobs behind a mutex of Options: each is taken exactly once.
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
+                let out = job();
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not complete"))
+        .collect()
+}
+
+/// Default worker count: available parallelism, capped to keep the
+/// memory footprint of concurrent simulations reasonable.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..100).map(|i| move || i * 2).collect();
+        let out = run_jobs(8, jobs);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        use std::sync::atomic::AtomicU32;
+        static COUNT: AtomicU32 = AtomicU32::new(0);
+        let jobs: Vec<_> = (0..50)
+            .map(|_| {
+                || {
+                    COUNT.fetch_add(1, Ordering::SeqCst);
+                    ()
+                }
+            })
+            .collect();
+        run_jobs(4, jobs);
+        assert_eq!(COUNT.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(run_jobs(1, vec![|| 7]), vec![7]);
+        assert!(run_jobs::<i32, fn() -> i32>(4, vec![]).is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = run_jobs(64, vec![|| 1, || 2]);
+        assert_eq!(out, vec![1, 2]);
+    }
+}

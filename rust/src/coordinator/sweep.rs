@@ -1,0 +1,267 @@
+//! The Figure-5 hyper-parameter sweep, parallelized over a worker pool.
+//!
+//! Paper §3.2: "We vary Ox and Oy in [16, 64], C and K in [16, 144],
+//! increasing by 1 the dimension of each parameter until 32, and then in
+//! steps of 16 … We limit our search to the maximum memory available in
+//! the system (512 kiB)." Each axis is varied from the baseline
+//! C = K = Ox = Oy = 16; every point runs every mapping; oversized
+//! points are recorded as skipped, exactly like the paper's bound.
+
+use anyhow::Result;
+
+use crate::cgra::{Cgra, CgraConfig};
+use crate::conv::{random_input, random_weights, ConvShape};
+use crate::energy::EnergyModel;
+use crate::kernels::{run_mapping, Mapping};
+use crate::metrics::MappingReport;
+use crate::prop::Rng;
+
+use super::pool::run_jobs;
+
+/// Which hyper-parameter an axis point varies.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Axis {
+    /// Input channels C.
+    C,
+    /// Output channels K.
+    K,
+    /// Spatial size (Ox = Oy varied together, as in Fig. 5's plots).
+    Spatial,
+}
+
+impl Axis {
+    /// Axis label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Axis::C => "C",
+            Axis::K => "K",
+            Axis::Spatial => "OxOy",
+        }
+    }
+}
+
+/// The paper's sweep values for one axis: step 1 up to 32, then step 16.
+pub fn paper_axis_values(lo: usize, mid: usize, hi: usize, step: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = (lo..=mid).collect();
+    let mut x = mid + step;
+    while x <= hi {
+        v.push(x);
+        x += step;
+    }
+    v
+}
+
+/// Sweep specification.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Values taken by C (other params at baseline).
+    pub c_values: Vec<usize>,
+    /// Values taken by K.
+    pub k_values: Vec<usize>,
+    /// Values taken by Ox = Oy.
+    pub spatial_values: Vec<usize>,
+    /// Mappings to run at every point.
+    pub mappings: Vec<Mapping>,
+    /// Input-data magnitude (values in [-mag, mag]).
+    pub mag: i32,
+    /// Base RNG seed; each point derives its own deterministic seed.
+    pub seed: u64,
+}
+
+impl SweepSpec {
+    /// The paper's full Figure-5 sweep.
+    pub fn paper() -> SweepSpec {
+        SweepSpec {
+            c_values: paper_axis_values(16, 32, 144, 16),
+            k_values: paper_axis_values(16, 32, 144, 16),
+            spatial_values: paper_axis_values(16, 32, 64, 16),
+            mappings: Mapping::ALL.to_vec(),
+            mag: 20,
+            seed: 0xf15_5eed,
+        }
+    }
+
+    /// A reduced sweep for quick runs/tests: the interesting points only
+    /// (baseline, the ±1 imbalance points, tile multiples, extremes).
+    pub fn quick() -> SweepSpec {
+        SweepSpec {
+            c_values: vec![16, 17, 32, 48],
+            k_values: vec![16, 17, 32, 48],
+            spatial_values: vec![16, 32],
+            mappings: Mapping::ALL.to_vec(),
+            mag: 20,
+            seed: 0xf15_5eed,
+        }
+    }
+
+    /// All (axis, value, shape, mapping) points.
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let base = ConvShape::baseline();
+        let mut shapes: Vec<(Axis, usize, ConvShape)> = Vec::new();
+        for &c in &self.c_values {
+            shapes.push((Axis::C, c, ConvShape { c, ..base }));
+        }
+        for &k in &self.k_values {
+            shapes.push((Axis::K, k, ConvShape { k, ..base }));
+        }
+        for &s in &self.spatial_values {
+            shapes.push((Axis::Spatial, s, ConvShape { ox: s, oy: s, ..base }));
+        }
+        let mut points = Vec::new();
+        for (axis, value, shape) in shapes {
+            for &mapping in &self.mappings {
+                points.push(SweepPoint { axis, value, shape, mapping });
+            }
+        }
+        points
+    }
+}
+
+/// One sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    /// Varied axis.
+    pub axis: Axis,
+    /// Axis value.
+    pub value: usize,
+    /// Full layer shape.
+    pub shape: ConvShape,
+    /// Strategy.
+    pub mapping: Mapping,
+}
+
+/// One sweep result row.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    /// The point.
+    pub point: SweepPoint,
+    /// Metrics, or `None` with a reason when skipped/failed.
+    pub report: Option<MappingReport>,
+    /// Why the point was skipped (memory bound), if it was.
+    pub skipped: Option<String>,
+}
+
+/// Run the sweep on `workers` threads. Deterministic: the per-point data
+/// seed depends only on the shape.
+pub fn run_sweep(spec: &SweepSpec, cfg: &CgraConfig, workers: usize) -> Result<Vec<SweepRow>> {
+    let model = EnergyModel::default();
+    let points = spec.points();
+    let jobs: Vec<_> = points
+        .into_iter()
+        .map(|point| {
+            let cfg = cfg.clone();
+            move || -> SweepRow {
+                let shape = point.shape;
+                let mut rng = Rng::new(
+                    spec.seed ^ (shape.c as u64) << 32
+                        ^ (shape.k as u64) << 16
+                        ^ (shape.ox as u64) << 8
+                        ^ shape.oy as u64,
+                );
+                let input = random_input(&shape, spec.mag, &mut rng);
+                let weights = random_weights(&shape, spec.mag, &mut rng);
+                let cgra = match Cgra::new(cfg) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        return SweepRow { point, report: None, skipped: Some(e.to_string()) }
+                    }
+                };
+                match run_mapping(&cgra, point.mapping, &shape, &input, &weights) {
+                    Ok(out) => SweepRow {
+                        point,
+                        report: Some(MappingReport::from_outcome(&out, &model)),
+                        skipped: None,
+                    },
+                    Err(e) => {
+                        // Memory-bound points are the expected skip class
+                        // (the paper's 512 KiB limit).
+                        SweepRow { point, report: None, skipped: Some(e.to_string()) }
+                    }
+                }
+            }
+        })
+        .collect();
+    Ok(run_jobs(workers, jobs))
+}
+
+/// The paper's conclusion as an operator: pick the mapping for a shape.
+/// WP dominates every hyper-parameter combination in the paper ("WP
+/// remains the best approach for any hyperparameter combination"), so
+/// the chooser returns WP; the Fig. 5 sweep bench re-verifies that claim
+/// against the simulator on every run.
+pub fn auto_mapping(_shape: &ConvShape) -> Mapping {
+    Mapping::Wp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_axis_values_match_protocol() {
+        let v = paper_axis_values(16, 32, 144, 16);
+        assert_eq!(v[0], 16);
+        assert!(v.contains(&17) && v.contains(&31) && v.contains(&32));
+        assert!(v.contains(&48) && v.contains(&144));
+        assert!(!v.contains(&33) && !v.contains(&145));
+        // 16..=32 step 1 (17 values) + 48..=144 step 16 (7 values).
+        assert_eq!(v.len(), 17 + 7);
+    }
+
+    #[test]
+    fn points_cover_axes_and_mappings() {
+        let spec = SweepSpec::quick();
+        let pts = spec.points();
+        assert_eq!(
+            pts.len(),
+            (spec.c_values.len() + spec.k_values.len() + spec.spatial_values.len())
+                * spec.mappings.len()
+        );
+        assert!(pts.iter().any(|p| p.axis == Axis::C && p.value == 17));
+    }
+
+    #[test]
+    fn small_sweep_runs_and_is_deterministic() {
+        let spec = SweepSpec {
+            c_values: vec![4],
+            k_values: vec![5],
+            spatial_values: vec![4],
+            mappings: vec![Mapping::Wp, Mapping::Cpu],
+            mag: 10,
+            seed: 1,
+        };
+        let cfg = CgraConfig::default();
+        let a = run_sweep(&spec, &cfg, 2).unwrap();
+        let b = run_sweep(&spec, &cfg, 4).unwrap();
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(b.iter()) {
+            let (rx, ry) = (x.report.as_ref().unwrap(), y.report.as_ref().unwrap());
+            assert_eq!(rx.latency_cycles, ry.latency_cycles);
+            assert_eq!(rx.cgra_accesses, ry.cgra_accesses);
+        }
+    }
+
+    #[test]
+    fn oversized_points_are_skipped_not_fatal() {
+        let spec = SweepSpec {
+            c_values: vec![144],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Ip],
+            mag: 5,
+            seed: 2,
+        };
+        // Tiny memory to force the skip.
+        let mut cfg = CgraConfig::default();
+        cfg.mem_words = 2048;
+        let rows = run_sweep(&spec, &cfg, 1).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].report.is_none());
+        assert!(rows[0].skipped.as_ref().unwrap().contains("words"));
+    }
+
+    #[test]
+    fn auto_mapping_is_wp() {
+        assert_eq!(auto_mapping(&ConvShape::baseline()), Mapping::Wp);
+    }
+}

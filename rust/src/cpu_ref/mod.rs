@@ -1,0 +1,138 @@
+//! CPU-only baseline: the plain nested-loop convolution the paper
+//! compares every CGRA mapping against (the "CPU" point in Figure 4).
+//!
+//! Functionally it is the golden direct convolution; the cycle cost comes
+//! from an instruction-level model of an in-order, single-issue RV32IM
+//! microcontroller core (X-HEEP's CPU class) executing the naive loop
+//! nest. The per-MAC budget is documented field by field in
+//! [`CpuModel`]; with the defaults it lands at 17.5 cycles/MAC ≈ 0.057
+//! MAC/cycle, which reproduces the paper's 9.9× WP-vs-CPU latency ratio
+//! against WP's ≈0.6 MAC/cycle.
+
+use anyhow::Result;
+
+use crate::cgra::{MemStats, RunStats};
+use crate::conv::{conv2d, ConvShape, TensorChw, Weights};
+use crate::kernels::{ConvOutcome, LatencyBreakdown, Mapping};
+
+/// Cycle cost model of the scalar core.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CpuModel {
+    /// Cycles per data load (shared memory subsystem, no D-cache).
+    pub load_latency: f64,
+    /// Cycles for the 32-bit multiply.
+    pub mul_latency: f64,
+    /// Cycles per simple ALU op.
+    pub alu_latency: f64,
+    /// Address-computation ALU ops per MAC for the naive CHW loop nest
+    /// (two 3-level index calculations amortized by strength reduction).
+    pub addr_ops_per_mac: f64,
+    /// Amortized loop-control cycles per MAC (compare + branch of the
+    /// inner loop, partially amortized outer levels).
+    pub loop_overhead_per_mac: f64,
+    /// Cycles per output-element store (amortized over C·9 MACs each).
+    pub store_latency: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel {
+            load_latency: 4.0,
+            mul_latency: 1.0,
+            alu_latency: 1.0,
+            addr_ops_per_mac: 6.0,
+            loop_overhead_per_mac: 1.5,
+            store_latency: 4.0,
+        }
+    }
+}
+
+impl CpuModel {
+    /// Cycles per MAC: 2 loads + mul + accumulate-add + addressing +
+    /// loop control.
+    pub fn cycles_per_mac(&self) -> f64 {
+        2.0 * self.load_latency
+            + self.mul_latency
+            + self.alu_latency
+            + self.addr_ops_per_mac * self.alu_latency
+            + self.loop_overhead_per_mac
+    }
+
+    /// Total cycles for a layer.
+    pub fn conv_cycles(&self, shape: &ConvShape) -> u64 {
+        let macs = shape.macs() as f64;
+        let stores = shape.output_elems() as f64;
+        (macs * self.cycles_per_mac() + stores * self.store_latency).round() as u64
+    }
+}
+
+/// Execute the CPU baseline: golden convolution + cycle/energy accounting.
+pub fn run(
+    model: &CpuModel,
+    shape: &ConvShape,
+    input: &TensorChw,
+    weights: &Weights,
+) -> Result<ConvOutcome> {
+    shape.validate()?;
+    let output = conv2d(shape, input, weights);
+    let latency = LatencyBreakdown {
+        cpu_compute_cycles: model.conv_cycles(shape),
+        ..Default::default()
+    };
+    Ok(ConvOutcome {
+        mapping: Mapping::Cpu,
+        shape: *shape,
+        output,
+        latency,
+        cgra_stats: RunStats::new(),
+        cpu_mem: MemStats { loads: 2 * shape.macs(), stores: shape.output_elems() as u64 },
+        footprint_bytes: shape.base_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{random_input, random_weights};
+    use crate::prop::Rng;
+
+    #[test]
+    fn default_model_matches_paper_ratio_anchor() {
+        let m = CpuModel::default();
+        // 2*4 + 1 + 1 + 6 + 1.5 = 17.5 cycles/MAC.
+        assert!((m.cycles_per_mac() - 17.5).abs() < 1e-9);
+        let mac_per_cycle = 1.0 / m.cycles_per_mac();
+        assert!((0.050..0.068).contains(&mac_per_cycle));
+    }
+
+    #[test]
+    fn functional_output_is_golden() {
+        let shape = ConvShape::new3x3(3, 4, 5, 6);
+        let mut rng = Rng::new(1);
+        let input = random_input(&shape, 40, &mut rng);
+        let weights = random_weights(&shape, 9, &mut rng);
+        let out = run(&CpuModel::default(), &shape, &input, &weights).unwrap();
+        assert_eq!(out.output.data, conv2d(&shape, &input, &weights).data);
+        assert_eq!(out.latency.cgra_cycles, 0);
+        assert!(out.latency.cpu_compute_cycles > 0);
+    }
+
+    #[test]
+    fn cycles_scale_with_macs() {
+        let m = CpuModel::default();
+        let small = m.conv_cycles(&ConvShape::new3x3(8, 8, 8, 8));
+        let big = m.conv_cycles(&ConvShape::new3x3(16, 8, 8, 8));
+        assert!(big > 19 * small / 10, "doubling C should ~double cycles");
+    }
+
+    #[test]
+    fn mem_traffic_two_loads_per_mac() {
+        let shape = ConvShape::baseline();
+        let mut rng = Rng::new(2);
+        let input = random_input(&shape, 10, &mut rng);
+        let weights = random_weights(&shape, 10, &mut rng);
+        let out = run(&CpuModel::default(), &shape, &input, &weights).unwrap();
+        assert_eq!(out.cpu_mem.loads, 2 * shape.macs());
+        assert_eq!(out.cpu_mem.stores, 16 * 16 * 16);
+    }
+}

@@ -1,0 +1,55 @@
+//! Calibration of the energy/timing constants against the paper.
+//!
+//! We do not have the authors' TSMC-65nm post-synthesis power traces, so
+//! every constant below is *anchored* to a number the paper reports and
+//! the rest follows from the system structure. The integration test
+//! `rust/tests/integration.rs::calibration_anchors` re-checks the anchors
+//! end-to-end on every run.
+//!
+//! | constant | value | paper anchor |
+//! |----------|-------|--------------|
+//! | `CgraConfig::mem_latency = 4` | DMA port round-trip | WP baseline lands at ≈0.6 MAC/cycle (abstract: "overall average performance of 0.6 MAC/cycle") |
+//! | `CgraConfig::mul_latency = 1` | single-cycle PE multiply | WP peak ≈0.665 MAC/cycle at C=K=16, Ox=Oy=64 (§3.2) |
+//! | `CgraConfig::launch_overhead = 24` | CPU writes CGRA config regs | Im2col-IP's per-position launches visibly hurt latency (§3.1) |
+//! | `CpuModel` = 17.5 cycles/MAC | naive RV32 loop nest | WP vs CPU latency ratio 9.9× (abstract) |
+//! | `p_pe_active_mw = 0.115` | per-PE dynamic power | WP system power ≈2.5 mW, "the highest among the CGRA-approaches" (§3.1) |
+//! | `p_cpu_active_mw = 0.50`, `p_mem_static_mw = 0.20`, `e_mem_access_pj = 15` | CPU-only avg power ≈0.86 mW | energy 3.4× at latency 9.9× ⇒ P(CPU) ≈ 0.34 × P(WP) |
+//! | `e_mem_access_pj = 15` | 65nm SRAM access | memory dynamic energy is "the largest energy-wise discriminative factor" (§3.1): Im2col-OP's 2 loads/MAC dwarf WP's ≈0.45 |
+//! | `clock_hz = 100 MHz` | HEEPsilon-class SoC clock | absolute times only; all paper comparisons are ratios |
+//!
+//! The *shape* of Figure 4 (who wins, roughly by how much) is what these
+//! anchors pin down; absolute µJ/ms values are simulator-native.
+
+use super::EnergyModel;
+
+/// The calibrated model (see module docs for the anchor table).
+pub const CALIBRATED: EnergyModel = EnergyModel {
+    clock_hz: 100.0e6,
+    p_cgra_leak_mw: 0.05,
+    p_pe_active_mw: 0.115,
+    p_cpu_active_mw: 0.50,
+    p_cpu_idle_mw: 0.20,
+    p_mem_static_mw: 0.20,
+    e_mem_access_pj: 15.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_is_default() {
+        assert_eq!(EnergyModel::default(), CALIBRATED);
+    }
+
+    #[test]
+    fn constants_are_physically_sane() {
+        let m = CALIBRATED;
+        assert!(m.clock_hz > 1e6);
+        assert!(m.p_cgra_leak_mw > 0.0 && m.p_cgra_leak_mw < 1.0);
+        // Full-tilt CGRA should sit in the paper's "< 2.5 mW" class.
+        let p_full = m.p_cgra_leak_mw + 16.0 * m.p_pe_active_mw;
+        assert!((1.0..3.0).contains(&p_full), "CGRA full power {p_full} mW");
+        assert!(m.e_mem_access_pj > 1.0 && m.e_mem_access_pj < 100.0);
+    }
+}

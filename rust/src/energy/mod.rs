@@ -1,0 +1,165 @@
+//! Energy/power model of the minimal HEEPsilon system: CGRA + CPU +
+//! memory (paper §2.3: "we consider the power consumption of a complete
+//! minimal system, including CGRA, CPU and memory subsystems").
+//!
+//! Block powers are constants calibrated against the paper's anchors
+//! (see [`calibration`]); energies integrate those powers over the
+//! latency decomposition of a [`ConvOutcome`], plus a per-access dynamic
+//! energy for the memory — the quantity the paper singles out as "the
+//! largest energy-wise discriminative factor between methods".
+
+pub mod calibration;
+
+use crate::kernels::{ConvOutcome, Mapping};
+
+/// System-level power/energy constants. Defaults come from
+/// [`calibration`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyModel {
+    /// System clock (HEEPsilon FPGA/ASIC class runs ~100 MHz).
+    pub clock_hz: f64,
+    /// CGRA leakage + clock-tree power, mW (always on while the CGRA has
+    /// been configured; the CPU-only baseline clock-gates it).
+    pub p_cgra_leak_mw: f64,
+    /// Dynamic power of one *active* PE slot, mW (scaled by measured
+    /// utilization).
+    pub p_pe_active_mw: f64,
+    /// CPU active power (computing / building im2col), mW.
+    pub p_cpu_active_mw: f64,
+    /// CPU busy-wait power (polling the CGRA interrupt), mW.
+    pub p_cpu_idle_mw: f64,
+    /// Memory static power, mW.
+    pub p_mem_static_mw: f64,
+    /// Dynamic energy per 32-bit memory access, pJ.
+    pub e_mem_access_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        calibration::CALIBRATED
+    }
+}
+
+/// Energy decomposition of one convolution execution (µJ).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// CGRA block energy.
+    pub cgra_uj: f64,
+    /// CPU block energy (active + busy-wait).
+    pub cpu_uj: f64,
+    /// Memory static energy.
+    pub mem_static_uj: f64,
+    /// Memory dynamic (per-access) energy.
+    pub mem_dynamic_uj: f64,
+    /// Wall-clock of the execution, ms.
+    pub latency_ms: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy, µJ.
+    pub fn total_uj(&self) -> f64 {
+        self.cgra_uj + self.cpu_uj + self.mem_static_uj + self.mem_dynamic_uj
+    }
+
+    /// Average system power, mW.
+    pub fn avg_power_mw(&self) -> f64 {
+        if self.latency_ms <= 0.0 {
+            0.0
+        } else {
+            self.total_uj() / self.latency_ms
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Integrate the model over one execution.
+    pub fn evaluate(&self, out: &ConvOutcome) -> EnergyBreakdown {
+        let total_cycles = out.latency.total_cycles() as f64;
+        let t_total_s = total_cycles / self.clock_hz;
+        let t_cgra_s = out.latency.cgra_cycles as f64 / self.clock_hz;
+        let t_cpu_active_s =
+            (out.latency.cpu_active_cycles() as f64 / self.clock_hz).min(t_total_s);
+
+        // CGRA: leakage whenever present + per-PE activity. The CPU-only
+        // baseline power-gates the accelerator.
+        let cgra_uj = if out.mapping == Mapping::Cpu {
+            0.0
+        } else {
+            let active_mw = self.p_cgra_leak_mw
+                + self.p_pe_active_mw
+                    * crate::isa::N_PES as f64
+                    * out.cgra_stats.utilization();
+            active_mw * t_cgra_s * 1e3
+                + self.p_cgra_leak_mw * (t_total_s - t_cgra_s).max(0.0) * 1e3
+        };
+
+        let cpu_uj = (self.p_cpu_active_mw * t_cpu_active_s
+            + self.p_cpu_idle_mw * (t_total_s - t_cpu_active_s).max(0.0))
+            * 1e3;
+
+        let mem_static_uj = self.p_mem_static_mw * t_total_s * 1e3;
+        let accesses = (out.cgra_stats.mem.total() + out.cpu_mem.total()) as f64;
+        let mem_dynamic_uj = accesses * self.e_mem_access_pj * 1e-6;
+
+        EnergyBreakdown {
+            cgra_uj,
+            cpu_uj,
+            mem_static_uj,
+            mem_dynamic_uj,
+            latency_ms: t_total_s * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::RunStats;
+    use crate::conv::{ConvShape, TensorChw};
+    use crate::kernels::LatencyBreakdown;
+
+    fn fake_outcome(mapping: Mapping, cycles: u64, accesses: u64) -> ConvOutcome {
+        let shape = ConvShape::baseline();
+        let mut stats = RunStats::new();
+        stats.cycles = cycles;
+        stats.mem.loads = accesses;
+        ConvOutcome {
+            mapping,
+            shape,
+            output: TensorChw::zeros(1, 1, 1),
+            latency: LatencyBreakdown {
+                cgra_cycles: if mapping == Mapping::Cpu { 0 } else { cycles },
+                cpu_compute_cycles: if mapping == Mapping::Cpu { cycles } else { 0 },
+                ..Default::default()
+            },
+            cgra_stats: stats,
+            cpu_mem: Default::default(),
+            footprint_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn more_accesses_cost_more_energy() {
+        let m = EnergyModel::default();
+        let lo = m.evaluate(&fake_outcome(Mapping::Wp, 1000, 10));
+        let hi = m.evaluate(&fake_outcome(Mapping::Wp, 1000, 10_000));
+        assert!(hi.total_uj() > lo.total_uj());
+        assert_eq!(hi.mem_static_uj, lo.mem_static_uj);
+    }
+
+    #[test]
+    fn cpu_mapping_has_no_cgra_energy() {
+        let m = EnergyModel::default();
+        let e = m.evaluate(&fake_outcome(Mapping::Cpu, 1000, 0));
+        assert_eq!(e.cgra_uj, 0.0);
+        assert!(e.cpu_uj > 0.0);
+    }
+
+    #[test]
+    fn avg_power_is_energy_over_time() {
+        let m = EnergyModel::default();
+        let e = m.evaluate(&fake_outcome(Mapping::Wp, 123_456, 999));
+        assert!((e.avg_power_mw() - e.total_uj() / e.latency_ms).abs() < 1e-12);
+        assert!(e.avg_power_mw() > 0.0);
+    }
+}

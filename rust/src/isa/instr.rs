@@ -1,0 +1,322 @@
+//! Instruction word: operation, two operand sources, destination.
+
+use super::{Dir, N_REGS};
+
+/// Operand source mux of a PE.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Src {
+    /// Constant zero (hardware tie-off).
+    Zero,
+    /// Sign-extended immediate from the instruction word.
+    Imm(i32),
+    /// Register-file entry 0..=3.
+    Reg(u8),
+    /// The PE's own output register (ROUT).
+    Own,
+    /// A torus neighbour's output register.
+    Neigh(Dir),
+    /// The PE's DMA address register (useful for address arithmetic).
+    Addr,
+}
+
+impl Src {
+    /// Shorthand for `Src::Reg`, panicking on out-of-range index.
+    pub fn reg(i: usize) -> Src {
+        assert!(i < N_REGS, "register index {i} out of range");
+        Src::Reg(i as u8)
+    }
+}
+
+/// Destination mux of a PE.
+///
+/// Divergence from silicon (documented in DESIGN.md §3.1): the real PE
+/// always latches results into ROUT; we additionally permit register-only
+/// writes (`Reg`), which the mapping schedules use so ROUT can carry a
+/// *different* value for the neighbours while a local temporary is
+/// updated. Instruction counts — the quantity the paper reports — are
+/// unaffected.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dst {
+    /// Latch into the output register only.
+    Out,
+    /// Latch into a register-file entry only.
+    Reg(u8),
+    /// Latch into both ROUT and a register-file entry.
+    Both(u8),
+    /// Discard the result (stores, branches, nop).
+    None,
+}
+
+impl Dst {
+    /// Shorthand for `Dst::Reg`, panicking on out-of-range index.
+    pub fn reg(i: usize) -> Dst {
+        assert!(i < N_REGS, "register index {i} out of range");
+        Dst::Reg(i as u8)
+    }
+
+    /// Shorthand for `Dst::Both`, panicking on out-of-range index.
+    pub fn both(i: usize) -> Dst {
+        assert!(i < N_REGS, "register index {i} out of range");
+        Dst::Both(i as u8)
+    }
+}
+
+/// Operations supported by the PE's ALU / load-store unit / branch unit.
+///
+/// All arithmetic is wrapping 32-bit integer arithmetic (the paper's
+/// kernels use 32-bit integer data). There is deliberately **no MAC**.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Op {
+    /// No operation; burns one slot (counted in the utilization stats).
+    Nop,
+    /// Halt the whole array (any PE issuing `Exit` stops execution at the
+    /// end of the current step).
+    Exit,
+    /// `dst = a` (b ignored).
+    Mov,
+    /// `dst = a + b` (wrapping).
+    Add,
+    /// `dst = a - b` (wrapping).
+    Sub,
+    /// `dst = a * b` (wrapping, low 32 bits). Multi-cycle: see
+    /// [`crate::cgra::CgraConfig::mul_latency`].
+    Mul,
+    /// `dst = a << (b & 31)`.
+    Shl,
+    /// `dst = a >> (b & 31)` (arithmetic).
+    Shr,
+    /// `dst = a & b`.
+    And,
+    /// `dst = a | b`.
+    Or,
+    /// `dst = a ^ b`.
+    Xor,
+    /// `dst = min(a, b)` (signed).
+    Min,
+    /// `dst = max(a, b)` (signed).
+    Max,
+    /// Set the PE's DMA address register: `addr = a + b`.
+    SetAddr,
+    /// Load word: `dst = mem[a + b]` (word address). Goes through the
+    /// column's DMA port (contention modeled).
+    Lw,
+    /// Load word via the address register with post-increment:
+    /// `dst = mem[addr]; addr += a + b`. This is the paper's
+    /// "load with automatic index increment".
+    LwInc,
+    /// Store word: `mem[addr] = a; addr += b` (post-increment store).
+    SwInc,
+    /// Store word at computed address: `mem[a + b] = rout` — stores the
+    /// PE's current output register at address `a + b`.
+    SwAt,
+    /// Branch if `a == b` to the absolute slot in the instruction's
+    /// `target` field (column PC).
+    Beq,
+    /// Branch if `a != b`.
+    Bne,
+    /// Branch if `a < b` (signed).
+    Blt,
+    /// Branch if `a >= b` (signed).
+    Bge,
+    /// Unconditional jump.
+    Jump,
+}
+
+impl Op {
+    /// True for loads/stores (they contend for the column DMA port).
+    pub fn is_mem(self) -> bool {
+        matches!(self, Op::Lw | Op::LwInc | Op::SwInc | Op::SwAt)
+    }
+
+    /// True for loads.
+    pub fn is_load(self) -> bool {
+        matches!(self, Op::Lw | Op::LwInc)
+    }
+
+    /// True for stores.
+    pub fn is_store(self) -> bool {
+        matches!(self, Op::SwInc | Op::SwAt)
+    }
+
+    /// True for control-flow operations (they steer the column PC).
+    pub fn is_ctrl(self) -> bool {
+        matches!(self, Op::Beq | Op::Bne | Op::Blt | Op::Bge | Op::Jump)
+    }
+
+    /// True if the slot does useful work (not `Nop`). `Exit` counts as
+    /// control. Utilization in Fig. 3 is `active / (active + nop)`.
+    pub fn is_active(self) -> bool {
+        !matches!(self, Op::Nop)
+    }
+
+    /// Mnemonic used by the assembler/disassembler.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Op::Nop => "nop",
+            Op::Exit => "exit",
+            Op::Mov => "mov",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Shl => "shl",
+            Op::Shr => "shr",
+            Op::And => "and",
+            Op::Or => "or",
+            Op::Xor => "xor",
+            Op::Min => "min",
+            Op::Max => "max",
+            Op::SetAddr => "setaddr",
+            Op::Lw => "lw",
+            Op::LwInc => "lwinc",
+            Op::SwInc => "swinc",
+            Op::SwAt => "swat",
+            Op::Beq => "beq",
+            Op::Bne => "bne",
+            Op::Blt => "blt",
+            Op::Bge => "bge",
+            Op::Jump => "jump",
+        }
+    }
+}
+
+/// One instruction word.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Instr {
+    /// Operation.
+    pub op: Op,
+    /// First operand source.
+    pub a: Src,
+    /// Second operand source.
+    pub b: Src,
+    /// Result destination.
+    pub dst: Dst,
+    /// Branch target (absolute slot within the 32-word program) for
+    /// control-flow ops; ignored otherwise.
+    pub target: u8,
+}
+
+impl Instr {
+    /// Generic constructor.
+    pub fn new(op: Op, a: Src, b: Src, dst: Dst) -> Instr {
+        Instr { op, a, b, dst, target: 0 }
+    }
+
+    /// `nop`.
+    pub fn nop() -> Instr {
+        Instr::new(Op::Nop, Src::Zero, Src::Zero, Dst::None)
+    }
+
+    /// `exit`.
+    pub fn exit() -> Instr {
+        Instr::new(Op::Exit, Src::Zero, Src::Zero, Dst::None)
+    }
+
+    /// `mov dst ← a`.
+    pub fn mov(dst: Dst, a: Src) -> Instr {
+        Instr::new(Op::Mov, a, Src::Zero, dst)
+    }
+
+    /// Branch helper: `op` must be a control op.
+    pub fn branch(op: Op, a: Src, b: Src, target: usize) -> Instr {
+        assert!(op.is_ctrl(), "{op:?} is not a control op");
+        assert!(target < super::PROG_CAPACITY, "branch target {target} out of range");
+        Instr { op, a, b, dst: Dst::None, target: target as u8 }
+    }
+
+    /// `jump target`.
+    pub fn jump(target: usize) -> Instr {
+        Instr::branch(Op::Jump, Src::Zero, Src::Zero, target)
+    }
+}
+
+impl std::fmt::Display for Src {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Src::Zero => write!(f, "zero"),
+            Src::Imm(v) => write!(f, "#{v}"),
+            Src::Reg(r) => write!(f, "r{r}"),
+            Src::Own => write!(f, "own"),
+            Src::Neigh(d) => write!(f, "{}", d.to_string().to_lowercase()),
+            Src::Addr => write!(f, "addr"),
+        }
+    }
+}
+
+impl std::fmt::Display for Dst {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Dst::Out => write!(f, "out"),
+            Dst::Reg(r) => write!(f, "r{r}"),
+            Dst::Both(r) => write!(f, "out+r{r}"),
+            Dst::None => write!(f, "_"),
+        }
+    }
+}
+
+impl std::fmt::Display for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.op.is_ctrl() {
+            write!(f, "{} {}, {} -> @{}", self.op.mnemonic(), self.a, self.b, self.target)
+        } else {
+            write!(f, "{} {} <- {}, {}", self.op.mnemonic(), self.dst, self.a, self.b)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_classes_are_disjoint_where_expected() {
+        for op in [
+            Op::Nop,
+            Op::Exit,
+            Op::Mov,
+            Op::Add,
+            Op::Sub,
+            Op::Mul,
+            Op::Shl,
+            Op::Shr,
+            Op::And,
+            Op::Or,
+            Op::Xor,
+            Op::Min,
+            Op::Max,
+            Op::SetAddr,
+            Op::Lw,
+            Op::LwInc,
+            Op::SwInc,
+            Op::SwAt,
+            Op::Beq,
+            Op::Bne,
+            Op::Blt,
+            Op::Bge,
+            Op::Jump,
+        ] {
+            assert!(!(op.is_mem() && op.is_ctrl()), "{op:?} both mem and ctrl");
+            assert_eq!(op.is_load() || op.is_store(), op.is_mem(), "{op:?} mem class");
+        }
+    }
+
+    #[test]
+    fn nop_is_inactive_everything_else_active() {
+        assert!(!Op::Nop.is_active());
+        assert!(Op::Mov.is_active());
+        assert!(Op::Exit.is_active());
+    }
+
+    #[test]
+    fn display_formats() {
+        let i = Instr::new(Op::Add, Src::reg(1), Src::Neigh(Dir::East), Dst::Out);
+        assert_eq!(i.to_string(), "add out <- r1, e");
+        let b = Instr::branch(Op::Bne, Src::reg(3), Src::Zero, 2);
+        assert_eq!(b.to_string(), "bne r3, zero -> @2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn branch_with_alu_op_panics() {
+        let _ = Instr::branch(Op::Add, Src::Zero, Src::Zero, 0);
+    }
+}

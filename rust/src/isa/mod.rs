@@ -1,0 +1,160 @@
+//! The OpenEdgeCGRA instruction set.
+//!
+//! Modeled after the open-source OpenEdgeCGRA PE (CF'23): each processing
+//! element executes a private 32-word program of simple 32-bit integer
+//! instructions. There is **no multiply-accumulate instruction** — the
+//! paper calls this out explicitly, and the mapping kernels work around it
+//! with separate `Mul`/`Add` steps.
+//!
+//! An instruction is `{op, src_a, src_b, dst}`:
+//!
+//! - sources ([`Src`]) select between an immediate, the register file
+//!   (4 entries), the PE's own output register, one of the four torus
+//!   neighbours' output registers, or the PE's DMA address register;
+//! - the destination ([`Dst`]) latches the result into the output register
+//!   (`Out`, the only value neighbours can see), a register-file entry, or
+//!   both;
+//! - loads/stores go through the *column's* DMA port and support the
+//!   auto-increment addressing mode the paper leverages for Im2col
+//!   (`LwInc`/`SwInc`);
+//! - control flow (`Beq`/`Bne`/`Blt`/`Bge`/`Jump`) retargets the **column**
+//!   program counter; the executor enforces that at most one PE per column
+//!   issues control flow in a given step.
+
+mod instr;
+mod program;
+
+pub use instr::{Dst, Instr, Op, Src};
+pub use program::{PeProgram, Program, PROG_CAPACITY};
+
+/// Grid geometry of the simulated OpenEdgeCGRA instance (the paper uses a
+/// fixed 4×4 array; the simulator is generic but the kernels target 4×4).
+pub const ROWS: usize = 4;
+/// Number of PE columns (each column shares one DMA port and one PC).
+pub const COLS: usize = 4;
+/// Total number of PEs.
+pub const N_PES: usize = ROWS * COLS;
+/// Register-file entries per PE.
+pub const N_REGS: usize = 4;
+
+/// Identifies one processing element by (row, col).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct PeId {
+    /// Row index, 0..ROWS.
+    pub row: usize,
+    /// Column index, 0..COLS.
+    pub col: usize,
+}
+
+impl PeId {
+    /// Construct, panicking on out-of-range coordinates.
+    pub fn new(row: usize, col: usize) -> Self {
+        assert!(row < ROWS && col < COLS, "PE ({row},{col}) out of range");
+        PeId { row, col }
+    }
+
+    /// Linear index in row-major order.
+    pub fn index(self) -> usize {
+        self.row * COLS + self.col
+    }
+
+    /// Inverse of [`PeId::index`].
+    pub fn from_index(i: usize) -> Self {
+        assert!(i < N_PES);
+        PeId { row: i / COLS, col: i % COLS }
+    }
+
+    /// Torus neighbour in the given direction.
+    pub fn neighbour(self, d: Dir) -> PeId {
+        match d {
+            Dir::North => PeId { row: (self.row + ROWS - 1) % ROWS, col: self.col },
+            Dir::South => PeId { row: (self.row + 1) % ROWS, col: self.col },
+            Dir::East => PeId { row: self.row, col: (self.col + 1) % COLS },
+            Dir::West => PeId { row: self.row, col: (self.col + COLS - 1) % COLS },
+        }
+    }
+
+    /// All 16 PEs in row-major order.
+    pub fn all() -> impl Iterator<Item = PeId> {
+        (0..N_PES).map(PeId::from_index)
+    }
+}
+
+impl std::fmt::Display for PeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PE({},{})", self.row, self.col)
+    }
+}
+
+/// Torus directions. `North` is row−1 (wrapping), `South` row+1, `East`
+/// col+1, `West` col−1 — matching the neighbour-output mux of the PE.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Dir {
+    North,
+    South,
+    East,
+    West,
+}
+
+impl Dir {
+    /// All four directions.
+    pub const ALL: [Dir; 4] = [Dir::North, Dir::South, Dir::East, Dir::West];
+
+    /// The opposite direction.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::North => Dir::South,
+            Dir::South => Dir::North,
+            Dir::East => Dir::West,
+            Dir::West => Dir::East,
+        }
+    }
+}
+
+impl std::fmt::Display for Dir {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Dir::North => "N",
+            Dir::South => "S",
+            Dir::East => "E",
+            Dir::West => "W",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_id_roundtrip() {
+        for i in 0..N_PES {
+            assert_eq!(PeId::from_index(i).index(), i);
+        }
+    }
+
+    #[test]
+    fn torus_wraps() {
+        let p = PeId::new(0, 0);
+        assert_eq!(p.neighbour(Dir::North), PeId::new(3, 0));
+        assert_eq!(p.neighbour(Dir::West), PeId::new(0, 3));
+        assert_eq!(p.neighbour(Dir::South), PeId::new(1, 0));
+        assert_eq!(p.neighbour(Dir::East), PeId::new(0, 1));
+    }
+
+    #[test]
+    fn neighbour_opposite_is_identity() {
+        for p in PeId::all() {
+            for d in Dir::ALL {
+                assert_eq!(p.neighbour(d).neighbour(d.opposite()), p);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        let _ = PeId::new(4, 0);
+    }
+}

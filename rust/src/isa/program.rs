@@ -1,0 +1,176 @@
+//! Per-PE and whole-array program containers.
+
+use super::{Instr, PeId, N_PES};
+
+/// Capacity of a PE's private program memory, in instruction words.
+/// The paper's OpenEdgeCGRA instance has a 32-word program memory per PE;
+/// every kernel generator asserts it fits.
+pub const PROG_CAPACITY: usize = 32;
+
+/// The program of a single PE (at most [`PROG_CAPACITY`] words).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PeProgram {
+    instrs: Vec<Instr>,
+}
+
+impl PeProgram {
+    /// Empty program (the PE idles at an implicit `nop` and never
+    /// terminates by itself; some other PE must `exit`).
+    pub fn new() -> Self {
+        PeProgram { instrs: Vec::new() }
+    }
+
+    /// Build from a list of instructions. Panics if over capacity.
+    pub fn from_instrs(instrs: Vec<Instr>) -> Self {
+        assert!(
+            instrs.len() <= PROG_CAPACITY,
+            "PE program of {} words exceeds the {}-word program memory",
+            instrs.len(),
+            PROG_CAPACITY
+        );
+        PeProgram { instrs }
+    }
+
+    /// Append one instruction, returning its slot index.
+    pub fn push(&mut self, i: Instr) -> usize {
+        assert!(
+            self.instrs.len() < PROG_CAPACITY,
+            "PE program overflows the {PROG_CAPACITY}-word program memory"
+        );
+        self.instrs.push(i);
+        self.instrs.len() - 1
+    }
+
+    /// Number of words used.
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// True if no instructions were written.
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Fetch the instruction at `pc`, or `nop` past the end (a PE whose
+    /// column PC runs past its program idles).
+    pub fn fetch(&self, pc: usize) -> Instr {
+        self.instrs.get(pc).copied().unwrap_or_else(Instr::nop)
+    }
+
+    /// All instructions.
+    pub fn instrs(&self) -> &[Instr] {
+        &self.instrs
+    }
+
+    /// Mutable access (used by generators to patch branch targets).
+    pub fn instrs_mut(&mut self) -> &mut [Instr] {
+        &mut self.instrs
+    }
+}
+
+/// A whole-array program: one [`PeProgram`] per PE plus optional
+/// human-readable labels (used by traces and the disassembler).
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pes: Vec<PeProgram>,
+    /// Free-form name shown in traces/reports.
+    pub name: String,
+}
+
+impl Program {
+    /// All-empty program.
+    pub fn new(name: impl Into<String>) -> Self {
+        Program { pes: vec![PeProgram::new(); N_PES], name: name.into() }
+    }
+
+    /// Access the program of one PE.
+    pub fn pe(&self, id: PeId) -> &PeProgram {
+        &self.pes[id.index()]
+    }
+
+    /// Mutable access to the program of one PE.
+    pub fn pe_mut(&mut self, id: PeId) -> &mut PeProgram {
+        &mut self.pes[id.index()]
+    }
+
+    /// Replace the program of one PE.
+    pub fn set_pe(&mut self, id: PeId, p: PeProgram) {
+        self.pes[id.index()] = p;
+    }
+
+    /// Longest per-PE program length.
+    pub fn max_len(&self) -> usize {
+        self.pes.iter().map(|p| p.len()).max().unwrap_or(0)
+    }
+
+    /// Total instruction words across all PEs.
+    pub fn total_words(&self) -> usize {
+        self.pes.iter().map(|p| p.len()).sum()
+    }
+
+    /// Disassembly listing of the whole array (one section per PE).
+    pub fn disassemble(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "; program: {}", self.name);
+        for id in PeId::all() {
+            let p = self.pe(id);
+            if p.is_empty() {
+                continue;
+            }
+            let _ = writeln!(s, ".pe {} {}", id.row, id.col);
+            for (slot, i) in p.instrs().iter().enumerate() {
+                let _ = writeln!(s, "  @{slot:<2} {i}");
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Dst, Op, Src};
+
+    #[test]
+    fn capacity_enforced() {
+        let mut p = PeProgram::new();
+        for _ in 0..PROG_CAPACITY {
+            p.push(Instr::nop());
+        }
+        assert_eq!(p.len(), PROG_CAPACITY);
+        let r = std::panic::catch_unwind(move || {
+            let mut p = p;
+            p.push(Instr::nop());
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fetch_past_end_is_nop() {
+        let p = PeProgram::from_instrs(vec![Instr::exit()]);
+        assert_eq!(p.fetch(0).op, Op::Exit);
+        assert_eq!(p.fetch(1).op, Op::Nop);
+        assert_eq!(p.fetch(100).op, Op::Nop);
+    }
+
+    #[test]
+    fn disassemble_skips_empty_pes() {
+        let mut prog = Program::new("t");
+        prog.pe_mut(PeId::new(1, 2)).push(Instr::new(Op::Add, Src::Zero, Src::Imm(3), Dst::Out));
+        let d = prog.disassemble();
+        assert!(d.contains(".pe 1 2"));
+        assert!(d.contains("add out <- zero, #3"));
+        assert!(!d.contains(".pe 0 0"));
+    }
+
+    #[test]
+    fn total_words_counts_all() {
+        let mut prog = Program::new("t");
+        prog.pe_mut(PeId::new(0, 0)).push(Instr::nop());
+        prog.pe_mut(PeId::new(3, 3)).push(Instr::nop());
+        prog.pe_mut(PeId::new(3, 3)).push(Instr::exit());
+        assert_eq!(prog.total_words(), 3);
+        assert_eq!(prog.max_len(), 2);
+    }
+}

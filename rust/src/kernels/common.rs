@@ -1,0 +1,267 @@
+//! Shared infrastructure for the mapping kernels: memory map, host-side
+//! driver accounting, and the result bundle every mapping returns.
+//!
+//! **Op-classification convention** (see `cgra::stats::OpClass`): kernel
+//! generators use `Add` *only* for genuine accumulation; index arithmetic
+//! uses `Sub` with negative immediates / `SetAddr` / auto-increment
+//! addressing, so Figure 3's "sum" vs "other" split falls out of the
+//! static op class.
+
+use anyhow::{ensure, Result};
+
+use crate::cgra::{CgraConfig, MemStats, RunStats};
+use crate::conv::{ConvShape, TensorChw};
+
+/// Word addresses of each region in CGRA memory.
+///
+/// Layout: `[input | weights | output | im2col buffer | scratch]`.
+/// `scratch` absorbs the WP pipeline's benign one-row overshoot of the
+/// output prev-partial stream (see `kernels::wp`); the input overshoot
+/// lands in the weights/output regions (reads only, values discarded).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemLayout {
+    /// Input tensor base (CHW or HWC depending on the mapping).
+    pub input: usize,
+    /// Weights base.
+    pub weights: usize,
+    /// Output tensor base (always CHW `(K, Ox, Oy)`).
+    pub output: usize,
+    /// Im2col reorder buffer base (0-sized for direct mappings).
+    pub im2col: usize,
+    /// Im2col buffer length in words.
+    pub im2col_words: usize,
+    /// Scratch base.
+    pub scratch: usize,
+    /// Total words used.
+    pub total_words: usize,
+}
+
+impl MemLayout {
+    /// Build the layout for a shape. `im2col_words` is mapping-specific
+    /// (0 for direct convolution).
+    pub fn new(shape: &ConvShape, im2col_words: usize, cfg: &CgraConfig) -> Result<MemLayout> {
+        let input = 0;
+        let weights = input + shape.input_elems();
+        let output = weights + shape.weight_elems();
+        let im2col = output + shape.output_elems();
+        let scratch = im2col + im2col_words;
+        // Scratch: one output row of overshoot + a safety margin for the
+        // WP input-stream overshoot when the input region is last-placed
+        // (it is not — but keep the margin anyway).
+        let total_words = scratch + shape.oy + 2 * shape.iw() + 16;
+        ensure!(
+            total_words <= cfg.mem_words,
+            "layer {shape} needs {total_words} words but the memory holds {} \
+             (the paper bounds its sweep by the 512 KiB HEEPsilon RAM the same way)",
+            cfg.mem_words
+        );
+        Ok(MemLayout {
+            input,
+            weights,
+            output,
+            im2col,
+            im2col_words,
+            scratch,
+            total_words,
+        })
+    }
+}
+
+/// Which of the paper's mapping strategies to run.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Mapping {
+    /// Direct convolution, weight parallelism (paper's winner).
+    Wp,
+    /// Im2col, input-channel parallelism.
+    Ip,
+    /// Im2col, output-channel parallelism.
+    OpIm2col,
+    /// Direct convolution, output-channel parallelism.
+    OpDirect,
+    /// CPU-only baseline (no CGRA).
+    Cpu,
+}
+
+impl Mapping {
+    /// All CGRA mappings (excludes the CPU baseline).
+    pub const CGRA: [Mapping; 4] = [Mapping::Wp, Mapping::Ip, Mapping::OpIm2col, Mapping::OpDirect];
+
+    /// All strategies including the CPU baseline.
+    pub const ALL: [Mapping; 5] =
+        [Mapping::Wp, Mapping::Ip, Mapping::OpIm2col, Mapping::OpDirect, Mapping::Cpu];
+
+    /// Paper label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Mapping::Wp => "Conv-WP",
+            Mapping::Ip => "Im2col-IP",
+            Mapping::OpIm2col => "Im2col-OP",
+            Mapping::OpDirect => "Conv-OP",
+            Mapping::Cpu => "CPU",
+        }
+    }
+
+    /// Parse a user-facing name.
+    pub fn parse(s: &str) -> Result<Mapping> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "wp" | "conv-wp" => Mapping::Wp,
+            "ip" | "im2col-ip" => Mapping::Ip,
+            "op-im2col" | "im2col-op" => Mapping::OpIm2col,
+            "op-direct" | "conv-op" | "op" => Mapping::OpDirect,
+            "cpu" => Mapping::Cpu,
+            other => anyhow::bail!(
+                "unknown mapping '{other}' (expected wp|ip|im2col-op|conv-op|cpu)"
+            ),
+        })
+    }
+
+    /// Whether this mapping runs the Im2col transformation on the host.
+    pub fn uses_im2col(self) -> bool {
+        matches!(self, Mapping::Ip | Mapping::OpIm2col)
+    }
+}
+
+impl std::fmt::Display for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Latency decomposition of one convolution execution.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Cycles the CGRA array was executing.
+    pub cgra_cycles: u64,
+    /// Cycles charged for kernel launches (CPU configuring the CGRA).
+    pub launch_cycles: u64,
+    /// CPU cycles spent building im2col buffers (0 for direct mappings).
+    pub cpu_im2col_cycles: u64,
+    /// CPU cycles *hidden* under CGRA execution (the paper overlaps the
+    /// MCU's reordering with the CGRA run; only the excess shows up in
+    /// latency).
+    pub cpu_hidden_cycles: u64,
+    /// CPU cycles of a CPU-only execution (only for `Mapping::Cpu`).
+    pub cpu_compute_cycles: u64,
+    /// Number of CGRA launches.
+    pub launches: u64,
+}
+
+impl LatencyBreakdown {
+    /// End-to-end latency in cycles: CGRA serial path + launches + the
+    /// im2col work that could not be hidden + pure-CPU compute.
+    pub fn total_cycles(&self) -> u64 {
+        self.cgra_cycles
+            + self.launch_cycles
+            + self.cpu_im2col_cycles.saturating_sub(self.cpu_hidden_cycles)
+            + self.cpu_compute_cycles
+    }
+
+    /// Cycles during which the CPU was actively working (energy model).
+    pub fn cpu_active_cycles(&self) -> u64 {
+        self.cpu_im2col_cycles + self.launch_cycles + self.cpu_compute_cycles
+    }
+}
+
+/// Everything a mapping execution produces.
+#[derive(Clone, Debug)]
+pub struct ConvOutcome {
+    /// Which strategy ran.
+    pub mapping: Mapping,
+    /// The layer shape.
+    pub shape: ConvShape,
+    /// Output tensor (K, Ox, Oy), bit-exact wrapping int32.
+    pub output: TensorChw,
+    /// Latency decomposition.
+    pub latency: LatencyBreakdown,
+    /// Merged CGRA run statistics (zeroed for the CPU baseline).
+    pub cgra_stats: RunStats,
+    /// CPU-side memory traffic (im2col copies / CPU-baseline accesses),
+    /// charged separately from the CGRA's DMA traffic.
+    pub cpu_mem: MemStats,
+    /// Memory footprint in bytes (paper's "memory usage" metric).
+    pub footprint_bytes: usize,
+}
+
+impl ConvOutcome {
+    /// MAC/cycle — the paper's headline performance metric.
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.shape.macs() as f64 / self.latency.total_cycles().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_regions_are_disjoint_and_ordered() {
+        let s = ConvShape::baseline();
+        let cfg = CgraConfig::default();
+        let l = MemLayout::new(&s, 100, &cfg).unwrap();
+        assert!(l.input < l.weights);
+        assert_eq!(l.weights - l.input, s.input_elems());
+        assert_eq!(l.output - l.weights, s.weight_elems());
+        assert_eq!(l.im2col - l.output, s.output_elems());
+        assert_eq!(l.scratch - l.im2col, 100);
+        assert!(l.total_words > l.scratch);
+    }
+
+    #[test]
+    fn layout_rejects_oversized_layers() {
+        let s = ConvShape::new3x3(144, 144, 64, 64);
+        let cfg = CgraConfig::default();
+        assert!(MemLayout::new(&s, 0, &cfg).is_err());
+    }
+
+    #[test]
+    fn mapping_parse_roundtrip() {
+        for m in Mapping::ALL {
+            assert_eq!(Mapping::parse(m.label()).unwrap(), m);
+        }
+        assert!(Mapping::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn latency_totals() {
+        let l = LatencyBreakdown {
+            cgra_cycles: 100,
+            launch_cycles: 10,
+            cpu_im2col_cycles: 50,
+            cpu_hidden_cycles: 30,
+            cpu_compute_cycles: 0,
+            launches: 2,
+        };
+        assert_eq!(l.total_cycles(), 100 + 10 + 20);
+        assert_eq!(l.cpu_active_cycles(), 60);
+    }
+
+    #[test]
+    fn im2col_flag() {
+        assert!(Mapping::Ip.uses_im2col());
+        assert!(Mapping::OpIm2col.uses_im2col());
+        assert!(!Mapping::Wp.uses_im2col());
+        assert!(!Mapping::OpDirect.uses_im2col());
+    }
+}
+
+/// Host (CPU) cost model for work the MCU does around the CGRA:
+/// building im2col patches and preparing padded buffers.
+///
+/// The paper overlaps the MCU's reordering with CGRA execution (§2.3
+/// Energy); the drivers charge `im2col_cycles_per_elem × elements`
+/// per patch and hide up to the concurrent CGRA run time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostCostModel {
+    /// CPU cycles per element copied into an im2col patch (load + store
+    /// + address bookkeeping on an in-order RV32 core).
+    pub im2col_cycles_per_elem: u64,
+    /// CPU cycles per element of one-time buffer preparation (padded
+    /// weight images etc.).
+    pub prep_cycles_per_elem: u64,
+}
+
+impl Default for HostCostModel {
+    fn default() -> Self {
+        HostCostModel { im2col_cycles_per_elem: 3, prep_cycles_per_elem: 3 }
+    }
+}

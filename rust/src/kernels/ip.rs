@@ -1,0 +1,273 @@
+//! **Im2col-IP — im2col + input-channel parallelism.**
+//!
+//! Each PE accumulates over a distinct slice of the input channels
+//! (C/16 per PE) for one output position and one output channel; the
+//! partial sums are then aggregated over the torus and a single result is
+//! stored. The im2col patch is built by the host **per output position
+//! and per output channel** (the paper: "every call of the Im2col
+//! function creates one output position at a time and, additionally,
+//! each Im2col input organization has to be repeated for every output
+//! channel") — the launch and reorder overhead that makes IP the slowest
+//! CGRA mapping in Figure 4.
+//!
+//! The patch buffer is laid out **channel-major** `(ci, fy, fx)` so each
+//! PE's slice is contiguous (sequential DMA bursts); weights in KCFF
+//! order are already channel-major per output channel. When C is not a
+//! multiple of 16 the patch and weights are zero-padded to `Cp =
+//! ceil(C/16)·16` channels so all lanes run the same trip count — the
+//! padded lanes do full-cost dummy work, reproducing the paper's
+//! collapse at C = 17.
+
+use anyhow::Result;
+
+use crate::cgra::{Cgra, Memory, RunStats};
+use crate::conv::{ConvShape, TensorChw, TensorHwc, Weights};
+use crate::isa::{Dir, Dst, Instr, Op, PeId, PeProgram, Program, Src, N_PES};
+
+use super::common::{ConvOutcome, HostCostModel, LatencyBreakdown, Mapping, MemLayout};
+use super::op_im2col::push_inner_loop;
+
+/// Channels after padding to a multiple of the PE count.
+pub fn padded_c(shape: &ConvShape) -> usize {
+    shape.c.div_ceil(N_PES) * N_PES
+}
+
+/// Build the channel-major patch for output pixel (y, x):
+/// `patch[ci*9 + fy*3 + fx] = I[y+fy][x+fx][ci]`, zero-padded to Cp.
+pub fn im2col_patch_cm(shape: &ConvShape, input: &TensorHwc, y: usize, x: usize, out: &mut [i32]) {
+    let cp = padded_c(shape);
+    assert_eq!(out.len(), cp * 9);
+    out.fill(0);
+    for ci in 0..shape.c {
+        for fy in 0..3 {
+            for fx in 0..3 {
+                out[ci * 9 + fy * 3 + fx] = input.at(y + fy, x + fx, ci);
+            }
+        }
+    }
+}
+
+/// Build the program for one (pixel, k) launch.
+///
+/// `patch_base` — channel-major patch; `w_base` — channel-major weights
+/// of output channel k (padded if C % 16 != 0); `out_addr` — the single
+/// word receiving the result.
+pub fn build_program(
+    shape: &ConvShape,
+    patch_base: i32,
+    w_base: i32,
+    out_addr: i32,
+) -> Program {
+    let slice = (padded_c(shape) / N_PES * 9) as i32;
+    let mut prog = Program::new(format!("ip-{}", shape.id()));
+    for id in PeId::all() {
+        let lane = id.index() as i32;
+        let wb = w_base + lane * slice;
+        let mut p = Vec::new();
+        // INIT: acc = 0, weight slice pointer, input slice pointer.
+        p.push(Instr::mov(Dst::Reg(0), Src::Zero));
+        p.push(Instr::mov(Dst::Reg(3), Src::Imm(wb)));
+        p.push(Instr::new(
+            Op::SetAddr,
+            Src::Imm(patch_base + lane * slice),
+            Src::Zero,
+            Dst::None,
+        ));
+        // Inner loop over the lane's slice (the paper's 8 instructions).
+        push_inner_loop(&mut p, id, 1, 1, wb + slice);
+        // Aggregation over the torus: row chains flow east into column 3,
+        // then down into PE(3,3), which stores the total.
+        p.push(Instr::mov(Dst::Out, Src::Reg(0))); // a0: expose partial
+        let w = Src::Neigh(Dir::West);
+        let n = Src::Neigh(Dir::North);
+        // a1..a3: eastward row chain (cols 1, 2, 3 in successive slots).
+        for step in 1..=3 {
+            if id.col == step {
+                p.push(Instr::new(Op::Add, w, Src::Own, Dst::Out));
+            } else {
+                p.push(Instr::nop());
+            }
+        }
+        // a4..a6: downward chain in column 3.
+        for step in 1..=3 {
+            if id.col == 3 && id.row == step {
+                p.push(Instr::new(Op::Add, n, Src::Own, Dst::Out));
+            } else {
+                p.push(Instr::nop());
+            }
+        }
+        // a7: store + exit (PE(3,3) holds the grand total).
+        if id == PeId::new(3, 3) {
+            p.push(Instr::new(Op::SwAt, Src::Imm(out_addr), Src::Zero, Dst::None));
+            p.push(Instr::exit());
+        }
+        prog.set_pe(id, PeProgram::from_instrs(p));
+    }
+    prog
+}
+
+/// Execute the full convolution with the Im2col-IP mapping.
+pub fn run(
+    cgra: &Cgra,
+    shape: &ConvShape,
+    input: &TensorChw,
+    weights: &Weights,
+) -> Result<ConvOutcome> {
+    shape.validate()?;
+    let cfg = cgra.config();
+    let host = HostCostModel::default();
+    let cp = padded_c(shape);
+    let patch_words = cp * 9;
+    let padded_w = shape.c != cp;
+    // Aux region: double-buffered patch + (if padding) a padded weight
+    // image. The paper notes IP's buffer roughly doubles the memory.
+    let aux_words = 2 * patch_words + if padded_w { shape.k * patch_words } else { 0 };
+    let layout = MemLayout::new(shape, aux_words, cfg)?;
+    let mut mem = Memory::new(cfg.mem_words, cfg.n_banks);
+    let input_hwc = input.to_hwc();
+    mem.poke_slice(layout.input, &input_hwc.data);
+    mem.poke_slice(layout.weights, &weights.data);
+
+    // One-time host prep: HWC conversion (+ padded weight image).
+    let w_image_base = if padded_w {
+        let base = layout.im2col + 2 * patch_words;
+        for k in 0..shape.k {
+            let src = &weights.data[k * shape.c * 9..(k + 1) * shape.c * 9];
+            mem.poke_slice(base + k * patch_words, src);
+            // padding channels stay zero
+        }
+        base
+    } else {
+        layout.weights
+    };
+    let prep_elems =
+        (input_hwc.data.len() + if padded_w { shape.k * shape.c * 9 } else { 0 }) as u64;
+
+    let mut stats = RunStats::new();
+    stats.exited = true;
+    let mut launches = 0u64;
+    let mut cpu_im2col = prep_elems * host.prep_cycles_per_elem;
+    let mut cpu_hidden = 0u64;
+    let mut cpu_copies = 0u64;
+    let mut patch = vec![0i32; patch_words];
+
+    for y in 0..shape.ox {
+        for x in 0..shape.oy {
+            let pix = y * shape.oy + x;
+            // The patch content is identical across k, but the paper's
+            // implementation rebuilds it per output channel; we charge
+            // the CPU for every rebuild and write it once per pixel.
+            im2col_patch_cm(shape, &input_hwc, y, x, &mut patch);
+            let slot = layout.im2col + (pix % 2) * patch_words;
+            mem.poke_slice(slot, &patch);
+            for k in 0..shape.k {
+                cpu_copies += patch_words as u64;
+                cpu_im2col += patch_words as u64 * host.im2col_cycles_per_elem;
+                let prog = build_program(
+                    shape,
+                    slot as i32,
+                    (w_image_base + k * patch_words) as i32,
+                    (layout.output + k * shape.ox * shape.oy + pix) as i32,
+                );
+                let s = cgra.run(&prog, &mut mem)?;
+                cpu_hidden += s.cycles.min(patch_words as u64 * host.im2col_cycles_per_elem);
+                stats.merge(&s);
+                launches += 1;
+            }
+        }
+    }
+
+    let output = TensorChw::from_vec(
+        shape.k,
+        shape.ox,
+        shape.oy,
+        mem.peek_slice(layout.output, shape.output_elems()).to_vec(),
+    );
+    let latency = LatencyBreakdown {
+        cgra_cycles: stats.cycles,
+        launch_cycles: launches * cfg.launch_overhead + cfg.instruction_load_overhead,
+        cpu_im2col_cycles: cpu_im2col,
+        cpu_hidden_cycles: cpu_hidden,
+        launches,
+        ..Default::default()
+    };
+    Ok(ConvOutcome {
+        mapping: Mapping::Ip,
+        shape: *shape,
+        output,
+        latency,
+        cgra_stats: stats,
+        cpu_mem: crate::cgra::MemStats {
+            loads: cpu_copies + prep_elems,
+            stores: cpu_copies + prep_elems,
+        },
+        footprint_bytes: shape.base_bytes() + 4 * aux_words,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::conv::{conv2d, random_input, random_weights};
+    use crate::prop::Rng;
+
+    fn check_shape(shape: ConvShape, seed: u64) -> ConvOutcome {
+        let mut rng = Rng::new(seed);
+        let input = random_input(&shape, 50, &mut rng);
+        let weights = random_weights(&shape, 9, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run(&cgra, &shape, &input, &weights).unwrap();
+        let golden = conv2d(&shape, &input, &weights);
+        assert_eq!(out.output.data, golden.data, "Im2col-IP mismatch on {shape}");
+        out
+    }
+
+    #[test]
+    fn c_below_16_padded() {
+        check_shape(ConvShape::new3x3(3, 2, 3, 3), 1);
+    }
+
+    #[test]
+    fn c_exactly_16() {
+        check_shape(ConvShape::new3x3(16, 2, 3, 3), 2);
+    }
+
+    #[test]
+    fn c_17_imbalanced() {
+        let out = check_shape(ConvShape::new3x3(17, 2, 2, 2), 3);
+        // Padded to 32 channels: each lane runs 2*9 inner iterations even
+        // though 15 channels are dummies.
+        let iters_per_launch = 2 * 9;
+        let expected_loads_lower = out.latency.launches * iters_per_launch as u64 * 16;
+        assert!(out.cgra_stats.mem.loads >= expected_loads_lower);
+    }
+
+    #[test]
+    fn c_32_two_channels_per_lane() {
+        check_shape(ConvShape::new3x3(32, 2, 2, 3), 4);
+    }
+
+    #[test]
+    fn launches_scale_with_pixels_times_k() {
+        let shape = ConvShape::new3x3(16, 3, 2, 4);
+        let out = check_shape(shape, 5);
+        assert_eq!(out.latency.launches, (3 * 2 * 4) as u64);
+    }
+
+    #[test]
+    fn aggregation_program_fits() {
+        let shape = ConvShape::new3x3(144, 1, 2, 2);
+        let prog = build_program(&shape, 0, 100, 999);
+        assert!(prog.max_len() <= 32);
+    }
+
+    #[test]
+    fn cpu_overhead_dominates_small_layers() {
+        // Fig. 4's story: IP pays heavy CPU im2col + launch overheads.
+        let shape = ConvShape::new3x3(16, 16, 4, 4);
+        let out = check_shape(shape, 6);
+        assert!(out.latency.cpu_im2col_cycles > 0);
+        assert!(out.latency.launches == (16 * 16) as u64);
+    }
+}

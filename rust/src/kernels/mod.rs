@@ -1,0 +1,63 @@
+//! The paper's four convolution mapping strategies as CGRA program
+//! generators, plus the shared host-driver plumbing and a dispatcher.
+
+pub mod common;
+pub mod ip;
+pub mod op_direct;
+pub mod op_im2col;
+pub mod wp;
+
+pub use common::{ConvOutcome, HostCostModel, LatencyBreakdown, Mapping, MemLayout};
+
+use anyhow::Result;
+
+use crate::cgra::Cgra;
+use crate::conv::{ConvShape, TensorChw, Weights};
+use crate::cpu_ref::CpuModel;
+
+/// Run one convolution with the chosen strategy.
+pub fn run_mapping(
+    cgra: &Cgra,
+    mapping: Mapping,
+    shape: &ConvShape,
+    input: &TensorChw,
+    weights: &Weights,
+) -> Result<ConvOutcome> {
+    match mapping {
+        Mapping::Wp => wp::run(cgra, shape, input, weights),
+        Mapping::Ip => ip::run(cgra, shape, input, weights),
+        Mapping::OpIm2col => op_im2col::run(cgra, shape, input, weights),
+        Mapping::OpDirect => op_direct::run(cgra, shape, input, weights),
+        Mapping::Cpu => {
+            // The CPU shares the same 512 KiB system RAM: the paper's
+            // sweep bound applies to it too.
+            MemLayout::new(shape, 0, cgra.config())?;
+            crate::cpu_ref::run(&CpuModel::default(), shape, input, weights)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::conv::{conv2d, random_input, random_weights};
+    use crate::prop::Rng;
+
+    /// All five strategies agree bit-exactly with the golden model on a
+    /// shape that exercises padding, imbalance and multi-tile paths.
+    #[test]
+    fn all_mappings_agree() {
+        let shape = ConvShape::new3x3(5, 17, 4, 3);
+        let mut rng = Rng::new(33);
+        let input = random_input(&shape, 60, &mut rng);
+        let weights = random_weights(&shape, 11, &mut rng);
+        let golden = conv2d(&shape, &input, &weights);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        for m in Mapping::ALL {
+            let out = run_mapping(&cgra, m, &shape, &input, &weights).unwrap();
+            assert_eq!(out.output.data, golden.data, "{m} disagrees with golden");
+            assert!(out.latency.total_cycles() > 0);
+        }
+    }
+}

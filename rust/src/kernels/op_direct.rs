@@ -1,0 +1,236 @@
+//! **Conv-OP — direct convolution + output-channel parallelism.**
+//!
+//! Like Im2col-OP, each PE owns one output channel; unlike it, inputs are
+//! fetched straight from the CHW tensor (no reorder buffer), so the input
+//! stream is strided and the per-pixel bookkeeping is heavier — the
+//! paper's "higher overhead in data addressing" for direct access.
+//!
+//! Loop nest: the host launches once per (k-tile, filter tap (fy,fx),
+//! output row y); the program sweeps the row's Oy pixels, and for each
+//! pixel runs the shared 8-instruction inner loop over input channels
+//! (input stride = ih·iw, weight stride = 9 — both constant in CHW/KCFF
+//! layouts). Partial sums accumulate **in memory** across the 9 tap
+//! launches (tap (0,0) initializes, later taps read-modify-write); within
+//! a pixel the accumulator stays in the RF.
+
+use anyhow::Result;
+
+use crate::cgra::{Cgra, Memory, RunStats};
+use crate::conv::{ConvShape, TensorChw, Weights};
+use crate::isa::{Dst, Instr, Op, PeId, PeProgram, Program, Src, N_PES};
+
+use super::common::{ConvOutcome, LatencyBreakdown, Mapping, MemLayout};
+use super::op_im2col::push_inner_loop;
+
+/// Parameters of one (k_tile, fy, fx, y) launch.
+#[derive(Clone, Copy, Debug)]
+pub struct OpDirectLaunch {
+    /// Output-channel tile index (16 channels per tile).
+    pub kt: usize,
+    /// Filter tap row.
+    pub fy: usize,
+    /// Filter tap column.
+    pub fx: usize,
+    /// Output row being swept.
+    pub y: usize,
+}
+
+/// Build the program for one launch.
+pub fn build_program(shape: &ConvShape, layout: &MemLayout, l: OpDirectLaunch) -> Program {
+    let (c, oy) = (shape.c as i32, shape.oy as i32);
+    let (ih, iw) = (shape.ih() as i32, shape.iw() as i32);
+    let oxy = (shape.ox * shape.oy) as i32;
+    let first_tap = l.fy == 0 && l.fx == 0;
+    let mut prog = Program::new(format!(
+        "op-direct-{}-kt{}f{}{}y{}",
+        shape.id(),
+        l.kt,
+        l.fy,
+        l.fx,
+        l.y
+    ));
+
+    for id in PeId::all() {
+        let lane = id.index();
+        let kp = l.kt * N_PES + lane;
+        let active = kp < shape.k;
+        let kc = kp.min(shape.k - 1); // idle lanes shadow the last channel
+        let w_tap =
+            layout.weights as i32 + (kc * shape.c * 9) as i32 + (l.fy * 3 + l.fx) as i32;
+        // Output pointer: active lanes write their row; idle lanes write
+        // into scratch (distinct per lane, see MemLayout's margin).
+        let out_row = if active {
+            layout.output as i32 + kp as i32 * oxy + l.y as i32 * oy
+        } else {
+            layout.scratch as i32 + lane as i32
+        };
+
+        let mut p = Vec::new();
+        // INIT: input pointer at (y+fy, fx) of channel 0; R1 = out ptr.
+        p.push(Instr::new(
+            Op::SetAddr,
+            Src::Imm(layout.input as i32 + (l.y + l.fy) as i32 * iw + l.fx as i32),
+            Src::Zero,
+            Dst::None,
+        ));
+        p.push(Instr::mov(Dst::Reg(1), Src::Imm(out_row)));
+        let pix_start = p.len();
+        // Per-pixel prologue: reset weight pointer; init accumulator.
+        p.push(Instr::mov(Dst::Reg(3), Src::Imm(w_tap)));
+        if first_tap {
+            p.push(Instr::mov(Dst::Reg(0), Src::Zero));
+        } else {
+            p.push(Instr::new(Op::Lw, Src::Reg(1), Src::Zero, Dst::Reg(0)));
+        }
+        // Inner loop over input channels.
+        push_inner_loop(&mut p, id, ih * iw, 9, w_tap + 9 * c);
+        // Per-pixel epilogue: store, advance pointers, pixel loop.
+        p.push(Instr::mov(Dst::Out, Src::Reg(0))); // expose acc
+        p.push(Instr::new(Op::SwAt, Src::Reg(1), Src::Zero, Dst::None));
+        p.push(Instr::new(Op::Sub, Src::Reg(1), Src::Imm(-1), Dst::Reg(1)));
+        p.push(Instr::new(Op::SetAddr, Src::Addr, Src::Imm(1 - c * ih * iw), Dst::None));
+        if id.row == 0 {
+            p.push(Instr::branch(Op::Blt, Src::Reg(1), Src::Imm(out_row + oy), pix_start));
+        } else {
+            p.push(Instr::nop());
+        }
+        if id == PeId::new(3, 3) {
+            p.push(Instr::exit());
+        }
+        prog.set_pe(id, PeProgram::from_instrs(p));
+    }
+    prog
+}
+
+/// Execute the full convolution with the Conv-OP mapping.
+pub fn run(
+    cgra: &Cgra,
+    shape: &ConvShape,
+    input: &TensorChw,
+    weights: &Weights,
+) -> Result<ConvOutcome> {
+    shape.validate()?;
+    let cfg = cgra.config();
+    let layout = MemLayout::new(shape, 0, cfg)?;
+    let mut mem = Memory::new(cfg.mem_words, cfg.n_banks);
+    mem.poke_slice(layout.input, &input.data);
+    mem.poke_slice(layout.weights, &weights.data);
+
+    let mut stats = RunStats::new();
+    stats.exited = true;
+    let mut launches = 0u64;
+    for kt in 0..shape.k.div_ceil(N_PES) {
+        for fy in 0..3 {
+            for fx in 0..3 {
+                for y in 0..shape.ox {
+                    let prog =
+                        build_program(shape, &layout, OpDirectLaunch { kt, fy, fx, y });
+                    let s = cgra.run(&prog, &mut mem)?;
+                    stats.merge(&s);
+                    launches += 1;
+                }
+            }
+        }
+    }
+
+    let output = TensorChw::from_vec(
+        shape.k,
+        shape.ox,
+        shape.oy,
+        mem.peek_slice(layout.output, shape.output_elems()).to_vec(),
+    );
+    let latency = LatencyBreakdown {
+        cgra_cycles: stats.cycles,
+        launch_cycles: launches * cfg.launch_overhead + cfg.instruction_load_overhead,
+        launches,
+        ..Default::default()
+    };
+    Ok(ConvOutcome {
+        mapping: Mapping::OpDirect,
+        shape: *shape,
+        output,
+        latency,
+        cgra_stats: stats,
+        cpu_mem: Default::default(),
+        footprint_bytes: shape.base_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::conv::{conv2d, random_input, random_weights};
+    use crate::prop::Rng;
+
+    fn check_shape(shape: ConvShape, seed: u64) -> ConvOutcome {
+        let mut rng = Rng::new(seed);
+        let input = random_input(&shape, 50, &mut rng);
+        let weights = random_weights(&shape, 9, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run(&cgra, &shape, &input, &weights).unwrap();
+        let golden = conv2d(&shape, &input, &weights);
+        assert_eq!(out.output.data, golden.data, "Conv-OP mismatch on {shape}");
+        out
+    }
+
+    #[test]
+    fn tiny() {
+        check_shape(ConvShape::new3x3(1, 1, 2, 2), 1);
+    }
+
+    #[test]
+    fn full_tile() {
+        check_shape(ConvShape::new3x3(2, 16, 3, 4), 2);
+    }
+
+    #[test]
+    fn k_17_spills_to_second_tile() {
+        let out = check_shape(ConvShape::new3x3(1, 17, 3, 3), 3);
+        assert_eq!(out.latency.launches, 2 * 9 * 3);
+    }
+
+    #[test]
+    fn rect_shapes() {
+        check_shape(ConvShape::new3x3(3, 5, 2, 6), 4);
+        check_shape(ConvShape::new3x3(2, 2, 6, 2), 5);
+    }
+
+    #[test]
+    fn program_fits() {
+        let shape = ConvShape::new3x3(144, 144, 64, 64);
+        let layout = MemLayout {
+            input: 0,
+            weights: 10,
+            output: 20,
+            im2col: 30,
+            im2col_words: 0,
+            scratch: 30,
+            total_words: 40,
+        };
+        let prog = build_program(
+            &shape,
+            &layout,
+            OpDirectLaunch { kt: 8, fy: 2, fx: 2, y: 63 },
+        );
+        assert!(prog.max_len() <= 32);
+    }
+
+    #[test]
+    fn slower_than_wp_on_baseline() {
+        // Fig. 4: WP beats Conv-OP in latency.
+        let shape = ConvShape::new3x3(8, 16, 8, 8);
+        let mut rng = Rng::new(6);
+        let input = random_input(&shape, 20, &mut rng);
+        let weights = random_weights(&shape, 9, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let op = run(&cgra, &shape, &input, &weights).unwrap();
+        let wp = super::super::wp::run(&cgra, &shape, &input, &weights).unwrap();
+        assert!(
+            op.latency.total_cycles() > wp.latency.total_cycles(),
+            "Conv-OP {} should be slower than WP {}",
+            op.latency.total_cycles(),
+            wp.latency.total_cycles()
+        );
+    }
+}

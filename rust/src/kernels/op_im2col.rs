@@ -1,0 +1,265 @@
+//! **Im2col-OP — im2col + output-channel parallelism.**
+//!
+//! Each PE owns one output channel (16 at a time); the host CPU builds an
+//! im2col patch per output position (double-buffered, overlapped with the
+//! CGRA run), and all 16 PEs stream the *same* patch sequentially while
+//! each walks its own row of the im2col weight matrix. Partial sums stay
+//! in the register file until the single store per (k, pixel) — the
+//! paper's rationale for OP ("minimize the latency for reading and
+//! writing partial sums by keeping them in the RF").
+//!
+//! Innermost loop — the paper's 8 instructions (Fig. 3), identical for
+//! IP / Im2col-OP / Conv-OP:
+//!
+//! ```text
+//!   b0  lwinc r2, #1      ; patch element   (all 16 PEs -> collisions!)
+//!   b1  lw    out, r3     ; weight element
+//!   b2  mul   r2, r2, own
+//!   b3  add   r0, r0, r2  ; accumulate ("sum")
+//!   b4  sub   r3, r3, #-1 ; weight index update
+//!   b5  nop               ; (input index is auto-increment)
+//!   b6  nop               ; (loop bound is a pointer compare)
+//!   b7  blt   r3, #bound  ; branch — one PE per column
+//! ```
+//!
+//! Most PEs nop in the tail slots → ≈69% utilization, as the paper
+//! reports. When K is not a multiple of 16 the last k-tile runs with
+//! idle lanes (they compute into scratch), reproducing the paper's
+//! performance collapse at K = 17.
+
+use anyhow::Result;
+
+use crate::cgra::{Cgra, Memory, RunStats};
+use crate::conv::{im2col_patch, patch_len, ConvShape, TensorChw, Weights};
+use crate::isa::{Dst, Instr, Op, PeId, PeProgram, Program, Src, N_PES};
+
+use super::common::{ConvOutcome, HostCostModel, LatencyBreakdown, Mapping, MemLayout};
+
+/// Lane index (0..15) of a PE: row-major, `kp = k_tile*16 + lane`.
+fn lane(id: PeId) -> usize {
+    id.index()
+}
+
+/// Emit the shared 8-slot inner loop. `input_stride` is the ADDR-register
+/// auto-increment; `w_stride` the weight-pointer step; `bound` the weight
+/// pointer's end value for the branching PE (row 0 of each column).
+pub(super) fn push_inner_loop(
+    p: &mut Vec<Instr>,
+    id: PeId,
+    input_stride: i32,
+    w_stride: i32,
+    bound: i32,
+) {
+    let body = p.len();
+    p.push(Instr::new(Op::LwInc, Src::Imm(input_stride), Src::Zero, Dst::Reg(2)));
+    p.push(Instr::new(Op::Lw, Src::Reg(3), Src::Zero, Dst::Out));
+    p.push(Instr::new(Op::Mul, Src::Reg(2), Src::Own, Dst::Reg(2)));
+    p.push(Instr::new(Op::Add, Src::Reg(0), Src::Reg(2), Dst::Reg(0)));
+    p.push(Instr::new(Op::Sub, Src::Reg(3), Src::Imm(-w_stride), Dst::Reg(3)));
+    p.push(Instr::nop());
+    p.push(Instr::nop());
+    if id.row == 0 {
+        p.push(Instr::branch(Op::Blt, Src::Reg(3), Src::Imm(bound), body));
+    } else {
+        p.push(Instr::nop());
+    }
+}
+
+/// Build the program for one (k_tile, pixel) launch.
+///
+/// `patch_base` — address of the current im2col patch;
+/// `out_addr(lane)` — where each lane stores (scratch for idle lanes);
+/// `w_base(lane)` / `w_bound(lane)` — each lane's weight row.
+pub fn build_program(
+    shape: &ConvShape,
+    patch_base: i32,
+    w_base: impl Fn(usize) -> i32,
+    out_addr: impl Fn(usize) -> i32,
+) -> Program {
+    let pl = patch_len(shape) as i32;
+    let mut prog = Program::new(format!("op-im2col-{}", shape.id()));
+    for id in PeId::all() {
+        let l = lane(id);
+        let wb = w_base(l);
+        let mut p = Vec::new();
+        // INIT: acc = 0, weight pointer, input pointer.
+        p.push(Instr::mov(Dst::Reg(0), Src::Zero));
+        p.push(Instr::mov(Dst::Reg(3), Src::Imm(wb)));
+        p.push(Instr::new(Op::SetAddr, Src::Imm(patch_base), Src::Zero, Dst::None));
+        // Inner loop over the 9·C patch elements.
+        push_inner_loop(&mut p, id, 1, 1, wb + pl);
+        // Store: expose acc, store at the lane's output address.
+        p.push(Instr::mov(Dst::Out, Src::Reg(0)));
+        p.push(Instr::new(Op::SwAt, Src::Imm(out_addr(l)), Src::Zero, Dst::None));
+        if id == PeId::new(3, 3) {
+            p.push(Instr::exit());
+        }
+        prog.set_pe(id, PeProgram::from_instrs(p));
+    }
+    prog
+}
+
+/// Execute the full convolution with the Im2col-OP mapping.
+pub fn run(
+    cgra: &Cgra,
+    shape: &ConvShape,
+    input: &TensorChw,
+    weights: &Weights,
+) -> Result<ConvOutcome> {
+    shape.validate()?;
+    let cfg = cgra.config();
+    let host = HostCostModel::default();
+    let pl = patch_len(shape);
+    // Double-buffered single-patch im2col region.
+    let layout = MemLayout::new(shape, 2 * pl, cfg)?;
+    let mut mem = Memory::new(cfg.mem_words, cfg.n_banks);
+    let input_hwc = input.to_hwc();
+    let w_matrix = weights.to_im2col_matrix();
+    mem.poke_slice(layout.input, &input_hwc.data);
+    mem.poke_slice(layout.weights, &w_matrix);
+    // One-time host prep: HWC input + weight-matrix reorder.
+    let prep_elems = (input_hwc.data.len() + w_matrix.len()) as u64;
+
+    let mut stats = RunStats::new();
+    stats.exited = true;
+    let mut launches = 0u64;
+    let mut cpu_im2col = prep_elems * host.prep_cycles_per_elem;
+    let mut cpu_hidden = 0u64;
+    let mut cpu_copies = 0u64;
+    let k_tiles = shape.k.div_ceil(N_PES);
+    let mut patch = vec![0i32; pl];
+
+    for kt in 0..k_tiles {
+        for y in 0..shape.ox {
+            for x in 0..shape.oy {
+                let pix = y * shape.oy + x;
+                // Host: build the patch into the ping-pong slot. Charged
+                // to the CPU; hidden under the *previous* launch's CGRA
+                // time by the overlap accounting below.
+                let slot = layout.im2col + (pix % 2) * pl;
+                let copied = im2col_patch(shape, &input_hwc, y, x, &mut patch) as u64;
+                mem.poke_slice(slot, &patch);
+                cpu_copies += copied;
+                cpu_im2col += copied * host.im2col_cycles_per_elem;
+
+                let prog = build_program(
+                    shape,
+                    slot as i32,
+                    |l| {
+                        let kp = (kt * N_PES + l).min(shape.k - 1);
+                        (layout.weights + kp * pl) as i32
+                    },
+                    |l| {
+                        let kp = kt * N_PES + l;
+                        if kp < shape.k {
+                            (layout.output + kp * shape.ox * shape.oy + pix) as i32
+                        } else {
+                            (layout.scratch + l) as i32 // idle lane
+                        }
+                    },
+                );
+                let s = cgra.run(&prog, &mut mem)?;
+                // The patch build for the NEXT pixel overlaps this run.
+                cpu_hidden += s.cycles.min(copied * host.im2col_cycles_per_elem);
+                stats.merge(&s);
+                launches += 1;
+            }
+        }
+    }
+
+    let output = TensorChw::from_vec(
+        shape.k,
+        shape.ox,
+        shape.oy,
+        mem.peek_slice(layout.output, shape.output_elems()).to_vec(),
+    );
+    let latency = LatencyBreakdown {
+        cgra_cycles: stats.cycles,
+        launch_cycles: launches * cfg.launch_overhead + cfg.instruction_load_overhead,
+        cpu_im2col_cycles: cpu_im2col,
+        cpu_hidden_cycles: cpu_hidden,
+        launches,
+        ..Default::default()
+    };
+    Ok(ConvOutcome {
+        mapping: Mapping::OpIm2col,
+        shape: *shape,
+        output,
+        latency,
+        cgra_stats: stats,
+        cpu_mem: crate::cgra::MemStats { loads: cpu_copies + prep_elems, stores: cpu_copies + prep_elems },
+        // HWC input + weight matrix + output + double patch buffer.
+        footprint_bytes: shape.base_bytes() + 4 * 2 * pl,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::conv::{conv2d, random_input, random_weights};
+    use crate::prop::Rng;
+
+    fn check_shape(shape: ConvShape, seed: u64) -> ConvOutcome {
+        let mut rng = Rng::new(seed);
+        let input = random_input(&shape, 50, &mut rng);
+        let weights = random_weights(&shape, 9, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run(&cgra, &shape, &input, &weights).unwrap();
+        let golden = conv2d(&shape, &input, &weights);
+        assert_eq!(out.output.data, golden.data, "Im2col-OP mismatch on {shape}");
+        out
+    }
+
+    #[test]
+    fn tiny_full_tile() {
+        check_shape(ConvShape::new3x3(1, 16, 2, 2), 1);
+    }
+
+    #[test]
+    fn k_below_tile_width() {
+        check_shape(ConvShape::new3x3(2, 3, 3, 3), 2);
+    }
+
+    #[test]
+    fn k_17_imbalanced_tile() {
+        let out = check_shape(ConvShape::new3x3(1, 17, 3, 3), 3);
+        // Two k-tiles: twice the launches of K=16.
+        assert_eq!(out.latency.launches, 2 * 9);
+    }
+
+    #[test]
+    fn multi_channel() {
+        check_shape(ConvShape::new3x3(4, 5, 4, 3), 4);
+    }
+
+    #[test]
+    fn inner_loop_is_eight_instructions() {
+        let shape = ConvShape::baseline();
+        let prog = build_program(&shape, 0, |_| 100, |l| 200 + l as i32);
+        // Body starts after the 3 INIT slots; branch at body+7 -> body.
+        let p = prog.pe(PeId::new(0, 1));
+        let br = p.fetch(3 + 7);
+        assert_eq!(br.op, Op::Blt);
+        assert_eq!(br.target as usize, 3);
+        assert!(prog.max_len() <= 32);
+    }
+
+    #[test]
+    fn utilization_near_paper_69_percent() {
+        let shape = ConvShape::new3x3(16, 16, 4, 4);
+        let out = check_shape(shape, 5);
+        let u = out.cgra_stats.utilization();
+        assert!((0.55..0.80).contains(&u), "Im2col-OP utilization {u:.3}");
+    }
+
+    #[test]
+    fn two_loads_per_mac() {
+        // The defining cost of the lane mappings: one input + one weight
+        // load per MAC (the paper's collision source).
+        let shape = ConvShape::new3x3(16, 16, 4, 4);
+        let out = check_shape(shape, 6);
+        let per_mac = out.cgra_stats.mem.loads as f64 / shape.macs() as f64;
+        assert!((1.9..2.2).contains(&per_mac), "loads/MAC {per_mac:.3}");
+    }
+}

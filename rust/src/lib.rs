@@ -1,0 +1,50 @@
+//! # openedge-cgra
+//!
+//! A full-system reproduction of *"Performance evaluation of acceleration
+//! of convolutional layers on OpenEdgeCGRA"* (ACM Computing Frontiers 2024).
+//!
+//! The crate contains, from the bottom up:
+//!
+//! - [`isa`] / [`asm`] — the OpenEdgeCGRA instruction set (32-bit integer
+//!   ALU, auto-increment loads/stores, branches, **no MAC**) and a text
+//!   assembler for it.
+//! - [`cgra`] — a cycle-level simulator of the 4×4 PE array: torus
+//!   interconnect, per-column program counters and DMA ports, a contended
+//!   memory subsystem, and per-PE statistics.
+//! - [`conv`] — the convolution substrate: int32 tensors, CHW/HWC layouts,
+//!   a golden direct convolution and the Im2col transformation.
+//! - [`kernels`] — the paper's four mapping strategies as *program
+//!   generators*: `WP` (direct conv, weight parallelism), `IP` (im2col,
+//!   input-channel parallelism), `OP-im2col` and `OP-direct`
+//!   (output-channel parallelism).
+//! - [`cpu_ref`] — the CPU-only baseline (functional + cycle cost model).
+//! - [`energy`] / [`metrics`] — the paper's evaluation metrics: latency,
+//!   energy (CGRA + CPU + memory blocks), memory footprint, MAC/cycle.
+//! - [`coordinator`] — a multi-threaded sweep/aggregation layer that
+//!   regenerates the paper's figures, plus a layer-wise network runner.
+//! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
+//!   artifacts and verifies the simulator element-exactly against them.
+//! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5).
+//! - [`util`], [`prop`], [`benchkit`] — offline-friendly infrastructure:
+//!   CLI parsing, JSON, deterministic property testing and benchmarking.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod asm;
+pub mod benchkit;
+pub mod cgra;
+pub mod conv;
+pub mod coordinator;
+pub mod cpu_ref;
+pub mod energy;
+pub mod isa;
+pub mod kernels;
+pub mod metrics;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

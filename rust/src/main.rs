@@ -1,0 +1,256 @@
+//! `cgra` — command-line front end of the OpenEdgeCGRA reproduction.
+//!
+//! ```text
+//! cgra run     --mapping wp --c 16 --k 16 --ox 16 --oy 16   one convolution
+//! cgra report  fig3|fig4|fig5|all [--out DIR] [--full]      regenerate figures
+//! cgra sweep   [--full] [--out DIR]                          Fig. 5 sweep
+//! cgra net     [--depth 4] [--k 16] [--hw 32]                CNN on the CGRA
+//! cgra verify  [--artifacts DIR]                             CGRA vs XLA artifact
+//! cgra asm     FILE.casm                                     assemble + run + dump
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use openedge_cgra::cgra::{Cgra, CgraConfig, Memory};
+use openedge_cgra::conv::{random_input, random_weights, ConvShape};
+use openedge_cgra::coordinator::{default_workers, run_network, ConvNet, SweepSpec};
+use openedge_cgra::energy::EnergyModel;
+use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::metrics::MappingReport;
+use openedge_cgra::prop::Rng;
+use openedge_cgra::report;
+use openedge_cgra::util::{Args, OptSpec};
+
+fn main() {
+    if let Err(e) = dispatch() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: cgra <run|report|sweep|net|verify|asm> [options]\n\
+                     see README.md for per-command options";
+
+fn dispatch() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_default();
+    match cmd.as_str() {
+        "run" => cmd_run(),
+        "report" => cmd_report(),
+        "sweep" => cmd_sweep(),
+        "net" => cmd_net(),
+        "verify" => cmd_verify(),
+        "asm" => cmd_asm(),
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn shape_from(a: &Args) -> Result<ConvShape> {
+    Ok(ConvShape::new3x3(
+        a.num_or("c", 16usize)?,
+        a.num_or("k", 16usize)?,
+        a.num_or("ox", 16usize)?,
+        a.num_or("oy", 16usize)?,
+    ))
+}
+
+fn cmd_run() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &[],
+        vec![
+            OptSpec { name: "mapping", value: "wp|ip|im2col-op|conv-op|cpu|all", help: "strategy" },
+            OptSpec { name: "c", value: "INT", help: "input channels" },
+            OptSpec { name: "k", value: "INT", help: "output channels" },
+            OptSpec { name: "ox", value: "INT", help: "output rows" },
+            OptSpec { name: "oy", value: "INT", help: "output cols" },
+            OptSpec { name: "seed", value: "INT", help: "data seed" },
+        ],
+    )?;
+    let shape = shape_from(&a)?;
+    let seed = a.num_or("seed", 42u64)?;
+    let which = a.str_or("mapping", "all");
+    a.reject_unknown()?;
+
+    let cfg = CgraConfig::default();
+    let model = EnergyModel::default();
+    let mappings: Vec<Mapping> = if which == "all" {
+        Mapping::ALL.to_vec()
+    } else {
+        vec![Mapping::parse(&which)?]
+    };
+
+    let mut rng = Rng::new(seed);
+    let input = random_input(&shape, 30, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
+    let golden = openedge_cgra::conv::conv2d(&shape, &input, &weights);
+    let cgra = Cgra::new(cfg)?;
+
+    println!("layer {shape}  ({} MACs)\n", shape.macs());
+    let mut table = openedge_cgra::util::fmt::Table::new(&[
+        "mapping", "cycles", "MAC/cycle", "energy_uJ", "power_mW", "memory", "exact",
+    ]);
+    for m in mappings {
+        let out = run_mapping(&cgra, m, &shape, &input, &weights)?;
+        let exact = out.output.data == golden.data;
+        let r = MappingReport::from_outcome(&out, &model);
+        table.row(vec![
+            m.label().into(),
+            r.latency_cycles.to_string(),
+            format!("{:.3}", r.mac_per_cycle),
+            format!("{:.2}", r.energy_uj),
+            format!("{:.2}", r.avg_power_mw),
+            openedge_cgra::util::fmt::kib(r.footprint_bytes),
+            if exact { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_report() -> Result<()> {
+    let a = Args::from_env(
+        3,
+        &["full"],
+        vec![
+            OptSpec { name: "out", value: "DIR", help: "directory for .txt/.csv output" },
+            OptSpec { name: "full", value: "", help: "full paper sweep for fig5 (slow)" },
+            OptSpec { name: "workers", value: "INT", help: "worker threads" },
+        ],
+    )?;
+    let which = std::env::args().nth(2).unwrap_or_else(|| "all".into());
+    let workers = a.num_or("workers", default_workers())?;
+    let full = a.flag("full");
+    let out_dir = a.opt_str("out").map(std::path::PathBuf::from);
+    a.reject_unknown()?;
+
+    let cfg = CgraConfig::default();
+    let spec = if full { SweepSpec::paper() } else { SweepSpec::quick() };
+    let figures: Vec<report::Figure> = match which.as_str() {
+        "fig3" => vec![report::fig3(&cfg, workers)?],
+        "fig4" => vec![report::fig4(&cfg, workers)?],
+        "fig5" => vec![report::fig5(&cfg, &spec, workers)?],
+        "all" => vec![
+            report::fig3(&cfg, workers)?,
+            report::fig4(&cfg, workers)?,
+            report::fig5(&cfg, &spec, workers)?,
+        ],
+        other => bail!("unknown figure '{other}' (fig3|fig4|fig5|all)"),
+    };
+    for f in &figures {
+        println!("{}\n", f.text);
+        if let Some(dir) = &out_dir {
+            f.save(dir)?;
+            println!("saved {}/{}.{{txt,csv}}", dir.display(), f.id);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &["full"],
+        vec![
+            OptSpec { name: "full", value: "", help: "full paper grid (slow)" },
+            OptSpec { name: "out", value: "DIR", help: "output directory" },
+            OptSpec { name: "workers", value: "INT", help: "worker threads" },
+        ],
+    )?;
+    let workers = a.num_or("workers", default_workers())?;
+    let spec = if a.flag("full") { SweepSpec::paper() } else { SweepSpec::quick() };
+    let out_dir = a.opt_str("out").map(std::path::PathBuf::from);
+    a.reject_unknown()?;
+    let f = report::fig5(&CgraConfig::default(), &spec, workers)?;
+    println!("{}", f.text);
+    if let Some(dir) = out_dir {
+        f.save(&dir)?;
+    }
+    Ok(())
+}
+
+fn cmd_net() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &[],
+        vec![
+            OptSpec { name: "depth", value: "INT", help: "number of conv layers" },
+            OptSpec { name: "c0", value: "INT", help: "input channels" },
+            OptSpec { name: "k", value: "INT", help: "channels per layer" },
+            OptSpec { name: "hw", value: "INT", help: "input height=width" },
+            OptSpec { name: "seed", value: "INT", help: "weight/data seed" },
+        ],
+    )?;
+    let depth = a.num_or("depth", 4usize)?;
+    let c0 = a.num_or("c0", 3usize)?;
+    let k = a.num_or("k", 16usize)?;
+    let hw = a.num_or("hw", 32usize)?;
+    let seed = a.num_or("seed", 7u64)?;
+    a.reject_unknown()?;
+
+    let net = ConvNet::random(depth, c0, k, hw, hw, seed);
+    let mut rng = Rng::new(seed ^ 0xabcd);
+    let input = random_input(&net.layers[0].shape, 8, &mut rng);
+    let cgra = Cgra::new(CgraConfig::default())?;
+    let out = run_network(&cgra, &net, &input)?;
+    let golden = openedge_cgra::coordinator::golden_network(&net, &input)?;
+    println!("CNN: {depth} conv layers, {} MACs, input {c0}x{hw}x{hw}", net.macs());
+    let mut table = openedge_cgra::util::fmt::Table::new(&[
+        "layer", "shape", "mapping", "cycles", "MAC/cycle", "energy_uJ",
+    ]);
+    for (i, (l, r)) in net.layers.iter().zip(out.layers.iter()).enumerate() {
+        table.row(vec![
+            i.to_string(),
+            l.shape.id(),
+            r.mapping.label().into(),
+            r.latency_cycles.to_string(),
+            format!("{:.3}", r.mac_per_cycle),
+            format!("{:.2}", r.energy_uj),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\ntotal: {} cycles ({:.3} MAC/cycle), {:.2} uJ, output exact vs golden: {}",
+        out.total_cycles,
+        out.mac_per_cycle(&net),
+        out.total_energy_uj,
+        out.output.data == golden.data
+    );
+    Ok(())
+}
+
+fn cmd_verify() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &[],
+        vec![OptSpec { name: "artifacts", value: "DIR", help: "AOT artifact directory" }],
+    )?;
+    let dir = a.str_or("artifacts", "artifacts");
+    a.reject_unknown()?;
+    let summary = openedge_cgra::runtime::verify_all(std::path::Path::new(&dir))?;
+    println!("{summary}");
+    Ok(())
+}
+
+fn cmd_asm() -> Result<()> {
+    let path = std::env::args().nth(2).context("usage: cgra asm FILE.casm")?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let prog = openedge_cgra::asm::assemble(&text)?;
+    println!("{}", prog.disassemble());
+    let cgra = Cgra::new(CgraConfig::default())?;
+    let mut mem = Memory::new(CgraConfig::default().mem_words, 4);
+    let stats = cgra.run(&prog, &mut mem)?;
+    println!(
+        "ran {} steps / {} cycles, utilization {:.1}%, mem {} loads {} stores",
+        stats.steps,
+        stats.cycles,
+        stats.utilization() * 100.0,
+        stats.mem.loads,
+        stats.mem.stores
+    );
+    println!("mem[0..16] = {:?}", mem.peek_slice(0, 16));
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! The paper's four evaluation metrics bundled per run: latency, energy,
+//! memory usage, MAC/cycle (§2.3), plus utilization and the op mix.
+
+use crate::cgra::OpClass;
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::kernels::{ConvOutcome, Mapping};
+use crate::util::Json;
+
+/// One row of the paper's comparison: everything Figures 3–5 need about
+/// a single (mapping, shape) execution.
+#[derive(Clone, Debug)]
+pub struct MappingReport {
+    /// Strategy.
+    pub mapping: Mapping,
+    /// Layer id, e.g. `c16k16o16x16`.
+    pub shape_id: String,
+    /// End-to-end latency in cycles.
+    pub latency_cycles: u64,
+    /// Latency in ms at the calibrated clock.
+    pub latency_ms: f64,
+    /// Total energy, µJ.
+    pub energy_uj: f64,
+    /// Average system power, mW.
+    pub avg_power_mw: f64,
+    /// Energy decomposition.
+    pub energy: EnergyBreakdown,
+    /// MAC/cycle (paper's performance metric).
+    pub mac_per_cycle: f64,
+    /// Memory usage, bytes (paper's scalability metric).
+    pub footprint_bytes: usize,
+    /// PE utilization (0 for the CPU baseline).
+    pub utilization: f64,
+    /// Fraction of slots per op class, plot order (Fig. 3).
+    pub op_mix: [f64; OpClass::COUNT],
+    /// CGRA memory traffic (loads + stores).
+    pub cgra_accesses: u64,
+    /// Number of CGRA launches.
+    pub launches: u64,
+}
+
+impl MappingReport {
+    /// Evaluate the energy model over an outcome and assemble the row.
+    pub fn from_outcome(out: &ConvOutcome, model: &EnergyModel) -> MappingReport {
+        let e = model.evaluate(out);
+        MappingReport {
+            mapping: out.mapping,
+            shape_id: out.shape.id(),
+            latency_cycles: out.latency.total_cycles(),
+            latency_ms: e.latency_ms,
+            energy_uj: e.total_uj(),
+            avg_power_mw: e.avg_power_mw(),
+            energy: e,
+            mac_per_cycle: out.macs_per_cycle(),
+            footprint_bytes: out.footprint_bytes,
+            utilization: out.cgra_stats.utilization(),
+            op_mix: out.cgra_stats.class_fractions(),
+            cgra_accesses: out.cgra_stats.mem.total(),
+            launches: out.latency.launches,
+        }
+    }
+
+    /// JSON row (for report files).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mapping", self.mapping.label().into()),
+            ("shape", self.shape_id.clone().into()),
+            ("latency_cycles", self.latency_cycles.into()),
+            ("latency_ms", self.latency_ms.into()),
+            ("energy_uj", self.energy_uj.into()),
+            ("avg_power_mw", self.avg_power_mw.into()),
+            ("mac_per_cycle", self.mac_per_cycle.into()),
+            ("footprint_bytes", self.footprint_bytes.into()),
+            ("utilization", self.utilization.into()),
+            ("cgra_accesses", self.cgra_accesses.into()),
+            ("launches", self.launches.into()),
+            (
+                "energy_split_uj",
+                Json::obj(vec![
+                    ("cgra", self.energy.cgra_uj.into()),
+                    ("cpu", self.energy.cpu_uj.into()),
+                    ("mem_static", self.energy.mem_static_uj.into()),
+                    ("mem_dynamic", self.energy.mem_dynamic_uj.into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::{Cgra, CgraConfig};
+    use crate::conv::{random_input, random_weights, ConvShape};
+    use crate::kernels::run_mapping;
+    use crate::prop::Rng;
+
+    #[test]
+    fn report_fields_consistent() {
+        let shape = ConvShape::new3x3(4, 4, 4, 4);
+        let mut rng = Rng::new(1);
+        let input = random_input(&shape, 10, &mut rng);
+        let weights = random_weights(&shape, 10, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
+        let r = MappingReport::from_outcome(&out, &EnergyModel::default());
+        assert_eq!(r.shape_id, "c4k4o4x4");
+        assert!(r.latency_cycles > 0);
+        assert!(r.energy_uj > 0.0);
+        assert!((r.mac_per_cycle - shape.macs() as f64 / r.latency_cycles as f64).abs() < 1e-9);
+        let j = r.to_json();
+        assert_eq!(j.req_str("mapping").unwrap(), "Conv-WP");
+        assert!(j.req("energy_split_uj").is_ok());
+        // Op-mix fractions sum to 1 for a CGRA mapping.
+        assert!((r.op_mix.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_report_has_no_cgra_metrics() {
+        let shape = ConvShape::new3x3(2, 2, 3, 3);
+        let mut rng = Rng::new(2);
+        let input = random_input(&shape, 10, &mut rng);
+        let weights = random_weights(&shape, 10, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run_mapping(&cgra, Mapping::Cpu, &shape, &input, &weights).unwrap();
+        let r = MappingReport::from_outcome(&out, &EnergyModel::default());
+        assert_eq!(r.utilization, 0.0);
+        assert_eq!(r.cgra_accesses, 0);
+        assert_eq!(r.launches, 0);
+        assert!(r.energy.cgra_uj == 0.0);
+    }
+}

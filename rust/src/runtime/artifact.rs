@@ -1,0 +1,151 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// What a lowered computation is.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ArtifactKind {
+    /// Single conv layer: args (input, weights) → output.
+    Conv,
+    /// CNN forward: args (input, w0, …, w_{depth-1}) → output.
+    Cnn,
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Unique name, e.g. `conv_direct_c16k16o16x16`.
+    pub name: String,
+    /// File name (HLO text) relative to the artifact dir.
+    pub file: String,
+    /// Conv or CNN.
+    pub kind: ArtifactKind,
+    /// Which Layer-1 kernel was lowered (`direct` or `im2col`).
+    pub kernel: String,
+    /// Conv: (C, K, Ox, Oy). CNN: C = c0, K = per-layer k.
+    pub c: usize,
+    /// Output channels / per-layer channels.
+    pub k: usize,
+    /// Conv: output rows. CNN: unused (0).
+    pub ox: usize,
+    /// Conv: output cols. CNN: unused (0).
+    pub oy: usize,
+    /// CNN: input height/width and depth (0 for conv).
+    pub h: usize,
+    /// CNN input width.
+    pub w: usize,
+    /// CNN depth.
+    pub depth: usize,
+}
+
+impl ArtifactSpec {
+    /// Conv shape of a `Conv` artifact.
+    pub fn conv_shape(&self) -> crate::conv::ConvShape {
+        crate::conv::ConvShape::new3x3(self.c, self.k, self.ox, self.oy)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// All artifacts, in manifest order.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifact directory.
+    pub fn load(dir: &std::path::Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` to build the AOT artifacts first",
+                path.display()
+            )
+        })?;
+        Self::parse_text(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse_text(text: &str) -> Result<Manifest> {
+        let v = parse(text).context("parsing manifest.json")?;
+        let fmt = v.req_i64("format")?;
+        if fmt != 1 {
+            bail!("unsupported manifest format {fmt}");
+        }
+        let arr = v
+            .req("artifacts")?
+            .as_arr()
+            .context("'artifacts' is not an array")?;
+        let mut artifacts = Vec::new();
+        for (i, a) in arr.iter().enumerate() {
+            artifacts.push(
+                Self::parse_entry(a).with_context(|| format!("artifact entry {i}"))?,
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    fn parse_entry(a: &Json) -> Result<ArtifactSpec> {
+        let kind = match a.req_str("kind")? {
+            "conv" => ArtifactKind::Conv,
+            "cnn" => ArtifactKind::Cnn,
+            other => bail!("unknown artifact kind '{other}'"),
+        };
+        let get = |k: &str| a.get(k).and_then(|v| v.as_i64()).unwrap_or(0) as usize;
+        Ok(ArtifactSpec {
+            name: a.req_str("name")?.to_string(),
+            file: a.req_str("file")?.to_string(),
+            kind,
+            kernel: a.req_str("kernel")?.to_string(),
+            c: if kind == ArtifactKind::Conv { a.req_i64("c")? as usize } else { get("c0") },
+            k: a.req_i64("k")? as usize,
+            ox: get("ox"),
+            oy: get("oy"),
+            h: get("h"),
+            w: get("w"),
+            depth: get("depth"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {"name": "conv_direct_c2k3o4x5", "file": "conv.hlo.txt", "kind": "conv",
+         "kernel": "direct", "c": 2, "k": 3, "ox": 4, "oy": 5},
+        {"name": "cnn_direct", "file": "cnn.hlo.txt", "kind": "cnn",
+         "kernel": "direct", "c0": 3, "k": 8, "h": 12, "w": 12, "depth": 3}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_both_kinds() {
+        let m = Manifest::parse_text(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let conv = &m.artifacts[0];
+        assert_eq!(conv.kind, ArtifactKind::Conv);
+        assert_eq!(conv.conv_shape().id(), "c2k3o4x5");
+        let cnn = &m.artifacts[1];
+        assert_eq!(cnn.kind, ArtifactKind::Cnn);
+        assert_eq!((cnn.c, cnn.k, cnn.h, cnn.w, cnn.depth), (3, 8, 12, 12, 3));
+    }
+
+    #[test]
+    fn rejects_bad_format_or_kind() {
+        assert!(Manifest::parse_text(r#"{"format": 2, "artifacts": []}"#).is_err());
+        let bad = r#"{"format": 1, "artifacts": [{"name":"x","file":"f","kind":"zap","kernel":"d"}]}"#;
+        assert!(Manifest::parse_text(bad).is_err());
+    }
+
+    #[test]
+    fn load_errors_mention_make_artifacts() {
+        let e = Manifest::load(std::path::Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{e:#}").contains("make artifacts"));
+    }
+}

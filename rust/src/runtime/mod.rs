@@ -1,0 +1,92 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas HLO artifacts and
+//! execute them from Rust — Python is never on this path.
+//!
+//! `artifacts/manifest.json` (written by `python -m compile.aot`) lists
+//! the available computations; [`Runtime`] compiles them on the PJRT CPU
+//! client; [`verify_all`] replays each against the CGRA simulator (WP
+//! mapping) *and* the pure-Rust golden model with deterministic data and
+//! demands bit-exact int32 agreement — the cross-language correctness
+//! gate of the whole reproduction.
+
+mod artifact;
+mod verify;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, Manifest};
+pub use verify::{verify_all, verify_artifact, VerifySummary};
+
+use anyhow::{Context, Result};
+
+use crate::conv::{TensorChw, Weights};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    /// Manifest entry.
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client + artifact loader.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Backend platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact from HLO text.
+    pub fn load(&self, dir: &std::path::Path, spec: &ArtifactSpec) -> Result<LoadedArtifact> {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{}'", spec.name))?;
+        Ok(LoadedArtifact { spec: spec.clone(), exe })
+    }
+}
+
+/// Build an int32 literal with the given dimensions.
+fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal dims {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+impl LoadedArtifact {
+    /// Execute with raw int32 literals; unwraps the 1-tuple result.
+    pub fn execute_raw(&self, args: &[xla::Literal]) -> Result<Vec<i32>> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Execute a `conv` artifact: input CHW + weights KCFF → output KHW.
+    pub fn execute_conv(&self, input: &TensorChw, weights: &Weights) -> Result<Vec<i32>> {
+        let x = literal_i32(&input.data, &[input.c as i64, input.h as i64, input.w as i64])?;
+        let w = literal_i32(&weights.data, &[weights.k as i64, weights.c as i64, 3, 3])?;
+        self.execute_raw(&[x, w])
+    }
+
+    /// Execute a `cnn` artifact: input + one weight tensor per layer.
+    pub fn execute_cnn(&self, input: &TensorChw, layer_weights: &[&Weights]) -> Result<Vec<i32>> {
+        let mut args =
+            vec![literal_i32(&input.data, &[input.c as i64, input.h as i64, input.w as i64])?];
+        for w in layer_weights {
+            args.push(literal_i32(&w.data, &[w.k as i64, w.c as i64, 3, 3])?);
+        }
+        self.execute_raw(&args)
+    }
+}

@@ -1,0 +1,134 @@
+//! Cross-language verification: CGRA simulator ⇔ Rust golden model ⇔
+//! AOT-compiled JAX/Pallas artifact, all bit-exact on int32.
+
+use anyhow::{Context, Result};
+
+use crate::cgra::{Cgra, CgraConfig};
+use crate::conv::{conv2d, random_input, random_weights};
+use crate::coordinator::{golden_network, run_network, ConvNet};
+use crate::kernels::{run_mapping, Mapping};
+use crate::prop::Rng;
+
+use super::artifact::{ArtifactKind, ArtifactSpec, Manifest};
+use super::Runtime;
+
+/// Result of verifying one artifact.
+#[derive(Clone, Debug)]
+pub struct VerifyRow {
+    /// Artifact name.
+    pub name: String,
+    /// Elements compared.
+    pub elements: usize,
+    /// Whether artifact == golden == CGRA simulator.
+    pub passed: bool,
+    /// Mismatch description (empty when passed).
+    pub detail: String,
+}
+
+/// Aggregate verification report.
+#[derive(Clone, Debug, Default)]
+pub struct VerifySummary {
+    /// Per-artifact rows.
+    pub rows: Vec<VerifyRow>,
+}
+
+impl VerifySummary {
+    /// True if every artifact verified.
+    pub fn all_passed(&self) -> bool {
+        !self.rows.is_empty() && self.rows.iter().all(|r| r.passed)
+    }
+}
+
+impl std::fmt::Display for VerifySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "verification: CGRA simulator vs Rust golden vs XLA artifact (bit-exact int32)"
+        )?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "  [{}] {:<32} {} elements{}",
+                if r.passed { "ok" } else { "FAIL" },
+                r.name,
+                r.elements,
+                if r.detail.is_empty() { String::new() } else { format!(" — {}", r.detail) }
+            )?;
+        }
+        write!(
+            f,
+            "{}/{} artifacts verified",
+            self.rows.iter().filter(|r| r.passed).count(),
+            self.rows.len()
+        )
+    }
+}
+
+fn seed_for(name: &str) -> u64 {
+    // FNV-1a over the artifact name: deterministic per artifact.
+    name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    })
+}
+
+/// Verify one artifact (see module docs).
+pub fn verify_artifact(
+    rt: &Runtime,
+    dir: &std::path::Path,
+    spec: &ArtifactSpec,
+) -> Result<VerifyRow> {
+    let loaded = rt.load(dir, spec)?;
+    let mut rng = Rng::new(seed_for(&spec.name));
+    let cgra = Cgra::new(CgraConfig::default())?;
+
+    let (xla_out, golden, sim, n) = match spec.kind {
+        ArtifactKind::Conv => {
+            let shape = spec.conv_shape();
+            let input = random_input(&shape, 40, &mut rng);
+            let weights = random_weights(&shape, 9, &mut rng);
+            let xla_out = loaded.execute_conv(&input, &weights)?;
+            let golden = conv2d(&shape, &input, &weights).data;
+            // Exercise the mapping matching the artifact's kernel kind.
+            let mapping =
+                if spec.kernel == "im2col" { Mapping::OpIm2col } else { Mapping::Wp };
+            let sim = run_mapping(&cgra, mapping, &shape, &input, &weights)?.output.data;
+            let n = golden.len();
+            (xla_out, golden, sim, n)
+        }
+        ArtifactKind::Cnn => {
+            let net = ConvNet::random(spec.depth, spec.c, spec.k, spec.h, spec.w, 1234);
+            let input = random_input(&net.layers[0].shape, 8, &mut rng);
+            let ws: Vec<&crate::conv::Weights> =
+                net.layers.iter().map(|l| &l.weights).collect();
+            let xla_out = loaded.execute_cnn(&input, &ws)?;
+            let golden = golden_network(&net, &input)?.data;
+            let sim = run_network(&cgra, &net, &input)?.output.data;
+            let n = golden.len();
+            (xla_out, golden, sim, n)
+        }
+    };
+
+    let detail = if xla_out.len() != n {
+        format!("artifact returned {} elements, expected {n}", xla_out.len())
+    } else if let Some(i) = (0..n).find(|&i| xla_out[i] != golden[i]) {
+        format!("artifact[{i}]={} != golden[{i}]={}", xla_out[i], golden[i])
+    } else if let Some(i) = (0..n).find(|&i| sim[i] != golden[i]) {
+        format!("simulator[{i}]={} != golden[{i}]={}", sim[i], golden[i])
+    } else {
+        String::new()
+    };
+    Ok(VerifyRow { name: spec.name.clone(), elements: n, passed: detail.is_empty(), detail })
+}
+
+/// Verify every artifact in the manifest.
+pub fn verify_all(dir: &std::path::Path) -> Result<VerifySummary> {
+    let manifest = Manifest::load(dir)?;
+    let rt = Runtime::cpu().context("PJRT client")?;
+    let mut summary = VerifySummary::default();
+    for spec in &manifest.artifacts {
+        let row = verify_artifact(&rt, dir, spec)
+            .with_context(|| format!("verifying artifact '{}'", spec.name))?;
+        summary.rows.push(row);
+    }
+    Ok(summary)
+}

@@ -1,0 +1,193 @@
+//! Tiny typed command-line parser (no `clap` in the offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors, defaults and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Declarative description of one option (for usage output).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    /// Long name without dashes, e.g. `"mapping"`.
+    pub name: &'static str,
+    /// Metavar / value hint; empty for boolean flags.
+    pub value: &'static str,
+    /// Help text.
+    pub help: &'static str,
+}
+
+/// Parsed arguments plus the option specs used for `usage()`.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclude argv[0]).
+    /// `boolean` lists the option names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        boolean: &[&str],
+        specs: Vec<OptSpec>,
+    ) -> Result<Args> {
+        let mut a = Args { specs, ..Default::default() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if boolean.contains(&name) {
+                    a.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("option --{name} expects a value"))?;
+                    a.opts.insert(name.to_string(), v);
+                }
+            } else {
+                a.positional.push(arg);
+            }
+        }
+        Ok(a)
+    }
+
+    /// Parse directly from `std::env::args` after skipping `skip` items.
+    pub fn from_env(skip: usize, boolean: &[&str], specs: Vec<OptSpec>) -> Result<Args> {
+        Args::parse(std::env::args().skip(skip), boolean, specs)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Whether a boolean flag was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.used.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.used.borrow_mut().push(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; errors mention the option name.
+    pub fn num_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("option --{name}={s} is invalid: {e}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn num<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self
+            .opt_str(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))?;
+        s.parse::<T>().map_err(|e| anyhow::anyhow!("option --{name}={s} is invalid: {e}"))
+    }
+
+    /// Error out if the user passed options that no accessor consumed —
+    /// catches typos like `--mappings`.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let used = self.used.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !used.iter().any(|u| u == k) {
+                bail!("unknown option --{k}\n{}", self.usage());
+            }
+        }
+        Ok(())
+    }
+
+    /// Render a usage block from the specs.
+    pub fn usage(&self) -> String {
+        let mut s = String::from("options:\n");
+        for spec in &self.specs {
+            let head = if spec.value.is_empty() {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <{}>", spec.name, spec.value)
+            };
+            s.push_str(&format!("{head:<28} {}\n", spec.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", value: "INT", help: "count" },
+            OptSpec { name: "verbose", value: "", help: "chatty" },
+        ]
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = Args::parse(
+            ["--n", "4", "--name=wp", "pos1", "--verbose"].map(String::from),
+            &["verbose"],
+            sp(),
+        )
+        .unwrap();
+        assert_eq!(a.num::<usize>("n").unwrap(), 4);
+        assert_eq!(a.opt_str("name"), Some("wp"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(["--k", "abc"].map(String::from), &[], sp()).unwrap();
+        assert_eq!(a.num_or("missing", 7usize).unwrap(), 7);
+        assert!(a.num::<usize>("k").is_err());
+        assert!(a.num::<usize>("absent").is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--n"].map(String::from), &[], sp()).is_err());
+    }
+
+    #[test]
+    fn unknown_rejected_after_accessors() {
+        let a = Args::parse(["--n", "1", "--typo", "x"].map(String::from), &[], sp()).unwrap();
+        let _ = a.num::<usize>("n");
+        assert!(a.reject_unknown().is_err());
+        let b = Args::parse(["--n", "1"].map(String::from), &[], sp()).unwrap();
+        let _ = b.num::<usize>("n");
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let a = Args::parse(std::iter::empty(), &[], sp()).unwrap();
+        let u = a.usage();
+        assert!(u.contains("--n <INT>"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,174 @@
+//! Plain-text table / bar-chart rendering for reports and benches.
+//!
+//! The paper's figures are regenerated as CSV plus an ASCII rendering so
+//! results are inspectable straight from the terminal (no plotting stack
+//! in the offline environment).
+
+/// A simple left-aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows were added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(c);
+                for _ in c.chars().count()..width[i] {
+                    out.push(' ');
+                }
+            }
+            while out.ends_with(' ') {
+                out.pop();
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &mut out);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        out
+    }
+
+    /// Render as CSV (headers + rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.headers.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart: one labelled bar per entry, scaled to
+/// `width` characters at the maximum value.
+pub fn bar_chart(entries: &[(String, f64)], width: usize) -> String {
+    let max = entries.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = entries.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in entries {
+        let n = ((v / max) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!("{label:<label_w$} |{} {v:.4}\n", "#".repeat(n)));
+    }
+    out
+}
+
+/// Human-formatted quantities.
+pub fn si(v: f64) -> String {
+    let (scaled, suffix) = if v.abs() >= 1e9 {
+        (v / 1e9, "G")
+    } else if v.abs() >= 1e6 {
+        (v / 1e6, "M")
+    } else if v.abs() >= 1e3 {
+        (v / 1e3, "k")
+    } else {
+        (v, "")
+    };
+    if suffix.is_empty() && scaled.fract() == 0.0 {
+        format!("{scaled}")
+    } else {
+        format!("{scaled:.2}{suffix}")
+    }
+}
+
+/// Format a byte count in KiB with two decimals (the paper reports
+/// memory footprints in KiB against the 512 KiB budget).
+pub fn kib(bytes: usize) -> String {
+    format!("{:.2} KiB", bytes as f64 / 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "val"]);
+        t.row(vec!["wp".into(), "1".into()]);
+        t.row(vec!["im2col-ip".into(), "200".into()]);
+        let r = t.render();
+        assert!(r.contains("name       val"));
+        assert!(r.contains("im2col-ip  200"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["x,y".into()]);
+        assert_eq!(t.to_csv(), "a\n\"x,y\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let c = bar_chart(&[("a".into(), 1.0), ("bb".into(), 2.0)], 10);
+        let lines: Vec<&str> = c.lines().collect();
+        assert!(lines[0].contains("#####"));
+        assert!(lines[1].contains("##########"));
+    }
+
+    #[test]
+    fn si_and_kib() {
+        assert_eq!(si(1500.0), "1.50k");
+        assert_eq!(si(2_500_000.0), "2.50M");
+        assert_eq!(si(3.0), "3");
+        assert_eq!(kib(2048), "2.00 KiB");
+    }
+}

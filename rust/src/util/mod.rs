@@ -1,0 +1,11 @@
+//! Offline-friendly infrastructure: CLI parsing, JSON, text rendering.
+//!
+//! The build environment vendors no `clap`/`serde`; these small modules
+//! replace them (see DESIGN.md "Dependency reality").
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+
+pub use cli::{Args, OptSpec};
+pub use json::Json;

@@ -1,0 +1,146 @@
+//! Property tests on the coordinator layer (pool scheduling, sweep
+//! bookkeeping, network chaining) and the JSON/infra substrate.
+
+use openedge_cgra::cgra::CgraConfig;
+use openedge_cgra::coordinator::{run_jobs, ConvNet, SweepSpec};
+use openedge_cgra::kernels::Mapping;
+use openedge_cgra::prop::{forall, int_in, usize_in, vec_of, Gen};
+use openedge_cgra::util::json::{parse, Json};
+
+/// Pool: arbitrary job counts × worker counts preserve order and run
+/// every job exactly once.
+#[test]
+fn prop_pool_order_and_coverage() {
+    let g = usize_in(0, 40).pair(usize_in(1, 12));
+    forall("pool order/coverage", 30, &g, |&(n, workers)| {
+        let jobs: Vec<_> = (0..n).map(|i| move || i * 3 + 1).collect();
+        let out = run_jobs(workers, jobs);
+        if out.len() != n {
+            return Err(format!("{} results for {n} jobs", out.len()));
+        }
+        for (i, v) in out.iter().enumerate() {
+            if *v != i * 3 + 1 {
+                return Err(format!("slot {i} holds {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Sweep point generation: every (axis value × mapping) pair appears
+/// exactly once; shapes inherit the baseline on untouched axes.
+#[test]
+fn prop_sweep_points_complete() {
+    let g = vec_of(usize_in(1, 40), 1, 6).pair(usize_in(1, 4));
+    forall("sweep point coverage", 20, &g, |(cs, n_mappings)| {
+        let mappings: Vec<Mapping> = Mapping::ALL[..*n_mappings].to_vec();
+        let spec = SweepSpec {
+            c_values: cs.clone(),
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: mappings.clone(),
+            mag: 5,
+            seed: 0,
+        };
+        let points = spec.points();
+        if points.len() != cs.len() * mappings.len() {
+            return Err(format!("{} points", points.len()));
+        }
+        for p in &points {
+            if p.shape.k != 16 || p.shape.ox != 16 || p.shape.oy != 16 {
+                return Err("baseline axes disturbed".into());
+            }
+            if p.shape.c != p.value {
+                return Err("value/shape mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random network specs always chain shapes correctly.
+#[test]
+fn prop_network_chaining() {
+    let g = usize_in(1, 4)
+        .pair(usize_in(1, 5))
+        .pair(usize_in(1, 6).pair(usize_in(11, 16)));
+    forall("ConvNet::random chains", 25, &g, |&((depth, c0), (k, hw))| {
+        if hw < 2 * depth + 1 {
+            return Ok(()); // spatial size would vanish; builder unused here
+        }
+        let net = ConvNet::random(depth, c0, k, hw, hw, 99);
+        net.validate().map_err(|e| e.to_string())?;
+        if net.layers.len() != depth {
+            return Err("wrong depth".into());
+        }
+        if net.layers[0].shape.c != c0 {
+            return Err("c0 lost".into());
+        }
+        if net.layers.last().unwrap().relu {
+            return Err("last layer must not have ReLU".into());
+        }
+        Ok(())
+    });
+}
+
+/// JSON roundtrip: arbitrary nested values survive serialize → parse.
+#[test]
+fn prop_json_roundtrip() {
+    fn json_gen(depth: usize) -> Gen<Json> {
+        if depth == 0 {
+            int_in(-1_000_000, 1_000_000).map(|v| Json::Num(v as f64))
+        } else {
+            usize_in(0, 4).map(move |tag| tag).pair(json_gen(depth - 1)).map(
+                move |(tag, inner)| match tag {
+                    0 => Json::Null,
+                    1 => Json::Bool(true),
+                    2 => Json::Str("λ \"quoted\"\n".into()),
+                    3 => Json::Arr(vec![inner, Json::Num(1.5)]),
+                    _ => Json::obj(vec![("k", inner), ("n", Json::Num(-3.0))]),
+                },
+            )
+        }
+    }
+    forall("json roundtrip", 60, &json_gen(3), |v| {
+        let text = v.to_string_compact();
+        let back = parse(&text).map_err(|e| e.to_string())?;
+        if &back == v {
+            Ok(())
+        } else {
+            Err(format!("roundtrip changed value: {text}"))
+        }
+    });
+}
+
+/// Sweep skips (memory bound) never abort the whole sweep and always
+/// carry a reason.
+#[test]
+fn prop_sweep_skip_isolation() {
+    let g = usize_in(100, 200);
+    forall("sweep skip isolation", 5, &g, |&c| {
+        let spec = SweepSpec {
+            c_values: vec![c, 2],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp],
+            mag: 3,
+            seed: 0,
+        };
+        let mut cfg = CgraConfig::default();
+        cfg.mem_words = 16384; // small memory: the big point must skip
+        let rows =
+            openedge_cgra::coordinator::run_sweep(&spec, &cfg, 2).map_err(|e| e.to_string())?;
+        if rows.len() != 2 {
+            return Err("row count".into());
+        }
+        let big = &rows[0];
+        let small = &rows[1];
+        if big.report.is_some() || big.skipped.is_none() {
+            return Err("oversized point must be skipped with a reason".into());
+        }
+        if small.report.is_none() {
+            return Err("small point must still run".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,163 @@
+//! Property-based tests over the mapping kernels and the simulator
+//! (hand-rolled `prop` framework — seeds replay via `PROP_SEED`).
+
+use openedge_cgra::cgra::{Cgra, CgraConfig};
+use openedge_cgra::conv::{conv2d, random_input, random_weights, ConvShape};
+use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::prop::{choose, forall, usize_in, Gen, Rng};
+
+fn shape_gen(max_ch: usize, max_sp: usize) -> Gen<ConvShape> {
+    usize_in(1, max_ch)
+        .pair(usize_in(1, max_ch))
+        .pair(usize_in(1, max_sp).pair(usize_in(1, max_sp)))
+        .map(|((c, k), (ox, oy))| ConvShape::new3x3(c, k, ox, oy))
+}
+
+fn check(mapping: Mapping, shape: &ConvShape, seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let input = random_input(shape, 60, &mut rng);
+    let weights = random_weights(shape, 12, &mut rng);
+    let cgra = Cgra::new(CgraConfig::default()).map_err(|e| e.to_string())?;
+    let out =
+        run_mapping(&cgra, mapping, shape, &input, &weights).map_err(|e| format!("{e:#}"))?;
+    let golden = conv2d(shape, &input, &weights);
+    if out.output.data != golden.data {
+        let i = out.output.data.iter().zip(&golden.data).position(|(a, b)| a != b).unwrap();
+        return Err(format!(
+            "{mapping} mismatch on {shape} at flat index {i}: {} != {}",
+            out.output.data[i], golden.data[i]
+        ));
+    }
+    Ok(())
+}
+
+/// Every CGRA mapping is bit-exact against the golden convolution on
+/// arbitrary small shapes (including non-multiples of 16).
+#[test]
+fn prop_wp_exact() {
+    forall("WP == golden", 30, &shape_gen(6, 9), |s| check(Mapping::Wp, s, 1000 + s.c as u64));
+}
+
+#[test]
+fn prop_op_im2col_exact() {
+    forall("Im2col-OP == golden", 25, &shape_gen(6, 8), |s| {
+        check(Mapping::OpIm2col, s, 2000 + s.k as u64)
+    });
+}
+
+#[test]
+fn prop_op_direct_exact() {
+    forall("Conv-OP == golden", 25, &shape_gen(6, 8), |s| {
+        check(Mapping::OpDirect, s, 3000 + s.oy as u64)
+    });
+}
+
+#[test]
+fn prop_ip_exact() {
+    forall("Im2col-IP == golden", 20, &shape_gen(6, 6), |s| {
+        check(Mapping::Ip, s, 4000 + s.ox as u64)
+    });
+}
+
+/// Imbalanced channel counts around the 16-lane tile boundary.
+#[test]
+fn prop_tile_boundaries_exact() {
+    let g = choose(vec![15usize, 16, 17, 31, 32, 33])
+        .pair(choose(vec![Mapping::OpIm2col, Mapping::OpDirect, Mapping::Ip]));
+    forall("tile-boundary dims exact", 12, &g, |(dim, mapping)| {
+        let shape = match mapping {
+            Mapping::Ip => ConvShape::new3x3(*dim, 3, 3, 3),
+            _ => ConvShape::new3x3(2, *dim, 3, 3),
+        };
+        check(*mapping, &shape, 5000 + *dim as u64)
+    });
+}
+
+/// Wrapping arithmetic: huge magnitudes overflow identically in the
+/// simulator and the golden model.
+#[test]
+fn prop_wrapping_semantics() {
+    forall("wrapping exactness", 8, &shape_gen(3, 4), |s| {
+        let mut rng = Rng::new(77);
+        let mut input = random_input(s, 1, &mut rng);
+        let mut weights = random_weights(s, 1, &mut rng);
+        for v in input.data.iter_mut() {
+            *v = v.wrapping_mul(0x4000_0000);
+        }
+        for v in weights.data.iter_mut() {
+            *v = v.wrapping_mul(0x0010_0000).wrapping_add(7);
+        }
+        let cgra = Cgra::new(CgraConfig::default()).map_err(|e| e.to_string())?;
+        let out = run_mapping(&cgra, Mapping::Wp, s, &input, &weights)
+            .map_err(|e| format!("{e:#}"))?;
+        let golden = conv2d(s, &input, &weights);
+        if out.output.data == golden.data {
+            Ok(())
+        } else {
+            Err("wrapping mismatch".into())
+        }
+    });
+}
+
+/// Timing-model invariants: cycles ≥ steps; contention ≤ cycles; the
+/// functional config (no contention) never exceeds the default config's
+/// cycle count.
+#[test]
+fn prop_timing_invariants() {
+    forall("timing invariants", 12, &shape_gen(4, 5), |s| {
+        let mut rng = Rng::new(9);
+        let input = random_input(s, 10, &mut rng);
+        let weights = random_weights(s, 5, &mut rng);
+        let fast = Cgra::new(CgraConfig::functional()).map_err(|e| e.to_string())?;
+        let slow = Cgra::new(CgraConfig::default()).map_err(|e| e.to_string())?;
+        let a = run_mapping(&fast, Mapping::Wp, s, &input, &weights)
+            .map_err(|e| format!("{e:#}"))?;
+        let b = run_mapping(&slow, Mapping::Wp, s, &input, &weights)
+            .map_err(|e| format!("{e:#}"))?;
+        if a.output.data != b.output.data {
+            return Err("config must not change results".into());
+        }
+        let (sa, sb) = (&a.cgra_stats, &b.cgra_stats);
+        if sb.cycles < sb.steps {
+            return Err(format!("cycles {} < steps {}", sb.cycles, sb.steps));
+        }
+        if sb.contention_cycles > sb.cycles {
+            return Err("contention exceeds cycles".into());
+        }
+        if sa.cycles > sb.cycles {
+            return Err(format!(
+                "functional config slower ({}) than contended ({})",
+                sa.cycles, sb.cycles
+            ));
+        }
+        // Identical instruction streams -> identical step counts.
+        if sa.steps != sb.steps {
+            return Err("step count must not depend on timing config".into());
+        }
+        Ok(())
+    });
+}
+
+/// Same seed ⇒ identical stats (simulator determinism).
+#[test]
+fn prop_simulator_deterministic() {
+    forall("determinism", 8, &shape_gen(4, 5), |s| {
+        let a = run_stats(s)?;
+        let b = run_stats(s)?;
+        if a == b {
+            Ok(())
+        } else {
+            Err("non-deterministic stats".into())
+        }
+    });
+
+    fn run_stats(s: &ConvShape) -> Result<(u64, u64, u64), String> {
+        let mut rng = Rng::new(13);
+        let input = random_input(s, 10, &mut rng);
+        let weights = random_weights(s, 5, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).map_err(|e| e.to_string())?;
+        let out = run_mapping(&cgra, Mapping::OpIm2col, s, &input, &weights)
+            .map_err(|e| format!("{e:#}"))?;
+        Ok((out.cgra_stats.cycles, out.cgra_stats.mem.loads, out.cgra_stats.mem.stores))
+    }
+}

@@ -1,0 +1,55 @@
+//! The cross-language gate: every AOT artifact (JAX/Pallas → HLO text)
+//! must agree bit-exactly with the Rust golden model AND the CGRA
+//! simulator. Requires `make artifacts` (the Makefile test target runs
+//! it first); skips with a loud message when artifacts are absent so
+//! `cargo test` alone stays usable.
+
+use openedge_cgra::runtime::{verify_all, Manifest, Runtime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn artifacts_verify_bit_exactly() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP runtime_verify: {} missing — run `make artifacts` first",
+            dir.join("manifest.json").display()
+        );
+        return;
+    }
+    let summary = verify_all(&dir).expect("verification run");
+    println!("{summary}");
+    assert!(summary.all_passed(), "artifact verification failed:\n{summary}");
+    // The manifest must exercise both Layer-1 kernels and the CNN.
+    assert!(summary.rows.iter().any(|r| r.name.contains("direct")));
+    assert!(summary.rows.iter().any(|r| r.name.contains("im2col")));
+    assert!(summary.rows.iter().any(|r| r.name.starts_with("cnn")));
+}
+
+#[test]
+fn runtime_reports_platform() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP runtime platform test: artifacts missing");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT client");
+    assert!(rt.platform().to_lowercase().contains("cpu"));
+}
+
+#[test]
+fn manifest_shapes_match_files() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP manifest test: artifacts missing");
+        return;
+    }
+    let m = Manifest::load(&dir).expect("manifest");
+    assert!(!m.artifacts.is_empty());
+    for a in &m.artifacts {
+        assert!(dir.join(&a.file).exists(), "artifact file {} missing", a.file);
+    }
+}

@@ -1,0 +1,28 @@
+# Convenience targets. Tier-1 verify is `cargo build --release &&
+# cargo test -q` (see ROADMAP.md / EXPERIMENTS.md "CI ⇔ tier-1").
+
+.PHONY: build test bench artifacts figures clean
+
+build:
+	cargo build --release --workspace
+
+test:
+	cargo test -q --workspace
+
+# All five bench targets (the figure generators). BENCH_WARMUP /
+# BENCH_SAMPLES env vars trade accuracy for speed (see benchkit).
+bench:
+	cargo bench --workspace
+
+# AOT-compile the JAX/Pallas HLO artifacts the runtime verifier and
+# `cargo run -- verify` consume. Requires the Python/JAX toolchain;
+# the Rust side skips loudly when these are absent.
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts
+
+figures:
+	cargo run --release -- report all --out reports
+
+clean:
+	cargo clean
+	rm -rf rust/artifacts reports

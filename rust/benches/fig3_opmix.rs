@@ -16,9 +16,12 @@ fn main() {
     let fig = report::fig3(&cfg, workers).expect("fig3");
     println!("{}", fig.text);
 
-    // ...then time the regeneration.
+    // ...then time the regeneration. The sweep-point cache would turn
+    // repeat samples into lookups, so clear it inside the timed closure
+    // — the bench must measure simulation, not memoization.
     let b = Bench::new(1, 5);
     b.run("report/fig3 (baseline layer, 4 mappings)", None, || {
+        openedge_cgra::coordinator::cache::global().clear();
         report::fig3(&cfg, workers).expect("fig3")
     });
 }

@@ -23,6 +23,8 @@ fn main() {
     let input = random_input(&shape, 30, &mut rng);
     let weights = random_weights(&shape, 9, &mut rng);
     let cgra = Cgra::new(cfg).expect("cgra");
+    // run_mapping itself is uncached (only run_all_mappings memoizes),
+    // so these per-mapping timings measure real simulation.
     let b = Bench::new(1, 3);
     for m in Mapping::ALL {
         b.run(

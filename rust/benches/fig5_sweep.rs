@@ -27,10 +27,15 @@ fn main() {
     let fig = report::fig5(&cfg, &spec, workers).expect("fig5");
     println!("{}", fig.text);
 
+    // Clear the sweep-point cache per sample: the bench's target is raw
+    // sweep throughput ("minutes, not seconds"), not cache hit latency.
     let b = Bench::new(0, if full { 1 } else { 3 });
     b.run(
         &format!("fig5 sweep ({} points)", spec.points().len()),
         Some(spec.points().len() as f64),
-        || report::fig5(&cfg, &spec, workers).expect("fig5"),
+        || {
+            openedge_cgra::coordinator::cache::global().clear();
+            report::fig5(&cfg, &spec, workers).expect("fig5")
+        },
     );
 }

@@ -1,12 +1,19 @@
 //! Bench: raw simulator performance — PE-slots per host second on the
-//! WP steady-state loop, plus program-generation cost. The target of
-//! the §Perf optimization pass (EXPERIMENTS.md): the Fig. 5 full sweep
-//! must complete in minutes.
+//! WP steady-state loop, plus program-generation and decode cost. The
+//! target of the §Perf optimization pass (EXPERIMENTS.md): the Fig. 5
+//! full sweep must complete in minutes.
+//!
+//! Reports the decode/execute split win directly: the same WP launch is
+//! driven through the pre-refactor enum interpreter
+//! (`Cgra::run_reference`, the "before") and the decoded µop engine
+//! (`Cgra::run_decoded`, the "after"), and the speedup is printed as a
+//! PE-slots-per-second ratio. The two engines are asserted to produce
+//! identical `RunStats` before any timing happens.
 //!
 //! `cargo bench --bench sim_throughput`
 
 use openedge_cgra::benchkit::Bench;
-use openedge_cgra::cgra::{Cgra, CgraConfig, Memory};
+use openedge_cgra::cgra::{decode, decode_cached, Cgra, CgraConfig, Memory};
 use openedge_cgra::conv::{random_input, random_weights, ConvShape};
 use openedge_cgra::isa::N_PES;
 use openedge_cgra::kernels::{wp, MemLayout};
@@ -23,24 +30,61 @@ fn main() {
 
     // Steady-state stepping rate: one WP launch, measured in PE slots.
     let prog = wp::build_program(&shape, &layout, wp::WpLaunch { k: 0, ci: 1, acc: true });
+    let dp = decode_cached(&prog);
     let mut mem = Memory::new(cfg.mem_words, cfg.n_banks);
     mem.poke_slice(layout.input, &input.data);
     mem.poke_slice(layout.weights, &weights.data);
-    let steps = cgra.run(&prog, &mut mem).expect("run").steps;
+    let steps = cgra.run_decoded(&dp, &mut mem).expect("run").steps;
+    let slots = (steps * N_PES as u64) as f64;
+
+    // Correctness gate before timing: both engines, fresh identical
+    // memories, step-for-step identical stats.
+    {
+        let mut m_ref = Memory::new(cfg.mem_words, cfg.n_banks);
+        m_ref.poke_slice(layout.input, &input.data);
+        m_ref.poke_slice(layout.weights, &weights.data);
+        let mut m_dec = m_ref.clone();
+        let s_ref = cgra.run_reference(&prog, &mut m_ref).expect("reference run");
+        let s_dec = cgra.run_decoded(&dp, &mut m_dec).expect("decoded run");
+        assert_eq!(s_ref, s_dec, "engines diverged — decoded run is not bit-exact");
+        println!("engines agree: {} steps, {} cycles, bit-exact stats\n", s_ref.steps, s_ref.cycles);
+    }
 
     let b = Bench::default();
-    b.run(
-        &format!("executor: WP launch ({} steps x {} PEs)", steps, N_PES),
-        Some((steps * N_PES as u64) as f64),
-        || cgra.run(&prog, &mut mem).expect("run"),
+
+    // BEFORE: the pre-refactor enum-matching interpreter.
+    let before = b.run(
+        &format!("executor[reference]: WP launch ({steps} steps x {N_PES} PEs)"),
+        Some(slots),
+        || cgra.run_reference(&prog, &mut mem).expect("run"),
     );
+
+    // AFTER: the decoded µop engine (decode amortized via the cache).
+    let after = b.run(
+        &format!("executor[decoded]:   WP launch ({steps} steps x {N_PES} PEs)"),
+        Some(slots),
+        || cgra.run_decoded(&dp, &mut mem).expect("run"),
+    );
+
+    let speedup = before.median() / after.median();
+    println!(
+        "\ndecode/execute split: {:.2}x PE-slots/s on the WP steady-state loop \
+         ({:.1}M -> {:.1}M slots/s)\n",
+        speedup,
+        slots / before.median() / 1e6,
+        slots / after.median() / 1e6,
+    );
+
+    // Decode cost in isolation (paid once per distinct program).
+    b.run("decode: WP launch program (uncached)", Some(1.0), || decode(&prog));
 
     // Program generation (relaunch) cost — the host-side hot path.
     b.run("program generation: WP (per launch)", Some(1.0), || {
         wp::build_program(&shape, &layout, wp::WpLaunch { k: 3, ci: 7, acc: true })
     });
 
-    // Full convolution including all 256 launches.
+    // Full convolution including all 256 launches (decoded engine +
+    // decode cache end to end).
     b.run(
         "end-to-end: WP baseline conv (256 launches)",
         Some(shape.macs() as f64),

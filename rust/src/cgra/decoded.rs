@@ -1,0 +1,530 @@
+//! Decode stage of the two-phase decode/execute engine.
+//!
+//! The original interpreter (kept as [`super::Cgra::run_reference`] for
+//! differential testing) re-matches the `isa::Instr`/`Src`/`Dst` enums on
+//! every step of every PE. This module lowers an [`isa::Program`] **once**
+//! into a dense µop representation the executor can replay cheaply:
+//!
+//! - operand muxes are pre-resolved ([`USrc`]): torus neighbour reads
+//!   become absolute PE indices via the `NEIGH` table, so the hot loop
+//!   never touches `Dir`/`PeId::neighbour`;
+//! - destinations are pre-split into a `wout` flag + register index, and
+//!   non-latching ops (stores, branches, `setaddr`, `nop`, `exit`) are
+//!   normalized to "no write" exactly as the executor treats them;
+//! - ops are pre-split into lanes ([`UKind`]): ALU, address, load, store
+//!   and branch, with the ALU function ([`AluFn`]) and branch condition
+//!   ([`BrFn`]) resolved at decode time;
+//! - per-(column, slot) step metadata ([`ColMeta`]) — DMA-port op count
+//!   and multiply presence — is *static* per fetched slot, so the cycle
+//!   model reads two table entries per column instead of classifying 16
+//!   instructions per step;
+//! - the per-PE op-class of every slot (`OpClass::idx()`) is precomputed,
+//!   letting the executor count *visits per slot* and fold them into the
+//!   op-mix histogram once at the end of the run.
+//!
+//! Every PE stream carries one trailing sentinel `nop`, so the executor
+//! clamps the column PC (`pc.min(len)`) instead of bounds-checking an
+//! `Option` — a PE whose PC runs past its program idles, as in hardware.
+//!
+//! [`decode_cached`] adds a bounded, sharded, process-wide memo keyed by
+//! a 128-bit content fingerprint: the Fig. 3/4/5 drivers and the benches
+//! re-launch identical programs constantly (WP alone relaunches 256
+//! times per baseline convolution, and every bench sample repeats them),
+//! and the cache turns those re-decodes into an `Arc` clone.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::isa::{Dst, Instr, Op, PeId, Program, Src, COLS, N_PES, ROWS};
+
+use super::exec::{dir_idx, NEIGH};
+use super::stats::OpClass;
+
+/// Sentinel register index meaning "no register write".
+pub(crate) const NO_REG: u8 = u8::MAX;
+
+/// Pre-resolved operand source. Identical semantics to [`isa::Src`]
+/// except that neighbour reads carry the absolute PE index.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum USrc {
+    /// Constant zero.
+    Zero,
+    /// Immediate.
+    Imm(i32),
+    /// Register-file entry.
+    Reg(u8),
+    /// The PE's own output register.
+    Own,
+    /// A neighbour's output register, by absolute PE index.
+    Neigh(u8),
+    /// The PE's DMA address register.
+    Addr,
+}
+
+/// ALU function of an [`UKind::Alu`] µop.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum AluFn {
+    Mov,
+    Add,
+    Sub,
+    Mul,
+    Shl,
+    Shr,
+    And,
+    Or,
+    Xor,
+    Min,
+    Max,
+}
+
+/// Branch condition of an [`UKind::Br`] µop.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum BrFn {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Always,
+}
+
+/// Execution lane of a µop.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum UKind {
+    /// Idle slot (explicit or implicit `nop`).
+    Nop,
+    /// Halt the array at the end of the step.
+    Exit,
+    /// ALU lane (latches via `wout`/`wreg`).
+    Alu(AluFn),
+    /// `addr = a + b`.
+    SetAddr,
+    /// `dst = mem[a + b]`.
+    Lw,
+    /// `dst = mem[addr]; addr += a + b`.
+    LwInc,
+    /// `mem[addr] = a; addr += b`.
+    SwInc,
+    /// `mem[a + b] = rout`.
+    SwAt,
+    /// Control flow steering the column PC.
+    Br(BrFn),
+}
+
+/// One decoded µop.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct UInstr {
+    /// Lane + function.
+    pub kind: UKind,
+    /// First operand.
+    pub a: USrc,
+    /// Second operand.
+    pub b: USrc,
+    /// Latch result into ROUT?
+    pub wout: bool,
+    /// Register to latch into, or [`NO_REG`].
+    pub wreg: u8,
+    /// Branch target (absolute slot).
+    pub target: u16,
+}
+
+/// Static per-(column, slot) step metadata.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct ColMeta {
+    /// DMA-port operations issued by this column at this slot.
+    pub mem_ops: u32,
+    /// True if any PE of the column multiplies at this slot.
+    pub any_mul: bool,
+}
+
+fn lower_src(s: Src, pe: usize) -> USrc {
+    match s {
+        Src::Zero => USrc::Zero,
+        Src::Imm(v) => USrc::Imm(v),
+        Src::Reg(r) => USrc::Reg(r),
+        Src::Own => USrc::Own,
+        Src::Neigh(d) => USrc::Neigh(NEIGH[pe][dir_idx(d)] as u8),
+        Src::Addr => USrc::Addr,
+    }
+}
+
+fn lower(ins: Instr, pe: usize) -> UInstr {
+    let kind = match ins.op {
+        Op::Nop => UKind::Nop,
+        Op::Exit => UKind::Exit,
+        Op::Mov => UKind::Alu(AluFn::Mov),
+        Op::Add => UKind::Alu(AluFn::Add),
+        Op::Sub => UKind::Alu(AluFn::Sub),
+        Op::Mul => UKind::Alu(AluFn::Mul),
+        Op::Shl => UKind::Alu(AluFn::Shl),
+        Op::Shr => UKind::Alu(AluFn::Shr),
+        Op::And => UKind::Alu(AluFn::And),
+        Op::Or => UKind::Alu(AluFn::Or),
+        Op::Xor => UKind::Alu(AluFn::Xor),
+        Op::Min => UKind::Alu(AluFn::Min),
+        Op::Max => UKind::Alu(AluFn::Max),
+        Op::SetAddr => UKind::SetAddr,
+        Op::Lw => UKind::Lw,
+        Op::LwInc => UKind::LwInc,
+        Op::SwInc => UKind::SwInc,
+        Op::SwAt => UKind::SwAt,
+        Op::Beq => UKind::Br(BrFn::Eq),
+        Op::Bne => UKind::Br(BrFn::Ne),
+        Op::Blt => UKind::Br(BrFn::Lt),
+        Op::Bge => UKind::Br(BrFn::Ge),
+        Op::Jump => UKind::Br(BrFn::Always),
+    };
+    // Only ALU ops and loads latch results; the reference interpreter
+    // ignores `dst` for every other op and so must the decoded form.
+    let latches = matches!(kind, UKind::Alu(_) | UKind::Lw | UKind::LwInc);
+    let (wout, wreg) = if latches {
+        match ins.dst {
+            Dst::Out => (true, NO_REG),
+            Dst::Reg(r) => (false, r),
+            Dst::Both(r) => (true, r),
+            Dst::None => (false, NO_REG),
+        }
+    } else {
+        (false, NO_REG)
+    };
+    UInstr {
+        kind,
+        a: lower_src(ins.a, pe),
+        b: lower_src(ins.b, pe),
+        wout,
+        wreg,
+        target: ins.target as u16,
+    }
+}
+
+/// A program lowered to the dense µop representation, plus the static
+/// step metadata the executor's cycle model consumes.
+///
+/// Deliberately does **not** hold a copy of the source `Program`: the
+/// lane kernels decode a fresh program per launch, and the only
+/// consumers of raw instructions are trace hooks, which receive the
+/// source program separately (`Cgra::run_hooked`).
+#[derive(Clone, Debug)]
+pub struct DecodedProgram {
+    /// Source program name (error messages, traces).
+    name: String,
+    /// Per-PE µop streams, each with a trailing sentinel `nop`.
+    code: [Vec<UInstr>; N_PES],
+    /// Per-column step metadata, indexed by clamped PC; the last entry
+    /// is the all-idle sentinel.
+    col_meta: [Vec<ColMeta>; COLS],
+    /// Per-PE `OpClass::idx()` of every (clamped) slot.
+    classes: [Vec<u8>; N_PES],
+}
+
+impl DecodedProgram {
+    /// Program name (as shown in errors and traces).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Total µops across all PEs (sentinels included).
+    pub fn total_uops(&self) -> usize {
+        self.code.iter().map(|v| v.len()).sum()
+    }
+
+    /// Fetch the µop of `pe` at `pc`, clamping past-the-end PCs to the
+    /// sentinel `nop`.
+    #[inline(always)]
+    pub(crate) fn uop(&self, pe: usize, pc: usize) -> UInstr {
+        let v = &self.code[pe];
+        v[pc.min(v.len() - 1)]
+    }
+
+    /// Static step metadata of column `c` (length = longest PE program
+    /// in the column + 1 sentinel).
+    #[inline(always)]
+    pub(crate) fn col_meta(&self, c: usize) -> &[ColMeta] {
+        &self.col_meta[c]
+    }
+
+    /// Pre-computed `OpClass::idx()` of `pe`'s slot `slot` (clamped
+    /// indices only — callers index with the same clamp as `col_meta`).
+    #[inline(always)]
+    pub(crate) fn class_at(&self, pe: usize, slot: usize) -> usize {
+        self.classes[pe][slot] as usize
+    }
+}
+
+/// Lower `prog` into its µop representation.
+pub fn decode(prog: &Program) -> DecodedProgram {
+    let code: [Vec<UInstr>; N_PES] = std::array::from_fn(|i| {
+        let pe = prog.pe(PeId::from_index(i));
+        let mut v: Vec<UInstr> = pe.instrs().iter().map(|&ins| lower(ins, i)).collect();
+        v.push(lower(Instr::nop(), i)); // sentinel
+        v
+    });
+    let mut col_meta: [Vec<ColMeta>; COLS] = std::array::from_fn(|_| Vec::new());
+    let mut classes: [Vec<u8>; N_PES] = std::array::from_fn(|_| Vec::new());
+    for c in 0..COLS {
+        let max_len = (0..ROWS).map(|r| prog.pe(PeId::new(r, c)).len()).max().unwrap_or(0);
+        let mut meta = vec![ColMeta::default(); max_len + 1];
+        for (p, slot) in meta.iter_mut().enumerate() {
+            for r in 0..ROWS {
+                let op = prog.pe(PeId::new(r, c)).fetch(p).op;
+                if op.is_mem() {
+                    slot.mem_ops += 1;
+                }
+                slot.any_mul |= op == Op::Mul;
+            }
+        }
+        for r in 0..ROWS {
+            let i = r * COLS + c;
+            classes[i] = (0..=max_len)
+                .map(|p| OpClass::classify(prog.pe(PeId::from_index(i)).fetch(p).op).idx() as u8)
+                .collect();
+        }
+        col_meta[c] = meta;
+    }
+    DecodedProgram { name: prog.name.clone(), code, col_meta, classes }
+}
+
+// ---------------------------------------------------------------------------
+// Decode cache
+// ---------------------------------------------------------------------------
+
+/// Number of lock shards in the process-wide decode cache.
+const DECODE_SHARDS: usize = 8;
+/// Entries per shard before the shard is wholesale evicted. Bounds the
+/// cache to `DECODE_SHARDS × DECODE_SHARD_CAP` decoded programs so that
+/// sweeps with thousands of unique per-launch programs cannot grow it
+/// without limit.
+const DECODE_SHARD_CAP: usize = 64;
+
+/// Total decode-cache capacity. Callers with a statically known launch
+/// set (e.g. WP's k×c programs per convolution) can compare against
+/// this to decide whether memoizing will hit or merely churn.
+pub const DECODE_CACHE_CAPACITY: usize = DECODE_SHARDS * DECODE_SHARD_CAP;
+
+type Shard = Mutex<HashMap<(u64, u64), Arc<DecodedProgram>>>;
+
+static DECODE_CACHE: OnceLock<Vec<Shard>> = OnceLock::new();
+static DECODE_HITS: AtomicU64 = AtomicU64::new(0);
+static DECODE_MISSES: AtomicU64 = AtomicU64::new(0);
+static DECODE_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+
+fn shards() -> &'static Vec<Shard> {
+    DECODE_CACHE.get_or_init(|| (0..DECODE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect())
+}
+
+/// Counters of the process-wide decode cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeCacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to decode.
+    pub misses: u64,
+    /// Entries dropped by shard eviction.
+    pub evictions: u64,
+    /// Decoded programs currently resident.
+    pub entries: usize,
+}
+
+/// 128-bit content fingerprint of a program: name + every instruction
+/// field, mixed through two independent multiply-xor streams. Two
+/// programs collide only if both 64-bit streams collide — negligible for
+/// the program counts any sweep can produce.
+fn fingerprint(prog: &Program) -> (u64, u64) {
+    let mut a = 0xcbf2_9ce4_8422_2325u64;
+    let mut b = 0x6c62_272e_07bb_0142u64;
+    let mut word = |x: u64| {
+        a = (a ^ x).wrapping_mul(0x1000_0000_01b3);
+        b = (b ^ x.rotate_left(17)).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        b ^= b >> 29;
+    };
+    for byte in prog.name.bytes() {
+        word(byte as u64);
+    }
+    let src_word = |s: Src| -> u64 {
+        match s {
+            Src::Zero => 0,
+            Src::Imm(v) => 1 | (v as u32 as u64) << 8,
+            Src::Reg(r) => 2 | (r as u64) << 8,
+            Src::Own => 3,
+            Src::Neigh(d) => 4 | (dir_idx(d) as u64) << 8,
+            Src::Addr => 5,
+        }
+    };
+    let dst_word = |d: Dst| -> u64 {
+        match d {
+            Dst::Out => 0,
+            Dst::Reg(r) => 1 | (r as u64) << 8,
+            Dst::Both(r) => 2 | (r as u64) << 8,
+            Dst::None => 3,
+        }
+    };
+    for id in PeId::all() {
+        let pe = prog.pe(id);
+        word(pe.len() as u64);
+        for ins in pe.instrs() {
+            // The mnemonic is unique per op and stable.
+            let op_hash = ins
+                .op
+                .mnemonic()
+                .bytes()
+                .fold(0u64, |h, c| h.wrapping_mul(31).wrapping_add(c as u64));
+            word(op_hash);
+            word(src_word(ins.a));
+            word(src_word(ins.b));
+            word(dst_word(ins.dst));
+            word(ins.target as u64);
+        }
+    }
+    (a, b)
+}
+
+/// Decode `prog`, memoizing the result in the process-wide sharded
+/// cache. Repeated launches of the same program (the normal case for
+/// every figure driver and bench) return a shared `Arc` without
+/// re-lowering anything.
+pub fn decode_cached(prog: &Program) -> Arc<DecodedProgram> {
+    let key = fingerprint(prog);
+    let shard = &shards()[key.0 as usize % DECODE_SHARDS];
+    if let Some(dp) = shard.lock().unwrap().get(&key) {
+        DECODE_HITS.fetch_add(1, Ordering::Relaxed);
+        return dp.clone();
+    }
+    DECODE_MISSES.fetch_add(1, Ordering::Relaxed);
+    let dp = Arc::new(decode(prog));
+    let mut map = shard.lock().unwrap();
+    if map.len() >= DECODE_SHARD_CAP {
+        DECODE_EVICTIONS.fetch_add(map.len() as u64, Ordering::Relaxed);
+        map.clear();
+    }
+    map.insert(key, dp.clone());
+    dp
+}
+
+/// Snapshot of the decode cache counters.
+pub fn decode_cache_stats() -> DecodeCacheStats {
+    DecodeCacheStats {
+        hits: DECODE_HITS.load(Ordering::Relaxed),
+        misses: DECODE_MISSES.load(Ordering::Relaxed),
+        evictions: DECODE_EVICTIONS.load(Ordering::Relaxed),
+        entries: shards().iter().map(|s| s.lock().unwrap().len()).sum(),
+    }
+}
+
+/// Drop every cached decode (counters are preserved).
+pub fn clear_decode_cache() {
+    for s in shards() {
+        s.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Dir;
+
+    #[test]
+    fn neighbour_sources_are_pre_resolved() {
+        let mut prog = Program::new("t");
+        prog.pe_mut(PeId::new(1, 2)).push(Instr::mov(Dst::Out, Src::Neigh(Dir::East)));
+        let dp = decode(&prog);
+        let i = PeId::new(1, 2).index();
+        let u = dp.uop(i, 0);
+        assert_eq!(u.a, USrc::Neigh(PeId::new(1, 3).index() as u8));
+        assert!(u.wout);
+        assert_eq!(u.wreg, NO_REG);
+    }
+
+    #[test]
+    fn sentinel_nop_past_end() {
+        let mut prog = Program::new("t");
+        prog.pe_mut(PeId::new(0, 0)).push(Instr::exit());
+        let dp = decode(&prog);
+        assert_eq!(dp.uop(0, 0).kind, UKind::Exit);
+        assert_eq!(dp.uop(0, 1).kind, UKind::Nop);
+        assert_eq!(dp.uop(0, 999).kind, UKind::Nop);
+        // Empty PEs are a single sentinel.
+        assert_eq!(dp.uop(5, 0).kind, UKind::Nop);
+    }
+
+    #[test]
+    fn non_latching_ops_never_write() {
+        let mut prog = Program::new("t");
+        let p = prog.pe_mut(PeId::new(0, 0));
+        // A store with a (nonsensical) Out destination must not latch.
+        p.push(Instr { op: Op::SwAt, a: Src::Imm(0), b: Src::Zero, dst: Dst::Out, target: 0 });
+        p.push(Instr { op: Op::SetAddr, a: Src::Zero, b: Src::Zero, dst: Dst::reg(1), target: 0 });
+        let dp = decode(&prog);
+        for pc in 0..2 {
+            let u = dp.uop(0, pc);
+            assert!(!u.wout, "slot {pc}");
+            assert_eq!(u.wreg, NO_REG, "slot {pc}");
+        }
+    }
+
+    #[test]
+    fn col_meta_counts_static_mem_and_mul() {
+        let mut prog = Program::new("t");
+        // Column 0: two loads + a mul at slot 0.
+        prog.pe_mut(PeId::new(0, 0)).push(Instr::new(Op::Lw, Src::Imm(0), Src::Zero, Dst::Out));
+        prog.pe_mut(PeId::new(1, 0)).push(Instr::new(Op::Lw, Src::Imm(1), Src::Zero, Dst::Out));
+        prog.pe_mut(PeId::new(2, 0)).push(Instr::new(Op::Mul, Src::Imm(2), Src::Imm(3), Dst::Out));
+        let dp = decode(&prog);
+        let m = dp.col_meta(0);
+        assert_eq!(m[0].mem_ops, 2);
+        assert!(m[0].any_mul);
+        // Sentinel slot is idle.
+        assert_eq!(m[m.len() - 1].mem_ops, 0);
+        assert!(!m[m.len() - 1].any_mul);
+        // Column 1 has no code: single idle sentinel.
+        assert_eq!(dp.col_meta(1).len(), 1);
+    }
+
+    #[test]
+    fn classes_match_static_classification() {
+        let mut prog = Program::new("t");
+        let p = prog.pe_mut(PeId::new(0, 0));
+        p.push(Instr::new(Op::Add, Src::Imm(1), Src::Imm(2), Dst::Out));
+        p.push(Instr::new(Op::Lw, Src::Imm(0), Src::Zero, Dst::Out));
+        let dp = decode(&prog);
+        assert_eq!(dp.class_at(0, 0), OpClass::Sum.idx());
+        assert_eq!(dp.class_at(0, 1), OpClass::Load.idx());
+        assert_eq!(dp.class_at(0, 2), OpClass::Nop.idx()); // sentinel
+    }
+
+    #[test]
+    fn fingerprints_separate_distinct_programs() {
+        let mut a = Program::new("p");
+        a.pe_mut(PeId::new(0, 0)).push(Instr::mov(Dst::Out, Src::Imm(1)));
+        let mut b = Program::new("p");
+        b.pe_mut(PeId::new(0, 0)).push(Instr::mov(Dst::Out, Src::Imm(2)));
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        let mut c = Program::new("q");
+        c.pe_mut(PeId::new(0, 0)).push(Instr::mov(Dst::Out, Src::Imm(1)));
+        assert_ne!(fingerprint(&a), fingerprint(&c), "name participates");
+        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+    }
+
+    #[test]
+    fn decode_cached_hits_on_repeat() {
+        // Other tests in this binary use the process-wide cache
+        // concurrently and can trigger an epoch eviction between two
+        // adjacent calls, so allow a few attempts before declaring the
+        // cache broken.
+        let mut prog = Program::new("decode-cache-hit-test-unique-name");
+        prog.pe_mut(PeId::new(0, 0)).push(Instr::exit());
+        let before = decode_cache_stats();
+        let mut hit = false;
+        for _ in 0..32 {
+            let a = decode_cached(&prog);
+            let b = decode_cached(&prog);
+            if Arc::ptr_eq(&a, &b) {
+                hit = true;
+                break;
+            }
+        }
+        let after = decode_cache_stats();
+        assert!(hit, "decode_cached never returned a shared Arc in 32 attempts");
+        assert!(after.hits > before.hits);
+        assert!(after.misses >= before.misses + 1);
+    }
+}

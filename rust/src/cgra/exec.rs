@@ -16,19 +16,32 @@
 //!   widened by DMA-port serialization (one port per column) and bank
 //!   conflicts — the "collisions between PEs" of the paper's §3.1.
 //! - Any PE issuing `exit` halts the array at the end of the step.
+//!
+//! # Decode/execute split (DESIGN.md §3.4)
+//!
+//! The hot path is a two-stage engine: [`super::decoded`] lowers a
+//! program once into dense µops (pre-resolved neighbour indices,
+//! pre-split destination masks, static per-column step metadata), and
+//! [`Cgra::run_decoded`] replays that representation. The original
+//! enum-matching interpreter is kept, verbatim, as
+//! [`Cgra::run_reference`]: it is the differential baseline the decoded
+//! engine is required to match step-for-step (`RunStats` equality) and
+//! the "before" side of the `sim_throughput` bench.
 
 use anyhow::{bail, Context, Result};
 
 use crate::isa::{Dst, Instr, Op, PeId, Program, Src, COLS, N_PES, N_REGS, ROWS};
 
 use super::config::CgraConfig;
+use super::decoded::{self, AluFn, BrFn, DecodedProgram, UKind, USrc, NO_REG};
 use super::memory::Memory;
 use super::stats::{OpClass, RunStats};
 
 /// Torus neighbour lookup table: `NEIGH[pe][dir]` = neighbour PE index
-/// (dir order: N, S, E, W). Precomputed so the hot loop avoids the
-/// div/mod arithmetic of [`PeId::neighbour`].
-const NEIGH: [[usize; 4]; N_PES] = build_neigh();
+/// (dir order: N, S, E, W). Precomputed so neither interpreter pays the
+/// div/mod arithmetic of [`PeId::neighbour`]; the decode stage folds it
+/// into the µops.
+pub(crate) const NEIGH: [[usize; 4]; N_PES] = build_neigh();
 
 const fn build_neigh() -> [[usize; 4]; N_PES] {
     let mut t = [[0usize; 4]; N_PES];
@@ -45,7 +58,7 @@ const fn build_neigh() -> [[usize; 4]; N_PES] {
 }
 
 #[inline(always)]
-const fn dir_idx(d: crate::isa::Dir) -> usize {
+pub(crate) const fn dir_idx(d: crate::isa::Dir) -> usize {
     match d {
         crate::isa::Dir::North => 0,
         crate::isa::Dir::South => 1,
@@ -60,6 +73,15 @@ struct PeState {
     regs: [i32; N_REGS],
     rout: i32,
     addr: i32,
+}
+
+/// One deferred result latch of the decoded engine's current step.
+#[derive(Clone, Copy, Debug)]
+struct Latch {
+    pe: u8,
+    wout: bool,
+    wreg: u8,
+    val: i32,
 }
 
 /// Per-step observation passed to trace hooks.
@@ -97,28 +119,324 @@ impl Cgra {
     }
 
     /// Execute `prog` against `mem` until `exit` (or the watchdog trips).
+    ///
+    /// Decodes through the process-wide memo ([`decoded::decode_cached`])
+    /// and runs the µop engine; callers that launch the same decoded
+    /// program repeatedly should hold the [`DecodedProgram`] themselves
+    /// and call [`Cgra::run_decoded`].
     pub fn run(&self, prog: &Program, mem: &mut Memory) -> Result<RunStats> {
+        let dp = decoded::decode_cached(prog);
+        self.run_decoded(&dp, mem)
+    }
+
+    /// Execute an already-decoded program — the hot entry point used by
+    /// the kernel drivers.
+    pub fn run_decoded(&self, dp: &DecodedProgram, mem: &mut Memory) -> Result<RunStats> {
         // TRACE = false compiles the StepTrace construction out of the
         // hot loop entirely (measured ~10% on the executor bench).
-        self.run_inner::<false>(prog, mem, &mut |_| {})
+        self.run_decoded_inner::<false>(dp, None, mem, &mut |_| {})
     }
 
     /// Execute with a per-step trace hook (debugging, pipeline tests).
+    /// The source program rides along so traces can report the raw
+    /// fetched instructions (the decoded form drops them).
     pub fn run_hooked(
         &self,
         prog: &Program,
         mem: &mut Memory,
         mut hook: impl FnMut(&StepTrace),
     ) -> Result<RunStats> {
-        self.run_inner::<true>(prog, mem, &mut hook)
+        let dp = decoded::decode(prog);
+        self.run_decoded_inner::<true>(&dp, Some(prog), mem, &mut hook)
     }
 
-    fn run_inner<const TRACE: bool>(
+    fn run_decoded_inner<const TRACE: bool>(
         &self,
-        prog: &Program,
+        dp: &DecodedProgram,
+        raw: Option<&Program>,
         mem: &mut Memory,
         hook: &mut dyn FnMut(&StepTrace),
     ) -> Result<RunStats> {
+        let mut st = [PeState::default(); N_PES];
+        let mut pcs = [0usize; COLS];
+        let mut stats = RunStats::new();
+        let mem0 = mem.stats();
+
+        // Per-(column, slot) visit counters: the op class of every slot
+        // is static, so the per-step histogram update of the reference
+        // interpreter collapses to one counter increment per column,
+        // folded into `stats.op_mix` once at the end.
+        let mut visits: [Vec<u64>; COLS] =
+            std::array::from_fn(|c| vec![0u64; dp.col_meta(c).len()]);
+
+        // Scratch reused across steps.
+        let mut instrs = [Instr::nop(); N_PES]; // TRACE only
+        let mut results = [0i32; N_PES]; // TRACE only
+        // Deferred writebacks (synchronous array): each PE issues at most
+        // one instruction per step, so at most one latch and one address
+        // record each — applied after every operand read of the step.
+        let mut latches = [Latch { pe: 0, wout: false, wreg: NO_REG, val: 0 }; N_PES];
+        let mut addrs = [(0u8, 0i32); N_PES];
+        // Pending stores: (addr, value, pe_index).
+        let mut pending_stores: Vec<(i32, i32, usize)> = Vec::with_capacity(N_PES);
+        // Branch decision per column: (taken, target).
+        let mut branch: [Option<(bool, usize)>; COLS];
+        let mut bank_hits = vec![0u32; self.cfg.n_banks.max(1)];
+
+        loop {
+            if stats.steps >= self.cfg.max_steps {
+                bail!(
+                    "watchdog: program '{}' exceeded {} steps without exit",
+                    dp.name(),
+                    self.cfg.max_steps
+                );
+            }
+
+            // ---- static per-column step metadata ----
+            let mut any_mul = false;
+            let mut any_mem = false;
+            let mut max_port_ops = 0u32;
+            for c in 0..COLS {
+                let meta = dp.col_meta(c);
+                let idx = pcs[c].min(meta.len() - 1);
+                visits[c][idx] += 1;
+                let m = meta[idx];
+                any_mul |= m.any_mul;
+                any_mem |= m.mem_ops > 0;
+                max_port_ops = max_port_ops.max(m.mem_ops);
+            }
+
+            // ---- evaluate & execute ----
+            let mut exit = false;
+            let mut n_latch = 0usize;
+            let mut n_addr = 0usize;
+            pending_stores.clear();
+            branch = [None; COLS];
+            if any_mem {
+                bank_hits.iter_mut().for_each(|x| *x = 0);
+            }
+
+            for i in 0..N_PES {
+                let col = i % COLS;
+                let pc = pcs[col];
+                let u = dp.uop(i, pc);
+                if TRACE {
+                    instrs[i] = raw
+                        .map(|p| p.pe(PeId::from_index(i)).fetch(pc))
+                        .unwrap_or_else(Instr::nop);
+                    results[i] = 0;
+                }
+
+                match u.kind {
+                    UKind::Nop => {}
+                    UKind::Exit => exit = true,
+                    UKind::Alu(f) => {
+                        let a = read_usrc(u.a, i, &st);
+                        let b = read_usrc(u.b, i, &st);
+                        let v = match f {
+                            AluFn::Mov => a,
+                            AluFn::Add => a.wrapping_add(b),
+                            AluFn::Sub => a.wrapping_sub(b),
+                            AluFn::Mul => a.wrapping_mul(b),
+                            AluFn::Shl => a.wrapping_shl(b as u32 & 31),
+                            AluFn::Shr => a.wrapping_shr(b as u32 & 31),
+                            AluFn::And => a & b,
+                            AluFn::Or => a | b,
+                            AluFn::Xor => a ^ b,
+                            AluFn::Min => a.min(b),
+                            AluFn::Max => a.max(b),
+                        };
+                        if TRACE {
+                            results[i] = v;
+                        }
+                        if u.wout || u.wreg != NO_REG {
+                            latches[n_latch] =
+                                Latch { pe: i as u8, wout: u.wout, wreg: u.wreg, val: v };
+                            n_latch += 1;
+                        }
+                    }
+                    UKind::SetAddr => {
+                        let v = read_usrc(u.a, i, &st).wrapping_add(read_usrc(u.b, i, &st));
+                        addrs[n_addr] = (i as u8, v);
+                        n_addr += 1;
+                        if TRACE {
+                            results[i] = v;
+                        }
+                    }
+                    UKind::Lw => {
+                        let addr =
+                            read_usrc(u.a, i, &st).wrapping_add(read_usrc(u.b, i, &st));
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        let v = mem.load(addr).with_context(|| {
+                            format!("{} lw at step {}", PeId::from_index(i), stats.steps)
+                        })?;
+                        if TRACE {
+                            results[i] = v;
+                        }
+                        if u.wout || u.wreg != NO_REG {
+                            latches[n_latch] =
+                                Latch { pe: i as u8, wout: u.wout, wreg: u.wreg, val: v };
+                            n_latch += 1;
+                        }
+                    }
+                    UKind::LwInc => {
+                        let addr = st[i].addr;
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        let v = mem.load(addr).with_context(|| {
+                            format!("{} lwinc at step {}", PeId::from_index(i), stats.steps)
+                        })?;
+                        let inc =
+                            read_usrc(u.a, i, &st).wrapping_add(read_usrc(u.b, i, &st));
+                        addrs[n_addr] = (i as u8, addr.wrapping_add(inc));
+                        n_addr += 1;
+                        if TRACE {
+                            results[i] = v;
+                        }
+                        if u.wout || u.wreg != NO_REG {
+                            latches[n_latch] =
+                                Latch { pe: i as u8, wout: u.wout, wreg: u.wreg, val: v };
+                            n_latch += 1;
+                        }
+                    }
+                    UKind::SwInc => {
+                        let addr = st[i].addr;
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        pending_stores.push((addr, read_usrc(u.a, i, &st), i));
+                        addrs[n_addr] = (i as u8, addr.wrapping_add(read_usrc(u.b, i, &st)));
+                        n_addr += 1;
+                    }
+                    UKind::SwAt => {
+                        let addr =
+                            read_usrc(u.a, i, &st).wrapping_add(read_usrc(u.b, i, &st));
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        pending_stores.push((addr, st[i].rout, i));
+                    }
+                    UKind::Br(f) => {
+                        let a = read_usrc(u.a, i, &st);
+                        let b = read_usrc(u.b, i, &st);
+                        let taken = match f {
+                            BrFn::Eq => a == b,
+                            BrFn::Ne => a != b,
+                            BrFn::Lt => a < b,
+                            BrFn::Ge => a >= b,
+                            BrFn::Always => true,
+                        };
+                        if branch[col].is_some() {
+                            bail!(
+                                "two control-flow ops in column {} at step {} (program '{}')",
+                                col,
+                                stats.steps,
+                                dp.name()
+                            );
+                        }
+                        branch[col] = Some((taken, u.target as usize));
+                    }
+                }
+            }
+
+            // ---- apply stores (loads already saw pre-step memory) ----
+            pending_stores.sort_unstable_by_key(|&(a, _, _)| a);
+            for w in pending_stores.windows(2) {
+                if w[0].0 == w[1].0 {
+                    bail!(
+                        "store conflict: PEs {} and {} both store to word {} at step {} \
+                         (program '{}')",
+                        PeId::from_index(w[0].2),
+                        PeId::from_index(w[1].2),
+                        w[0].0,
+                        stats.steps,
+                        dp.name()
+                    );
+                }
+            }
+            for &(addr, val, pe) in &pending_stores {
+                mem.store(addr, val).with_context(|| {
+                    format!("{} store at step {}", PeId::from_index(pe), stats.steps)
+                })?;
+            }
+
+            // ---- cycle cost ----
+            let alu_part = if any_mul { self.cfg.mul_latency } else { self.cfg.alu_latency }
+                .max(self.cfg.alu_latency);
+            let port_part = max_port_ops as u64 * self.cfg.mem_latency;
+            let bank_part = if any_mem {
+                bank_hits
+                    .iter()
+                    .map(|&n| {
+                        if n == 0 {
+                            0
+                        } else {
+                            self.cfg.mem_latency + (n as u64 - 1) * self.cfg.bank_penalty
+                        }
+                    })
+                    .max()
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            let ideal = alu_part.max(if any_mem { self.cfg.mem_latency } else { 0 });
+            let step_cycles = alu_part.max(port_part).max(bank_part).max(1);
+            stats.cycles += step_cycles;
+            stats.contention_cycles += step_cycles - ideal.min(step_cycles);
+
+            // ---- trace hook ----
+            if TRACE {
+                hook(&StepTrace { step: stats.steps, pcs, instrs, results, cycles: step_cycles });
+            }
+
+            // ---- writeback (at most one latch + one addr per PE) ----
+            for l in &latches[..n_latch] {
+                let s = &mut st[l.pe as usize];
+                if l.wout {
+                    s.rout = l.val;
+                }
+                if l.wreg != NO_REG {
+                    s.regs[l.wreg as usize] = l.val;
+                }
+            }
+            for &(pe, a) in &addrs[..n_addr] {
+                st[pe as usize].addr = a;
+            }
+
+            // ---- PC update ----
+            for c in 0..COLS {
+                pcs[c] = match branch[c] {
+                    Some((true, t)) => t,
+                    _ => pcs[c] + 1,
+                };
+            }
+
+            stats.steps += 1;
+            if exit {
+                stats.exited = true;
+                break;
+            }
+        }
+
+        // Fold the per-slot visit counters into the op-mix histogram.
+        for c in 0..COLS {
+            for (p, &n) in visits[c].iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                for r in 0..ROWS {
+                    let i = r * COLS + c;
+                    stats.op_mix[i][dp.class_at(i, p)] += n;
+                }
+            }
+        }
+        let m1 = mem.stats();
+        stats.mem.loads = m1.loads - mem0.loads;
+        stats.mem.stores = m1.stores - mem0.stores;
+        Ok(stats)
+    }
+
+    /// The pre-refactor enum-matching interpreter, kept verbatim as the
+    /// differential baseline: the decoded engine must produce identical
+    /// `RunStats` and memory effects on every program. Also the "before"
+    /// side of the `sim_throughput` bench. Not a hot path — use
+    /// [`Cgra::run`] / [`Cgra::run_decoded`] for real work.
+    pub fn run_reference(&self, prog: &Program, mem: &mut Memory) -> Result<RunStats> {
         let mut st = [PeState::default(); N_PES];
         let mut pcs = [0usize; COLS];
         let mut stats = RunStats::new();
@@ -325,8 +643,8 @@ impl Cgra {
             }
 
             // ---- cycle cost ----
-            let alu_part =
-                if any_mul { self.cfg.mul_latency } else { self.cfg.alu_latency }.max(self.cfg.alu_latency);
+            let alu_part = if any_mul { self.cfg.mul_latency } else { self.cfg.alu_latency }
+                .max(self.cfg.alu_latency);
             let port_part = mem_ops_per_col
                 .iter()
                 .map(|&n| n as u64 * self.cfg.mem_latency)
@@ -347,11 +665,6 @@ impl Cgra {
             let step_cycles = alu_part.max(port_part).max(bank_part).max(1);
             stats.cycles += step_cycles;
             stats.contention_cycles += step_cycles - ideal.min(step_cycles);
-
-            // ---- trace hook ----
-            if TRACE {
-                hook(&StepTrace { step: stats.steps, pcs, instrs, results, cycles: step_cycles });
-            }
 
             // ---- writeback ----
             for i in 0..N_PES {
@@ -388,6 +701,18 @@ impl Cgra {
         stats.mem.loads = m1.loads - mem_loads0.loads;
         stats.mem.stores = m1.stores - mem_loads0.stores;
         Ok(stats)
+    }
+}
+
+#[inline(always)]
+fn read_usrc(s: USrc, i: usize, st: &[PeState; N_PES]) -> i32 {
+    match s {
+        USrc::Zero => 0,
+        USrc::Imm(v) => v,
+        USrc::Reg(r) => st[i].regs[r as usize],
+        USrc::Own => st[i].rout,
+        USrc::Neigh(n) => st[n as usize].rout,
+        USrc::Addr => st[i].addr,
     }
 }
 
@@ -705,5 +1030,124 @@ mod tests {
         let mut m = mem();
         cgra().run(&prog, &mut m).unwrap();
         assert_eq!(m.peek(11), 99);
+    }
+
+    /// The decoded engine and the reference enum interpreter agree
+    /// step-for-step (stats) and word-for-word (memory) on a menagerie
+    /// of programs: arithmetic, torus shifts, auto-increment streaming,
+    /// branching loops, port and bank contention.
+    #[test]
+    fn decoded_matches_reference_interpreter() {
+        let mut programs: Vec<Program> = Vec::new();
+
+        let mut p1 = Program::new("diff-alu");
+        let q = p1.pe_mut(PeId::new(0, 0));
+        q.push(Instr::new(Op::Add, Src::Imm(2), Src::Imm(3), Dst::Both(0)));
+        q.push(Instr::new(Op::Mul, Src::Reg(0), Src::Imm(-7), Dst::Out));
+        q.push(Instr::new(Op::Xor, Src::Own, Src::Imm(0x55), Dst::Out));
+        q.push(Instr::new(Op::Min, Src::Own, Src::Imm(4), Dst::Out));
+        q.push(Instr::new(Op::SwAt, Src::Imm(40), Src::Zero, Dst::None));
+        q.push(Instr::exit());
+        programs.push(p1);
+
+        let mut p2 = Program::new("diff-stream");
+        for col in 0..COLS {
+            let q = p2.pe_mut(PeId::new(0, col));
+            q.push(Instr::new(Op::SetAddr, Src::Imm(col as i32 * 8), Src::Zero, Dst::None));
+            q.push(Instr::mov(Dst::Reg(0), Src::Imm(4)));
+            q.push(Instr::new(Op::LwInc, Src::Imm(1), Src::Zero, Dst::Out));
+            q.push(Instr::new(Op::Sub, Src::Reg(0), Src::Imm(1), Dst::Reg(0)));
+            q.push(Instr::branch(Op::Bne, Src::Reg(0), Src::Zero, 2));
+            q.push(Instr::new(Op::SwAt, Src::Imm(64 + col as i32), Src::Zero, Dst::None));
+            if col == 3 {
+                q.push(Instr::exit());
+            }
+        }
+        programs.push(p2);
+
+        let mut p3 = Program::new("diff-torus");
+        for col in 0..COLS {
+            let q = p3.pe_mut(PeId::new(1, col));
+            q.push(Instr::mov(Dst::Out, Src::Imm(10 + col as i32)));
+            for _ in 0..3 {
+                q.push(Instr::mov(Dst::Out, Src::Neigh(Dir::East)));
+            }
+            q.push(Instr::new(Op::SwAt, Src::Imm(80 + col as i32), Src::Zero, Dst::None));
+            if col == 0 {
+                q.push(Instr::exit());
+            }
+        }
+        programs.push(p3);
+
+        for cfg in [CgraConfig::functional(), CgraConfig::default()] {
+            let c = Cgra::new(cfg).unwrap();
+            for prog in &programs {
+                let mut m_ref = mem();
+                let mut m_dec = mem();
+                for a in 0..32 {
+                    m_ref.poke(a, (a * a) as i32 - 17);
+                    m_dec.poke(a, (a * a) as i32 - 17);
+                }
+                let s_ref = c.run_reference(prog, &mut m_ref).unwrap();
+                let s_dec = c.run(prog, &mut m_dec).unwrap();
+                assert_eq!(s_ref, s_dec, "stats diverge on '{}'", prog.name);
+                assert_eq!(
+                    m_ref.peek_slice(0, 128),
+                    m_dec.peek_slice(0, 128),
+                    "memory diverges on '{}'",
+                    prog.name
+                );
+            }
+        }
+    }
+
+    /// Error paths agree between the engines (same message text).
+    #[test]
+    fn decoded_matches_reference_errors() {
+        // Double branch.
+        let mut dbl = Program::new("dbl");
+        dbl.pe_mut(PeId::new(0, 0)).push(Instr::jump(0));
+        dbl.pe_mut(PeId::new(1, 0)).push(Instr::jump(0));
+        // Store conflict.
+        let mut conflict = Program::new("conflict");
+        for col in [0, 1] {
+            let p = conflict.pe_mut(PeId::new(0, col));
+            p.push(Instr::new(Op::SetAddr, Src::Imm(9), Src::Zero, Dst::None));
+            p.push(Instr::new(Op::SwInc, Src::Imm(1), Src::Zero, Dst::None));
+        }
+        // Out-of-bounds load.
+        let mut oob = Program::new("oob");
+        oob.pe_mut(PeId::new(2, 2)).push(Instr::new(
+            Op::Lw,
+            Src::Imm(1 << 20),
+            Src::Zero,
+            Dst::Out,
+        ));
+        let c = cgra();
+        for prog in [&dbl, &conflict, &oob] {
+            let e_ref = format!("{:#}", c.run_reference(prog, &mut mem()).unwrap_err());
+            let e_dec = format!("{:#}", c.run(prog, &mut mem()).unwrap_err());
+            assert_eq!(e_ref, e_dec, "error text diverges on '{}'", prog.name);
+        }
+    }
+
+    /// The trace hook sees the same fetched instructions and per-step
+    /// results the reference interpreter produced.
+    #[test]
+    fn hooked_trace_reports_fetched_instrs() {
+        let mut prog = Program::new("trace");
+        let p = prog.pe_mut(PeId::new(0, 0));
+        p.push(Instr::new(Op::Add, Src::Imm(20), Src::Imm(22), Dst::Out));
+        p.push(Instr::exit());
+        let mut steps = Vec::new();
+        cgra()
+            .run_hooked(&prog, &mut mem(), |t| steps.push((t.step, t.instrs[0], t.results[0])))
+            .unwrap();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].1.op, Op::Add);
+        assert_eq!(steps[0].2, 42);
+        assert_eq!(steps[1].1.op, Op::Exit);
+        // Idle PEs trace as nop.
+        assert_eq!(steps[0].0, 0);
     }
 }

@@ -4,13 +4,23 @@
 //! 32-word programs, torus neighbour links, per-column program counters
 //! and DMA ports, a banked memory subsystem, and the timing model whose
 //! collision behaviour drives the paper's Figure 4/5 results.
+//!
+//! Execution is a two-stage decode/execute engine (DESIGN.md §3.4):
+//! [`decode`] lowers a program once into a dense µop form, and the
+//! executor replays it; [`decode_cached`] memoizes decodes process-wide
+//! for the figure drivers and benches that relaunch identical programs.
 
 mod config;
+mod decoded;
 mod exec;
 mod memory;
 mod stats;
 
 pub use config::CgraConfig;
+pub use decoded::{
+    clear_decode_cache, decode, decode_cache_stats, decode_cached, DecodeCacheStats,
+    DecodedProgram, DECODE_CACHE_CAPACITY,
+};
 pub use exec::{column_pes, Cgra, StepTrace};
 pub use memory::{MemStats, Memory};
 pub use stats::{OpClass, RunStats};

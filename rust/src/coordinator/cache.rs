@@ -1,0 +1,256 @@
+//! Sharded cross-driver sweep cache.
+//!
+//! The Fig. 3/4/5 drivers, the CLI subcommands and the benches evaluate
+//! overlapping (mapping, shape, data seed, config) points over and over
+//! — every bench sample re-runs the whole grid, and the baseline layer
+//! appears on all three sweep axes at once. A sweep *point* is fully
+//! determined by its [`PointKey`] (the data RNG is seeded from the shape
+//! and the spec seed, and the simulator is deterministic), so completed
+//! points can be memoized safely.
+//!
+//! The cache is sharded: workers from [`super::pool::run_jobs`] hit
+//! different locks, so the memo never serializes the sweep. The decoded
+//! *program* memo lives one layer down in [`crate::cgra::decode_cached`]
+//! (kernels own program construction); [`CacheStats`] here and
+//! [`crate::cgra::decode_cache_stats`] together describe both stages.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::cgra::CgraConfig;
+use crate::conv::ConvShape;
+use crate::kernels::Mapping;
+use crate::metrics::MappingReport;
+
+/// Everything that determines a sweep point's result.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PointKey {
+    /// Strategy.
+    pub mapping: Mapping,
+    /// Layer shape.
+    pub shape: ConvShape,
+    /// Input-data magnitude (Fig. 5 sweeps use one magnitude for both
+    /// tensors; the Fig. 3/4 drivers draw weights at a different one).
+    pub in_mag: i32,
+    /// Weight-data magnitude.
+    pub w_mag: i32,
+    /// Derived per-point data seed.
+    pub seed: u64,
+    /// Fingerprint of the full simulator configuration.
+    pub cfg_fp: u64,
+}
+
+/// A completed sweep evaluation.
+#[derive(Clone, Debug)]
+pub enum CachedOutcome {
+    /// Metrics of a successful run.
+    Report(MappingReport),
+    /// The point was skipped (memory bound / invalid config), with the
+    /// reason string exactly as the sweep row reports it.
+    Skipped(String),
+}
+
+/// Cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to simulate.
+    pub misses: u64,
+    /// Entries dropped by shard eviction.
+    pub evictions: u64,
+    /// Points currently resident.
+    pub entries: usize,
+}
+
+/// Fingerprint of every [`CgraConfig`] field that can influence a run.
+pub fn cfg_fingerprint(cfg: &CgraConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in [
+        cfg.alu_latency,
+        cfg.mul_latency,
+        cfg.mem_latency,
+        cfg.bank_penalty,
+        cfg.n_banks as u64,
+        cfg.mem_words as u64,
+        cfg.launch_overhead,
+        cfg.instruction_load_overhead,
+        cfg.max_steps,
+    ] {
+        h = (h ^ v).wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Entries per shard before the shard is wholesale evicted — the same
+/// epoch-eviction bound as the decode cache, so a long-running process
+/// sweeping many distinct grids/configs cannot grow the memo without
+/// limit. The full paper grid is ~300 points, far under one epoch.
+const POINT_SHARD_CAP: usize = 512;
+
+/// Sharded memo of completed sweep points.
+pub struct PointCache {
+    shards: Vec<Mutex<HashMap<PointKey, CachedOutcome>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PointCache {
+    /// Cache with `shards` independent lock shards (≥ 1).
+    pub fn new(shards: usize) -> PointCache {
+        let shards = shards.max(1);
+        PointCache {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &PointKey) -> &Mutex<HashMap<PointKey, CachedOutcome>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[h.finish() as usize % self.shards.len()]
+    }
+
+    /// Look up a completed point (counted as hit or miss).
+    pub fn get(&self, key: &PointKey) -> Option<CachedOutcome> {
+        let found = self.shard(key).lock().unwrap().get(key).cloned();
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Record a completed point. When a shard reaches its cap the whole
+    /// shard is evicted (epoch eviction — cheap, and re-misses are just
+    /// re-simulations).
+    pub fn insert(&self, key: PointKey, outcome: CachedOutcome) {
+        let mut map = self.shard(&key).lock().unwrap();
+        if map.len() >= POINT_SHARD_CAP && !map.contains_key(&key) {
+            self.evictions.fetch_add(map.len() as u64, Ordering::Relaxed);
+            map.clear();
+        }
+        map.insert(key, outcome);
+    }
+
+    /// Number of cached points.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached point (counters are preserved).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+impl Default for PointCache {
+    fn default() -> Self {
+        PointCache::new(8)
+    }
+}
+
+/// The process-wide point cache shared by every sweep/figure driver.
+pub fn global() -> &'static PointCache {
+    static GLOBAL: OnceLock<PointCache> = OnceLock::new();
+    GLOBAL.get_or_init(PointCache::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(mag: i32) -> PointKey {
+        PointKey {
+            mapping: Mapping::Wp,
+            shape: ConvShape::baseline(),
+            in_mag: mag,
+            w_mag: mag,
+            seed: 7,
+            cfg_fp: cfg_fingerprint(&CgraConfig::default()),
+        }
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let c = PointCache::new(4);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), CachedOutcome::Skipped("because".into()));
+        match c.get(&key(1)) {
+            Some(CachedOutcome::Skipped(s)) => assert_eq!(s, "because"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(c.get(&key(2)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1));
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let c = PointCache::new(2);
+        c.insert(key(1), CachedOutcome::Skipped("x".into()));
+        assert!(!c.is_empty());
+        let _ = c.get(&key(1));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn cfg_fingerprint_separates_configs() {
+        let a = CgraConfig::default();
+        let b = CgraConfig { mem_words: 2048, ..CgraConfig::default() };
+        let c = CgraConfig { mul_latency: 3, ..CgraConfig::default() };
+        assert_ne!(cfg_fingerprint(&a), cfg_fingerprint(&b));
+        assert_ne!(cfg_fingerprint(&a), cfg_fingerprint(&c));
+        assert_eq!(cfg_fingerprint(&a), cfg_fingerprint(&a.clone()));
+    }
+
+    #[test]
+    fn zero_shards_clamped() {
+        let c = PointCache::new(0);
+        c.insert(key(3), CachedOutcome::Skipped("s".into()));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn shard_cap_evicts_by_epoch() {
+        let c = PointCache::new(1);
+        for seed in 0..(POINT_SHARD_CAP as u64 + 1) {
+            let mut k = key(1);
+            k.seed = seed;
+            c.insert(k, CachedOutcome::Skipped("x".into()));
+        }
+        let s = c.stats();
+        assert!(s.evictions >= POINT_SHARD_CAP as u64, "evictions {}", s.evictions);
+        assert!(s.entries <= POINT_SHARD_CAP);
+        // Cache still functions after eviction.
+        let mut k = key(1);
+        k.seed = 9_999_999;
+        c.insert(k, CachedOutcome::Skipped("y".into()));
+        assert!(c.get(&k).is_some());
+    }
+}

@@ -1,10 +1,15 @@
-//! Orchestration layer: worker pool, the Figure-5 sweep, and the
-//! layer-wise CNN runner.
+//! Orchestration layer: worker pool, the sharded Figure-5 sweep with its
+//! cross-driver point cache, and the layer-wise CNN runner.
 
+pub mod cache;
 pub mod network;
 pub mod pool;
 pub mod sweep;
 
+pub use cache::{cfg_fingerprint, CacheStats, CachedOutcome, PointCache, PointKey};
 pub use network::{golden_network, run_network, ConvLayer, ConvNet, NetworkOutcome};
 pub use pool::{default_workers, run_jobs};
-pub use sweep::{auto_mapping, paper_axis_values, run_sweep, Axis, SweepPoint, SweepRow, SweepSpec};
+pub use sweep::{
+    auto_mapping, paper_axis_values, run_sweep, run_sweep_cached, Axis, SweepPoint, SweepRow,
+    SweepSpec,
+};

@@ -93,4 +93,59 @@ mod tests {
         let out = run_jobs(64, vec![|| 1, || 2]);
         assert_eq!(out, vec![1, 2]);
     }
+
+    #[test]
+    fn zero_jobs_with_many_workers() {
+        // Must not spawn anything or hang; returns immediately.
+        let out: Vec<u8> = run_jobs(32, Vec::<fn() -> u8>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn one_worker_runs_in_submission_order() {
+        use std::sync::atomic::AtomicUsize;
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..10usize)
+            .map(|i| move || (i, SEQ.fetch_add(1, Ordering::SeqCst)))
+            .collect();
+        let out = run_jobs(1, jobs);
+        for (i, (job, seq)) in out.into_iter().enumerate() {
+            assert_eq!(job, i);
+            assert_eq!(seq, i, "single worker must execute sequentially");
+        }
+    }
+
+    #[test]
+    fn zero_workers_clamped_to_one() {
+        let out = run_jobs(0, vec![|| 5, || 6]);
+        assert_eq!(out, vec![5, 6]);
+    }
+
+    /// A panicking job propagates only after the surviving workers have
+    /// drained every remaining job (fail-fast is deliberately avoided so
+    /// sweep results stay complete).
+    #[test]
+    fn panic_propagates_after_other_workers_finish() {
+        use std::sync::atomic::AtomicU32;
+        static COMPLETED: AtomicU32 = AtomicU32::new(0);
+        let result = std::panic::catch_unwind(|| {
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..12)
+                .map(|i| -> Box<dyn FnOnce() -> usize + Send> {
+                    if i == 2 {
+                        Box::new(|| panic!("job 2 exploded"))
+                    } else {
+                        Box::new(move || {
+                            COMPLETED.fetch_add(1, Ordering::SeqCst);
+                            i
+                        })
+                    }
+                })
+                .collect();
+            run_jobs(3, jobs)
+        });
+        assert!(result.is_err(), "panic must propagate out of run_jobs");
+        // All 11 non-panicking jobs still ran: the panicking worker dies,
+        // the other workers keep draining the queue.
+        assert_eq!(COMPLETED.load(Ordering::SeqCst), 11);
+    }
 }

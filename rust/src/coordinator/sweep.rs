@@ -16,6 +16,7 @@ use crate::kernels::{run_mapping, Mapping};
 use crate::metrics::MappingReport;
 use crate::prop::Rng;
 
+use super::cache::{self, CachedOutcome, PointCache, PointKey};
 use super::pool::run_jobs;
 
 /// Which hyper-parameter an axis point varies.
@@ -141,47 +142,110 @@ pub struct SweepRow {
     pub skipped: Option<String>,
 }
 
-/// Run the sweep on `workers` threads. Deterministic: the per-point data
-/// seed depends only on the shape.
+/// Per-point data seed: depends only on the spec seed and the shape, so
+/// results are identical across worker counts, shard sizes and runs.
+fn point_seed(spec_seed: u64, shape: &ConvShape) -> u64 {
+    spec_seed
+        ^ (shape.c as u64) << 32
+        ^ (shape.k as u64) << 16
+        ^ (shape.ox as u64) << 8
+        ^ shape.oy as u64
+}
+
+/// Work-shard granularity: aim for this many shards per worker so the
+/// pool load-balances without paying one closure/lock round-trip per
+/// point (sweep points vary in cost by orders of magnitude).
+const SHARDS_PER_WORKER: usize = 4;
+
+/// Evaluate one point, consulting `pc` first and recording the outcome.
+fn eval_point(
+    spec: &SweepSpec,
+    cfg: &CgraConfig,
+    cfg_fp: u64,
+    model: &EnergyModel,
+    pc: &PointCache,
+    point: SweepPoint,
+) -> SweepRow {
+    let shape = point.shape;
+    let key = PointKey {
+        mapping: point.mapping,
+        shape,
+        in_mag: spec.mag,
+        w_mag: spec.mag,
+        seed: point_seed(spec.seed, &shape),
+        cfg_fp,
+    };
+    if let Some(hit) = pc.get(&key) {
+        return match hit {
+            CachedOutcome::Report(r) => SweepRow { point, report: Some(r), skipped: None },
+            CachedOutcome::Skipped(s) => SweepRow { point, report: None, skipped: Some(s) },
+        };
+    }
+    let mut rng = Rng::new(key.seed);
+    let input = random_input(&shape, spec.mag, &mut rng);
+    let weights = random_weights(&shape, spec.mag, &mut rng);
+    let row = match Cgra::new(cfg.clone()) {
+        Err(e) => SweepRow { point, report: None, skipped: Some(e.to_string()) },
+        Ok(cgra) => match run_mapping(&cgra, point.mapping, &shape, &input, &weights) {
+            Ok(out) => SweepRow {
+                point,
+                report: Some(MappingReport::from_outcome(&out, model)),
+                skipped: None,
+            },
+            // Memory-bound points are the expected skip class (the
+            // paper's 512 KiB limit).
+            Err(e) => SweepRow { point, report: None, skipped: Some(e.to_string()) },
+        },
+    };
+    let outcome = match (&row.report, &row.skipped) {
+        (Some(r), _) => CachedOutcome::Report(r.clone()),
+        (None, Some(s)) => CachedOutcome::Skipped(s.clone()),
+        (None, None) => unreachable!("sweep row must report or skip"),
+    };
+    pc.insert(key, outcome);
+    row
+}
+
+/// Run the sweep on `workers` threads through the process-wide point
+/// cache. Deterministic: the per-point data seed depends only on the
+/// shape, and rows come back in `spec.points()` order regardless of
+/// worker count or cache state.
 pub fn run_sweep(spec: &SweepSpec, cfg: &CgraConfig, workers: usize) -> Result<Vec<SweepRow>> {
+    run_sweep_cached(spec, cfg, workers, cache::global())
+}
+
+/// [`run_sweep`] against an explicit cache (tests; isolated sweeps).
+///
+/// Points are sharded into contiguous chunks — several per worker — and
+/// the chunks are distributed over [`run_jobs`]; flattening the ordered
+/// chunk results preserves point order exactly.
+pub fn run_sweep_cached(
+    spec: &SweepSpec,
+    cfg: &CgraConfig,
+    workers: usize,
+    pc: &PointCache,
+) -> Result<Vec<SweepRow>> {
     let model = EnergyModel::default();
+    let cfg_fp = cache::cfg_fingerprint(cfg);
     let points = spec.points();
+    if points.is_empty() {
+        return Ok(Vec::new());
+    }
+    let shard_len = points.len().div_ceil(workers.max(1) * SHARDS_PER_WORKER).max(1);
     let jobs: Vec<_> = points
-        .into_iter()
-        .map(|point| {
+        .chunks(shard_len)
+        .map(|chunk| {
+            let chunk: Vec<SweepPoint> = chunk.to_vec();
             let cfg = cfg.clone();
-            move || -> SweepRow {
-                let shape = point.shape;
-                let mut rng = Rng::new(
-                    spec.seed ^ (shape.c as u64) << 32
-                        ^ (shape.k as u64) << 16
-                        ^ (shape.ox as u64) << 8
-                        ^ shape.oy as u64,
-                );
-                let input = random_input(&shape, spec.mag, &mut rng);
-                let weights = random_weights(&shape, spec.mag, &mut rng);
-                let cgra = match Cgra::new(cfg) {
-                    Ok(c) => c,
-                    Err(e) => {
-                        return SweepRow { point, report: None, skipped: Some(e.to_string()) }
-                    }
-                };
-                match run_mapping(&cgra, point.mapping, &shape, &input, &weights) {
-                    Ok(out) => SweepRow {
-                        point,
-                        report: Some(MappingReport::from_outcome(&out, &model)),
-                        skipped: None,
-                    },
-                    Err(e) => {
-                        // Memory-bound points are the expected skip class
-                        // (the paper's 512 KiB limit).
-                        SweepRow { point, report: None, skipped: Some(e.to_string()) }
-                    }
-                }
+            move || -> Vec<SweepRow> {
+                chunk
+                    .into_iter()
+                    .map(|point| eval_point(spec, &cfg, cfg_fp, &model, pc, point))
+                    .collect()
             }
         })
         .collect();
-    Ok(run_jobs(workers, jobs))
+    Ok(run_jobs(workers, jobs).into_iter().flatten().collect())
 }
 
 /// The paper's conclusion as an operator: pick the mapping for a shape.
@@ -263,5 +327,98 @@ mod tests {
     #[test]
     fn auto_mapping_is_wp() {
         assert_eq!(auto_mapping(&ConvShape::baseline()), Mapping::Wp);
+    }
+
+    #[test]
+    fn second_sweep_is_served_from_the_cache() {
+        let spec = SweepSpec {
+            c_values: vec![4],
+            k_values: vec![5],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp],
+            mag: 6,
+            seed: 21,
+        };
+        let cfg = CgraConfig::default();
+        let pc = PointCache::new(4);
+        let a = run_sweep_cached(&spec, &cfg, 2, &pc).unwrap();
+        let s0 = pc.stats();
+        assert_eq!(s0.hits, 0);
+        assert_eq!(s0.misses, 2);
+        assert_eq!(s0.entries, 2);
+        let b = run_sweep_cached(&spec, &cfg, 3, &pc).unwrap();
+        let s1 = pc.stats();
+        assert_eq!(s1.hits, 2);
+        assert_eq!(s1.misses, 2);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(
+                x.report.as_ref().unwrap().latency_cycles,
+                y.report.as_ref().unwrap().latency_cycles
+            );
+            assert_eq!(x.point.mapping, y.point.mapping);
+        }
+    }
+
+    #[test]
+    fn cache_does_not_leak_across_configs() {
+        let spec = SweepSpec {
+            c_values: vec![144],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp],
+            mag: 3,
+            seed: 2,
+        };
+        let pc = PointCache::new(2);
+        // Tiny memory: the point skips, and the skip is cached.
+        let small = CgraConfig { mem_words: 2048, ..CgraConfig::default() };
+        let rows = run_sweep_cached(&spec, &small, 1, &pc).unwrap();
+        assert!(rows[0].skipped.is_some());
+        // Default memory: the same (mapping, shape) must MISS and run.
+        let rows2 = run_sweep_cached(&spec, &CgraConfig::default(), 1, &pc).unwrap();
+        assert!(rows2[0].report.is_some(), "cfg change must invalidate the cached skip");
+        assert_eq!(pc.stats().entries, 2);
+    }
+
+    #[test]
+    fn sharding_preserves_point_order() {
+        // More points than one shard so chunking actually kicks in.
+        let spec = SweepSpec {
+            c_values: (1..=6).collect(),
+            k_values: vec![2, 3],
+            spatial_values: vec![2],
+            mappings: vec![Mapping::Wp, Mapping::Cpu],
+            mag: 4,
+            seed: 9,
+        };
+        let cfg = CgraConfig::default();
+        let rows = run_sweep_cached(&spec, &cfg, 3, &PointCache::new(4)).unwrap();
+        let points = spec.points();
+        assert_eq!(rows.len(), points.len());
+        for (r, p) in rows.iter().zip(points.iter()) {
+            assert_eq!(r.point.axis, p.axis);
+            assert_eq!(r.point.value, p.value);
+            assert_eq!(r.point.mapping, p.mapping);
+        }
+    }
+
+    #[test]
+    fn empty_spec_yields_no_rows() {
+        let spec = SweepSpec {
+            c_values: vec![],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp],
+            mag: 1,
+            seed: 0,
+        };
+        let rows = run_sweep_cached(
+            &spec,
+            &CgraConfig::default(),
+            4,
+            &PointCache::new(1),
+        )
+        .unwrap();
+        assert!(rows.is_empty());
     }
 }

@@ -20,7 +20,7 @@
 
 use anyhow::Result;
 
-use crate::cgra::{Cgra, Memory, RunStats};
+use crate::cgra::{decode, Cgra, Memory, RunStats};
 use crate::conv::{ConvShape, TensorChw, TensorHwc, Weights};
 use crate::isa::{Dir, Dst, Instr, Op, PeId, PeProgram, Program, Src, N_PES};
 
@@ -169,7 +169,11 @@ pub fn run(
                     (w_image_base + k * patch_words) as i32,
                     (layout.output + k * shape.ox * shape.oy + pix) as i32,
                 );
-                let s = cgra.run(&prog, &mut mem)?;
+                // Every (pixel, k) launch has unique address immediates,
+                // so memoizing decodes would only churn the bounded
+                // cache — decode directly (it is cheap vs the run).
+                let dp = decode(&prog);
+                let s = cgra.run_decoded(&dp, &mut mem)?;
                 cpu_hidden += s.cycles.min(patch_words as u64 * host.im2col_cycles_per_elem);
                 stats.merge(&s);
                 launches += 1;

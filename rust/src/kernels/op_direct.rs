@@ -15,7 +15,7 @@
 
 use anyhow::Result;
 
-use crate::cgra::{Cgra, Memory, RunStats};
+use crate::cgra::{decode, Cgra, Memory, RunStats};
 use crate::conv::{ConvShape, TensorChw, Weights};
 use crate::isa::{Dst, Instr, Op, PeId, PeProgram, Program, Src, N_PES};
 
@@ -125,7 +125,10 @@ pub fn run(
                 for y in 0..shape.ox {
                     let prog =
                         build_program(shape, &layout, OpDirectLaunch { kt, fy, fx, y });
-                    let s = cgra.run(&prog, &mut mem)?;
+                    // Per-(k_tile, tap, row) programs are unique, so
+                    // decode directly rather than churn the decode cache.
+                    let dp = decode(&prog);
+                    let s = cgra.run_decoded(&dp, &mut mem)?;
                     stats.merge(&s);
                     launches += 1;
                 }

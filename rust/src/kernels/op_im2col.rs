@@ -29,7 +29,7 @@
 
 use anyhow::Result;
 
-use crate::cgra::{Cgra, Memory, RunStats};
+use crate::cgra::{decode, Cgra, Memory, RunStats};
 use crate::conv::{im2col_patch, patch_len, ConvShape, TensorChw, Weights};
 use crate::isa::{Dst, Instr, Op, PeId, PeProgram, Program, Src, N_PES};
 
@@ -158,7 +158,11 @@ pub fn run(
                         }
                     },
                 );
-                let s = cgra.run(&prog, &mut mem)?;
+                // Per-(k_tile, pixel) programs are unique (output
+                // addresses + ping-pong patch slot), so decode directly
+                // instead of churning the bounded decode cache.
+                let dp = decode(&prog);
+                let s = cgra.run_decoded(&dp, &mut mem)?;
                 // The patch build for the NEXT pixel overlaps this run.
                 cpu_hidden += s.cycles.min(copied * host.im2col_cycles_per_elem);
                 stats.merge(&s);

@@ -55,7 +55,7 @@
 
 use anyhow::Result;
 
-use crate::cgra::{Cgra, RunStats};
+use crate::cgra::{decode, decode_cached, Cgra, RunStats, DECODE_CACHE_CAPACITY};
 use crate::conv::{ConvShape, TensorChw, Weights};
 use crate::isa::{Dir, Dst, Instr, Op, PeId, PeProgram, Program, Src};
 
@@ -262,10 +262,23 @@ pub fn run(
     let mut stats = RunStats::new();
     stats.exited = true;
     let mut launches = 0u64;
+    // Memoize decodes only when the conv's k×c launch set fits the
+    // bounded cache (with headroom): repeated convolutions of one shape
+    // (figure drivers, benches) then re-use the lowering, while big
+    // sweep points (e.g. C=144 → 2304 unique programs) decode directly
+    // instead of churning every shard. Concurrent sweep workers can
+    // still collectively exceed the bound; the cost is then the cheap
+    // fingerprint + decode per launch (well under 1% of a launch's
+    // simulation time), never a correctness or memory hazard.
+    let memoize = shape.k * shape.c <= DECODE_CACHE_CAPACITY / 2;
     for k in 0..shape.k {
         for ci in 0..shape.c {
             let prog = build_program(shape, &layout, WpLaunch { k, ci, acc: ci > 0 });
-            let s = cgra.run(&prog, &mut mem)?;
+            let s = if memoize {
+                cgra.run_decoded(&decode_cached(&prog), &mut mem)?
+            } else {
+                cgra.run_decoded(&decode(&prog), &mut mem)?
+            };
             stats.merge(&s);
             launches += 1;
         }

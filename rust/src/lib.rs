@@ -10,7 +10,10 @@
 //!   assembler for it.
 //! - [`cgra`] — a cycle-level simulator of the 4×4 PE array: torus
 //!   interconnect, per-column program counters and DMA ports, a contended
-//!   memory subsystem, and per-PE statistics.
+//!   memory subsystem, and per-PE statistics. Execution is a two-stage
+//!   decode/execute engine with a process-wide decoded-program memo
+//!   (DESIGN.md §3.4); the pre-refactor interpreter survives as the
+//!   differential baseline `Cgra::run_reference`.
 //! - [`conv`] — the convolution substrate: int32 tensors, CHW/HWC layouts,
 //!   a golden direct convolution and the Im2col transformation.
 //! - [`kernels`] — the paper's four mapping strategies as *program
@@ -21,7 +24,8 @@
 //! - [`energy`] / [`metrics`] — the paper's evaluation metrics: latency,
 //!   energy (CGRA + CPU + memory blocks), memory footprint, MAC/cycle.
 //! - [`coordinator`] — a multi-threaded sweep/aggregation layer that
-//!   regenerates the paper's figures, plus a layer-wise network runner.
+//!   regenerates the paper's figures — work sharded over a pool with a
+//!   cross-driver sweep-point cache — plus a layer-wise network runner.
 //! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and verifies the simulator element-exactly against them.
 //! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5).

@@ -12,6 +12,10 @@ fn artifacts_dir() -> std::path::PathBuf {
 
 #[test]
 fn artifacts_verify_bit_exactly() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP runtime_verify: built without the `pjrt` feature (stub runtime)");
+        return;
+    }
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!(
@@ -31,6 +35,10 @@ fn artifacts_verify_bit_exactly() {
 
 #[test]
 fn runtime_reports_platform() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP runtime platform test: built without the `pjrt` feature");
+        return;
+    }
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP runtime platform test: artifacts missing");

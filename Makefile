@@ -1,7 +1,7 @@
 # Convenience targets. Tier-1 verify is `cargo build --release &&
 # cargo test -q` (see ROADMAP.md / EXPERIMENTS.md "CI ⇔ tier-1").
 
-.PHONY: build test bench artifacts figures clean
+.PHONY: build test bench examples artifacts figures clean
 
 build:
 	cargo build --release --workspace
@@ -9,10 +9,20 @@ build:
 test:
 	cargo test -q --workspace
 
-# All five bench targets (the figure generators). BENCH_WARMUP /
-# BENCH_SAMPLES env vars trade accuracy for speed (see benchkit).
+# All six bench targets (the figure generators + engine batching).
+# BENCH_WARMUP / BENCH_SAMPLES env vars trade accuracy for speed (see
+# benchkit).
 bench:
 	cargo bench --workspace
+
+# The runnable examples (the Engine API's consumer surface; CI runs
+# these too).
+examples:
+	cargo run --release --example quickstart
+	cargo run --release --example mapping_explorer -- 16 17 16 16
+	cargo run --release --example cnn_inference
+	cargo run --release --example perf_driver
+	cargo run --release --example asm_playground
 
 # AOT-compile the JAX/Pallas HLO artifacts the runtime verifier and
 # `cargo run -- verify` consume. Requires the Python/JAX toolchain;

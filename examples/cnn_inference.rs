@@ -12,9 +12,9 @@
 //! make artifacts && cargo run --release --example cnn_inference
 //! ```
 
-use openedge_cgra::cgra::{Cgra, CgraConfig};
 use openedge_cgra::conv::random_input;
-use openedge_cgra::coordinator::{golden_network, run_network, ConvNet};
+use openedge_cgra::coordinator::{golden_network, ConvNet};
+use openedge_cgra::engine::EngineBuilder;
 use openedge_cgra::prop::Rng;
 use openedge_cgra::runtime::{ArtifactKind, Manifest, Runtime};
 use openedge_cgra::util::fmt::Table;
@@ -33,8 +33,8 @@ fn main() -> anyhow::Result<()> {
         net.macs()
     );
 
-    let cgra = Cgra::new(CgraConfig::default())?;
-    let out = run_network(&cgra, &net, &input)?;
+    let engine = EngineBuilder::new().build()?;
+    let out = engine.run_network(&net, &input)?;
 
     let mut table = Table::new(&[
         "layer", "shape", "mapping", "cycles", "MAC/cycle", "energy_uJ", "launches",

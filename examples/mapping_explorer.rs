@@ -1,17 +1,15 @@
 //! Mapping explorer: compare all four CGRA mapping strategies and the
 //! CPU baseline on a layer of your choice — the Figure 4 experiment as
-//! a library-driven tool.
+//! a library-driven tool, batched over the engine's worker pool.
 //!
 //! ```sh
 //! cargo run --release --example mapping_explorer -- [C] [K] [OX] [OY]
 //! cargo run --release --example mapping_explorer -- 16 17 16 16   # K=17 imbalance
 //! ```
 
-use openedge_cgra::cgra::{Cgra, CgraConfig};
 use openedge_cgra::conv::{conv2d, random_input, random_weights, ConvShape};
-use openedge_cgra::energy::EnergyModel;
-use openedge_cgra::kernels::{run_mapping, Mapping};
-use openedge_cgra::metrics::MappingReport;
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
 use openedge_cgra::prop::Rng;
 use openedge_cgra::util::fmt::{bar_chart, kib, Table};
 
@@ -26,20 +24,25 @@ fn main() -> anyhow::Result<()> {
     let input = random_input(&shape, 30, &mut rng);
     let weights = random_weights(&shape, 9, &mut rng);
     let golden = conv2d(&shape, &input, &weights);
-    let cgra = Cgra::new(CgraConfig::default())?;
-    let model = EnergyModel::default();
+    let engine = EngineBuilder::new().build()?;
 
     println!("exploring {shape} — {} MACs\n", shape.macs());
+    // One batch over the pool: all five strategies in parallel, results
+    // back in request order.
+    let reqs: Vec<ConvRequest> = Mapping::ALL
+        .into_iter()
+        .map(|m| ConvRequest::with_data(shape, m, input.clone(), weights.clone()))
+        .collect();
     let mut table = Table::new(&[
         "mapping", "cycles", "MAC/cycle", "energy_uJ", "power_mW", "memory", "launches", "exact",
     ]);
     let mut reports = Vec::new();
-    for m in Mapping::ALL {
-        let out = run_mapping(&cgra, m, &shape, &input, &weights)?;
-        let exact = out.output.data == golden.data;
-        let r = MappingReport::from_outcome(&out, &model);
+    for res in engine.submit_batch(&reqs) {
+        let res = res?;
+        let exact = res.output.data == golden.data;
+        let r = res.report;
         table.row(vec![
-            m.label().into(),
+            r.mapping.label().into(),
             r.latency_cycles.to_string(),
             format!("{:.3}", r.mac_per_cycle),
             format!("{:.2}", r.energy_uj),
@@ -68,5 +71,10 @@ fn main() -> anyhow::Result<()> {
         .max_by(|a, b| a.mac_per_cycle.total_cmp(&b.mac_per_cycle))
         .unwrap();
     println!("\nbest mapping for this layer: {}", best.mapping);
+
+    // What would the engine have picked? Auto encodes the paper's
+    // conclusion and records its reasoning.
+    let auto = engine.submit(&ConvRequest::with_data(shape, Mapping::Auto, input, weights))?;
+    println!("engine's pick: {}", auto.auto.expect("auto decision"));
     Ok(())
 }

@@ -1,7 +1,9 @@
-// Perf-profiling driver: run many WP launches in a tight loop.
-use openedge_cgra::cgra::{Cgra, CgraConfig, Memory};
+// Perf-profiling driver: run many WP convolutions in a tight loop
+// through one engine session (explicit tensors, so nothing is cached
+// and every iteration is a full simulation).
 use openedge_cgra::conv::{random_input, random_weights, ConvShape};
-use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
 use openedge_cgra::prop::Rng;
 
 fn main() {
@@ -9,10 +11,10 @@ fn main() {
     let mut rng = Rng::new(1);
     let input = random_input(&shape, 10, &mut rng);
     let weights = random_weights(&shape, 9, &mut rng);
-    let cgra = Cgra::new(CgraConfig::default()).unwrap();
-    let _ = Memory::new(16, 4);
+    let engine = EngineBuilder::new().build().unwrap();
+    let req = ConvRequest::with_data(shape, Mapping::Wp, input, weights);
     for _ in 0..5 {
-        let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
+        let out = engine.submit(&req).unwrap();
         std::hint::black_box(out);
     }
 }

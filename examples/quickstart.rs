@@ -1,16 +1,14 @@
-//! Quickstart: run the paper's baseline convolution with the winning WP
-//! mapping on the simulated OpenEdgeCGRA, check it bit-exactly against
-//! the golden model, and print the paper's four metrics.
+//! Quickstart: run the paper's baseline convolution through the
+//! session-based `Engine`, check it bit-exactly against the golden
+//! model, and print the paper's four metrics.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use openedge_cgra::cgra::{Cgra, CgraConfig};
 use openedge_cgra::conv::{conv2d, random_input, random_weights, ConvShape};
-use openedge_cgra::energy::EnergyModel;
-use openedge_cgra::kernels::{run_mapping, Mapping};
-use openedge_cgra::metrics::MappingReport;
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
 use openedge_cgra::prop::Rng;
 use openedge_cgra::util::fmt::kib;
 
@@ -21,19 +19,26 @@ fn main() -> anyhow::Result<()> {
     let input = random_input(&shape, 30, &mut rng);
     let weights = random_weights(&shape, 9, &mut rng);
 
-    // The simulated HEEPsilon platform with calibrated timing.
-    let cgra = Cgra::new(CgraConfig::default())?;
+    // One session owns the simulated HEEPsilon platform (calibrated
+    // timing), the energy model, the worker pool and the result caches.
+    let engine = EngineBuilder::new().build()?;
 
-    // Direct convolution + weight parallelism (Fig. 1).
-    let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights)?;
+    // Mapping::Auto picks the strategy per the paper's finding and
+    // records the decision; explicit tensors keep the run uncached so
+    // the functional check below exercises a real simulation.
+    let req = ConvRequest::with_data(shape, Mapping::Auto, input.clone(), weights.clone());
+    let res = engine.submit(&req)?;
+    if let Some(d) = res.auto {
+        println!("{d}");
+    }
 
     // Bit-exact functional check against the golden model.
     let golden = conv2d(&shape, &input, &weights);
-    assert_eq!(out.output.data, golden.data, "WP output mismatch");
+    assert_eq!(res.output.data, golden.data, "CGRA output mismatch");
     println!("functional check: CGRA output is bit-exact vs the golden conv ✔\n");
 
     // The paper's four metrics (§2.3).
-    let report = MappingReport::from_outcome(&out, &EnergyModel::default());
+    let report = &res.report;
     println!("layer    : {shape}");
     println!("mapping  : {} (the paper's winner)", report.mapping);
     println!("latency  : {} cycles ({:.3} ms @100 MHz)", report.latency_cycles, report.latency_ms);
@@ -42,5 +47,16 @@ fn main() -> anyhow::Result<()> {
     println!("perf     : {:.3} MAC/cycle  (paper: ~0.6)", report.mac_per_cycle);
     println!("util     : {:.1}% of PE slots active (paper: 78% in the main loop)",
         report.utilization * 100.0);
+
+    // The same layer as a seeded request is cacheable: the second
+    // submission is served from the engine's point cache.
+    let seeded = ConvRequest::seeded(shape, Mapping::Wp, 2024);
+    let first = engine.submit(&seeded)?;
+    let second = engine.submit(&seeded)?;
+    println!(
+        "\ncache    : first seeded submit hit={}, repeat hit={}",
+        first.cache_hit, second.cache_hit
+    );
+    assert!(!first.cache_hit && second.cache_hit);
     Ok(())
 }

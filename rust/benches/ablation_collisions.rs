@@ -15,9 +15,10 @@
 //!
 //! `cargo bench --bench ablation_collisions`
 
-use openedge_cgra::cgra::{Cgra, CgraConfig};
+use openedge_cgra::cgra::CgraConfig;
 use openedge_cgra::conv::{random_input, random_weights, ConvShape};
-use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
 use openedge_cgra::prop::Rng;
 use openedge_cgra::util::fmt::Table;
 
@@ -40,11 +41,14 @@ fn main() {
     let mut table =
         Table::new(&["contention model", "mapping", "cycles", "MAC/cycle", "vs WP"]);
     for (label, cfg) in &variants {
-        let cgra = Cgra::new(cfg.clone()).expect("cgra");
+        // One engine session per contention model: the config fingerprint
+        // keeps their cache entries apart.
+        let engine = EngineBuilder::new().config(cfg.clone()).build().expect("engine");
         let mut wp_cycles = 0u64;
         for m in [Mapping::Wp, Mapping::OpIm2col, Mapping::OpDirect, Mapping::Ip] {
-            let out = run_mapping(&cgra, m, &shape, &input, &weights).expect("run");
-            let cycles = out.latency.total_cycles();
+            let req = ConvRequest::with_data(shape, m, input.clone(), weights.clone());
+            let res = engine.submit(&req).expect("run");
+            let cycles = res.report.latency_cycles;
             if m == Mapping::Wp {
                 wp_cycles = cycles;
             }
@@ -52,7 +56,7 @@ fn main() {
                 label.to_string(),
                 m.label().into(),
                 cycles.to_string(),
-                format!("{:.3}", out.macs_per_cycle()),
+                format!("{:.3}", res.report.mac_per_cycle),
                 format!("{:.2}x", cycles as f64 / wp_cycles as f64),
             ]);
         }

@@ -1,0 +1,84 @@
+//! Bench: batched vs sequential request submission through the
+//! session `Engine` — quantifies the worker-pool fan-out win of
+//! `submit_batch` over a `submit` loop, in requests per second.
+//!
+//! Three measurements over the same request set:
+//!
+//!   1. sequential `submit` loop (explicit tensors → every request is a
+//!      real simulation, no cache involvement),
+//!   2. `submit_batch` over the pool (same uncached requests),
+//!   3. `submit_batch` of *seeded* requests against a warm cache —
+//!      the cache-hit service rate (metrics from the memo, outputs
+//!      reconstructed through the golden model).
+//!
+//! `cargo bench --bench engine_batch`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::conv::{random_input, random_weights, ConvShape};
+use openedge_cgra::coordinator::default_workers;
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
+use openedge_cgra::prop::Rng;
+
+fn main() {
+    let workers = default_workers();
+    let engine = EngineBuilder::new().workers(workers).private_cache().build().expect("engine");
+
+    // A spread of shapes around the baseline so the batch is not one
+    // repeated point (distinct simulations, uneven costs — the case the
+    // pool's work stealing is for).
+    let shapes: Vec<ConvShape> = (0..24)
+        .map(|i| ConvShape::new3x3(4 + i % 5, 4 + (i / 5) % 5, 8 + (i % 3) * 2, 8))
+        .collect();
+    let mut rng = Rng::new(99);
+    let tensor_reqs: Vec<ConvRequest> = shapes
+        .iter()
+        .map(|&s| {
+            let input = random_input(&s, 20, &mut rng);
+            let weights = random_weights(&s, 9, &mut rng);
+            ConvRequest::with_data(s, Mapping::Wp, input, weights)
+        })
+        .collect();
+    let n = tensor_reqs.len() as f64;
+    println!("{} requests, {workers} workers\n", tensor_reqs.len());
+
+    let b = Bench::new(1, 5);
+
+    // 1. Sequential baseline: one request at a time.
+    let seq = b.run("submit x N (sequential, uncached)", Some(n), || {
+        for req in &tensor_reqs {
+            engine.submit(req).expect("submit");
+        }
+    });
+
+    // 2. The same requests fanned over the pool.
+    let batch = b.run("submit_batch (pooled, uncached)", Some(n), || {
+        for res in engine.submit_batch(&tensor_reqs) {
+            res.expect("submit");
+        }
+    });
+
+    // 3. Cache-hot seeded batch: warm once, then measure hit service.
+    let seeded: Vec<ConvRequest> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| ConvRequest::seeded(s, Mapping::Wp, 7000 + i as u64))
+        .collect();
+    for res in engine.submit_batch(&seeded) {
+        res.expect("warmup");
+    }
+    let hot = b.run("submit_batch (pooled, cache-hot)", Some(n), || {
+        for res in engine.submit_batch(&seeded) {
+            assert!(res.expect("submit").cache_hit, "warm batch must hit");
+        }
+    });
+
+    println!(
+        "\npool fan-out: {:.2}x requests/s over sequential ({:.0} -> {:.0} req/s); \
+         cache-hot batch serves {:.0} req/s",
+        seq.median() / batch.median(),
+        n / seq.median(),
+        n / batch.median(),
+        n / hot.median(),
+    );
+}

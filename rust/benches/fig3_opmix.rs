@@ -4,24 +4,22 @@
 //! `cargo bench --bench fig3_opmix`
 
 use openedge_cgra::benchkit::Bench;
-use openedge_cgra::cgra::CgraConfig;
-use openedge_cgra::coordinator::default_workers;
+use openedge_cgra::engine::EngineBuilder;
 use openedge_cgra::report;
 
 fn main() {
-    let cfg = CgraConfig::default();
-    let workers = default_workers();
+    let engine = EngineBuilder::new().build().expect("engine");
 
     // Print the figure once (the artifact of this bench)...
-    let fig = report::fig3(&cfg, workers).expect("fig3");
+    let fig = report::fig3(&engine).expect("fig3");
     println!("{}", fig.text);
 
-    // ...then time the regeneration. The sweep-point cache would turn
-    // repeat samples into lookups, so clear it inside the timed closure
-    // — the bench must measure simulation, not memoization.
+    // ...then time the regeneration. The engine's point cache would
+    // turn repeat samples into lookups, so clear it inside the timed
+    // closure — the bench must measure simulation, not memoization.
     let b = Bench::new(1, 5);
     b.run("report/fig3 (baseline layer, 4 mappings)", None, || {
-        openedge_cgra::coordinator::cache::global().clear();
-        report::fig3(&cfg, workers).expect("fig3")
+        engine.cache().clear();
+        report::fig3(&engine).expect("fig3")
     });
 }

@@ -5,32 +5,31 @@
 //! `cargo bench --bench fig4_energy_latency`
 
 use openedge_cgra::benchkit::Bench;
-use openedge_cgra::cgra::{Cgra, CgraConfig};
 use openedge_cgra::conv::{random_input, random_weights, ConvShape};
-use openedge_cgra::coordinator::default_workers;
-use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
 use openedge_cgra::prop::Rng;
 use openedge_cgra::report;
 
 fn main() {
-    let cfg = CgraConfig::default();
-    let fig = report::fig4(&cfg, default_workers()).expect("fig4");
+    let engine = EngineBuilder::new().build().expect("engine");
+    let fig = report::fig4(&engine).expect("fig4");
     println!("{}", fig.text);
 
-    // Per-mapping simulation throughput (simulated MACs per host second).
+    // Per-mapping simulation throughput (simulated MACs per host
+    // second). Explicit tensors bypass the point cache, so these
+    // timings measure real simulation.
     let shape = ConvShape::baseline();
     let mut rng = Rng::new(4);
     let input = random_input(&shape, 30, &mut rng);
     let weights = random_weights(&shape, 9, &mut rng);
-    let cgra = Cgra::new(cfg).expect("cgra");
-    // run_mapping itself is uncached (only run_all_mappings memoizes),
-    // so these per-mapping timings measure real simulation.
     let b = Bench::new(1, 3);
     for m in Mapping::ALL {
+        let req = ConvRequest::with_data(shape, m, input.clone(), weights.clone());
         b.run(
             &format!("simulate baseline layer / {}", m.label()),
             Some(shape.macs() as f64),
-            || run_mapping(&cgra, m, &shape, &input, &weights).expect("run"),
+            || engine.submit(&req).expect("run"),
         );
     }
 }

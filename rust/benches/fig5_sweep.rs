@@ -8,13 +8,12 @@
 //! `cargo bench --bench fig5_sweep`
 
 use openedge_cgra::benchkit::Bench;
-use openedge_cgra::cgra::CgraConfig;
-use openedge_cgra::coordinator::{default_workers, SweepSpec};
+use openedge_cgra::coordinator::SweepSpec;
+use openedge_cgra::engine::EngineBuilder;
 use openedge_cgra::report;
 
 fn main() {
-    let cfg = CgraConfig::default();
-    let workers = default_workers();
+    let engine = EngineBuilder::new().build().expect("engine");
     let full = std::env::var("FIG5_FULL").map(|v| v == "1").unwrap_or(false);
     let spec = if full { SweepSpec::paper() } else { SweepSpec::quick() };
     println!(
@@ -24,7 +23,7 @@ fn main() {
         if full { "paper protocol" } else { "quick; FIG5_FULL=1 for the full grid" }
     );
 
-    let fig = report::fig5(&cfg, &spec, workers).expect("fig5");
+    let fig = report::fig5(&engine, &spec).expect("fig5");
     println!("{}", fig.text);
 
     // Clear the sweep-point cache per sample: the bench's target is raw
@@ -34,8 +33,8 @@ fn main() {
         &format!("fig5 sweep ({} points)", spec.points().len()),
         Some(spec.points().len() as f64),
         || {
-            openedge_cgra::coordinator::cache::global().clear();
-            report::fig5(&cfg, &spec, workers).expect("fig5")
+            engine.cache().clear();
+            report::fig5(&engine, &spec).expect("fig5")
         },
     );
 }

@@ -21,6 +21,7 @@ use std::sync::{Mutex, OnceLock};
 
 use crate::cgra::CgraConfig;
 use crate::conv::ConvShape;
+use crate::energy::EnergyModel;
 use crate::kernels::Mapping;
 use crate::metrics::MappingReport;
 
@@ -38,7 +39,11 @@ pub struct PointKey {
     pub w_mag: i32,
     /// Derived per-point data seed.
     pub seed: u64,
-    /// Fingerprint of the full simulator configuration.
+    /// Fingerprint of everything else that determines the cached
+    /// [`MappingReport`]: the full simulator configuration *and* the
+    /// energy model ([`cfg_fingerprint`]` ^ `[`energy_fingerprint`]),
+    /// so sessions with different configs or models never serve each
+    /// other's rows.
     pub cfg_fp: u64,
 }
 
@@ -80,6 +85,25 @@ pub fn cfg_fingerprint(cfg: &CgraConfig) -> u64 {
         cfg.max_steps,
     ] {
         h = (h ^ v).wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of every [`EnergyModel`] field. Cached rows embed
+/// evaluated energy/power numbers, so the model is part of the key
+/// (combined with [`cfg_fingerprint`] in [`PointKey::cfg_fp`]).
+pub fn energy_fingerprint(model: &EnergyModel) -> u64 {
+    let mut h = 0x84222325_cbf29ce4u64;
+    for v in [
+        model.clock_hz,
+        model.p_cgra_leak_mw,
+        model.p_pe_active_mw,
+        model.p_cpu_active_mw,
+        model.p_cpu_idle_mw,
+        model.p_mem_static_mw,
+        model.e_mem_access_pj,
+    ] {
+        h = (h ^ v.to_bits()).wrapping_mul(0x1000_0000_01b3);
     }
     h
 }
@@ -227,6 +251,18 @@ mod tests {
         assert_ne!(cfg_fingerprint(&a), cfg_fingerprint(&b));
         assert_ne!(cfg_fingerprint(&a), cfg_fingerprint(&c));
         assert_eq!(cfg_fingerprint(&a), cfg_fingerprint(&a.clone()));
+    }
+
+    #[test]
+    fn energy_fingerprint_separates_models() {
+        let a = EnergyModel::default();
+        let mut b = EnergyModel::default();
+        b.e_mem_access_pj *= 2.0;
+        let mut c = EnergyModel::default();
+        c.clock_hz += 1.0;
+        assert_ne!(energy_fingerprint(&a), energy_fingerprint(&b));
+        assert_ne!(energy_fingerprint(&a), energy_fingerprint(&c));
+        assert_eq!(energy_fingerprint(&a), energy_fingerprint(&a));
     }
 
     #[test]

@@ -1,15 +1,28 @@
 //! Orchestration layer: worker pool, the sharded Figure-5 sweep with its
-//! cross-driver point cache, and the layer-wise CNN runner.
+//! cross-driver point cache, and the layer-wise CNN data model.
+//!
+//! Session-level execution — one object owning config, energy model,
+//! workers and caches — lives in [`crate::engine`]; the deprecated free
+//! functions re-exported here (`run_sweep`, `run_network`,
+//! `auto_mapping`) are thin wrappers over it.
 
 pub mod cache;
 pub mod network;
 pub mod pool;
 pub mod sweep;
 
-pub use cache::{cfg_fingerprint, CacheStats, CachedOutcome, PointCache, PointKey};
-pub use network::{golden_network, run_network, ConvLayer, ConvNet, NetworkOutcome};
+pub use cache::{
+    cfg_fingerprint, energy_fingerprint, CacheStats, CachedOutcome, PointCache, PointKey,
+};
+pub use network::{golden_network, ConvLayer, ConvNet, NetworkOutcome};
 pub use pool::{default_workers, run_jobs};
 pub use sweep::{
-    auto_mapping, paper_axis_values, run_sweep, run_sweep_cached, Axis, SweepPoint, SweepRow,
+    paper_axis_values, run_sweep_cached, run_sweep_with_model, Axis, SweepPoint, SweepRow,
     SweepSpec,
 };
+
+// Deprecated entry points, re-exported for source compatibility.
+#[allow(deprecated)]
+pub use network::run_network;
+#[allow(deprecated)]
+pub use sweep::{auto_mapping, run_sweep};

@@ -1,18 +1,19 @@
-//! Layer-wise CNN runner: chains convolutions through the CGRA with
-//! host-side ReLU between layers — the end-to-end driver behind
-//! `examples/cnn_inference.rs`.
+//! Layer-wise CNN data model: a feed-forward stack of conv layers with
+//! host-side ReLU between them, plus the golden CPU reference — the
+//! network behind `examples/cnn_inference.rs`.
 //!
-//! Every conv layer executes on the simulated CGRA with its chosen
-//! mapping (by default the paper's WP); activations run on the CPU cost
-//! model. The runtime verifier can replay the same network through the
-//! AOT-compiled JAX/Pallas artifact and compare bit-exactly.
+//! Execution lives in `engine::Engine::run_network`: every conv layer
+//! runs on the simulated CGRA with its chosen mapping (by default
+//! [`Mapping::Auto`], which resolves to the paper's WP); activations
+//! run on the CPU cost model. The runtime verifier can replay the same
+//! network through the AOT-compiled JAX/Pallas artifact and compare
+//! bit-exactly.
 
 use anyhow::{ensure, Result};
 
 use crate::cgra::Cgra;
 use crate::conv::{ConvShape, TensorChw, Weights};
-use crate::energy::EnergyModel;
-use crate::kernels::{run_mapping, Mapping};
+use crate::kernels::Mapping;
 use crate::metrics::MappingReport;
 use crate::prop::Rng;
 
@@ -21,7 +22,7 @@ use crate::prop::Rng;
 pub struct ConvLayer {
     /// Layer shape (input channels must match the previous layer's K).
     pub shape: ConvShape,
-    /// Mapping strategy for this layer.
+    /// Mapping strategy for this layer (may be [`Mapping::Auto`]).
     pub mapping: Mapping,
     /// Layer weights.
     pub weights: Weights,
@@ -62,7 +63,9 @@ impl ConvNet {
 
     /// Build a small random CNN: `depth` 3×3 conv+ReLU layers, starting
     /// from a `c0 × (h, w)` input, all with `k` output channels.
-    /// Deterministic in `seed`.
+    /// Deterministic in `seed`. Layers use [`Mapping::Auto`], so the
+    /// engine picks the strategy (WP on every shape of the paper's
+    /// grid) and records the decision per layer.
     pub fn random(depth: usize, c0: usize, k: usize, h: usize, w: usize, seed: u64) -> ConvNet {
         let mut rng = Rng::new(seed);
         let mut layers = Vec::new();
@@ -72,7 +75,7 @@ impl ConvNet {
             let weights = crate::conv::random_weights(&shape, 4, &mut rng);
             layers.push(ConvLayer {
                 shape,
-                mapping: super::sweep::auto_mapping(&shape),
+                mapping: Mapping::Auto,
                 weights,
                 relu: d + 1 < depth, // no activation after the last layer
             });
@@ -111,47 +114,17 @@ impl NetworkOutcome {
     }
 }
 
-/// Host-side ReLU cost: one load + compare + store per element.
-const RELU_CYCLES_PER_ELEM: u64 = 3;
-
 /// Run the network on the CGRA.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `engine::Engine::run_network` — the engine owns the energy \
+            model and caches this wrapper rebuilds per call"
+)]
 pub fn run_network(cgra: &Cgra, net: &ConvNet, input: &TensorChw) -> Result<NetworkOutcome> {
-    net.validate()?;
-    let model = EnergyModel::default();
-    let mut x = input.clone();
-    let mut layers = Vec::new();
-    let mut total_cycles = 0u64;
-    let mut total_energy = 0.0f64;
-    let mut relu_cycles_total = 0u64;
-
-    for layer in &net.layers {
-        let out = run_mapping(cgra, layer.mapping, &layer.shape, &x, &layer.weights)?;
-        let report = MappingReport::from_outcome(&out, &model);
-        total_cycles += report.latency_cycles;
-        total_energy += report.energy_uj;
-        x = out.output;
-        if layer.relu {
-            for v in x.data.iter_mut() {
-                *v = (*v).max(0);
-            }
-            let relu_cycles = RELU_CYCLES_PER_ELEM * x.data.len() as u64;
-            relu_cycles_total += relu_cycles;
-            total_cycles += relu_cycles;
-            // ReLU energy: CPU active + memory traffic.
-            let t_s = relu_cycles as f64 / model.clock_hz;
-            total_energy += (model.p_cpu_active_mw + model.p_mem_static_mw) * t_s * 1e3
-                + 2.0 * x.data.len() as f64 * model.e_mem_access_pj * 1e-6;
-        }
-        layers.push(report);
-    }
-
-    Ok(NetworkOutcome {
-        layers,
-        output: x,
-        total_cycles,
-        total_energy_uj: total_energy,
-        relu_cycles: relu_cycles_total,
-    })
+    crate::engine::EngineBuilder::new()
+        .config(cgra.config().clone())
+        .build()?
+        .run_network(net, input)
 }
 
 /// Golden CPU reference of the same network (wrapping int32 + ReLU),
@@ -175,6 +148,7 @@ mod tests {
     use super::*;
     use crate::cgra::CgraConfig;
     use crate::conv::random_input;
+    use crate::engine::EngineBuilder;
 
     #[test]
     fn random_net_validates_and_chains() {
@@ -185,20 +159,37 @@ mod tests {
         assert_eq!(net.layers[1].shape.c, 8);
         assert_eq!(net.layers[1].shape.ih(), net.layers[0].shape.ox);
         assert!(net.layers[0].relu && !net.layers[2].relu);
+        assert!(net.layers.iter().all(|l| l.mapping.is_auto()));
     }
 
     #[test]
-    fn cgra_network_matches_golden() {
+    fn engine_network_matches_golden() {
         let net = ConvNet::random(2, 2, 4, 8, 8, 11);
         let mut rng = Rng::new(5);
         let input = random_input(&net.layers[0].shape, 8, &mut rng);
-        let cgra = Cgra::new(CgraConfig::default()).unwrap();
-        let out = run_network(&cgra, &net, &input).unwrap();
+        let engine = EngineBuilder::new().build().unwrap();
+        let out = engine.run_network(&net, &input).unwrap();
         let golden = golden_network(&net, &input).unwrap();
         assert_eq!(out.output.data, golden.data);
         assert_eq!(out.layers.len(), 2);
         assert!(out.total_cycles > 0 && out.total_energy_uj > 0.0);
         assert!(out.relu_cycles > 0);
+    }
+
+    /// The deprecated wrapper produces the same totals as the engine
+    /// (it builds one from the passed simulator's config).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_run_network_matches_engine() {
+        let net = ConvNet::random(2, 2, 4, 8, 8, 3);
+        let mut rng = Rng::new(4);
+        let input = random_input(&net.layers[0].shape, 8, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let a = run_network(&cgra, &net, &input).unwrap();
+        let engine = EngineBuilder::new().build().unwrap();
+        let b = engine.run_network(&net, &input).unwrap();
+        assert_eq!(a.output.data, b.output.data);
+        assert_eq!(a.total_cycles, b.total_cycles);
     }
 
     #[test]
@@ -219,8 +210,8 @@ mod tests {
         let shape = net.layers[0].shape;
         let input = TensorChw::from_vec(1, 4, 4, vec![1; 16]);
         assert_eq!(shape.ih(), 4);
-        let cgra = Cgra::new(CgraConfig::default()).unwrap();
-        let out = run_network(&cgra, &net, &input).unwrap();
+        let engine = EngineBuilder::new().build().unwrap();
+        let out = engine.run_network(&net, &input).unwrap();
         assert!(out.output.data.iter().all(|&v| v == 0));
     }
 }

@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::cgra::{Cgra, CgraConfig};
 use crate::conv::{random_input, random_weights, ConvShape};
 use crate::energy::EnergyModel;
-use crate::kernels::{run_mapping, Mapping};
+use crate::kernels::{dispatch, Mapping};
 use crate::metrics::MappingReport;
 use crate::prop::Rng;
 
@@ -167,8 +167,14 @@ fn eval_point(
     point: SweepPoint,
 ) -> SweepRow {
     let shape = point.shape;
+    // Resolve `Auto` up front so the cache key names the concrete
+    // strategy (an Auto point and its resolved mapping share an entry).
+    let mapping = match point.mapping.resolve(&shape, cfg) {
+        Ok((m, _reason)) => m,
+        Err(e) => return SweepRow { point, report: None, skipped: Some(e.to_string()) },
+    };
     let key = PointKey {
-        mapping: point.mapping,
+        mapping,
         shape,
         in_mag: spec.mag,
         w_mag: spec.mag,
@@ -186,7 +192,7 @@ fn eval_point(
     let weights = random_weights(&shape, spec.mag, &mut rng);
     let row = match Cgra::new(cfg.clone()) {
         Err(e) => SweepRow { point, report: None, skipped: Some(e.to_string()) },
-        Ok(cgra) => match run_mapping(&cgra, point.mapping, &shape, &input, &weights) {
+        Ok(cgra) => match dispatch(&cgra, mapping, &shape, &input, &weights) {
             Ok(out) => SweepRow {
                 point,
                 report: Some(MappingReport::from_outcome(&out, model)),
@@ -210,23 +216,43 @@ fn eval_point(
 /// cache. Deterministic: the per-point data seed depends only on the
 /// shape, and rows come back in `spec.points()` order regardless of
 /// worker count or cache state.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `engine::Engine::sweep` — the engine owns the config, worker \
+            width and cache this free function re-threads per call"
+)]
 pub fn run_sweep(spec: &SweepSpec, cfg: &CgraConfig, workers: usize) -> Result<Vec<SweepRow>> {
     run_sweep_cached(spec, cfg, workers, cache::global())
 }
 
-/// [`run_sweep`] against an explicit cache (tests; isolated sweeps).
-///
-/// Points are sharded into contiguous chunks — several per worker — and
-/// the chunks are distributed over [`run_jobs`]; flattening the ordered
-/// chunk results preserves point order exactly.
+/// [`run_sweep`] against an explicit cache (tests; isolated sweeps),
+/// with the calibrated default energy model.
 pub fn run_sweep_cached(
     spec: &SweepSpec,
     cfg: &CgraConfig,
     workers: usize,
     pc: &PointCache,
 ) -> Result<Vec<SweepRow>> {
-    let model = EnergyModel::default();
-    let cfg_fp = cache::cfg_fingerprint(cfg);
+    run_sweep_with_model(spec, cfg, &EnergyModel::default(), workers, pc)
+}
+
+/// [`run_sweep_cached`] with an explicit energy model (the engine's
+/// entry point — `engine::Engine::sweep` passes its session model).
+///
+/// Points are sharded into contiguous chunks — several per worker — and
+/// the chunks are distributed over [`run_jobs`]; flattening the ordered
+/// chunk results preserves point order exactly. The cache key combines
+/// the config and energy-model fingerprints, so rows evaluated under
+/// one model are never served to a sweep under another.
+pub fn run_sweep_with_model(
+    spec: &SweepSpec,
+    cfg: &CgraConfig,
+    model: &EnergyModel,
+    workers: usize,
+    pc: &PointCache,
+) -> Result<Vec<SweepRow>> {
+    let model = *model;
+    let cfg_fp = cache::cfg_fingerprint(cfg) ^ cache::energy_fingerprint(&model);
     let points = spec.points();
     if points.is_empty() {
         return Ok(Vec::new());
@@ -253,6 +279,12 @@ pub fn run_sweep_cached(
 /// remains the best approach for any hyperparameter combination"), so
 /// the chooser returns WP; the Fig. 5 sweep bench re-verifies that claim
 /// against the simulator on every run.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Mapping::Auto` in requests/specs (resolved via \
+            `Mapping::resolve` / `engine::auto::choose`, which also checks \
+            the memory bound and records the reason)"
+)]
 pub fn auto_mapping(_shape: &ConvShape) -> Mapping {
     Mapping::Wp
 }
@@ -295,8 +327,8 @@ mod tests {
             seed: 1,
         };
         let cfg = CgraConfig::default();
-        let a = run_sweep(&spec, &cfg, 2).unwrap();
-        let b = run_sweep(&spec, &cfg, 4).unwrap();
+        let a = run_sweep_cached(&spec, &cfg, 2, cache::global()).unwrap();
+        let b = run_sweep_cached(&spec, &cfg, 4, cache::global()).unwrap();
         assert_eq!(a.len(), 6);
         for (x, y) in a.iter().zip(b.iter()) {
             let (rx, ry) = (x.report.as_ref().unwrap(), y.report.as_ref().unwrap());
@@ -318,15 +350,43 @@ mod tests {
         // Tiny memory to force the skip.
         let mut cfg = CgraConfig::default();
         cfg.mem_words = 2048;
-        let rows = run_sweep(&spec, &cfg, 1).unwrap();
+        let rows = run_sweep_cached(&spec, &cfg, 1, &PointCache::new(2)).unwrap();
         assert_eq!(rows.len(), 1);
         assert!(rows[0].report.is_none());
         assert!(rows[0].skipped.as_ref().unwrap().contains("words"));
     }
 
     #[test]
+    #[allow(deprecated)]
     fn auto_mapping_is_wp() {
         assert_eq!(auto_mapping(&ConvShape::baseline()), Mapping::Wp);
+        // The replacement agrees on the paper's grid.
+        let (m, _) = Mapping::Auto.resolve(&ConvShape::baseline(), &CgraConfig::default()).unwrap();
+        assert_eq!(m, Mapping::Wp);
+    }
+
+    /// An `Auto` sweep point resolves to WP and shares its cache entry
+    /// with an explicit WP point.
+    #[test]
+    fn auto_points_share_cache_with_resolved_mapping() {
+        let spec = SweepSpec {
+            c_values: vec![4],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp, Mapping::Auto],
+            mag: 6,
+            seed: 3,
+        };
+        let pc = PointCache::new(2);
+        let rows = run_sweep_cached(&spec, &CgraConfig::default(), 1, &pc).unwrap();
+        assert_eq!(rows.len(), 2);
+        let s = pc.stats();
+        assert_eq!(s.entries, 1, "Auto and WP must dedup to one cached point");
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(
+            rows[0].report.as_ref().unwrap().latency_cycles,
+            rows[1].report.as_ref().unwrap().latency_cycles
+        );
     }
 
     #[test]

@@ -1,0 +1,69 @@
+//! Automatic mapping selection — [`Mapping::Auto`]'s policy, with the
+//! decision materialized for reporting.
+//!
+//! The policy itself lives with the `Mapping` enum
+//! ([`Mapping::resolve`], `kernels::common`) so every layer below the
+//! engine can resolve `Auto` without an upward dependency; this module
+//! is the engine-level front door that callers and results speak.
+
+use anyhow::Result;
+
+use crate::cgra::CgraConfig;
+use crate::conv::ConvShape;
+use crate::kernels::Mapping;
+
+/// A recorded auto-mapping decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoDecision {
+    /// The concrete strategy chosen.
+    pub mapping: Mapping,
+    /// Why (one of the policy's fixed reasons).
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for AutoDecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "auto -> {} ({})", self.mapping.label(), self.reason)
+    }
+}
+
+/// Choose the mapping for a shape per the paper's finding: Conv-WP
+/// whenever the direct working set fits the 512 KiB bound, Im2col-OP
+/// when only the im2col route fits, an actionable error when nothing
+/// does. See [`Mapping::resolve`] for the full policy text.
+pub fn choose(shape: &ConvShape, cfg: &CgraConfig) -> Result<AutoDecision> {
+    let (mapping, reason) = Mapping::Auto.resolve(shape, cfg)?;
+    Ok(AutoDecision { mapping, reason })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chooses_wp_for_paper_grid_shapes() {
+        let cfg = CgraConfig::default();
+        // In-bound shapes across the paper's Fig. 5 axes: Auto must
+        // follow the paper's "WP wins everywhere" conclusion. (The
+        // spatial extreme 64×64 at C=K=16 exceeds the 512 KiB bound —
+        // the sweep records it as skipped, and `choose` errors on it.)
+        for (c, k, o) in [(16, 16, 16), (144, 16, 16), (16, 144, 16), (16, 16, 48)] {
+            let d = choose(&ConvShape::new3x3(c, k, o, o), &cfg).unwrap();
+            assert_eq!(d.mapping, Mapping::Wp, "C={c} K={k} O={o}");
+        }
+    }
+
+    #[test]
+    fn errors_past_the_memory_bound() {
+        let err = choose(&ConvShape::new3x3(144, 144, 64, 64), &CgraConfig::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("512"));
+    }
+
+    #[test]
+    fn decision_displays_reason() {
+        let d = choose(&ConvShape::baseline(), &CgraConfig::default()).unwrap();
+        let s = d.to_string();
+        assert!(s.contains("Conv-WP") && s.contains("auto ->"), "{s}");
+    }
+}

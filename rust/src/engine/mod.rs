@@ -1,0 +1,617 @@
+//! The session-based front door of the crate.
+//!
+//! Everything the old free-function entry points (`kernels::run_mapping`,
+//! `coordinator::run_sweep`, `coordinator::run_network`,
+//! `report::run_all_mappings`) re-threaded by hand — simulator config,
+//! energy model, worker pool width, the sweep-point cache — is owned
+//! once by an [`Engine`], built via [`EngineBuilder`]:
+//!
+//! ```no_run
+//! use openedge_cgra::conv::ConvShape;
+//! use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+//! use openedge_cgra::kernels::Mapping;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let engine = EngineBuilder::new().build()?;
+//! let req = ConvRequest::seeded(ConvShape::baseline(), Mapping::Auto, 42);
+//! let res = engine.submit(&req)?;
+//! println!(
+//!     "{} in {} cycles ({}){}",
+//!     res.mapping,
+//!     res.report.latency_cycles,
+//!     res.auto.unwrap(),
+//!     if res.cache_hit { " [cache hit]" } else { "" },
+//! );
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The request/response surface is typed: a [`ConvRequest`] names the
+//! shape, the strategy (concrete or [`Mapping::Auto`]), the data source
+//! (deterministic seed or caller tensors) and an optional host-side
+//! ReLU; a [`ConvResult`] carries the output tensor, the paper's
+//! [`MappingReport`] metric row, the cache-hit flag and the recorded
+//! auto-mapping decision. [`Engine::submit_batch`] fans a slice of
+//! requests over the worker pool, order-preserving and
+//! cache-consulting; [`Engine::run_network`] chains a [`ConvNet`]
+//! layer-by-layer; [`Engine::sweep`] and [`Engine::run_all_mappings`]
+//! drive the figure protocols. The old free functions survive as thin
+//! `#[deprecated]` wrappers over a per-call engine.
+
+pub mod auto;
+mod request;
+
+pub use auto::{choose, AutoDecision};
+pub use request::{ConvRequest, ConvResult, RequestData, DEFAULT_INPUT_MAG, DEFAULT_WEIGHT_MAG};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cgra::{Cgra, CgraConfig};
+use crate::conv::{conv2d, random_input, random_weights, ConvShape, TensorChw};
+use crate::coordinator::cache::{self, CacheStats, CachedOutcome, PointCache, PointKey};
+use crate::coordinator::network::{ConvNet, NetworkOutcome};
+use crate::coordinator::pool::{default_workers, run_jobs};
+use crate::coordinator::sweep::{run_sweep_with_model, SweepRow, SweepSpec};
+use crate::energy::EnergyModel;
+use crate::kernels::{dispatch, Mapping};
+use crate::metrics::MappingReport;
+use crate::prop::Rng;
+
+/// Host-side ReLU cost: one load + compare + store per element.
+const RELU_CYCLES_PER_ELEM: u64 = 3;
+
+/// Which point cache an engine consults.
+enum CacheChoice {
+    /// The process-wide cache shared with every other engine and the
+    /// deprecated free-function wrappers (the default).
+    Global,
+    /// An engine-private cache (isolation for tests and benches).
+    Private(PointCache),
+}
+
+/// Builder for [`Engine`] — every knob has the calibrated default.
+pub struct EngineBuilder {
+    cfg: CgraConfig,
+    model: EnergyModel,
+    workers: usize,
+    private_cache: bool,
+}
+
+impl EngineBuilder {
+    /// Defaults: calibrated [`CgraConfig`], calibrated [`EnergyModel`],
+    /// [`default_workers`] threads, the process-wide point cache.
+    pub fn new() -> EngineBuilder {
+        EngineBuilder {
+            cfg: CgraConfig::default(),
+            model: EnergyModel::default(),
+            workers: default_workers(),
+            private_cache: false,
+        }
+    }
+
+    /// Use a specific simulator configuration (ablations, tiny-memory
+    /// tests). The cache key fingerprints both the config and the
+    /// energy model, so engines with different configs or models never
+    /// cross-contaminate even on the shared global cache.
+    pub fn config(mut self, cfg: CgraConfig) -> EngineBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Use a specific energy model.
+    pub fn energy_model(mut self, model: EnergyModel) -> EngineBuilder {
+        self.model = model;
+        self
+    }
+
+    /// Worker threads for `submit_batch` / `sweep` (clamped to ≥ 1).
+    pub fn workers(mut self, workers: usize) -> EngineBuilder {
+        self.workers = workers;
+        self
+    }
+
+    /// Give the engine its own isolated point cache instead of the
+    /// process-wide one.
+    pub fn private_cache(mut self) -> EngineBuilder {
+        self.private_cache = true;
+        self
+    }
+
+    /// Validate the configuration and build the engine.
+    pub fn build(self) -> Result<Engine> {
+        let key_fp = cache::cfg_fingerprint(&self.cfg) ^ cache::energy_fingerprint(&self.model);
+        let cgra = Cgra::new(self.cfg)?;
+        Ok(Engine {
+            key_fp,
+            cgra,
+            model: self.model,
+            workers: self.workers.max(1),
+            cache: if self.private_cache {
+                CacheChoice::Private(PointCache::default())
+            } else {
+                CacheChoice::Global
+            },
+        })
+    }
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder::new()
+    }
+}
+
+/// A convolution-execution session: owns the simulator, energy model,
+/// worker-pool width and point cache, and serves typed requests.
+///
+/// `Engine` is `Sync` — one instance is shared by every pool worker —
+/// and all methods take `&self`, so a single engine can back an entire
+/// process (CLI run, figure regeneration, benches) at once.
+pub struct Engine {
+    /// Combined config + energy-model fingerprint for cache keys.
+    key_fp: u64,
+    cgra: Cgra,
+    model: EnergyModel,
+    workers: usize,
+    cache: CacheChoice,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// The simulator configuration this session runs under (the one
+    /// source of truth lives inside the simulator).
+    pub fn config(&self) -> &CgraConfig {
+        self.cgra.config()
+    }
+
+    /// The underlying simulator (for program-level work, e.g. the `asm`
+    /// subcommand).
+    pub fn cgra(&self) -> &Cgra {
+        &self.cgra
+    }
+
+    /// The energy model applied to every outcome.
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.model
+    }
+
+    /// Worker threads used by the batched entry points.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The point cache this engine consults (global by default).
+    pub fn cache(&self) -> &PointCache {
+        match &self.cache {
+            CacheChoice::Global => cache::global(),
+            CacheChoice::Private(pc) => pc,
+        }
+    }
+
+    /// Counter snapshot of the engine's point cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache().stats()
+    }
+
+    /// Execute one convolution request.
+    ///
+    /// Seeded requests consult the point cache first: on a hit the
+    /// metrics come from the cache and the output tensor is
+    /// reconstructed through the golden model (bit-exact vs the
+    /// simulator — the invariant every kernel test enforces), so a hit
+    /// costs one CPU convolution instead of a cycle-level simulation.
+    /// Requests over caller tensors always simulate.
+    pub fn submit(&self, req: &ConvRequest) -> Result<ConvResult> {
+        match &req.data {
+            RequestData::Tensors { input, weights } => {
+                self.run_one(&req.shape, req.mapping, req.relu, input, weights)
+            }
+            RequestData::Seed { seed, in_mag, w_mag } => {
+                let auto = self.auto_for(&req.shape, req.mapping)?;
+                let mapping = auto.map(|d| d.mapping).unwrap_or(req.mapping);
+                let (report, cache_hit, simulated) =
+                    self.seeded_exec(&req.shape, mapping, *seed, *in_mag, *w_mag)?;
+                let mut output = match simulated {
+                    Some(out) => out,
+                    // Cache hit: reconstruct the output through the
+                    // golden model (bit-exact vs the simulator — the
+                    // invariant every kernel test enforces), one CPU
+                    // convolution instead of a cycle-level simulation.
+                    None => {
+                        let mut rng = Rng::new(*seed);
+                        let input = random_input(&req.shape, *in_mag, &mut rng);
+                        let weights = random_weights(&req.shape, *w_mag, &mut rng);
+                        conv2d(&req.shape, &input, &weights)
+                    }
+                };
+                let (relu_cycles, relu_energy_uj) = self.apply_relu(req.relu, &mut output);
+                Ok(ConvResult {
+                    output,
+                    report,
+                    cache_hit,
+                    mapping,
+                    auto,
+                    relu_cycles,
+                    relu_energy_uj,
+                })
+            }
+        }
+    }
+
+    /// Metrics-only submission: like [`Engine::submit`] but never
+    /// materializes the output tensor, so a cache hit is a pure lookup.
+    /// The figure drivers ([`Engine::run_all_mappings`]) use this.
+    /// Returns the metric row and the cache-hit flag.
+    pub fn submit_report(&self, req: &ConvRequest) -> Result<(MappingReport, bool)> {
+        match &req.data {
+            RequestData::Tensors { .. } => self.submit(req).map(|res| (res.report, false)),
+            RequestData::Seed { seed, in_mag, w_mag } => {
+                let auto = self.auto_for(&req.shape, req.mapping)?;
+                let mapping = auto.map(|d| d.mapping).unwrap_or(req.mapping);
+                let (report, cache_hit, _simulated) =
+                    self.seeded_exec(&req.shape, mapping, *seed, *in_mag, *w_mag)?;
+                Ok((report, cache_hit))
+            }
+        }
+    }
+
+    /// Resolve the auto-mapping decision for a submission (`None` for
+    /// concrete mappings), after validating the shape. The single
+    /// resolve-then-record sequence shared by every execution path.
+    fn auto_for(&self, shape: &ConvShape, mapping: Mapping) -> Result<Option<AutoDecision>> {
+        shape.validate()?;
+        if mapping.is_auto() {
+            Ok(Some(auto::choose(shape, self.config())?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Seed-protocol core shared by [`Engine::submit`] and
+    /// [`Engine::submit_report`]: consult the point cache under the
+    /// concrete mapping's key, simulate on a miss, memoize the result
+    /// (skips included). Returns the metric row, the cache-hit flag,
+    /// and the simulated output when a simulation actually ran.
+    fn seeded_exec(
+        &self,
+        shape: &ConvShape,
+        mapping: Mapping,
+        seed: u64,
+        in_mag: i32,
+        w_mag: i32,
+    ) -> Result<(MappingReport, bool, Option<TensorChw>)> {
+        let key = PointKey { mapping, shape: *shape, in_mag, w_mag, seed, cfg_fp: self.key_fp };
+        if let Some(hit) = self.cache().get(&key) {
+            return match hit {
+                CachedOutcome::Report(report) => Ok((report, true, None)),
+                CachedOutcome::Skipped(s) => bail!("{s}"),
+            };
+        }
+        let mut rng = Rng::new(seed);
+        let input = random_input(shape, in_mag, &mut rng);
+        let weights = random_weights(shape, w_mag, &mut rng);
+        match dispatch(&self.cgra, mapping, shape, &input, &weights) {
+            Ok(out) => {
+                let report = MappingReport::from_outcome(&out, &self.model);
+                self.cache().insert(key, CachedOutcome::Report(report.clone()));
+                Ok((report, false, Some(out.output)))
+            }
+            Err(e) => {
+                // Deterministic failure (memory bound / invalid
+                // config): cache the skip like the sweep does.
+                self.cache().insert(key, CachedOutcome::Skipped(format!("{e:#}")));
+                Err(e)
+            }
+        }
+    }
+
+    /// The uncached borrow-based execution path shared by the `Tensors`
+    /// arm of [`Engine::submit`] and [`Engine::run_network`] (which
+    /// chains activations without cloning layer weights).
+    fn run_one(
+        &self,
+        shape: &ConvShape,
+        mapping: Mapping,
+        relu: bool,
+        input: &TensorChw,
+        weights: &crate::conv::Weights,
+    ) -> Result<ConvResult> {
+        let auto = self.auto_for(shape, mapping)?;
+        let mapping = auto.map(|d| d.mapping).unwrap_or(mapping);
+        ensure!(
+            input.data.len() == shape.input_elems(),
+            "input tensor has {} elements, shape {} needs {}",
+            input.data.len(),
+            shape,
+            shape.input_elems()
+        );
+        ensure!(
+            weights.data.len() == shape.weight_elems(),
+            "weight tensor has {} elements, shape {} needs {}",
+            weights.data.len(),
+            shape,
+            shape.weight_elems()
+        );
+        let out = dispatch(&self.cgra, mapping, shape, input, weights)?;
+        let report = MappingReport::from_outcome(&out, &self.model);
+        let mut output = out.output;
+        let (relu_cycles, relu_energy_uj) = self.apply_relu(relu, &mut output);
+        Ok(ConvResult {
+            output,
+            report,
+            cache_hit: false,
+            mapping,
+            auto,
+            relu_cycles,
+            relu_energy_uj,
+        })
+    }
+
+    /// Execute a batch of requests across the worker pool.
+    ///
+    /// Order-preserving (results come back in request order regardless
+    /// of worker count) and cache-consulting (each request goes through
+    /// the same lookup as [`Engine::submit`]); per-request failures do
+    /// not abort the rest of the batch.
+    pub fn submit_batch(&self, reqs: &[ConvRequest]) -> Vec<Result<ConvResult>> {
+        let jobs: Vec<_> = reqs.iter().map(|req| move || self.submit(req)).collect();
+        run_jobs(self.workers, jobs)
+    }
+
+    /// Run a feed-forward CNN layer by layer, chaining activations and
+    /// charging host-side ReLUs, exactly like the paper's end-to-end
+    /// experiment (E7).
+    pub fn run_network(&self, net: &ConvNet, input: &TensorChw) -> Result<NetworkOutcome> {
+        net.validate()?;
+        let mut x = input.clone();
+        let mut layers = Vec::with_capacity(net.layers.len());
+        let mut total_cycles = 0u64;
+        let mut total_energy = 0.0f64;
+        let mut relu_cycles_total = 0u64;
+        for layer in &net.layers {
+            let res =
+                self.run_one(&layer.shape, layer.mapping, layer.relu, &x, &layer.weights)?;
+            total_cycles += res.report.latency_cycles + res.relu_cycles;
+            total_energy += res.report.energy_uj + res.relu_energy_uj;
+            relu_cycles_total += res.relu_cycles;
+            layers.push(res.report);
+            x = res.output;
+        }
+        Ok(NetworkOutcome {
+            layers,
+            output: x,
+            total_cycles,
+            total_energy_uj: total_energy,
+            relu_cycles: relu_cycles_total,
+        })
+    }
+
+    /// Run all five strategies on one shape (batched over the pool) and
+    /// return the metric rows in [`Mapping::ALL`] order — the Fig. 3/4
+    /// protocol (seeded data at the figure magnitudes). Metrics-only:
+    /// warm-cache regenerations are pure lookups
+    /// (see [`Engine::submit_report`]).
+    pub fn run_all_mappings(&self, shape: &ConvShape, seed: u64) -> Result<Vec<MappingReport>> {
+        let reqs: Vec<ConvRequest> =
+            Mapping::ALL.into_iter().map(|m| ConvRequest::seeded(*shape, m, seed)).collect();
+        let jobs: Vec<_> = reqs.iter().map(|req| move || self.submit_report(req)).collect();
+        run_jobs(self.workers, jobs).into_iter().map(|r| r.map(|(report, _)| report)).collect()
+    }
+
+    /// Run a Figure-5 hyper-parameter sweep through this session's
+    /// config, workers and cache (rows in `spec.points()` order,
+    /// memory-bound points recorded as skips).
+    pub fn sweep(&self, spec: &SweepSpec) -> Result<Vec<SweepRow>> {
+        run_sweep_with_model(spec, self.config(), &self.model, self.workers, self.cache())
+    }
+
+    /// Apply the host-side ReLU in place and return its (cycles, µJ)
+    /// accounting — the CNN runner's cost model.
+    fn apply_relu(&self, on: bool, t: &mut TensorChw) -> (u64, f64) {
+        if !on {
+            return (0, 0.0);
+        }
+        for v in t.data.iter_mut() {
+            *v = (*v).max(0);
+        }
+        let cycles = RELU_CYCLES_PER_ELEM * t.data.len() as u64;
+        let t_s = cycles as f64 / self.model.clock_hz;
+        let uj = (self.model.p_cpu_active_mw + self.model.p_mem_static_mw) * t_s * 1e3
+            + 2.0 * t.data.len() as f64 * self.model.e_mem_access_pj * 1e-6;
+        (cycles, uj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_engine() -> Engine {
+        EngineBuilder::new().workers(2).private_cache().build().unwrap()
+    }
+
+    #[test]
+    fn builder_defaults_and_accessors() {
+        let e = EngineBuilder::new().build().unwrap();
+        assert!(e.workers() >= 1);
+        assert_eq!(e.config().mem_words, CgraConfig::default().mem_words);
+        // Zero workers clamp to one.
+        let e1 = EngineBuilder::new().workers(0).build().unwrap();
+        assert_eq!(e1.workers(), 1);
+    }
+
+    #[test]
+    fn seeded_submit_caches_and_flags_hits() {
+        let e = quick_engine();
+        let req = ConvRequest::seeded(ConvShape::new3x3(3, 4, 5, 5), Mapping::Wp, 7);
+        let a = e.submit(&req).unwrap();
+        assert!(!a.cache_hit);
+        let b = e.submit(&req).unwrap();
+        assert!(b.cache_hit, "second submission must hit the cache");
+        // Cached metrics and golden-reconstructed output are identical
+        // to the simulated ones.
+        assert_eq!(a.output.data, b.output.data);
+        assert_eq!(a.report.latency_cycles, b.report.latency_cycles);
+        assert_eq!(a.report.energy_uj.to_bits(), b.report.energy_uj.to_bits());
+        let s = e.cache_stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn tensor_requests_are_never_cached() {
+        let e = quick_engine();
+        let shape = ConvShape::new3x3(2, 2, 3, 3);
+        let mut rng = Rng::new(5);
+        let input = random_input(&shape, 10, &mut rng);
+        let weights = random_weights(&shape, 5, &mut rng);
+        let req = ConvRequest::with_data(shape, Mapping::Wp, input, weights);
+        assert!(!e.submit(&req).unwrap().cache_hit);
+        assert!(!e.submit(&req).unwrap().cache_hit);
+        assert_eq!(e.cache_stats().entries, 0);
+    }
+
+    #[test]
+    fn auto_decision_is_recorded() {
+        let e = quick_engine();
+        let res =
+            e.submit(&ConvRequest::seeded(ConvShape::baseline(), Mapping::Auto, 3)).unwrap();
+        assert_eq!(res.mapping, Mapping::Wp);
+        let d = res.auto.expect("auto decision recorded");
+        assert_eq!(d.mapping, Mapping::Wp);
+        assert_eq!(res.report.mapping, Mapping::Wp, "report names the concrete strategy");
+        // An explicit request records no decision.
+        let res2 = e.submit(&ConvRequest::seeded(ConvShape::baseline(), Mapping::Wp, 3)).unwrap();
+        assert!(res2.auto.is_none());
+        assert!(res2.cache_hit, "auto and explicit WP share one cache entry");
+    }
+
+    #[test]
+    fn relu_is_applied_and_charged() {
+        let e = quick_engine();
+        let shape = ConvShape::new3x3(2, 2, 3, 3);
+        let mut rng = Rng::new(6);
+        // All-one input with all-negative weights forces every
+        // pre-activation negative.
+        let input = TensorChw::from_vec(
+            shape.c,
+            shape.ih(),
+            shape.iw(),
+            vec![1; shape.input_elems()],
+        );
+        let mut weights = random_weights(&shape, 5, &mut rng);
+        for w in weights.data.iter_mut() {
+            *w = -(w.abs() + 1);
+        }
+        let base = ConvRequest::with_data(shape, Mapping::Wp, input.clone(), weights.clone());
+        let plain = e.submit(&base).unwrap();
+        let relued = e.submit(&base.clone().relu(true)).unwrap();
+        assert!(plain.output.data.iter().any(|&v| v < 0));
+        assert!(relued.output.data.iter().all(|&v| v >= 0));
+        assert_eq!(relued.relu_cycles, 3 * shape.output_elems() as u64);
+        assert!(relued.relu_energy_uj > 0.0);
+        assert_eq!(plain.relu_cycles, 0);
+        assert_eq!(relued.total_cycles(), relued.report.latency_cycles + relued.relu_cycles);
+    }
+
+    #[test]
+    fn mismatched_tensor_sizes_rejected() {
+        let e = quick_engine();
+        let shape = ConvShape::new3x3(2, 2, 3, 3);
+        let mut rng = Rng::new(8);
+        let input = random_input(&ConvShape::new3x3(3, 2, 3, 3), 5, &mut rng); // wrong C
+        let weights = random_weights(&shape, 5, &mut rng);
+        let err = e.submit(&ConvRequest::with_data(shape, Mapping::Wp, input, weights));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn oversized_seeded_request_errors_and_caches_the_skip() {
+        let e = quick_engine();
+        let req = ConvRequest::seeded(ConvShape::new3x3(16, 16, 64, 64), Mapping::Wp, 1);
+        let e1 = format!("{:#}", e.submit(&req).unwrap_err());
+        assert!(e1.contains("512"));
+        // Second attempt is served from the cached skip.
+        let e2 = format!("{:#}", e.submit(&req).unwrap_err());
+        assert_eq!(e1, e2);
+        assert_eq!(e.cache_stats().hits, 1);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        assert!(quick_engine().submit_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn batch_preserves_request_order() {
+        let e = quick_engine();
+        let shapes = [(2, 3), (3, 2), (4, 1), (1, 4)];
+        let reqs: Vec<ConvRequest> = shapes
+            .iter()
+            .map(|&(c, k)| ConvRequest::seeded(ConvShape::new3x3(c, k, 3, 3), Mapping::Wp, 9))
+            .collect();
+        let results = e.submit_batch(&reqs);
+        assert_eq!(results.len(), reqs.len());
+        for (res, &(c, k)) in results.iter().zip(shapes.iter()) {
+            let r = res.as_ref().unwrap();
+            assert_eq!(r.report.shape_id, format!("c{c}k{k}o3x3"));
+        }
+    }
+
+    #[test]
+    fn batch_isolates_per_request_failures() {
+        let e = quick_engine();
+        let reqs = vec![
+            ConvRequest::seeded(ConvShape::new3x3(2, 2, 3, 3), Mapping::Wp, 1),
+            ConvRequest::seeded(ConvShape::new3x3(16, 16, 64, 64), Mapping::Wp, 1), // too big
+            ConvRequest::seeded(ConvShape::new3x3(2, 2, 4, 4), Mapping::Cpu, 1),
+        ];
+        let results = e.submit_batch(&reqs);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok());
+    }
+
+    #[test]
+    fn run_all_mappings_covers_all_strategies() {
+        let e = quick_engine();
+        let rows = e.run_all_mappings(&ConvShape::new3x3(4, 4, 4, 4), 11).unwrap();
+        assert_eq!(rows.len(), Mapping::ALL.len());
+        for (r, m) in rows.iter().zip(Mapping::ALL) {
+            assert_eq!(r.mapping, m);
+        }
+    }
+
+    #[test]
+    fn network_runs_and_matches_golden() {
+        let e = quick_engine();
+        let net = ConvNet::random(2, 2, 4, 8, 8, 11);
+        let mut rng = Rng::new(5);
+        let input = random_input(&net.layers[0].shape, 8, &mut rng);
+        let out = e.run_network(&net, &input).unwrap();
+        let golden = crate::coordinator::golden_network(&net, &input).unwrap();
+        assert_eq!(out.output.data, golden.data);
+        assert_eq!(out.layers.len(), 2);
+        assert!(out.total_cycles > 0 && out.total_energy_uj > 0.0);
+        assert!(out.relu_cycles > 0);
+    }
+
+    #[test]
+    fn sweep_routes_through_engine_cache() {
+        let e = quick_engine();
+        let spec = SweepSpec {
+            c_values: vec![4],
+            k_values: vec![5],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp],
+            mag: 6,
+            seed: 21,
+        };
+        let rows = e.sweep(&spec).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(e.cache_stats().entries, 2, "sweep points land in the engine's cache");
+    }
+}

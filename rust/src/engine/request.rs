@@ -1,0 +1,138 @@
+//! The typed request/response surface of the [`super::Engine`].
+
+use crate::conv::{ConvShape, TensorChw, Weights};
+use crate::kernels::Mapping;
+use crate::metrics::MappingReport;
+
+use super::auto::AutoDecision;
+
+/// Default input-data magnitude for seeded requests (the Fig. 3/4 data
+/// protocol: input values drawn from `[-30, 30]`).
+pub const DEFAULT_INPUT_MAG: i32 = 30;
+
+/// Default weight-data magnitude for seeded requests (Fig. 3/4: weights
+/// drawn from `[-9, 9]`).
+pub const DEFAULT_WEIGHT_MAG: i32 = 9;
+
+/// Where a request's tensors come from.
+#[derive(Clone, Debug)]
+pub enum RequestData {
+    /// Deterministic data derived from a seed (the figure/sweep
+    /// protocol). Seeded requests are *cacheable*: the tuple
+    /// `(mapping, shape, magnitudes, seed, config)` fully determines
+    /// the result, so repeats are served from the engine's point cache.
+    Seed {
+        /// Data RNG seed (input then weights are drawn from one
+        /// `Rng::new(seed)` stream, in that order).
+        seed: u64,
+        /// Input values are uniform in `[-in_mag, in_mag]`.
+        in_mag: i32,
+        /// Weight values are uniform in `[-w_mag, w_mag]`.
+        w_mag: i32,
+    },
+    /// Caller-supplied tensors (e.g. real activations chained through a
+    /// network). Never cached: the data is not part of any cache key.
+    Tensors {
+        /// Input feature map, CHW.
+        input: TensorChw,
+        /// Layer weights.
+        weights: Weights,
+    },
+}
+
+/// One convolution to execute.
+#[derive(Clone, Debug)]
+pub struct ConvRequest {
+    /// Layer shape.
+    pub shape: ConvShape,
+    /// Strategy — concrete, or [`Mapping::Auto`] to let the engine pick
+    /// (the decision is recorded in [`ConvResult::auto`]).
+    pub mapping: Mapping,
+    /// Tensor source.
+    pub data: RequestData,
+    /// Apply a host-side ReLU to the output (accounted separately from
+    /// the convolution metrics, as in the CNN runner).
+    pub relu: bool,
+}
+
+impl ConvRequest {
+    /// A cacheable request with deterministic seeded data at the
+    /// figure-protocol magnitudes ([`DEFAULT_INPUT_MAG`] /
+    /// [`DEFAULT_WEIGHT_MAG`]).
+    pub fn seeded(shape: ConvShape, mapping: Mapping, seed: u64) -> ConvRequest {
+        ConvRequest {
+            shape,
+            mapping,
+            data: RequestData::Seed {
+                seed,
+                in_mag: DEFAULT_INPUT_MAG,
+                w_mag: DEFAULT_WEIGHT_MAG,
+            },
+            relu: false,
+        }
+    }
+
+    /// A cacheable seeded request with explicit data magnitudes (the
+    /// sweep protocol uses one magnitude for both tensors).
+    pub fn seeded_with_mags(
+        shape: ConvShape,
+        mapping: Mapping,
+        seed: u64,
+        in_mag: i32,
+        w_mag: i32,
+    ) -> ConvRequest {
+        ConvRequest { shape, mapping, data: RequestData::Seed { seed, in_mag, w_mag }, relu: false }
+    }
+
+    /// A request over caller-supplied tensors (uncached).
+    pub fn with_data(
+        shape: ConvShape,
+        mapping: Mapping,
+        input: TensorChw,
+        weights: Weights,
+    ) -> ConvRequest {
+        ConvRequest { shape, mapping, data: RequestData::Tensors { input, weights }, relu: false }
+    }
+
+    /// Toggle the host-side ReLU (builder-style).
+    pub fn relu(mut self, on: bool) -> ConvRequest {
+        self.relu = on;
+        self
+    }
+}
+
+/// Everything one submission produces.
+#[derive(Clone, Debug)]
+pub struct ConvResult {
+    /// Output tensor `(K, Ox, Oy)`, bit-exact wrapping int32 (ReLU
+    /// applied when the request asked for it).
+    pub output: TensorChw,
+    /// The paper's metric row for the convolution itself (latency,
+    /// energy, MAC/cycle, footprint, op mix — excludes the ReLU).
+    pub report: MappingReport,
+    /// Whether the metrics were served from the engine's point cache
+    /// (seeded requests only; the output is then reconstructed through
+    /// the golden model, which the simulator matches bit-exactly).
+    pub cache_hit: bool,
+    /// The concrete strategy that executed (resolves `Auto`).
+    pub mapping: Mapping,
+    /// The auto-mapping decision, when the request asked for
+    /// [`Mapping::Auto`].
+    pub auto: Option<AutoDecision>,
+    /// Host cycles charged for the ReLU (0 unless requested).
+    pub relu_cycles: u64,
+    /// Energy charged for the ReLU, µJ (0 unless requested).
+    pub relu_energy_uj: f64,
+}
+
+impl ConvResult {
+    /// End-to-end latency including the ReLU, cycles.
+    pub fn total_cycles(&self) -> u64 {
+        self.report.latency_cycles + self.relu_cycles
+    }
+
+    /// End-to-end energy including the ReLU, µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.report.energy_uj + self.relu_energy_uj
+    }
+}

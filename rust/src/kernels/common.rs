@@ -80,13 +80,27 @@ pub enum Mapping {
     OpDirect,
     /// CPU-only baseline (no CGRA).
     Cpu,
+    /// Pick the strategy per shape at submission time (see
+    /// [`Mapping::resolve`] / `engine::auto`). Never executes directly:
+    /// the dispatcher resolves it to one of the concrete strategies
+    /// above, and `engine::Engine` records the decision in the result.
+    Auto,
 }
 
+/// Why `Auto` picked WP (see [`Mapping::resolve`]).
+const AUTO_REASON_WP: &str = "direct working set fits the memory bound; the paper finds \
+     Conv-WP best for any hyperparameter combination";
+
+/// Why `Auto` fell back to OP-im2col (see [`Mapping::resolve`]).
+const AUTO_REASON_OP_IM2COL: &str = "direct convolution is unavailable for this shape but the \
+     im2col buffer fits the memory bound; Im2col-OP is the best remaining mapping (Fig. 4)";
+
 impl Mapping {
-    /// All CGRA mappings (excludes the CPU baseline).
+    /// All CGRA mappings (excludes the CPU baseline and `Auto`).
     pub const CGRA: [Mapping; 4] = [Mapping::Wp, Mapping::Ip, Mapping::OpIm2col, Mapping::OpDirect];
 
-    /// All strategies including the CPU baseline.
+    /// All *concrete* strategies including the CPU baseline (excludes
+    /// `Auto`, which always resolves to one of these).
     pub const ALL: [Mapping; 5] =
         [Mapping::Wp, Mapping::Ip, Mapping::OpIm2col, Mapping::OpDirect, Mapping::Cpu];
 
@@ -98,10 +112,12 @@ impl Mapping {
             Mapping::OpIm2col => "Im2col-OP",
             Mapping::OpDirect => "Conv-OP",
             Mapping::Cpu => "CPU",
+            Mapping::Auto => "Auto",
         }
     }
 
-    /// Parse a user-facing name.
+    /// Parse a user-facing name, case-insensitively. Accepts the short
+    /// names, the paper labels, and `auto`.
     pub fn parse(s: &str) -> Result<Mapping> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "wp" | "conv-wp" => Mapping::Wp,
@@ -109,13 +125,53 @@ impl Mapping {
             "op-im2col" | "im2col-op" => Mapping::OpIm2col,
             "op-direct" | "conv-op" | "op" => Mapping::OpDirect,
             "cpu" => Mapping::Cpu,
+            "auto" => Mapping::Auto,
             other => anyhow::bail!(
-                "unknown mapping '{other}' (expected wp|ip|im2col-op|conv-op|cpu)"
+                "unknown mapping '{other}' (valid: wp | conv-wp, ip | im2col-ip, \
+                 op-im2col | im2col-op, op-direct | conv-op | op, cpu, auto; \
+                 names are case-insensitive)"
             ),
         })
     }
 
-    /// Whether this mapping runs the Im2col transformation on the host.
+    /// Whether this is the `Auto` placeholder (must be resolved before
+    /// keying caches or reporting a concrete strategy).
+    pub fn is_auto(self) -> bool {
+        self == Mapping::Auto
+    }
+
+    /// Resolve to the concrete strategy that should execute for `shape`
+    /// under `cfg`, with the reason for the choice. Concrete mappings
+    /// resolve to themselves.
+    ///
+    /// The `Auto` policy encodes the paper's conclusion: Conv-WP
+    /// whenever the direct-convolution working set fits the 512 KiB
+    /// memory bound ("WP remains the best approach for any
+    /// hyperparameter combination"), falling back to Im2col-OP when
+    /// direct convolution is unavailable but the im2col staging buffer
+    /// still fits. With today's layouts the direct working set is the
+    /// strict minimum, so the fallback guards shape classes a future
+    /// mapping may open rather than a reachable branch of the current
+    /// grid; the bound checks keep the policy honest either way.
+    pub fn resolve(self, shape: &ConvShape, cfg: &CgraConfig) -> Result<(Mapping, &'static str)> {
+        if self != Mapping::Auto {
+            return Ok((self, "requested explicitly"));
+        }
+        shape.validate()?;
+        let direct = MemLayout::new(shape, 0, cfg);
+        if direct.is_ok() {
+            return Ok((Mapping::Wp, AUTO_REASON_WP));
+        }
+        if MemLayout::new(shape, 2 * crate::conv::patch_len(shape), cfg).is_ok() {
+            return Ok((Mapping::OpIm2col, AUTO_REASON_OP_IM2COL));
+        }
+        // Nothing fits: surface the direct-layout error (it names the
+        // word counts and the paper's bound).
+        Err(direct.unwrap_err())
+    }
+
+    /// Whether this mapping runs the Im2col transformation on the host
+    /// (`Auto` reports `false`; resolve it first for a concrete answer).
     pub fn uses_im2col(self) -> bool {
         matches!(self, Mapping::Ip | Mapping::OpIm2col)
     }
@@ -218,7 +274,46 @@ mod tests {
         for m in Mapping::ALL {
             assert_eq!(Mapping::parse(m.label()).unwrap(), m);
         }
+        assert_eq!(Mapping::parse(Mapping::Auto.label()).unwrap(), Mapping::Auto);
         assert!(Mapping::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn mapping_parse_is_case_insensitive() {
+        assert_eq!(Mapping::parse("WP").unwrap(), Mapping::Wp);
+        assert_eq!(Mapping::parse("Conv-WP").unwrap(), Mapping::Wp);
+        assert_eq!(Mapping::parse("IM2COL-OP").unwrap(), Mapping::OpIm2col);
+        assert_eq!(Mapping::parse("AuTo").unwrap(), Mapping::Auto);
+        assert_eq!(Mapping::parse("CPU").unwrap(), Mapping::Cpu);
+    }
+
+    #[test]
+    fn mapping_parse_error_lists_valid_values() {
+        let err = format!("{:#}", Mapping::parse("bogus").unwrap_err());
+        for name in ["wp", "ip", "op-im2col", "op-direct", "cpu", "auto"] {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn auto_resolves_to_wp_when_direct_fits() {
+        let cfg = CgraConfig::default();
+        let (m, reason) = Mapping::Auto.resolve(&ConvShape::baseline(), &cfg).unwrap();
+        assert_eq!(m, Mapping::Wp);
+        assert!(reason.contains("hyperparameter"), "reason: {reason}");
+        // Concrete mappings resolve to themselves.
+        for m in Mapping::ALL {
+            assert_eq!(m.resolve(&ConvShape::baseline(), &cfg).unwrap().0, m);
+        }
+    }
+
+    #[test]
+    fn auto_resolve_respects_memory_bound() {
+        // A layer too big for the 512 KiB bound: Auto must error with
+        // the same actionable message the layouts give.
+        let s = ConvShape::new3x3(144, 144, 64, 64);
+        let err = Mapping::Auto.resolve(&s, &CgraConfig::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("512"), "{err:#}");
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! The paper's four convolution mapping strategies as CGRA program
 //! generators, plus the shared host-driver plumbing and a dispatcher.
+//!
+//! The per-mapping generators (`wp::run`, `ip::run`, …) remain the
+//! low-level API and expose the full [`ConvOutcome`] including raw
+//! `RunStats`. Session-level execution — config/energy/worker/cache
+//! ownership, batching, `Mapping::Auto` decisions — lives one layer up
+//! in [`crate::engine`].
 
 pub mod common;
 pub mod ip;
@@ -15,8 +21,11 @@ use crate::cgra::Cgra;
 use crate::conv::{ConvShape, TensorChw, Weights};
 use crate::cpu_ref::CpuModel;
 
-/// Run one convolution with the chosen strategy.
-pub fn run_mapping(
+/// Dispatch one convolution to the chosen strategy's generator.
+/// `Mapping::Auto` is resolved against the simulator's config first
+/// (callers that need the decision recorded resolve it themselves —
+/// see `engine::Engine::submit`).
+pub(crate) fn dispatch(
     cgra: &Cgra,
     mapping: Mapping,
     shape: &ConvShape,
@@ -24,6 +33,10 @@ pub fn run_mapping(
     weights: &Weights,
 ) -> Result<ConvOutcome> {
     match mapping {
+        Mapping::Auto => {
+            let (concrete, _reason) = Mapping::Auto.resolve(shape, cgra.config())?;
+            dispatch(cgra, concrete, shape, input, weights)
+        }
         Mapping::Wp => wp::run(cgra, shape, input, weights),
         Mapping::Ip => ip::run(cgra, shape, input, weights),
         Mapping::OpIm2col => op_im2col::run(cgra, shape, input, weights),
@@ -35,6 +48,23 @@ pub fn run_mapping(
             crate::cpu_ref::run(&CpuModel::default(), shape, input, weights)
         }
     }
+}
+
+/// Run one convolution with the chosen strategy.
+#[deprecated(
+    since = "0.2.0",
+    note = "build an `engine::Engine` and call `submit` — the engine owns the \
+            config/energy-model/worker/cache state this free function re-threads \
+            per call, and it records `Mapping::Auto` decisions in the result"
+)]
+pub fn run_mapping(
+    cgra: &Cgra,
+    mapping: Mapping,
+    shape: &ConvShape,
+    input: &TensorChw,
+    weights: &Weights,
+) -> Result<ConvOutcome> {
+    dispatch(cgra, mapping, shape, input, weights)
 }
 
 #[cfg(test)]
@@ -55,9 +85,38 @@ mod tests {
         let golden = conv2d(&shape, &input, &weights);
         let cgra = Cgra::new(CgraConfig::default()).unwrap();
         for m in Mapping::ALL {
-            let out = run_mapping(&cgra, m, &shape, &input, &weights).unwrap();
+            let out = dispatch(&cgra, m, &shape, &input, &weights).unwrap();
             assert_eq!(out.output.data, golden.data, "{m} disagrees with golden");
             assert!(out.latency.total_cycles() > 0);
         }
+    }
+
+    /// `Mapping::Auto` dispatches through the resolver and matches an
+    /// explicit WP run bit-for-bit (incl. timing).
+    #[test]
+    fn auto_dispatch_matches_resolved_mapping() {
+        let shape = ConvShape::new3x3(3, 5, 6, 4);
+        let mut rng = Rng::new(9);
+        let input = random_input(&shape, 25, &mut rng);
+        let weights = random_weights(&shape, 9, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let auto = dispatch(&cgra, Mapping::Auto, &shape, &input, &weights).unwrap();
+        let wp = dispatch(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
+        assert_eq!(auto.mapping, Mapping::Wp);
+        assert_eq!(auto.output.data, wp.output.data);
+        assert_eq!(auto.latency.total_cycles(), wp.latency.total_cycles());
+    }
+
+    /// The deprecated wrapper still routes to the dispatcher.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_run_mapping_still_works() {
+        let shape = ConvShape::new3x3(2, 2, 3, 3);
+        let mut rng = Rng::new(1);
+        let input = random_input(&shape, 10, &mut rng);
+        let weights = random_weights(&shape, 5, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
+        assert_eq!(out.output.data, conv2d(&shape, &input, &weights).data);
     }
 }

@@ -3,6 +3,17 @@
 //! A full-system reproduction of *"Performance evaluation of acceleration
 //! of convolutional layers on OpenEdgeCGRA"* (ACM Computing Frontiers 2024).
 //!
+//! **Start at [`engine`]** — the session-based front door. An
+//! [`engine::Engine`] (built via [`engine::EngineBuilder`]) owns the
+//! simulator config, energy model, worker pool and result caches, and
+//! serves typed [`engine::ConvRequest`]s one at a time (`submit`), in
+//! order-preserving batches over the pool (`submit_batch`), as chained
+//! CNN inferences (`run_network`), or as whole figure sweeps (`sweep`,
+//! `run_all_mappings`). `Mapping::Auto` lets the engine pick the
+//! strategy per the paper's findings and records the decision in the
+//! result. The pre-0.2 free-function entry points survive as
+//! `#[deprecated]` wrappers.
+//!
 //! The crate contains, from the bottom up:
 //!
 //! - [`isa`] / [`asm`] — the OpenEdgeCGRA instruction set (32-bit integer
@@ -26,9 +37,13 @@
 //! - [`coordinator`] — a multi-threaded sweep/aggregation layer that
 //!   regenerates the paper's figures — work sharded over a pool with a
 //!   cross-driver sweep-point cache — plus a layer-wise network runner.
+//! - [`engine`] — the session front door: `Engine` / `EngineBuilder`,
+//!   typed `ConvRequest` → `ConvResult` submission (single, batched,
+//!   network, sweep) and `Mapping::Auto` strategy selection.
 //! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and verifies the simulator element-exactly against them.
-//! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5).
+//! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5),
+//!   driven through an [`engine::Engine`].
 //! - [`util`], [`prop`], [`benchkit`] — offline-friendly infrastructure:
 //!   CLI parsing, JSON, deterministic property testing and benchmarking.
 //!
@@ -42,6 +57,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod cpu_ref;
 pub mod energy;
+pub mod engine;
 pub mod isa;
 pub mod kernels;
 pub mod metrics;

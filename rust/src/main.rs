@@ -1,4 +1,5 @@
 //! `cgra` — command-line front end of the OpenEdgeCGRA reproduction.
+//! Every subcommand drives one shared [`Engine`] session.
 //!
 //! ```text
 //! cgra run     --mapping wp --c 16 --k 16 --ox 16 --oy 16   one convolution
@@ -11,12 +12,11 @@
 
 use anyhow::{bail, Context, Result};
 
-use openedge_cgra::cgra::{Cgra, CgraConfig, Memory};
+use openedge_cgra::cgra::Memory;
 use openedge_cgra::conv::{random_input, random_weights, ConvShape};
-use openedge_cgra::coordinator::{default_workers, run_network, ConvNet, SweepSpec};
-use openedge_cgra::energy::EnergyModel;
-use openedge_cgra::kernels::{run_mapping, Mapping};
-use openedge_cgra::metrics::MappingReport;
+use openedge_cgra::coordinator::{default_workers, ConvNet, SweepSpec};
+use openedge_cgra::engine::{ConvRequest, Engine, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
 use openedge_cgra::prop::Rng;
 use openedge_cgra::report;
 use openedge_cgra::util::{Args, OptSpec};
@@ -57,57 +57,103 @@ fn shape_from(a: &Args) -> Result<ConvShape> {
     ))
 }
 
+fn engine_with_workers(workers: usize) -> Result<Engine> {
+    EngineBuilder::new().workers(workers).build()
+}
+
 fn cmd_run() -> Result<()> {
     let a = Args::from_env(
         2,
         &[],
         vec![
-            OptSpec { name: "mapping", value: "wp|ip|im2col-op|conv-op|cpu|all", help: "strategy" },
+            OptSpec {
+                name: "mapping",
+                value: "wp|ip|im2col-op|conv-op|cpu|auto|all",
+                help: "strategy (auto lets the engine pick)",
+            },
             OptSpec { name: "c", value: "INT", help: "input channels" },
             OptSpec { name: "k", value: "INT", help: "output channels" },
             OptSpec { name: "ox", value: "INT", help: "output rows" },
             OptSpec { name: "oy", value: "INT", help: "output cols" },
             OptSpec { name: "seed", value: "INT", help: "data seed" },
+            OptSpec { name: "workers", value: "INT", help: "worker threads" },
         ],
     )?;
     let shape = shape_from(&a)?;
     let seed = a.num_or("seed", 42u64)?;
     let which = a.str_or("mapping", "all");
+    let workers = a.num_or("workers", default_workers())?;
     a.reject_unknown()?;
 
-    let cfg = CgraConfig::default();
-    let model = EnergyModel::default();
+    let engine = engine_with_workers(workers)?;
     let mappings: Vec<Mapping> = if which == "all" {
         Mapping::ALL.to_vec()
     } else {
         vec![Mapping::parse(&which)?]
     };
 
+    // Explicit tensors keep the golden check honest: these requests are
+    // never served from the cache, so "exact" always reflects a real
+    // simulation.
     let mut rng = Rng::new(seed);
     let input = random_input(&shape, 30, &mut rng);
     let weights = random_weights(&shape, 9, &mut rng);
     let golden = openedge_cgra::conv::conv2d(&shape, &input, &weights);
-    let cgra = Cgra::new(cfg)?;
+    let reqs: Vec<ConvRequest> = mappings
+        .iter()
+        .map(|&m| ConvRequest::with_data(shape, m, input.clone(), weights.clone()))
+        .collect();
 
     println!("layer {shape}  ({} MACs)\n", shape.macs());
     let mut table = openedge_cgra::util::fmt::Table::new(&[
         "mapping", "cycles", "MAC/cycle", "energy_uJ", "power_mW", "memory", "exact",
     ]);
-    for m in mappings {
-        let out = run_mapping(&cgra, m, &shape, &input, &weights)?;
-        let exact = out.output.data == golden.data;
-        let r = MappingReport::from_outcome(&out, &model);
-        table.row(vec![
-            m.label().into(),
-            r.latency_cycles.to_string(),
-            format!("{:.3}", r.mac_per_cycle),
-            format!("{:.2}", r.energy_uj),
-            format!("{:.2}", r.avg_power_mw),
-            openedge_cgra::util::fmt::kib(r.footprint_bytes),
-            if exact { "yes".into() } else { "NO".into() },
-        ]);
+    let mut decisions = Vec::new();
+    let mut failures: Vec<(Mapping, anyhow::Error)> = Vec::new();
+    for (&m, res) in mappings.iter().zip(engine.submit_batch(&reqs)) {
+        match res {
+            Ok(res) => {
+                let exact = res.output.data == golden.data;
+                let r = &res.report;
+                table.row(vec![
+                    res.mapping.label().into(),
+                    r.latency_cycles.to_string(),
+                    format!("{:.3}", r.mac_per_cycle),
+                    format!("{:.2}", r.energy_uj),
+                    format!("{:.2}", r.avg_power_mw),
+                    openedge_cgra::util::fmt::kib(r.footprint_bytes),
+                    if exact { "yes".into() } else { "NO".into() },
+                ]);
+                if let Some(d) = res.auto {
+                    decisions.push(d);
+                }
+            }
+            // Per-mapping failures (e.g. the 512 KiB bound) keep their
+            // row and never discard the completed mappings.
+            Err(e) => {
+                table.row(vec![
+                    m.label().into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "skipped".into(),
+                ]);
+                failures.push((m, e));
+            }
+        }
     }
     print!("{}", table.render());
+    for d in decisions {
+        println!("{d}");
+    }
+    for (m, e) in &failures {
+        println!("{}: skipped — {e:#}", m.label());
+    }
+    if failures.len() == mappings.len() {
+        bail!("every requested mapping failed");
+    }
     Ok(())
 }
 
@@ -127,16 +173,16 @@ fn cmd_report() -> Result<()> {
     let out_dir = a.opt_str("out").map(std::path::PathBuf::from);
     a.reject_unknown()?;
 
-    let cfg = CgraConfig::default();
+    let engine = engine_with_workers(workers)?;
     let spec = if full { SweepSpec::paper() } else { SweepSpec::quick() };
     let figures: Vec<report::Figure> = match which.as_str() {
-        "fig3" => vec![report::fig3(&cfg, workers)?],
-        "fig4" => vec![report::fig4(&cfg, workers)?],
-        "fig5" => vec![report::fig5(&cfg, &spec, workers)?],
+        "fig3" => vec![report::fig3(&engine)?],
+        "fig4" => vec![report::fig4(&engine)?],
+        "fig5" => vec![report::fig5(&engine, &spec)?],
         "all" => vec![
-            report::fig3(&cfg, workers)?,
-            report::fig4(&cfg, workers)?,
-            report::fig5(&cfg, &spec, workers)?,
+            report::fig3(&engine)?,
+            report::fig4(&engine)?,
+            report::fig5(&engine, &spec)?,
         ],
         other => bail!("unknown figure '{other}' (fig3|fig4|fig5|all)"),
     };
@@ -164,7 +210,8 @@ fn cmd_sweep() -> Result<()> {
     let spec = if a.flag("full") { SweepSpec::paper() } else { SweepSpec::quick() };
     let out_dir = a.opt_str("out").map(std::path::PathBuf::from);
     a.reject_unknown()?;
-    let f = report::fig5(&CgraConfig::default(), &spec, workers)?;
+    let engine = engine_with_workers(workers)?;
+    let f = report::fig5(&engine, &spec)?;
     println!("{}", f.text);
     if let Some(dir) = out_dir {
         f.save(&dir)?;
@@ -194,8 +241,8 @@ fn cmd_net() -> Result<()> {
     let net = ConvNet::random(depth, c0, k, hw, hw, seed);
     let mut rng = Rng::new(seed ^ 0xabcd);
     let input = random_input(&net.layers[0].shape, 8, &mut rng);
-    let cgra = Cgra::new(CgraConfig::default())?;
-    let out = run_network(&cgra, &net, &input)?;
+    let engine = EngineBuilder::new().build()?;
+    let out = engine.run_network(&net, &input)?;
     let golden = openedge_cgra::coordinator::golden_network(&net, &input)?;
     println!("CNN: {depth} conv layers, {} MACs, input {c0}x{hw}x{hw}", net.macs());
     let mut table = openedge_cgra::util::fmt::Table::new(&[
@@ -240,9 +287,9 @@ fn cmd_asm() -> Result<()> {
     let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
     let prog = openedge_cgra::asm::assemble(&text)?;
     println!("{}", prog.disassemble());
-    let cgra = Cgra::new(CgraConfig::default())?;
-    let mut mem = Memory::new(CgraConfig::default().mem_words, 4);
-    let stats = cgra.run(&prog, &mut mem)?;
+    let engine = EngineBuilder::new().build()?;
+    let mut mem = Memory::new(engine.config().mem_words, engine.config().n_banks);
+    let stats = engine.cgra().run(&prog, &mut mem)?;
     println!(
         "ran {} steps / {} cycles, utilization {:.1}%, mem {} loads {} stores",
         stats.steps,

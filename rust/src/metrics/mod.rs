@@ -91,7 +91,7 @@ mod tests {
     use super::*;
     use crate::cgra::{Cgra, CgraConfig};
     use crate::conv::{random_input, random_weights, ConvShape};
-    use crate::kernels::run_mapping;
+    use crate::kernels::dispatch;
     use crate::prop::Rng;
 
     #[test]
@@ -101,7 +101,7 @@ mod tests {
         let input = random_input(&shape, 10, &mut rng);
         let weights = random_weights(&shape, 10, &mut rng);
         let cgra = Cgra::new(CgraConfig::default()).unwrap();
-        let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
+        let out = dispatch(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
         let r = MappingReport::from_outcome(&out, &EnergyModel::default());
         assert_eq!(r.shape_id, "c4k4o4x4");
         assert!(r.latency_cycles > 0);
@@ -121,7 +121,7 @@ mod tests {
         let input = random_input(&shape, 10, &mut rng);
         let weights = random_weights(&shape, 10, &mut rng);
         let cgra = Cgra::new(CgraConfig::default()).unwrap();
-        let out = run_mapping(&cgra, Mapping::Cpu, &shape, &input, &weights).unwrap();
+        let out = dispatch(&cgra, Mapping::Cpu, &shape, &input, &weights).unwrap();
         let r = MappingReport::from_outcome(&out, &EnergyModel::default());
         assert_eq!(r.utilization, 0.0);
         assert_eq!(r.cgra_accesses, 0);

@@ -1,17 +1,16 @@
 //! Regeneration of the paper's figures as text tables + CSV + ASCII
-//! charts. Each `figN` function returns the rendered report and the raw
-//! rows; the benches and the `cgra report` subcommand print/save them.
+//! charts. Each `figN` function drives a shared [`Engine`] session and
+//! returns the rendered report and the raw rows; the benches and the
+//! `cgra report` subcommand print/save them.
 
 use anyhow::Result;
 
-use crate::cgra::{Cgra, CgraConfig, OpClass};
-use crate::conv::{random_input, random_weights, ConvShape};
-use crate::coordinator::cache::{self, CachedOutcome, PointKey};
-use crate::coordinator::{run_jobs, run_sweep, SweepRow, SweepSpec};
-use crate::energy::EnergyModel;
-use crate::kernels::{run_mapping, Mapping};
+use crate::cgra::{CgraConfig, OpClass};
+use crate::conv::ConvShape;
+use crate::coordinator::{SweepRow, SweepSpec};
+use crate::engine::{Engine, EngineBuilder};
+use crate::kernels::Mapping;
 use crate::metrics::MappingReport;
-use crate::prop::Rng;
 use crate::util::fmt::{bar_chart, kib, Table};
 
 /// A rendered report: human text + CSV + the metric rows.
@@ -35,60 +34,27 @@ impl Figure {
     }
 }
 
-/// Data magnitudes used by the figure drivers (Fig. 3/4 protocol).
-const FIG_INPUT_MAG: i32 = 30;
-const FIG_WEIGHT_MAG: i32 = 9;
-
 /// Run all five strategies on one shape (in parallel) and return the
-/// metric rows in `Mapping::ALL` order. Completed rows are memoized in
-/// the process-wide sweep-point cache, so repeated figure regenerations
-/// (bench samples, `report all` touching the baseline layer three
-/// times) skip the simulation entirely.
+/// metric rows in `Mapping::ALL` order.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `engine::Engine::run_all_mappings` — this wrapper builds a \
+            throwaway engine (global cache) per call"
+)]
 pub fn run_all_mappings(
     cfg: &CgraConfig,
     shape: &ConvShape,
     seed: u64,
     workers: usize,
 ) -> Result<Vec<MappingReport>> {
-    let model = EnergyModel::default();
-    let cfg_fp = cache::cfg_fingerprint(cfg);
-    let pc = cache::global();
-    let jobs: Vec<_> = Mapping::ALL
-        .into_iter()
-        .map(|m| {
-            let cfg = cfg.clone();
-            let shape = *shape;
-            move || -> Result<MappingReport> {
-                let key = PointKey {
-                    mapping: m,
-                    shape,
-                    in_mag: FIG_INPUT_MAG,
-                    w_mag: FIG_WEIGHT_MAG,
-                    seed,
-                    cfg_fp,
-                };
-                if let Some(CachedOutcome::Report(r)) = pc.get(&key) {
-                    return Ok(r);
-                }
-                let mut rng = Rng::new(seed);
-                let input = random_input(&shape, FIG_INPUT_MAG, &mut rng);
-                let weights = random_weights(&shape, FIG_WEIGHT_MAG, &mut rng);
-                let cgra = Cgra::new(cfg)?;
-                let out = run_mapping(&cgra, m, &shape, &input, &weights)?;
-                let r = MappingReport::from_outcome(&out, &model);
-                pc.insert(key, CachedOutcome::Report(r.clone()));
-                Ok(r)
-            }
-        })
-        .collect();
-    run_jobs(workers, jobs).into_iter().collect()
+    EngineBuilder::new().config(cfg.clone()).workers(workers).build()?.run_all_mappings(shape, seed)
 }
 
 /// **Figure 3** — operation distribution of the mapping strategies'
 /// executed slots, plus PE utilization.
-pub fn fig3(cfg: &CgraConfig, workers: usize) -> Result<Figure> {
+pub fn fig3(engine: &Engine) -> Result<Figure> {
     let shape = ConvShape::baseline();
-    let rows = run_all_mappings(cfg, &shape, 3, workers)?;
+    let rows = engine.run_all_mappings(&shape, 3)?;
     let mut table = Table::new(&[
         "mapping", "load", "mul", "sum", "store", "other", "nop", "utilization",
     ]);
@@ -116,9 +82,9 @@ pub fn fig3(cfg: &CgraConfig, workers: usize) -> Result<Figure> {
 
 /// **Figure 4** — energy vs latency of every strategy on the baseline
 /// layer, with the paper's headline ratios.
-pub fn fig4(cfg: &CgraConfig, workers: usize) -> Result<Figure> {
+pub fn fig4(engine: &Engine) -> Result<Figure> {
     let shape = ConvShape::baseline();
-    let rows = run_all_mappings(cfg, &shape, 4, workers)?;
+    let rows = engine.run_all_mappings(&shape, 4)?;
     let mut table = Table::new(&[
         "mapping",
         "latency_ms",
@@ -177,8 +143,8 @@ pub fn fig4(cfg: &CgraConfig, workers: usize) -> Result<Figure> {
 
 /// **Figure 5** — hyper-parameter sweep: MAC/cycle and memory footprint
 /// per mapping along the C / K / Ox=Oy axes.
-pub fn fig5(cfg: &CgraConfig, spec: &SweepSpec, workers: usize) -> Result<Figure> {
-    let rows = run_sweep(spec, cfg, workers)?;
+pub fn fig5(engine: &Engine, spec: &SweepSpec) -> Result<Figure> {
+    let rows = engine.sweep(spec)?;
     let mut table =
         Table::new(&["axis", "value", "mapping", "MAC/cycle", "memory", "skipped"]);
     for r in &rows {
@@ -262,13 +228,13 @@ fn findings(rows: &[SweepRow]) -> String {
 mod tests {
     use super::*;
 
-    fn quick_cfg() -> CgraConfig {
-        CgraConfig::default()
+    fn quick_engine() -> Engine {
+        EngineBuilder::new().workers(4).build().unwrap()
     }
 
     #[test]
     fn fig3_renders_mappings() {
-        let f = fig3(&quick_cfg(), 4).unwrap();
+        let f = fig3(&quick_engine()).unwrap();
         assert!(f.text.contains("Conv-WP"));
         assert!(f.text.contains("Im2col-IP"));
         assert!(f.csv.lines().count() >= 5);
@@ -277,7 +243,7 @@ mod tests {
 
     #[test]
     fn fig4_headline_ratios_in_band() {
-        let f = fig4(&quick_cfg(), 5).unwrap();
+        let f = fig4(&quick_engine()).unwrap();
         assert!(f.text.contains("headline"));
         // Extract the measured ratios from the text.
         let line = f.text.lines().find(|l| l.contains("CPU/WP latency")).unwrap();
@@ -306,10 +272,24 @@ mod tests {
             mag: 10,
             seed: 9,
         };
-        let f = fig5(&quick_cfg(), &spec, 8).unwrap();
+        let f = fig5(&quick_engine(), &spec).unwrap();
         assert!(f.text.contains("findings"));
         assert!(f.text.contains("WP is the best mapping"));
         assert!(f.text.contains("=17"));
+    }
+
+    /// The deprecated wrapper matches the engine path row for row.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_run_all_mappings_matches_engine() {
+        let shape = ConvShape::new3x3(4, 4, 4, 4);
+        let a = run_all_mappings(&CgraConfig::default(), &shape, 12, 4).unwrap();
+        let b = quick_engine().run_all_mappings(&shape, 12).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.mapping, y.mapping);
+            assert_eq!(x.latency_cycles, y.latency_cycles);
+        }
     }
 
     #[test]

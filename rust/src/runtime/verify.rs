@@ -3,10 +3,10 @@
 
 use anyhow::{Context, Result};
 
-use crate::cgra::{Cgra, CgraConfig};
 use crate::conv::{conv2d, random_input, random_weights};
-use crate::coordinator::{golden_network, run_network, ConvNet};
-use crate::kernels::{run_mapping, Mapping};
+use crate::coordinator::{golden_network, ConvNet};
+use crate::engine::{ConvRequest, Engine, EngineBuilder};
+use crate::kernels::Mapping;
 use crate::prop::Rng;
 
 use super::artifact::{ArtifactKind, ArtifactSpec, Manifest};
@@ -71,15 +71,16 @@ fn seed_for(name: &str) -> u64 {
     })
 }
 
-/// Verify one artifact (see module docs).
+/// Verify one artifact against the engine's simulator session (see
+/// module docs).
 pub fn verify_artifact(
+    engine: &Engine,
     rt: &Runtime,
     dir: &std::path::Path,
     spec: &ArtifactSpec,
 ) -> Result<VerifyRow> {
     let loaded = rt.load(dir, spec)?;
     let mut rng = Rng::new(seed_for(&spec.name));
-    let cgra = Cgra::new(CgraConfig::default())?;
 
     let (xla_out, golden, sim, n) = match spec.kind {
         ArtifactKind::Conv => {
@@ -91,7 +92,10 @@ pub fn verify_artifact(
             // Exercise the mapping matching the artifact's kernel kind.
             let mapping =
                 if spec.kernel == "im2col" { Mapping::OpIm2col } else { Mapping::Wp };
-            let sim = run_mapping(&cgra, mapping, &shape, &input, &weights)?.output.data;
+            let sim = engine
+                .submit(&ConvRequest::with_data(shape, mapping, input, weights))?
+                .output
+                .data;
             let n = golden.len();
             (xla_out, golden, sim, n)
         }
@@ -102,7 +106,7 @@ pub fn verify_artifact(
                 net.layers.iter().map(|l| &l.weights).collect();
             let xla_out = loaded.execute_cnn(&input, &ws)?;
             let golden = golden_network(&net, &input)?.data;
-            let sim = run_network(&cgra, &net, &input)?.output.data;
+            let sim = engine.run_network(&net, &input)?.output.data;
             let n = golden.len();
             (xla_out, golden, sim, n)
         }
@@ -120,13 +124,14 @@ pub fn verify_artifact(
     Ok(VerifyRow { name: spec.name.clone(), elements: n, passed: detail.is_empty(), detail })
 }
 
-/// Verify every artifact in the manifest.
+/// Verify every artifact in the manifest through one engine session.
 pub fn verify_all(dir: &std::path::Path) -> Result<VerifySummary> {
     let manifest = Manifest::load(dir)?;
     let rt = Runtime::cpu().context("PJRT client")?;
+    let engine = EngineBuilder::new().build()?;
     let mut summary = VerifySummary::default();
     for spec in &manifest.artifacts {
-        let row = verify_artifact(&rt, dir, spec)
+        let row = verify_artifact(&engine, &rt, dir, spec)
             .with_context(|| format!("verifying artifact '{}'", spec.name))?;
         summary.rows.push(row);
     }

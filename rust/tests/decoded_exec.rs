@@ -6,7 +6,8 @@
 
 use openedge_cgra::cgra::{clear_decode_cache, decode, Cgra, CgraConfig, Memory};
 use openedge_cgra::conv::{conv2d, random_input, random_weights, ConvShape};
-use openedge_cgra::kernels::{run_mapping, wp, Mapping, MemLayout};
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::{wp, Mapping, MemLayout};
 use openedge_cgra::prop::{forall, usize_in, Gen, Rng};
 
 fn shape_gen(max_ch: usize, max_sp: usize) -> Gen<ConvShape> {
@@ -77,11 +78,12 @@ fn prop_decoded_engine_matches_golden_conv() {
         let input = random_input(s, 40, &mut rng);
         let weights = random_weights(s, 10, &mut rng);
         let golden = conv2d(s, &input, &weights);
-        let cgra = Cgra::new(CgraConfig::default()).map_err(|e| e.to_string())?;
+        let engine = EngineBuilder::new().build().map_err(|e| e.to_string())?;
         for m in [Mapping::Wp, Mapping::OpIm2col, Mapping::OpDirect] {
-            let out = run_mapping(&cgra, m, s, &input, &weights)
+            let res = engine
+                .submit(&ConvRequest::with_data(*s, m, input.clone(), weights.clone()))
                 .map_err(|e| format!("{m}: {e:#}"))?;
-            if out.output.data != golden.data {
+            if res.output.data != golden.data {
                 return Err(format!("{m} disagrees with golden on {s}"));
             }
         }

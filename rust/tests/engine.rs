@@ -1,0 +1,194 @@
+//! Engine-level integration tests: batch ⇔ sequential equivalence on
+//! randomized shapes, `Mapping::Auto` differentially tested against the
+//! golden model and the hand-picked strategies, and cache-hit
+//! semantics across repeat submissions.
+
+use openedge_cgra::conv::{conv2d, random_input, random_weights, ConvShape};
+use openedge_cgra::engine::{ConvRequest, Engine, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
+use openedge_cgra::prop::{forall, usize_in, Gen, Rng};
+
+fn private_engine(workers: usize) -> Engine {
+    EngineBuilder::new().workers(workers).private_cache().build().unwrap()
+}
+
+fn shape_gen(max_ch: usize, max_sp: usize) -> Gen<ConvShape> {
+    usize_in(1, max_ch)
+        .pair(usize_in(1, max_ch))
+        .pair(usize_in(1, max_sp).pair(usize_in(1, max_sp)))
+        .map(|((c, k), (ox, oy))| ConvShape::new3x3(c, k, ox, oy))
+}
+
+/// `submit_batch` results are bit-identical to sequential `submit`
+/// calls on randomized shapes — outputs, latency cycles and energy
+/// bits — regardless of worker count.
+#[test]
+fn prop_batch_matches_sequential() {
+    forall("submit_batch == sequential submit", 10, &shape_gen(5, 6), |s| {
+        let mut rng = Rng::new(8800 + s.c as u64 + 7 * s.oy as u64);
+        // Two shapes per round (the generated one + a sibling) so the
+        // batch exercises inter-request ordering, across 3 mappings.
+        let sibling = ConvShape::new3x3(s.k, s.c, s.oy, s.ox);
+        let mut reqs = Vec::new();
+        for &shape in &[*s, sibling] {
+            for m in [Mapping::Wp, Mapping::OpDirect, Mapping::Cpu] {
+                let input = random_input(&shape, 40, &mut rng);
+                let weights = random_weights(&shape, 9, &mut rng);
+                reqs.push(ConvRequest::with_data(shape, m, input, weights));
+            }
+        }
+        // Independent engines with private caches: no cross-talk.
+        let seq_engine = private_engine(1);
+        let batch_engine = private_engine(4);
+        let batch = batch_engine.submit_batch(&reqs);
+        for (req, batched) in reqs.iter().zip(batch) {
+            let a = seq_engine.submit(req).map_err(|e| format!("seq: {e:#}"))?;
+            let b = batched.map_err(|e| format!("batch: {e:#}"))?;
+            if a.output.data != b.output.data {
+                return Err(format!("{}: outputs differ", req.shape));
+            }
+            if a.report.latency_cycles != b.report.latency_cycles {
+                return Err(format!("{}: latency differs", req.shape));
+            }
+            if a.report.energy_uj.to_bits() != b.report.energy_uj.to_bits() {
+                return Err(format!("{}: energy differs", req.shape));
+            }
+            if a.cache_hit || b.cache_hit {
+                return Err("tensor requests must not hit any cache".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Seeded batches agree with seeded sequential submission even when the
+/// cache serves part of the batch (golden-reconstructed outputs are
+/// bit-exact vs simulated ones).
+#[test]
+fn seeded_batch_matches_sequential_through_cache() {
+    let shapes: Vec<ConvShape> =
+        (2..8).map(|i| ConvShape::new3x3(i, 9 - i, 4 + i % 3, 5)).collect();
+    let reqs: Vec<ConvRequest> = shapes
+        .iter()
+        .map(|&s| ConvRequest::seeded(s, Mapping::Wp, 31 + s.c as u64))
+        .collect();
+    let fresh = private_engine(4);
+    let first = fresh.submit_batch(&reqs);
+    let second = fresh.submit_batch(&reqs);
+    for ((a, b), req) in first.iter().zip(second.iter()).zip(reqs.iter()) {
+        let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+        assert!(!a.cache_hit, "{}: first pass must simulate", req.shape);
+        assert!(b.cache_hit, "{}: second pass must hit", req.shape);
+        assert_eq!(a.output.data, b.output.data, "{}", req.shape);
+        assert_eq!(a.report.latency_cycles, b.report.latency_cycles);
+    }
+}
+
+/// `Mapping::Auto` on the Fig. 4 baseline layer: bit-exact against the
+/// golden model and never worse than the worst hand-picked mapping —
+/// in fact it must match the best (WP on the paper's layer).
+#[test]
+fn auto_never_loses_on_fig4_layer() {
+    let engine = private_engine(4);
+    let shape = ConvShape::baseline();
+    let mut rng = Rng::new(4);
+    let input = random_input(&shape, 30, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
+    let golden = conv2d(&shape, &input, &weights);
+
+    let auto = engine
+        .submit(&ConvRequest::with_data(shape, Mapping::Auto, input.clone(), weights.clone()))
+        .unwrap();
+    assert_eq!(auto.output.data, golden.data, "Auto output must match the golden model");
+    let decision = auto.auto.expect("decision recorded");
+    assert_eq!(decision.mapping, auto.mapping);
+
+    let mut hand_picked = Vec::new();
+    for m in Mapping::ALL {
+        let res = engine
+            .submit(&ConvRequest::with_data(shape, m, input.clone(), weights.clone()))
+            .unwrap();
+        assert_eq!(res.output.data, golden.data, "{m}");
+        hand_picked.push(res.report);
+    }
+    let worst = hand_picked.iter().map(|r| r.latency_cycles).max().unwrap();
+    let best = hand_picked.iter().map(|r| r.latency_cycles).min().unwrap();
+    assert!(
+        auto.report.latency_cycles < worst,
+        "Auto ({}) must beat the worst hand-picked mapping ({worst})",
+        auto.report.latency_cycles
+    );
+    assert_eq!(
+        auto.report.latency_cycles, best,
+        "on the paper's baseline layer Auto must match the best mapping"
+    );
+    assert_eq!(auto.mapping, Mapping::Wp, "the paper's winner");
+}
+
+/// Cache-hit flags are set on repeat submission and the underlying
+/// cache counters line up.
+#[test]
+fn cache_hit_flags_on_repeat_submission() {
+    let engine = private_engine(2);
+    let req = ConvRequest::seeded(ConvShape::new3x3(4, 3, 5, 5), Mapping::Auto, 77);
+    let first = engine.submit(&req).unwrap();
+    assert!(!first.cache_hit);
+    let second = engine.submit(&req).unwrap();
+    assert!(second.cache_hit);
+    let third = engine.submit(&req).unwrap();
+    assert!(third.cache_hit);
+    assert_eq!(first.output.data, second.output.data);
+    assert_eq!(second.output.data, third.output.data);
+    let s = engine.cache_stats();
+    assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
+    // The recorded auto decision survives cache hits.
+    assert_eq!(second.auto.unwrap().mapping, first.auto.unwrap().mapping);
+}
+
+/// Engines with different configs never share cache entries even when
+/// they share one cache (the config fingerprint is part of the key).
+#[test]
+fn different_configs_do_not_cross_hit() {
+    use openedge_cgra::cgra::CgraConfig;
+    // Both engines on the default (process-global) cache: isolation
+    // must come from the fingerprint in the key, not separate caches.
+    // The seed/shape pair is unique to this test.
+    let a = EngineBuilder::new().workers(1).build().unwrap();
+    let req = ConvRequest::seeded(ConvShape::new3x3(3, 3, 4, 4), Mapping::Wp, 0xC0FF_EE01);
+    assert!(!a.submit(&req).unwrap().cache_hit);
+    assert!(a.submit(&req).unwrap().cache_hit, "same engine+config must hit");
+    // Same request on an engine with an ablated config sharing the
+    // global cache: must simulate, not hit (different fingerprint)...
+    let slow = EngineBuilder::new()
+        .config(CgraConfig { mem_latency: 12, ..CgraConfig::default() })
+        .workers(1)
+        .build()
+        .unwrap();
+    let res = slow.submit(&req).unwrap();
+    assert!(!res.cache_hit, "ablated config must not be served default-config metrics");
+    // ...and the ablated timing actually differs.
+    let base = a.submit(&req).unwrap();
+    assert!(res.report.latency_cycles > base.report.latency_cycles);
+}
+
+/// Cached rows embed evaluated energy numbers, so the energy model is
+/// part of the key too: a session with a different model must simulate
+/// rather than be served another session's rows.
+#[test]
+fn different_energy_models_do_not_cross_hit() {
+    use openedge_cgra::energy::EnergyModel;
+    let a = EngineBuilder::new().workers(1).build().unwrap();
+    let req = ConvRequest::seeded(ConvShape::new3x3(3, 4, 4, 4), Mapping::Wp, 0xC0FF_EE02);
+    let base = a.submit(&req).unwrap();
+    assert!(!base.cache_hit);
+
+    let mut hot = EnergyModel::default();
+    hot.e_mem_access_pj *= 4.0;
+    let b = EngineBuilder::new().energy_model(hot).workers(1).build().unwrap();
+    let res = b.submit(&req).unwrap();
+    assert!(!res.cache_hit, "a different energy model must not reuse cached rows");
+    // Same simulation, different accounting.
+    assert_eq!(res.report.latency_cycles, base.report.latency_cycles);
+    assert!(res.report.energy_uj > base.report.energy_uj);
+    assert_eq!(res.output.data, base.output.data);
+}

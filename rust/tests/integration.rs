@@ -1,17 +1,21 @@
 //! Cross-module integration tests: the paper's quantitative claims,
-//! end-to-end through simulator + kernels + energy model.
+//! end-to-end through the session `Engine` (simulator + kernels +
+//! energy model).
 
-use openedge_cgra::cgra::{Cgra, CgraConfig, OpClass};
+use openedge_cgra::cgra::OpClass;
 use openedge_cgra::conv::{conv2d, random_input, random_weights, ConvShape};
-use openedge_cgra::coordinator::{golden_network, run_network, ConvNet, SweepSpec};
-use openedge_cgra::energy::EnergyModel;
-use openedge_cgra::kernels::{run_mapping, Mapping};
+use openedge_cgra::coordinator::{golden_network, ConvNet, SweepSpec};
+use openedge_cgra::engine::{ConvRequest, Engine, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
 use openedge_cgra::metrics::MappingReport;
 use openedge_cgra::prop::Rng;
-use openedge_cgra::report;
+
+fn engine() -> Engine {
+    EngineBuilder::new().workers(8).build().unwrap()
+}
 
 fn baseline_reports() -> Vec<MappingReport> {
-    report::run_all_mappings(&CgraConfig::default(), &ConvShape::baseline(), 99, 8).unwrap()
+    engine().run_all_mappings(&ConvShape::baseline(), 99).unwrap()
 }
 
 /// E3 — the headline: WP vs CPU ≈ 9.9× latency, ≈ 3.4× energy, WP at
@@ -89,14 +93,13 @@ fn fig3_utilization_and_mix() {
 /// §3.2 — the parallel-dimension collapse at 17 and WP's robustness.
 #[test]
 fn dim_17_collapse_and_wp_robustness() {
-    let cfg = CgraConfig::default();
+    let e = engine();
     let run_one = |m: Mapping, shape: ConvShape| -> f64 {
         let mut rng = Rng::new(7);
         let input = random_input(&shape, 20, &mut rng);
         let weights = random_weights(&shape, 9, &mut rng);
-        let cgra = Cgra::new(cfg.clone()).unwrap();
-        let out = run_mapping(&cgra, m, &shape, &input, &weights).unwrap();
-        out.macs_per_cycle()
+        let res = e.submit(&ConvRequest::with_data(shape, m, input, weights)).unwrap();
+        res.report.mac_per_cycle
     };
     let b = ConvShape::baseline();
 
@@ -127,16 +130,15 @@ fn dim_17_collapse_and_wp_robustness() {
 /// amortization), toward the paper's 0.665 peak.
 #[test]
 fn wp_improves_with_spatial_size() {
-    let cfg = CgraConfig::default();
+    let e = engine();
     let mut prev = 0.0;
     for s in [8usize, 16, 32, 48] {
         let shape = ConvShape::new3x3(4, 4, s, s);
         let mut rng = Rng::new(11);
         let input = random_input(&shape, 10, &mut rng);
         let weights = random_weights(&shape, 9, &mut rng);
-        let cgra = Cgra::new(cfg.clone()).unwrap();
-        let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
-        let mpc = out.macs_per_cycle();
+        let res = e.submit(&ConvRequest::with_data(shape, Mapping::Wp, input, weights)).unwrap();
+        let mpc = res.report.mac_per_cycle;
         assert!(mpc > prev, "WP MAC/cycle should grow with Ox=Oy: {mpc:.3} at {s}");
         prev = mpc;
     }
@@ -144,18 +146,25 @@ fn wp_improves_with_spatial_size() {
 }
 
 /// The 512 KiB memory bound rejects oversized layers for every mapping
-/// (the paper's sweep bound), with an actionable error.
+/// (the paper's sweep bound), with an actionable error — and
+/// `Mapping::Auto` reports the same bound instead of picking a
+/// strategy that cannot run.
 #[test]
 fn memory_bound_enforced() {
+    let e = engine();
     let shape = ConvShape::new3x3(16, 16, 64, 64); // 550 KB > 512 KiB
     let mut rng = Rng::new(1);
     let input = random_input(&shape, 5, &mut rng);
     let weights = random_weights(&shape, 5, &mut rng);
-    let cgra = Cgra::new(CgraConfig::default()).unwrap();
     for m in Mapping::CGRA {
-        let err = run_mapping(&cgra, m, &shape, &input, &weights).unwrap_err();
+        let err = e
+            .submit(&ConvRequest::with_data(shape, m, input.clone(), weights.clone()))
+            .unwrap_err();
         assert!(format!("{err:#}").contains("512"), "{m}: {err:#}");
     }
+    let err =
+        e.submit(&ConvRequest::with_data(shape, Mapping::Auto, input, weights)).unwrap_err();
+    assert!(format!("{err:#}").contains("512"), "Auto: {err:#}");
 }
 
 /// End-to-end CNN: all conv layers on the CGRA, bit-exact against the
@@ -165,8 +174,7 @@ fn cnn_end_to_end() {
     let net = ConvNet::random(3, 3, 8, 12, 12, 42);
     let mut rng = Rng::new(43);
     let input = random_input(&net.layers[0].shape, 8, &mut rng);
-    let cgra = Cgra::new(CgraConfig::default()).unwrap();
-    let out = run_network(&cgra, &net, &input).unwrap();
+    let out = engine().run_network(&net, &input).unwrap();
     let golden = golden_network(&net, &input).unwrap();
     assert_eq!(out.output.data, golden.data);
     let mpc = out.mac_per_cycle(&net);
@@ -185,9 +193,8 @@ fn sweep_deterministic_across_workers() {
         mag: 10,
         seed: 5,
     };
-    let cfg = CgraConfig::default();
-    let a = openedge_cgra::coordinator::run_sweep(&spec, &cfg, 1).unwrap();
-    let b = openedge_cgra::coordinator::run_sweep(&spec, &cfg, 7).unwrap();
+    let a = EngineBuilder::new().workers(1).build().unwrap().sweep(&spec).unwrap();
+    let b = EngineBuilder::new().workers(7).build().unwrap().sweep(&spec).unwrap();
     for (x, y) in a.iter().zip(b.iter()) {
         assert_eq!(
             x.report.as_ref().map(|r| r.latency_cycles),
@@ -198,18 +205,18 @@ fn sweep_deterministic_across_workers() {
 
 /// The golden im2col path and direct path agree (conv substrate).
 #[test]
-fn im2col_golden_equivalence() {
-    let shape = ConvShape::new3x3(7, 5, 6, 9);
-    let mut rng = Rng::new(3);
-    let input = random_input(&shape, 100, &mut rng);
-    let weights = random_weights(&shape, 30, &mut rng);
+fn im2col_golden_agrees_with_direct() {
+    let shape = ConvShape::new3x3(3, 5, 7, 6);
+    let mut rng = Rng::new(21);
+    let input = random_input(&shape, 30, &mut rng);
+    let weights = random_weights(&shape, 9, &mut rng);
     let direct = conv2d(&shape, &input, &weights);
-    let im2col = openedge_cgra::conv::conv2d_im2col(
+    let via = openedge_cgra::conv::conv2d_im2col(
         &shape,
         &input.to_hwc(),
         &weights.to_im2col_matrix(),
     );
-    assert_eq!(direct.data, im2col);
+    assert_eq!(direct.data, via);
 }
 
 /// Energy model sanity across a full report: totals equal the sum of
@@ -225,5 +232,18 @@ fn energy_decomposition_consistent() {
         assert!((sum - r.energy_uj).abs() < 1e-9, "{}", r.mapping);
         assert!(r.energy_uj > 0.0);
     }
-    let _ = EnergyModel::default();
+}
+
+/// The engine's batch and sequential paths agree bit-for-bit with the
+/// one-call report drivers (the migration invariant of the 0.2 API).
+#[test]
+fn engine_paths_agree_with_figure_drivers() {
+    let e = engine();
+    let shape = ConvShape::baseline();
+    let batched = e.run_all_mappings(&shape, 99).unwrap();
+    for (row, m) in batched.iter().zip(Mapping::ALL) {
+        let single = e.submit(&ConvRequest::seeded(shape, m, 99)).unwrap();
+        assert_eq!(single.report.latency_cycles, row.latency_cycles, "{m}");
+        assert_eq!(single.report.energy_uj.to_bits(), row.energy_uj.to_bits(), "{m}");
+    }
 }

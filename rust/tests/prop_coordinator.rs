@@ -128,8 +128,13 @@ fn prop_sweep_skip_isolation() {
         };
         let mut cfg = CgraConfig::default();
         cfg.mem_words = 16384; // small memory: the big point must skip
-        let rows =
-            openedge_cgra::coordinator::run_sweep(&spec, &cfg, 2).map_err(|e| e.to_string())?;
+        let rows = openedge_cgra::engine::EngineBuilder::new()
+            .config(cfg)
+            .workers(2)
+            .build()
+            .map_err(|e| e.to_string())?
+            .sweep(&spec)
+            .map_err(|e| e.to_string())?;
         if rows.len() != 2 {
             return Err("row count".into());
         }

@@ -1,0 +1,55 @@
+//! Bench: plans per second — the analytical cost model vs the
+//! simulator, on the paper's baseline layer.
+//!
+//! Four measurements answer "how fast can a metrics-only question be
+//! answered?":
+//!
+//!   1. cold simulation — a fresh private-cache engine simulates the
+//!      layer (what every sweep point cost before the point cache),
+//!   2. cache-hot `submit_report` — the memoized simulator answer
+//!      (PR 1/2's fast path: one lookup, but only for seen points),
+//!   3. cold planner — a fresh engine calibrates (a handful of probe
+//!      launches) and predicts: the first-question cost for an
+//!      *unseen* point,
+//!   4. memoized planner `plan` — repeated cost-model answers
+//!      (the `submit_planned` steady state: a lock + clone).
+//!
+//! `cargo bench --bench planner_vs_sim`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::conv::ConvShape;
+use openedge_cgra::engine::{ConvRequest, EngineBuilder};
+use openedge_cgra::kernels::Mapping;
+
+fn main() {
+    let shape = ConvShape::baseline();
+    let req = ConvRequest::seeded(shape, Mapping::Wp, 7);
+    let b = Bench::default();
+
+    // 1. Cold simulation: new engine + private cache every iteration.
+    b.run("cold simulation (submit_report)", Some(1.0), || {
+        let e = EngineBuilder::new().workers(1).private_cache().build().expect("engine");
+        e.submit_report(&req).expect("simulate")
+    });
+
+    // 2. Cache-hot simulator answer.
+    let hot = EngineBuilder::new().workers(1).private_cache().build().expect("engine");
+    hot.submit_report(&req).expect("warm the point cache");
+    b.run("cache-hot submit_report", Some(1.0), || hot.submit_report(&req).expect("hit"));
+
+    // 3. Cold planner: new engine, probes run every iteration.
+    b.run("cold planner (probe calibration)", Some(1.0), || {
+        let e = EngineBuilder::new().workers(1).private_cache().build().expect("engine");
+        e.plan(&shape, Mapping::Wp).expect("plan")
+    });
+
+    // 4. Memoized planner answer.
+    hot.plan(&shape, Mapping::Wp).expect("warm the planner memo");
+    b.run("memoized planner plan", Some(1.0), || hot.plan(&shape, Mapping::Wp).expect("plan"));
+
+    let stats = hot.planner().stats();
+    println!(
+        "\nplanner calibrated from {} probe launches; {} of {} estimates were memo hits",
+        stats.probe_launches, stats.memo_hits, stats.estimates
+    );
+}

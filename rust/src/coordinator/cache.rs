@@ -272,6 +272,42 @@ mod tests {
         assert_eq!(c.len(), 1);
     }
 
+    /// Concurrent get-then-insert traffic (the `submit_batch` access
+    /// pattern) keeps the counters coherent and still triggers epoch
+    /// eviction once a shard passes its cap: with 2 shards and more
+    /// than 2× the cap in distinct keys, some shard must overflow.
+    #[test]
+    fn concurrent_traffic_keeps_counters_coherent_and_evicts() {
+        const THREADS: u64 = 4;
+        let c = PointCache::new(2);
+        let distinct = (2 * POINT_SHARD_CAP + 64) as u64;
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let c = &c;
+                scope.spawn(move || {
+                    for seed in 0..distinct {
+                        let mut k = key(1);
+                        k.seed = seed;
+                        if c.get(&k).is_none() {
+                            c.insert(k, CachedOutcome::Skipped(format!("t{t}")));
+                        }
+                    }
+                });
+            }
+        });
+        let s = c.stats();
+        // Every get is counted exactly once, hit or miss.
+        assert_eq!(s.hits + s.misses, THREADS * distinct);
+        assert!(s.misses >= distinct, "each distinct key misses at least once");
+        assert!(s.evictions > 0, "a shard past its cap must epoch-evict");
+        assert!(s.entries <= 2 * POINT_SHARD_CAP);
+        // The cache still serves after eviction.
+        let mut k = key(1);
+        k.seed = u64::MAX;
+        c.insert(k, CachedOutcome::Skipped("fresh".into()));
+        assert!(c.get(&k).is_some());
+    }
+
     #[test]
     fn shard_cap_evicts_by_epoch() {
         let c = PointCache::new(1);

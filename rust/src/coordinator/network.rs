@@ -90,6 +90,22 @@ impl ConvNet {
     pub fn macs(&self) -> u64 {
         self.layers.iter().map(|l| l.shape.macs()).sum()
     }
+
+    /// Set each layer's mapping from a per-layer list (the planner's
+    /// [`crate::planner::NetworkPlan::apply`] writes its choices back
+    /// through this).
+    pub fn apply_mappings(&mut self, mappings: &[Mapping]) -> Result<()> {
+        ensure!(
+            mappings.len() == self.layers.len(),
+            "got {} mappings for {} layers",
+            mappings.len(),
+            self.layers.len()
+        );
+        for (layer, &m) in self.layers.iter_mut().zip(mappings) {
+            layer.mapping = m;
+        }
+        Ok(())
+    }
 }
 
 /// Per-layer and aggregate results of one network inference.
@@ -190,6 +206,15 @@ mod tests {
         let b = engine.run_network(&net, &input).unwrap();
         assert_eq!(a.output.data, b.output.data);
         assert_eq!(a.total_cycles, b.total_cycles);
+    }
+
+    #[test]
+    fn apply_mappings_sets_layers_and_checks_length() {
+        let mut net = ConvNet::random(2, 2, 4, 8, 8, 1);
+        net.apply_mappings(&[Mapping::Wp, Mapping::Cpu]).unwrap();
+        assert_eq!(net.layers[0].mapping, Mapping::Wp);
+        assert_eq!(net.layers[1].mapping, Mapping::Cpu);
+        assert!(net.apply_mappings(&[Mapping::Wp]).is_err());
     }
 
     #[test]

@@ -95,6 +95,22 @@ impl SweepSpec {
         }
     }
 
+    /// The planner-accuracy validation grid (`cgra plan --validate`,
+    /// CI's planner smoke job): small enough to simulate in seconds,
+    /// but covering both the paper's baseline-aligned points and the
+    /// odd-valued shapes where bank-alignment jitter — the planner's
+    /// only residual error source — is worst.
+    pub fn validation() -> SweepSpec {
+        SweepSpec {
+            c_values: vec![16, 17, 48],
+            k_values: vec![16, 17, 48],
+            spatial_values: vec![16, 17, 32],
+            mappings: Mapping::ALL.to_vec(),
+            mag: 20,
+            seed: 0xf15_5eed,
+        }
+    }
+
     /// All (axis, value, shape, mapping) points.
     pub fn points(&self) -> Vec<SweepPoint> {
         let base = ConvShape::baseline();
@@ -302,6 +318,22 @@ mod tests {
         assert!(!v.contains(&33) && !v.contains(&145));
         // 16..=32 step 1 (17 values) + 48..=144 step 16 (7 values).
         assert_eq!(v.len(), 17 + 7);
+    }
+
+    #[test]
+    fn validation_grid_is_a_subset_of_the_paper_grid() {
+        let v = SweepSpec::validation();
+        let paper = SweepSpec::paper();
+        for (vals, pvals) in [
+            (&v.c_values, &paper.c_values),
+            (&v.k_values, &paper.k_values),
+            (&v.spatial_values, &paper.spatial_values),
+        ] {
+            assert!(vals.iter().all(|x| pvals.contains(x)), "{vals:?} not in paper grid");
+        }
+        assert_eq!(v.mappings, Mapping::ALL.to_vec());
+        // Odd values present: the planner's worst alignment case.
+        assert!(v.c_values.contains(&17) && v.spatial_values.contains(&17));
     }
 
     #[test]

@@ -1,16 +1,27 @@
 //! Automatic mapping selection — [`Mapping::Auto`]'s policy, with the
 //! decision materialized for reporting.
 //!
-//! The policy itself lives with the `Mapping` enum
-//! ([`Mapping::resolve`], `kernels::common`) so every layer below the
-//! engine can resolve `Auto` without an upward dependency; this module
-//! is the engine-level front door that callers and results speak.
+//! Two policies live here:
+//!
+//! - [`choose`] — the *static threshold* rule ([`Mapping::resolve`],
+//!   `kernels::common`): WP whenever the direct working set fits the
+//!   512 KiB bound. It lives with the `Mapping` enum so every layer
+//!   below the engine (sweep, dispatch) can resolve `Auto` without an
+//!   upward dependency, and it is the differential baseline the cost
+//!   model is tested against.
+//! - [`choose_planned`] — the *cost-model* rule the engine actually
+//!   uses since the planner landed: predict every in-bound CGRA
+//!   mapping's latency through [`Planner::choose`] and take the
+//!   cheapest. On the paper's grid the two policies agree (WP wins
+//!   everywhere — enforced by `tests/planner.rs`); the threshold rule
+//!   remains the fallback if the planner cannot estimate.
 
 use anyhow::Result;
 
 use crate::cgra::CgraConfig;
 use crate::conv::ConvShape;
 use crate::kernels::Mapping;
+use crate::planner::Planner;
 
 /// A recorded auto-mapping decision.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,6 +43,26 @@ impl std::fmt::Display for AutoDecision {
 /// when only the im2col route fits, an actionable error when nothing
 /// does. See [`Mapping::resolve`] for the full policy text.
 pub fn choose(shape: &ConvShape, cfg: &CgraConfig) -> Result<AutoDecision> {
+    let (mapping, reason) = Mapping::Auto.resolve(shape, cfg)?;
+    Ok(AutoDecision { mapping, reason })
+}
+
+/// Why the cost model picked its mapping (see [`choose_planned`]).
+const AUTO_REASON_COST: &str =
+    "cost model predicts the lowest latency among mappings that fit the memory bound";
+
+/// Cost-model-backed strategy choice — the upgraded `Mapping::Auto`
+/// policy the engine uses: predict every in-bound CGRA mapping via the
+/// planner and take the lowest predicted latency. Falls back to the
+/// static threshold rule ([`choose`]) if the planner cannot estimate;
+/// when nothing fits the memory bound, the resolver's actionable
+/// dual-route error is propagated.
+pub fn choose_planned(planner: &Planner, shape: &ConvShape, cfg: &CgraConfig) -> Result<AutoDecision> {
+    if let Ok(est) = planner.choose(shape) {
+        return Ok(AutoDecision { mapping: est.mapping, reason: AUTO_REASON_COST });
+    }
+    // Differential fallback: the pre-planner threshold policy (also the
+    // path that reports the over-bound error).
     let (mapping, reason) = Mapping::Auto.resolve(shape, cfg)?;
     Ok(AutoDecision { mapping, reason })
 }
@@ -65,5 +96,29 @@ mod tests {
         let d = choose(&ConvShape::baseline(), &CgraConfig::default()).unwrap();
         let s = d.to_string();
         assert!(s.contains("Conv-WP") && s.contains("auto ->"), "{s}");
+    }
+
+    #[test]
+    fn planned_choice_matches_threshold_on_paper_shapes() {
+        let cfg = CgraConfig::default();
+        let planner = Planner::new(&cfg, &crate::energy::EnergyModel::default()).unwrap();
+        for (c, k, o) in [(16, 16, 16), (32, 16, 16), (16, 48, 16)] {
+            let shape = ConvShape::new3x3(c, k, o, o);
+            let planned = choose_planned(&planner, &shape, &cfg).unwrap();
+            let threshold = choose(&shape, &cfg).unwrap();
+            assert_eq!(planned.mapping, threshold.mapping, "C={c} K={k} O={o}");
+            assert_eq!(planned.mapping, Mapping::Wp, "C={c} K={k} O={o}");
+            assert!(planned.reason.contains("cost model"), "{}", planned.reason);
+        }
+    }
+
+    #[test]
+    fn planned_choice_propagates_the_bound_error() {
+        let cfg = CgraConfig::default();
+        let planner = Planner::new(&cfg, &crate::energy::EnergyModel::default()).unwrap();
+        let err = choose_planned(&planner, &ConvShape::new3x3(144, 144, 64, 64), &cfg)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("KiB") && msg.contains("im2col route"), "{msg}");
     }
 }

@@ -41,8 +41,10 @@
 pub mod auto;
 mod request;
 
-pub use auto::{choose, AutoDecision};
-pub use request::{ConvRequest, ConvResult, RequestData, DEFAULT_INPUT_MAG, DEFAULT_WEIGHT_MAG};
+pub use auto::{choose, choose_planned, AutoDecision};
+pub use request::{
+    ConvRequest, ConvResult, PlannedResult, RequestData, DEFAULT_INPUT_MAG, DEFAULT_WEIGHT_MAG,
+};
 
 use anyhow::{bail, ensure, Result};
 
@@ -55,6 +57,7 @@ use crate::coordinator::sweep::{run_sweep_with_model, SweepRow, SweepSpec};
 use crate::energy::EnergyModel;
 use crate::kernels::{dispatch, Mapping};
 use crate::metrics::MappingReport;
+use crate::planner::{CostEstimate, NetworkPlan, PlanObjective, Planner};
 use crate::prop::Rng;
 
 /// Host-side ReLU cost: one load + compare + store per element.
@@ -120,10 +123,12 @@ impl EngineBuilder {
     /// Validate the configuration and build the engine.
     pub fn build(self) -> Result<Engine> {
         let key_fp = cache::cfg_fingerprint(&self.cfg) ^ cache::energy_fingerprint(&self.model);
+        let planner = Planner::new(&self.cfg, &self.model)?;
         let cgra = Cgra::new(self.cfg)?;
         Ok(Engine {
             key_fp,
             cgra,
+            planner,
             model: self.model,
             workers: self.workers.max(1),
             cache: if self.private_cache {
@@ -151,6 +156,10 @@ pub struct Engine {
     /// Combined config + energy-model fingerprint for cache keys.
     key_fp: u64,
     cgra: Cgra,
+    /// The analytical cost model sharing this session's config and
+    /// energy model: backs `Mapping::Auto` decisions and the
+    /// metrics-only `plan`/`submit_planned` surface.
+    planner: Planner,
     model: EnergyModel,
     workers: usize,
     cache: CacheChoice,
@@ -262,10 +271,13 @@ impl Engine {
     /// Resolve the auto-mapping decision for a submission (`None` for
     /// concrete mappings), after validating the shape. The single
     /// resolve-then-record sequence shared by every execution path.
+    /// Since the planner landed, `Auto` is decided by predicted cost
+    /// ([`auto::choose_planned`]); the static threshold rule remains
+    /// the differential fallback.
     fn auto_for(&self, shape: &ConvShape, mapping: Mapping) -> Result<Option<AutoDecision>> {
         shape.validate()?;
         if mapping.is_auto() {
-            Ok(Some(auto::choose(shape, self.config())?))
+            Ok(Some(auto::choose_planned(&self.planner, shape, self.config())?))
         } else {
             Ok(None)
         }
@@ -405,6 +417,13 @@ impl Engine {
     /// Run a Figure-5 hyper-parameter sweep through this session's
     /// config, workers and cache (rows in `spec.points()` order,
     /// memory-bound points recorded as skips).
+    ///
+    /// `Mapping::Auto` points resolve through the *static threshold*
+    /// rule ([`Mapping::resolve`]), not the cost model — deliberately,
+    /// so the sweep that generates the planner's validation ground
+    /// truth never depends on the model it validates. Off the paper's
+    /// grid the two policies can differ; `submit` executes the
+    /// cost-based choice.
     pub fn sweep(&self, spec: &SweepSpec) -> Result<Vec<SweepRow>> {
         run_sweep_with_model(spec, self.config(), &self.model, self.workers, self.cache())
     }
@@ -418,12 +437,66 @@ impl Engine {
         for v in t.data.iter_mut() {
             *v = (*v).max(0);
         }
-        let cycles = RELU_CYCLES_PER_ELEM * t.data.len() as u64;
-        let t_s = cycles as f64 / self.model.clock_hz;
-        let uj = (self.model.p_cpu_active_mw + self.model.p_mem_static_mw) * t_s * 1e3
-            + 2.0 * t.data.len() as f64 * self.model.e_mem_access_pj * 1e-6;
-        (cycles, uj)
+        relu_cost(&self.model, t.data.len())
     }
+
+    /// The cost-model planner sharing this session's configuration and
+    /// energy model (estimates are memoized per shape × mapping).
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// Predict one `(shape, mapping)` cost point without simulating the
+    /// convolution. `Mapping::Auto` is resolved by predicted cost
+    /// ([`Planner::choose`]); concrete mappings estimate directly.
+    /// First call per point runs microsecond calibration probes;
+    /// repeats are nanosecond memo lookups.
+    pub fn plan(&self, shape: &ConvShape, mapping: Mapping) -> Result<CostEstimate> {
+        if mapping.is_auto() {
+            self.planner.choose(shape)
+        } else {
+            self.planner.estimate(shape, mapping)
+        }
+    }
+
+    /// Metrics-only sibling of [`Engine::submit`]: answer a request
+    /// from the cost model instead of the simulator — same auto-mapping
+    /// resolution, decision recording and host-ReLU charging, no
+    /// simulation, no output tensor. The request's data source is
+    /// irrelevant (kernel timing is data-independent), so seeded and
+    /// tensor requests plan alike.
+    pub fn submit_planned(&self, req: &ConvRequest) -> Result<PlannedResult> {
+        let auto = self.auto_for(&req.shape, req.mapping)?;
+        let mapping = auto.map(|d| d.mapping).unwrap_or(req.mapping);
+        let estimate = self.planner.estimate(&req.shape, mapping)?;
+        let (relu_cycles, relu_energy_uj) = if req.relu {
+            relu_cost(&self.model, req.shape.output_elems())
+        } else {
+            (0, 0.0)
+        };
+        Ok(PlannedResult { mapping, auto, estimate, relu_cycles, relu_energy_uj })
+    }
+
+    /// Choose a mapping per layer of `net` by predicted cost under the
+    /// memory bound and return the plan (apply it with
+    /// [`NetworkPlan::apply`], then execute via
+    /// [`Engine::run_network`]).
+    pub fn plan_network(&self, net: &ConvNet, objective: PlanObjective) -> Result<NetworkPlan> {
+        crate::planner::plan_network(&self.planner, net, objective)
+    }
+}
+
+/// Host-side ReLU cost — one load + compare + store per element at
+/// [`RELU_CYCLES_PER_ELEM`], CPU-active + memory power over that time
+/// plus two memory accesses per element. Shared by the execution path
+/// ([`Engine::run_network`]) and the planner so predicted and simulated
+/// network totals use the identical formula.
+pub(crate) fn relu_cost(model: &EnergyModel, elems: usize) -> (u64, f64) {
+    let cycles = RELU_CYCLES_PER_ELEM * elems as u64;
+    let t_s = cycles as f64 / model.clock_hz;
+    let uj = (model.p_cpu_active_mw + model.p_mem_static_mw) * t_s * 1e3
+        + 2.0 * elems as f64 * model.e_mem_access_pj * 1e-6;
+    (cycles, uj)
 }
 
 #[cfg(test)]
@@ -597,6 +670,53 @@ mod tests {
         assert_eq!(out.layers.len(), 2);
         assert!(out.total_cycles > 0 && out.total_energy_uj > 0.0);
         assert!(out.relu_cycles > 0);
+    }
+
+    #[test]
+    fn plan_tracks_simulation_closely_without_simulating() {
+        let e = quick_engine();
+        let shape = ConvShape::new3x3(3, 3, 5, 5);
+        let est = e.plan(&shape, Mapping::Wp).unwrap();
+        assert!(est.probe_launches > 0 && est.probe_launches < 9, "probes, not a full sim");
+        let (report, _) = e.submit_report(&ConvRequest::seeded(shape, Mapping::Wp, 2)).unwrap();
+        let (p, s) = (est.report.latency_cycles as f64, report.latency_cycles as f64);
+        assert!(((p - s) / s).abs() <= 0.05, "planned {p} vs simulated {s}");
+        assert_eq!(est.mapping, Mapping::Wp);
+    }
+
+    #[test]
+    fn submit_planned_records_cost_based_auto_decisions() {
+        let e = quick_engine();
+        let req = ConvRequest::seeded(ConvShape::baseline(), Mapping::Auto, 1);
+        let planned = e.submit_planned(&req).unwrap();
+        assert_eq!(planned.mapping, Mapping::Wp, "the paper's winner");
+        let d = planned.auto.expect("auto decision recorded");
+        assert!(d.reason.contains("cost model"), "{}", d.reason);
+        // Explicit mappings record no decision and plan directly.
+        let explicit = e
+            .submit_planned(&ConvRequest::seeded(ConvShape::baseline(), Mapping::Cpu, 1))
+            .unwrap();
+        assert!(explicit.auto.is_none());
+        assert_eq!(explicit.estimate.probe_launches, 0, "CPU estimates are closed form");
+        // Memoized repeat: no new probes.
+        let probes = e.planner().stats().probe_launches;
+        let _ = e.submit_planned(&req).unwrap();
+        assert_eq!(e.planner().stats().probe_launches, probes);
+    }
+
+    #[test]
+    fn plan_network_then_run_network_agree() {
+        let e = quick_engine();
+        let mut net = ConvNet::random(2, 2, 4, 8, 8, 11);
+        let plan = e.plan_network(&net, PlanObjective::Latency).unwrap();
+        assert_eq!(plan.layers.len(), 2);
+        plan.apply(&mut net).unwrap();
+        let mut rng = Rng::new(5);
+        let input = random_input(&net.layers[0].shape, 8, &mut rng);
+        let out = e.run_network(&net, &input).unwrap();
+        let (p, s) = (plan.total_cycles as f64, out.total_cycles as f64);
+        assert!(((p - s) / s).abs() <= 0.05, "planned {p} vs simulated {s}");
+        assert_eq!(plan.layers[0].relu_cycles, out.relu_cycles - plan.layers[1].relu_cycles);
     }
 
     #[test]

@@ -136,3 +136,38 @@ impl ConvResult {
         self.report.energy_uj + self.relu_energy_uj
     }
 }
+
+/// What a metrics-only planned submission produces
+/// ([`super::Engine::submit_planned`]): the predicted metric row and
+/// the same strategy-resolution and ReLU bookkeeping as
+/// [`ConvResult`], without ever simulating or materializing an output
+/// tensor.
+#[derive(Clone, Debug)]
+pub struct PlannedResult {
+    /// The concrete strategy the plan costs (resolves `Auto`).
+    pub mapping: Mapping,
+    /// The auto-mapping decision, when the request asked for
+    /// [`Mapping::Auto`] (decided by predicted cost).
+    pub auto: Option<AutoDecision>,
+    /// The cost model's full prediction (latency breakdown + metric
+    /// row; excludes the ReLU, like [`ConvResult::report`]).
+    pub estimate: crate::planner::CostEstimate,
+    /// Host cycles charged for the requested ReLU (0 unless the
+    /// request asked for one) — same formula as the execution path.
+    pub relu_cycles: u64,
+    /// Energy charged for the requested ReLU, µJ.
+    pub relu_energy_uj: f64,
+}
+
+impl PlannedResult {
+    /// Predicted end-to-end latency including the ReLU, cycles
+    /// (comparable to [`ConvResult::total_cycles`]).
+    pub fn total_cycles(&self) -> u64 {
+        self.estimate.cycles() + self.relu_cycles
+    }
+
+    /// Predicted end-to-end energy including the ReLU, µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.estimate.energy_uj() + self.relu_energy_uj
+    }
+}

@@ -45,10 +45,7 @@ impl MemLayout {
         let output = weights + shape.weight_elems();
         let im2col = output + shape.output_elems();
         let scratch = im2col + im2col_words;
-        // Scratch: one output row of overshoot + a safety margin for the
-        // WP input-stream overshoot when the input region is last-placed
-        // (it is not — but keep the margin anyway).
-        let total_words = scratch + shape.oy + 2 * shape.iw() + 16;
+        let total_words = MemLayout::required_words(shape, im2col_words);
         ensure!(
             total_words <= cfg.mem_words,
             "layer {shape} needs {total_words} words but the memory holds {} \
@@ -64,6 +61,23 @@ impl MemLayout {
             scratch,
             total_words,
         })
+    }
+
+    /// Words a layout for `shape` requires, independent of any memory
+    /// bound: the tensor regions, the mapping's `im2col_words`, and the
+    /// scratch margin (one output row of WP pipeline overshoot + a
+    /// safety margin). This is exactly what [`MemLayout::new`] checks
+    /// against `CgraConfig::mem_words`, exposed so over-bound errors
+    /// ([`Mapping::resolve`], the planner) can name the computed
+    /// working-set sizes instead of just the bound.
+    pub fn required_words(shape: &ConvShape, im2col_words: usize) -> usize {
+        shape.input_elems()
+            + shape.weight_elems()
+            + shape.output_elems()
+            + im2col_words
+            + shape.oy
+            + 2 * shape.iw()
+            + 16
     }
 }
 
@@ -158,16 +172,29 @@ impl Mapping {
             return Ok((self, "requested explicitly"));
         }
         shape.validate()?;
-        let direct = MemLayout::new(shape, 0, cfg);
-        if direct.is_ok() {
+        if MemLayout::new(shape, 0, cfg).is_ok() {
             return Ok((Mapping::Wp, AUTO_REASON_WP));
         }
-        if MemLayout::new(shape, 2 * crate::conv::patch_len(shape), cfg).is_ok() {
+        let im2col_words = 2 * crate::conv::patch_len(shape);
+        if MemLayout::new(shape, im2col_words, cfg).is_ok() {
             return Ok((Mapping::OpIm2col, AUTO_REASON_OP_IM2COL));
         }
-        // Nothing fits: surface the direct-layout error (it names the
-        // word counts and the paper's bound).
-        Err(direct.unwrap_err())
+        // Nothing fits: name both routes' computed working sets so the
+        // failure is actionable (which route is closest, by how much),
+        // not just the bound.
+        let direct_words = MemLayout::required_words(shape, 0);
+        let im2col_total = MemLayout::required_words(shape, im2col_words);
+        anyhow::bail!(
+            "layer {shape} exceeds the {} KiB memory bound on every route: direct \
+             convolution needs {direct_words} words ({:.1} KiB), the im2col route needs \
+             {im2col_total} words ({:.1} KiB), but the memory holds {} words ({} KiB) — \
+             the paper bounds its Fig. 5 sweep by the same limit",
+            cfg.mem_words * 4 / 1024,
+            direct_words as f64 * 4.0 / 1024.0,
+            im2col_total as f64 * 4.0 / 1024.0,
+            cfg.mem_words,
+            cfg.mem_words * 4 / 1024,
+        )
     }
 
     /// Whether this mapping runs the Im2col transformation on the host
@@ -314,6 +341,33 @@ mod tests {
         let s = ConvShape::new3x3(144, 144, 64, 64);
         let err = Mapping::Auto.resolve(&s, &CgraConfig::default()).unwrap_err();
         assert!(format!("{err:#}").contains("512"), "{err:#}");
+    }
+
+    #[test]
+    fn auto_resolve_over_bound_error_names_both_working_sets() {
+        let s = ConvShape::new3x3(144, 144, 64, 64);
+        let err = format!("{:#}", Mapping::Auto.resolve(&s, &CgraConfig::default()).unwrap_err());
+        assert!(err.contains("direct convolution needs"), "{err}");
+        assert!(err.contains("im2col route needs"), "{err}");
+        // Both computed sizes appear, in words and KiB.
+        let direct = MemLayout::required_words(&s, 0);
+        let im2col = MemLayout::required_words(&s, 2 * crate::conv::patch_len(&s));
+        assert!(err.contains(&direct.to_string()), "{err}");
+        assert!(err.contains(&im2col.to_string()), "{err}");
+        assert!(err.contains("KiB"), "{err}");
+    }
+
+    #[test]
+    fn required_words_matches_layout_total() {
+        let cfg = CgraConfig::default();
+        for (shape, aux) in [
+            (ConvShape::baseline(), 0usize),
+            (ConvShape::new3x3(3, 5, 7, 2), 123),
+            (ConvShape::new3x3(1, 1, 1, 1), 0),
+        ] {
+            let l = MemLayout::new(&shape, aux, &cfg).unwrap();
+            assert_eq!(l.total_words, MemLayout::required_words(&shape, aux), "{shape}");
+        }
     }
 
     #[test]

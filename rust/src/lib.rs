@@ -40,6 +40,11 @@
 //! - [`engine`] — the session front door: `Engine` / `EngineBuilder`,
 //!   typed `ConvRequest` → `ConvResult` submission (single, batched,
 //!   network, sweep) and `Mapping::Auto` strategy selection.
+//! - [`planner`] — the analytical cost model: closed-form launch
+//!   decomposition + micro-probe calibration predicts latency/energy
+//!   per `(shape, mapping)` without simulating (`Engine::plan`,
+//!   `submit_planned`, `plan_network`), validated against the decoded
+//!   simulator by `cgra plan --validate`.
 //! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and verifies the simulator element-exactly against them.
 //! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5),
@@ -61,6 +66,7 @@ pub mod engine;
 pub mod isa;
 pub mod kernels;
 pub mod metrics;
+pub mod planner;
 pub mod prop;
 pub mod report;
 pub mod runtime;

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! cgra run     --mapping wp --c 16 --k 16 --ox 16 --oy 16   one convolution
+//! cgra plan    [--c ...] | --validate | --network            cost model: predict, don't simulate
 //! cgra report  fig3|fig4|fig5|all [--out DIR] [--full]      regenerate figures
 //! cgra sweep   [--full] [--out DIR]                          Fig. 5 sweep
 //! cgra net     [--depth 4] [--k 16] [--hw 32]                CNN on the CGRA
@@ -28,13 +29,14 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: cgra <run|report|sweep|net|verify|asm> [options]\n\
+const USAGE: &str = "usage: cgra <run|plan|report|sweep|net|verify|asm> [options]\n\
                      see README.md for per-command options";
 
 fn dispatch() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
     match cmd.as_str() {
         "run" => cmd_run(),
+        "plan" => cmd_plan(),
         "report" => cmd_report(),
         "sweep" => cmd_sweep(),
         "net" => cmd_net(),
@@ -153,6 +155,178 @@ fn cmd_run() -> Result<()> {
     }
     if failures.len() == mappings.len() {
         bail!("every requested mapping failed");
+    }
+    Ok(())
+}
+
+/// `cgra plan` — drive the analytical cost model: predict a layer's
+/// cost per mapping (default), validate predictions against the
+/// simulator (`--validate`, the CI accuracy gate), or plan a CNN layer
+/// by layer (`--network`).
+fn cmd_plan() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &["validate", "full", "network"],
+        vec![
+            OptSpec { name: "c", value: "INT", help: "input channels" },
+            OptSpec { name: "k", value: "INT", help: "output channels" },
+            OptSpec { name: "ox", value: "INT", help: "output rows" },
+            OptSpec { name: "oy", value: "INT", help: "output cols" },
+            OptSpec {
+                name: "mapping",
+                value: "wp|ip|im2col-op|conv-op|cpu|auto|all",
+                help: "strategy to cost (default: all + the auto choice)",
+            },
+            OptSpec { name: "validate", value: "", help: "predicted-vs-simulated sweep" },
+            OptSpec { name: "full", value: "", help: "validate on the full paper grid (slow)" },
+            OptSpec {
+                name: "max-mae",
+                value: "PCT",
+                help: "with --validate: fail when mean |latency err| exceeds this (default 5)",
+            },
+            OptSpec { name: "network", value: "", help: "plan a random CNN per layer" },
+            OptSpec { name: "depth", value: "INT", help: "network: conv layers" },
+            OptSpec { name: "c0", value: "INT", help: "network: input channels" },
+            OptSpec { name: "hw", value: "INT", help: "network: input height=width" },
+            OptSpec { name: "seed", value: "INT", help: "network: weight seed" },
+            OptSpec {
+                name: "objective",
+                value: "latency|energy",
+                help: "network: what the plan minimizes (default latency)",
+            },
+            OptSpec { name: "workers", value: "INT", help: "worker threads (validate)" },
+            OptSpec { name: "out", value: "DIR", help: "save the validation report" },
+        ],
+    )?;
+    let engine = engine_with_workers(a.num_or("workers", default_workers())?)?;
+    if a.flag("validate") {
+        let spec = if a.flag("full") { SweepSpec::paper() } else { SweepSpec::validation() };
+        let max_mae: f64 = a.num_or("max-mae", 5.0)?;
+        let out_dir = a.opt_str("out").map(std::path::PathBuf::from);
+        a.reject_unknown()?;
+        let (fig, report) = openedge_cgra::report::planner_fig(&engine, &spec)?;
+        println!("{}", fig.text);
+        if let Some(dir) = &out_dir {
+            fig.save(dir)?;
+            std::fs::write(dir.join("planner.json"), report.to_json().to_string_pretty())?;
+            println!("saved {}/planner.{{txt,csv,json}}", dir.display());
+        }
+        anyhow::ensure!(
+            !report.rows.is_empty(),
+            "validation grid produced no comparable points — nothing was validated"
+        );
+        anyhow::ensure!(
+            report.bound_mismatches == 0,
+            "planner and simulator disagree on feasibility for {} points:\n  {}",
+            report.bound_mismatches,
+            report.mismatch_details.join("\n  ")
+        );
+        anyhow::ensure!(
+            report.mean_abs_latency_err_pct <= max_mae,
+            "planner mean |latency error| {:.3}% exceeds the {max_mae}% bound",
+            report.mean_abs_latency_err_pct
+        );
+        println!(
+            "planner accuracy OK: mean |latency err| {:.3}% <= {max_mae}%",
+            report.mean_abs_latency_err_pct
+        );
+        return Ok(());
+    }
+    if a.flag("network") {
+        let depth = a.num_or("depth", 4usize)?;
+        let c0 = a.num_or("c0", 3usize)?;
+        let k = a.num_or("k", 16usize)?;
+        let hw = a.num_or("hw", 32usize)?;
+        let seed = a.num_or("seed", 7u64)?;
+        let objective =
+            openedge_cgra::planner::PlanObjective::parse(&a.str_or("objective", "latency"))?;
+        a.reject_unknown()?;
+        let net = ConvNet::random(depth, c0, k, hw, hw, seed);
+        let plan = engine.plan_network(&net, objective)?;
+        println!(
+            "planned CNN ({} layers, objective: {}) — no layer was simulated\n",
+            plan.layers.len(),
+            plan.objective.label()
+        );
+        let mut table = openedge_cgra::util::fmt::Table::new(&[
+            "layer", "shape", "mapping", "pred_cycles", "pred_uJ", "relu_cycles",
+        ]);
+        for l in &plan.layers {
+            table.row(vec![
+                l.index.to_string(),
+                l.shape.id(),
+                l.mapping.label().into(),
+                l.estimate.cycles().to_string(),
+                format!("{:.2}", l.estimate.energy_uj()),
+                l.relu_cycles.to_string(),
+            ]);
+        }
+        print!("{}", table.render());
+        let stats = engine.planner().stats();
+        println!(
+            "\npredicted total: {} cycles, {:.2} uJ ({} probe launches to calibrate)",
+            plan.total_cycles, plan.total_energy_uj, stats.probe_launches
+        );
+        return Ok(());
+    }
+    // Default: cost one layer across mappings, plus the auto choice.
+    let shape = shape_from(&a)?;
+    let which = a.str_or("mapping", "all");
+    a.reject_unknown()?;
+    let mappings: Vec<Mapping> = if which == "all" {
+        Mapping::ALL.to_vec()
+    } else {
+        vec![Mapping::parse(&which)?]
+    };
+    println!("layer {shape}  ({} MACs) — predicted, not simulated\n", shape.macs());
+    let mut table = openedge_cgra::util::fmt::Table::new(&[
+        "mapping", "pred_cycles", "MAC/cycle", "pred_uJ", "power_mW", "memory", "launches",
+    ]);
+    let mut failures = Vec::new();
+    for m in mappings {
+        if m.is_auto() {
+            continue; // reported via the decision line below
+        }
+        match engine.plan(&shape, m) {
+            Ok(est) => {
+                table.row(vec![
+                    m.label().into(),
+                    est.report.latency_cycles.to_string(),
+                    format!("{:.3}", est.report.mac_per_cycle),
+                    format!("{:.2}", est.report.energy_uj),
+                    format!("{:.2}", est.report.avg_power_mw),
+                    openedge_cgra::util::fmt::kib(est.report.footprint_bytes),
+                    est.report.launches.to_string(),
+                ]);
+            }
+            Err(e) => {
+                table.row(vec![
+                    m.label().into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "skipped".into(),
+                ]);
+                failures.push((m, e));
+            }
+        }
+    }
+    print!("{}", table.render());
+    for (m, e) in &failures {
+        println!("{}: skipped — {e:#}", m.label());
+    }
+    match engine.submit_planned(&ConvRequest::seeded(shape, Mapping::Auto, 0)) {
+        Ok(planned) => {
+            println!("{}", planned.auto.expect("auto requested"));
+            let stats = engine.planner().stats();
+            println!(
+                "({} probe launches simulated to calibrate; repeats are memo lookups)",
+                stats.probe_launches
+            );
+        }
+        Err(e) => println!("auto: unavailable — {e:#}"),
     }
     Ok(())
 }

@@ -1,0 +1,362 @@
+//! Analytical cost-model planner: predict latency (cycles) and energy
+//! (µJ) of any `(ConvShape, Mapping)` point **without simulating the
+//! convolution**, and plan whole networks per layer.
+//!
+//! # How it works
+//!
+//! A full simulation of one sweep point costs milliseconds — every
+//! launch of the kernel's loop nest is executed cycle by cycle. But the
+//! loop nests themselves are closed-form in the shape
+//! ([`model`](self)): WP runs exactly `K·C` launches of two structural
+//! kinds, Conv-OP `⌈K/16⌉·9·Ox`, Im2col-OP `⌈K/16⌉·Ox·Oy`, Im2col-IP
+//! `Ox·Oy·K`, and within a kind every launch executes the same step
+//! sequence (timing in this simulator is data-independent; members of a
+//! kind differ only in address immediates). So the planner:
+//!
+//! 1. decomposes the kernel into launch classes with closed-form counts
+//!    (`model.rs`),
+//! 2. *calibrates* each class by simulating one or two representative
+//!    launches against a zeroed memory (`probe.rs`) — microseconds, not
+//!    milliseconds — and
+//! 3. scales by the counts, adds the drivers' closed-form host-side
+//!    terms (launch overhead, im2col copy cycles, overlap hiding, CPU
+//!    baseline cycles) and evaluates the session energy model over the
+//!    predicted breakdown.
+//!
+//! Estimates are memoized per `(mapping, shape)`, so repeated queries —
+//! the `Engine::submit_planned` fast path — are nanosecond lookups.
+//! The CPU baseline needs no probes at all ([`CpuModel`] is already
+//! closed-form), and where the representatives cover the whole class
+//! the prediction is cycle-exact (pinned by the tests below).
+//!
+//! [`validate`] measures the residual against the decoded simulator
+//! over a sweep grid (the `cgra plan --validate` protocol; CI enforces
+//! the ≤ 5 % mean-absolute-latency-error bound), and [`plan_network`]
+//! picks a mapping per CNN layer by predicted cost under the 512 KiB
+//! working-set constraint.
+//!
+//! [`CpuModel`]: crate::cpu_ref::CpuModel
+
+mod model;
+mod network;
+mod probe;
+mod validate;
+
+pub use network::{plan_network, LayerPlan, NetworkPlan, PlanObjective};
+pub use validate::{validate, ValidationReport, ValidationRow};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::cgra::{Cgra, CgraConfig};
+use crate::conv::ConvShape;
+use crate::energy::EnergyModel;
+use crate::kernels::{LatencyBreakdown, Mapping};
+use crate::metrics::MappingReport;
+
+/// One predicted cost point: everything a simulation would report about
+/// `(shape, mapping)` except the output tensor.
+#[derive(Clone, Debug)]
+pub struct CostEstimate {
+    /// The concrete strategy modeled.
+    pub mapping: Mapping,
+    /// The layer shape.
+    pub shape: ConvShape,
+    /// Predicted latency decomposition (same fields the kernels fill).
+    pub latency: LatencyBreakdown,
+    /// Predicted metric row — evaluated by the same
+    /// [`MappingReport::from_outcome`] path as simulated rows, so every
+    /// derived metric (energy split, MAC/cycle, utilization, op mix)
+    /// is available.
+    pub report: MappingReport,
+    /// Probe launches simulated to calibrate this estimate (0 when the
+    /// estimate is pure closed form, e.g. the CPU baseline).
+    pub probe_launches: u64,
+}
+
+impl CostEstimate {
+    /// Predicted end-to-end latency, cycles.
+    pub fn cycles(&self) -> u64 {
+        self.latency.total_cycles()
+    }
+
+    /// Predicted total energy, µJ.
+    pub fn energy_uj(&self) -> f64 {
+        self.report.energy_uj
+    }
+}
+
+/// Counter snapshot of a [`Planner`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlannerStats {
+    /// Estimate requests served (including memo hits).
+    pub estimates: u64,
+    /// Requests served from the memo without touching the simulator.
+    pub memo_hits: u64,
+    /// Probe launches simulated for calibration, in total.
+    pub probe_launches: u64,
+}
+
+/// The cost-model planner: owns a simulator instance for calibration
+/// probes, the session energy model, and a memo of completed estimates.
+///
+/// `Planner` is `Sync` — `engine::Engine` shares one across its worker
+/// pool — and deterministic: the same `(config, model, shape, mapping)`
+/// always yields the same estimate.
+pub struct Planner {
+    cgra: Cgra,
+    model: EnergyModel,
+    memo: Mutex<HashMap<(Mapping, ConvShape), CostEstimate>>,
+    estimates: AtomicU64,
+    memo_hits: AtomicU64,
+    probe_launches: AtomicU64,
+}
+
+impl Planner {
+    /// Build a planner for a simulator configuration and energy model
+    /// (an `Engine` builds one with its own session pair).
+    pub fn new(cfg: &CgraConfig, model: &EnergyModel) -> Result<Planner> {
+        Ok(Planner {
+            cgra: Cgra::new(cfg.clone())?,
+            model: *model,
+            memo: Mutex::new(HashMap::new()),
+            estimates: AtomicU64::new(0),
+            memo_hits: AtomicU64::new(0),
+            probe_launches: AtomicU64::new(0),
+        })
+    }
+
+    /// The simulator configuration the predictions are calibrated to.
+    pub fn config(&self) -> &CgraConfig {
+        self.cgra.config()
+    }
+
+    /// The energy model applied to every estimate.
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.model
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PlannerStats {
+        PlannerStats {
+            estimates: self.estimates.load(Ordering::Relaxed),
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            probe_launches: self.probe_launches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Predict the cost of one concrete `(shape, mapping)` point.
+    ///
+    /// Memoized: the first call per point runs the calibration probes
+    /// (microseconds); repeats are pure lookups. Fails with the same
+    /// actionable memory-bound error as the kernel would.
+    ///
+    /// The memo check and insert are separate critical sections, so
+    /// concurrent *first* calls for one point may each run the probes;
+    /// that is deliberate (probing is deterministic and cheap, and
+    /// holding the lock across a probe would serialize estimates of
+    /// unrelated shapes) — the only visible effect is a higher
+    /// [`PlannerStats::probe_launches`] count.
+    pub fn estimate(&self, shape: &ConvShape, mapping: Mapping) -> Result<CostEstimate> {
+        ensure!(
+            !mapping.is_auto(),
+            "estimate() needs a concrete mapping — use Planner::choose for Auto"
+        );
+        shape.validate()?;
+        self.estimates.fetch_add(1, Ordering::Relaxed);
+        let key = (mapping, *shape);
+        if let Some(hit) = self.memo.lock().unwrap().get(&key) {
+            self.memo_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(hit.clone());
+        }
+        let km = model::KernelModel::for_mapping(mapping, shape, self.cgra.config())?;
+        let est = probe::assemble(&self.cgra, &self.model, shape, km)?;
+        self.probe_launches.fetch_add(est.probe_launches, Ordering::Relaxed);
+        self.memo.lock().unwrap().insert(key, est.clone());
+        Ok(est)
+    }
+
+    /// Estimate every candidate mapping and keep the cheapest under
+    /// `objective` (ties break in candidate order). The single
+    /// select-best policy shared by [`Planner::choose`] and
+    /// [`plan_network`]. When no candidate fits the memory bound, the
+    /// last estimation error is returned.
+    pub fn best_of(
+        &self,
+        shape: &ConvShape,
+        candidates: &[Mapping],
+        objective: PlanObjective,
+    ) -> Result<CostEstimate> {
+        let mut best: Option<CostEstimate> = None;
+        let mut last_err = None;
+        for &m in candidates {
+            match self.estimate(shape, m) {
+                Ok(est) => {
+                    let better = match (&best, objective) {
+                        (None, _) => true,
+                        (Some(b), PlanObjective::Latency) => est.cycles() < b.cycles(),
+                        (Some(b), PlanObjective::Energy) => est.energy_uj() < b.energy_uj(),
+                    };
+                    if better {
+                        best = Some(est);
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        best.ok_or_else(|| last_err.unwrap_or_else(|| anyhow!("no candidate mappings given")))
+    }
+
+    /// Pick the CGRA mapping with the lowest predicted latency for a
+    /// shape — the cost-model backing of `Mapping::Auto` (ties break in
+    /// [`Mapping::CGRA`] order, WP first). The CPU baseline is never
+    /// chosen, matching the static policy it upgrades.
+    ///
+    /// When no mapping fits the memory bound, the error is the
+    /// actionable dual-route message of [`Mapping::resolve`].
+    pub fn choose(&self, shape: &ConvShape) -> Result<CostEstimate> {
+        shape.validate()?;
+        match self.best_of(shape, &Mapping::CGRA, PlanObjective::Latency) {
+            Ok(est) => Ok(est),
+            // Nothing fits: prefer the resolver's dual-route bound
+            // message; surface the estimate error only if the resolver
+            // unexpectedly thinks a route exists.
+            Err(est_err) => match Mapping::Auto.resolve(shape, self.cgra.config()) {
+                Err(e) => Err(e),
+                Ok(_) => Err(est_err),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{random_input, random_weights};
+    use crate::kernels::{dispatch, ConvOutcome};
+    use crate::prop::Rng;
+
+    fn planner() -> Planner {
+        Planner::new(&CgraConfig::default(), &EnergyModel::default()).unwrap()
+    }
+
+    fn simulate(shape: &ConvShape, mapping: Mapping) -> ConvOutcome {
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let mut rng = Rng::new(7);
+        let input = random_input(shape, 12, &mut rng);
+        let weights = random_weights(shape, 7, &mut rng);
+        dispatch(&cgra, mapping, shape, &input, &weights).unwrap()
+    }
+
+    /// With K ≤ 2 and C ≤ 2 the WP probes (first/last launch of each
+    /// class) ARE the full launch set, so the prediction must equal the
+    /// simulation cycle for cycle — and, the breakdown and statistics
+    /// being identical, energy bit for bit.
+    #[test]
+    fn wp_prediction_exact_when_probes_cover_all_launches() {
+        let p = planner();
+        let shape = ConvShape::new3x3(2, 2, 5, 4);
+        let est = p.estimate(&shape, Mapping::Wp).unwrap();
+        let out = simulate(&shape, Mapping::Wp);
+        assert_eq!(est.latency.cgra_cycles, out.latency.cgra_cycles);
+        assert_eq!(est.cycles(), out.latency.total_cycles());
+        assert_eq!(est.report.launches, out.latency.launches);
+        let sim = MappingReport::from_outcome(&out, &EnergyModel::default());
+        assert_eq!(est.report.energy_uj.to_bits(), sim.energy_uj.to_bits());
+        assert_eq!(est.report.cgra_accesses, sim.cgra_accesses);
+        assert_eq!(est.report.utilization.to_bits(), sim.utilization.to_bits());
+        assert_eq!(est.report.footprint_bytes, sim.footprint_bytes);
+    }
+
+    /// Full-coverage shapes for the im2col mappings (≤ 2 pixels, one
+    /// k-tile / K = 1): predictions exact including the CPU-overlap
+    /// accounting.
+    #[test]
+    fn im2col_mappings_exact_on_full_coverage_shapes() {
+        let p = planner();
+        for (shape, mapping) in [
+            (ConvShape::new3x3(3, 4, 1, 2), Mapping::OpIm2col),
+            (ConvShape::new3x3(3, 1, 1, 2), Mapping::Ip),
+        ] {
+            let est = p.estimate(&shape, mapping).unwrap();
+            let out = simulate(&shape, mapping);
+            assert_eq!(est.latency.cgra_cycles, out.latency.cgra_cycles, "{mapping} {shape}");
+            assert_eq!(
+                est.latency.cpu_im2col_cycles, out.latency.cpu_im2col_cycles,
+                "{mapping} {shape}"
+            );
+            assert_eq!(
+                est.latency.cpu_hidden_cycles, out.latency.cpu_hidden_cycles,
+                "{mapping} {shape}"
+            );
+            assert_eq!(est.cycles(), out.latency.total_cycles(), "{mapping} {shape}");
+        }
+    }
+
+    /// Conv-OP samples 2 of the 8 accumulation taps, so it is only
+    /// alignment-close, not exact — within 2 % on a small shape.
+    #[test]
+    fn op_direct_prediction_close() {
+        let p = planner();
+        let shape = ConvShape::new3x3(3, 5, 4, 4);
+        let est = p.estimate(&shape, Mapping::OpDirect).unwrap();
+        let out = simulate(&shape, Mapping::OpDirect);
+        let (a, b) = (est.cycles() as f64, out.latency.total_cycles() as f64);
+        assert!(((a - b) / b).abs() < 0.02, "predicted {a} vs simulated {b}");
+        assert_eq!(est.report.launches, out.latency.launches);
+    }
+
+    /// The CPU baseline is pure closed form: zero probes, exact cycles,
+    /// bit-identical energy.
+    #[test]
+    fn cpu_prediction_is_closed_form_and_exact() {
+        let p = planner();
+        let shape = ConvShape::new3x3(3, 2, 4, 5);
+        let est = p.estimate(&shape, Mapping::Cpu).unwrap();
+        assert_eq!(est.probe_launches, 0);
+        let out = simulate(&shape, Mapping::Cpu);
+        assert_eq!(est.cycles(), out.latency.total_cycles());
+        let sim = MappingReport::from_outcome(&out, &EnergyModel::default());
+        assert_eq!(est.report.energy_uj.to_bits(), sim.energy_uj.to_bits());
+    }
+
+    #[test]
+    fn memo_serves_repeats_without_new_probes() {
+        let p = planner();
+        let shape = ConvShape::new3x3(4, 4, 6, 6);
+        let a = p.estimate(&shape, Mapping::Wp).unwrap();
+        let s0 = p.stats();
+        assert!(s0.probe_launches > 0);
+        assert_eq!(s0.memo_hits, 0);
+        let b = p.estimate(&shape, Mapping::Wp).unwrap();
+        let s1 = p.stats();
+        assert_eq!(s1.probe_launches, s0.probe_launches, "repeat must not probe");
+        assert_eq!(s1.memo_hits, 1);
+        assert_eq!(a.cycles(), b.cycles());
+        assert_eq!(a.report.energy_uj.to_bits(), b.report.energy_uj.to_bits());
+    }
+
+    #[test]
+    fn choose_picks_wp_on_the_baseline_layer() {
+        let p = planner();
+        let est = p.choose(&ConvShape::baseline()).unwrap();
+        assert_eq!(est.mapping, Mapping::Wp, "the paper's winner");
+    }
+
+    #[test]
+    fn choose_errors_actionably_past_the_bound() {
+        let err = planner().choose(&ConvShape::new3x3(144, 144, 64, 64)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("KiB"), "{msg}");
+    }
+
+    #[test]
+    fn estimate_rejects_auto_and_oversized_shapes() {
+        let p = planner();
+        assert!(p.estimate(&ConvShape::baseline(), Mapping::Auto).is_err());
+        assert!(p.estimate(&ConvShape::new3x3(144, 144, 64, 64), Mapping::Wp).is_err());
+    }
+}

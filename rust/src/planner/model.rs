@@ -1,0 +1,415 @@
+//! Closed-form launch decomposition of the four mapping kernels.
+//!
+//! Every kernel driver in `kernels/` executes a statically known loop
+//! nest of CGRA launches; the programs of a launch differ only in
+//! address immediates, never in structure, so the *step sequence* of a
+//! launch — and therefore everything about its cost except ±1-cycle
+//! bank-alignment jitter — is fixed by a small launch *class*:
+//!
+//! - **WP** (`kernels::wp::run`): one launch per `(k, ci)`; two classes
+//!   — the `ci == 0` initialisation launches (no previous-partial
+//!   prefetch) and the `ci > 0` accumulation launches.
+//! - **Conv-OP** (`kernels::op_direct::run`): one launch per
+//!   `(k-tile, filter tap, output row)`; classes split by tap kind
+//!   (`(0,0)` initialises the in-memory partials, the other eight
+//!   read-modify-write) × tile kind (full 16-lane tiles vs the
+//!   imbalanced last tile when `K % 16 != 0`).
+//! - **Im2col-OP** (`kernels::op_im2col::run`): one launch per
+//!   `(k-tile, pixel)`; classes split by tile kind × the ping-pong
+//!   patch-slot parity (`pixel % 2` picks the staging buffer, which is
+//!   the only address difference between consecutive pixels).
+//! - **Im2col-IP** (`kernels::ip::run`): one launch per `(pixel, k)`;
+//!   classes split by patch-slot parity.
+//! - **CPU**: no launches — the scalar cost model
+//!   ([`CpuModel::conv_cycles`]) is already closed-form.
+//!
+//! For each class this module emits the exact per-launch [`Program`]s
+//! the kernel would build (one or two representatives, deduplicated),
+//! plus the closed-form launch counts and the host-side accounting
+//! (im2col copy cycles, overlap caps, CPU memory traffic, footprint)
+//! lifted verbatim from the drivers. `planner::probe` simulates the
+//! representatives once and scales by the counts.
+
+use anyhow::{bail, Result};
+
+use crate::cgra::{CgraConfig, MemStats};
+use crate::conv::{patch_len, ConvShape};
+use crate::cpu_ref::CpuModel;
+use crate::isa::{Program, N_PES};
+use crate::kernels::op_direct::{self, OpDirectLaunch};
+use crate::kernels::wp::{self, WpLaunch};
+use crate::kernels::{ip, op_im2col, HostCostModel, Mapping, MemLayout};
+
+/// One structurally uniform group of launches: every member executes
+/// the same step sequence; members differ only in address immediates.
+pub(crate) struct LaunchClass {
+    /// Diagnostic label, e.g. `wp/acc` or `op-direct/partial/first-tap`.
+    pub label: String,
+    /// How many launches of the full convolution belong to this class.
+    pub count: u64,
+    /// Representative launch programs (1–2, deduplicated); their
+    /// simulated cost is averaged and scaled by `count`.
+    pub probes: Vec<Program>,
+}
+
+/// The closed-form skeleton of one kernel execution: launch classes
+/// plus every cost term the driver computes outside the simulator.
+pub(crate) struct KernelModel {
+    /// The concrete strategy modeled.
+    pub mapping: Mapping,
+    /// Total CGRA launches (0 for the CPU baseline).
+    pub launches: u64,
+    /// Launch classes; counts sum to `launches`.
+    pub classes: Vec<LaunchClass>,
+    /// Host cycles building im2col patches / prepared buffers
+    /// (closed-form; 0 for the direct mappings).
+    pub cpu_im2col_cycles: u64,
+    /// Per-launch cap on im2col cycles hidden under the CGRA run
+    /// (`copied × im2col_cycles_per_elem`, as in the drivers).
+    pub hidden_cap_per_launch: u64,
+    /// CPU-side memory traffic (im2col copies / CPU-baseline accesses).
+    pub cpu_mem: MemStats,
+    /// Memory footprint in bytes (the paper's "memory usage" metric).
+    pub footprint_bytes: usize,
+    /// Pure-CPU compute cycles (CPU baseline only).
+    pub cpu_compute_cycles: u64,
+}
+
+impl KernelModel {
+    /// Decompose `mapping` on `shape` under `cfg`. Fails with the same
+    /// actionable memory-bound errors as the kernels themselves (the
+    /// planner must refuse exactly the shapes the simulator refuses).
+    pub fn for_mapping(
+        mapping: Mapping,
+        shape: &ConvShape,
+        cfg: &CgraConfig,
+    ) -> Result<KernelModel> {
+        shape.validate()?;
+        match mapping {
+            Mapping::Wp => wp_model(shape, cfg),
+            Mapping::OpDirect => op_direct_model(shape, cfg),
+            Mapping::OpIm2col => op_im2col_model(shape, cfg),
+            Mapping::Ip => ip_model(shape, cfg),
+            Mapping::Cpu => cpu_baseline_model(shape, cfg),
+            Mapping::Auto => bail!(
+                "the cost model needs a concrete mapping — resolve Auto first \
+                 (Planner::choose / Mapping::resolve)"
+            ),
+        }
+    }
+}
+
+/// Keep the first occurrence of each probe parameter tuple (tiny shapes
+/// collapse the "first" and "last" representatives onto one launch).
+fn uniq<T: PartialEq>(v: Vec<T>) -> Vec<T> {
+    let mut out: Vec<T> = Vec::new();
+    for x in v {
+        if !out.contains(&x) {
+            out.push(x);
+        }
+    }
+    out
+}
+
+fn wp_model(shape: &ConvShape, cfg: &CgraConfig) -> Result<KernelModel> {
+    let layout = MemLayout::new(shape, 0, cfg)?;
+    let (k, c) = (shape.k, shape.c);
+    let mut classes = vec![LaunchClass {
+        label: "wp/ci0".into(),
+        count: k as u64,
+        probes: uniq(vec![0, k - 1])
+            .into_iter()
+            .map(|kk| wp::build_program(shape, &layout, WpLaunch { k: kk, ci: 0, acc: false }))
+            .collect(),
+    }];
+    if c > 1 {
+        classes.push(LaunchClass {
+            label: "wp/acc".into(),
+            count: (k * (c - 1)) as u64,
+            probes: uniq(vec![(0, 1), (k - 1, c - 1)])
+                .into_iter()
+                .map(|(kk, ci)| {
+                    wp::build_program(shape, &layout, WpLaunch { k: kk, ci, acc: true })
+                })
+                .collect(),
+        });
+    }
+    Ok(KernelModel {
+        mapping: Mapping::Wp,
+        launches: (k * c) as u64,
+        classes,
+        cpu_im2col_cycles: 0,
+        hidden_cap_per_launch: 0,
+        cpu_mem: MemStats::default(),
+        footprint_bytes: shape.base_bytes(),
+        cpu_compute_cycles: 0,
+    })
+}
+
+/// Tile kinds of the output-channel mappings: `(label, representative
+/// k-tile index, number of tiles of that kind)`.
+fn tile_kinds(k: usize) -> Vec<(&'static str, usize, u64)> {
+    let tiles = k.div_ceil(N_PES);
+    let full = k / N_PES;
+    let mut kinds = Vec::new();
+    if full > 0 {
+        kinds.push(("full", 0, full as u64));
+    }
+    if k % N_PES != 0 {
+        kinds.push(("partial", tiles - 1, 1));
+    }
+    kinds
+}
+
+fn op_direct_model(shape: &ConvShape, cfg: &CgraConfig) -> Result<KernelModel> {
+    let layout = MemLayout::new(shape, 0, cfg)?;
+    let ox = shape.ox;
+    let mut classes = Vec::new();
+    for (kind, kt, n_tiles) in tile_kinds(shape.k) {
+        classes.push(LaunchClass {
+            label: format!("op-direct/{kind}/first-tap"),
+            count: n_tiles * ox as u64,
+            probes: uniq(vec![0, ox - 1])
+                .into_iter()
+                .map(|y| {
+                    op_direct::build_program(shape, &layout, OpDirectLaunch { kt, fy: 0, fx: 0, y })
+                })
+                .collect(),
+        });
+        classes.push(LaunchClass {
+            label: format!("op-direct/{kind}/acc-tap"),
+            count: n_tiles * 8 * ox as u64,
+            probes: uniq(vec![(1, 1, 0), (2, 2, ox - 1)])
+                .into_iter()
+                .map(|(fy, fx, y)| {
+                    op_direct::build_program(shape, &layout, OpDirectLaunch { kt, fy, fx, y })
+                })
+                .collect(),
+        });
+    }
+    Ok(KernelModel {
+        mapping: Mapping::OpDirect,
+        launches: (shape.k.div_ceil(N_PES) * 9 * ox) as u64,
+        classes,
+        cpu_im2col_cycles: 0,
+        hidden_cap_per_launch: 0,
+        cpu_mem: MemStats::default(),
+        footprint_bytes: shape.base_bytes(),
+        cpu_compute_cycles: 0,
+    })
+}
+
+/// Representative pixel indices of one ping-pong parity: the first and
+/// the last pixel using that patch slot.
+fn parity_reps(pixels: usize, parity: usize) -> Vec<usize> {
+    let last = if (pixels - 1) % 2 == parity { pixels - 1 } else { pixels - 2 };
+    uniq(vec![parity, last])
+}
+
+fn op_im2col_model(shape: &ConvShape, cfg: &CgraConfig) -> Result<KernelModel> {
+    let host = HostCostModel::default();
+    let pl = patch_len(shape);
+    let layout = MemLayout::new(shape, 2 * pl, cfg)?;
+    let pixels = shape.ox * shape.oy;
+    let launches = (shape.k.div_ceil(N_PES) * pixels) as u64;
+    // Per-launch program construction lifted verbatim from
+    // `op_im2col::run` (ping-pong slot, weight rows, idle-lane scratch).
+    let build = |kt: usize, pix: usize| {
+        op_im2col::build_program(
+            shape,
+            (layout.im2col + (pix % 2) * pl) as i32,
+            |l| {
+                let kp = (kt * N_PES + l).min(shape.k - 1);
+                (layout.weights + kp * pl) as i32
+            },
+            |l| {
+                let kp = kt * N_PES + l;
+                if kp < shape.k {
+                    (layout.output + kp * pixels + pix) as i32
+                } else {
+                    (layout.scratch + l) as i32
+                }
+            },
+        )
+    };
+    let mut classes = Vec::new();
+    for (kind, kt, n_tiles) in tile_kinds(shape.k) {
+        for (parity, name, count) in
+            [(0usize, "even", pixels.div_ceil(2)), (1, "odd", pixels / 2)]
+        {
+            if count == 0 {
+                continue;
+            }
+            classes.push(LaunchClass {
+                label: format!("op-im2col/{kind}/pix-{name}"),
+                count: n_tiles * count as u64,
+                probes: parity_reps(pixels, parity)
+                    .into_iter()
+                    .map(|pix| build(kt, pix))
+                    .collect(),
+            });
+        }
+    }
+    // Host accounting, as in the driver: one-time HWC + weight-matrix
+    // prep, then one full patch copy per launch (rebuilt per k-tile).
+    let prep_elems = (shape.input_elems() + shape.weight_elems()) as u64;
+    let cpu_copies = launches * pl as u64;
+    Ok(KernelModel {
+        mapping: Mapping::OpIm2col,
+        launches,
+        classes,
+        cpu_im2col_cycles: prep_elems * host.prep_cycles_per_elem
+            + cpu_copies * host.im2col_cycles_per_elem,
+        hidden_cap_per_launch: pl as u64 * host.im2col_cycles_per_elem,
+        cpu_mem: MemStats { loads: cpu_copies + prep_elems, stores: cpu_copies + prep_elems },
+        footprint_bytes: shape.base_bytes() + 4 * 2 * pl,
+        cpu_compute_cycles: 0,
+    })
+}
+
+fn ip_model(shape: &ConvShape, cfg: &CgraConfig) -> Result<KernelModel> {
+    let host = HostCostModel::default();
+    let cp = ip::padded_c(shape);
+    let patch_words = cp * 9;
+    let padded_w = shape.c != cp;
+    let aux_words = 2 * patch_words + if padded_w { shape.k * patch_words } else { 0 };
+    let layout = MemLayout::new(shape, aux_words, cfg)?;
+    let w_image_base =
+        if padded_w { layout.im2col + 2 * patch_words } else { layout.weights };
+    let pixels = shape.ox * shape.oy;
+    let launches = (pixels * shape.k) as u64;
+    let build = |pix: usize, kk: usize| {
+        ip::build_program(
+            shape,
+            (layout.im2col + (pix % 2) * patch_words) as i32,
+            (w_image_base + kk * patch_words) as i32,
+            (layout.output + kk * pixels + pix) as i32,
+        )
+    };
+    let mut classes = Vec::new();
+    for (parity, name, count) in [(0usize, "even", pixels.div_ceil(2)), (1, "odd", pixels / 2)]
+    {
+        if count == 0 {
+            continue;
+        }
+        let reps = parity_reps(pixels, parity);
+        // Pair the first/last pixels with the first/last output channels
+        // so the probes also sample the weight-row address spread.
+        let ks = [0, shape.k - 1];
+        classes.push(LaunchClass {
+            label: format!("ip/pix-{name}"),
+            count: (count * shape.k) as u64,
+            probes: uniq(reps.into_iter().zip(ks).collect::<Vec<_>>())
+                .into_iter()
+                .map(|(pix, kk)| build(pix, kk))
+                .collect(),
+        });
+    }
+    // Host accounting from `ip::run`: HWC prep (+ padded weight image),
+    // then the paper's per-(pixel, k) patch rebuild.
+    let prep_elems =
+        (shape.input_elems() + if padded_w { shape.k * shape.c * 9 } else { 0 }) as u64;
+    let cpu_copies = launches * patch_words as u64;
+    Ok(KernelModel {
+        mapping: Mapping::Ip,
+        launches,
+        classes,
+        cpu_im2col_cycles: prep_elems * host.prep_cycles_per_elem
+            + cpu_copies * host.im2col_cycles_per_elem,
+        hidden_cap_per_launch: patch_words as u64 * host.im2col_cycles_per_elem,
+        cpu_mem: MemStats { loads: cpu_copies + prep_elems, stores: cpu_copies + prep_elems },
+        footprint_bytes: shape.base_bytes() + 4 * aux_words,
+        cpu_compute_cycles: 0,
+    })
+}
+
+fn cpu_baseline_model(shape: &ConvShape, cfg: &CgraConfig) -> Result<KernelModel> {
+    // The CPU shares the same 512 KiB system RAM (see `kernels::dispatch`).
+    MemLayout::new(shape, 0, cfg)?;
+    Ok(KernelModel {
+        mapping: Mapping::Cpu,
+        launches: 0,
+        classes: Vec::new(),
+        cpu_im2col_cycles: 0,
+        hidden_cap_per_launch: 0,
+        cpu_mem: MemStats { loads: 2 * shape.macs(), stores: shape.output_elems() as u64 },
+        footprint_bytes: shape.base_bytes(),
+        cpu_compute_cycles: CpuModel::default().conv_cycles(shape),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_counts_sum_to_launch_counts() {
+        let cfg = CgraConfig::default();
+        for shape in [
+            ConvShape::baseline(),
+            ConvShape::new3x3(17, 17, 5, 3),
+            ConvShape::new3x3(1, 1, 1, 1),
+            ConvShape::new3x3(3, 33, 2, 2),
+        ] {
+            for m in Mapping::CGRA {
+                let km = KernelModel::for_mapping(m, &shape, &cfg).unwrap();
+                let sum: u64 = km.classes.iter().map(|c| c.count).sum();
+                assert_eq!(sum, km.launches, "{m} on {shape}");
+                assert!(km.classes.iter().all(|c| !c.probes.is_empty()), "{m} on {shape}");
+                assert!(km.classes.iter().all(|c| c.probes.len() <= 2), "{m} on {shape}");
+            }
+        }
+    }
+
+    #[test]
+    fn launch_counts_match_the_drivers() {
+        let cfg = CgraConfig::default();
+        let s = ConvShape::new3x3(17, 17, 3, 4);
+        // WP: one launch per (k, ci).
+        assert_eq!(
+            KernelModel::for_mapping(Mapping::Wp, &s, &cfg).unwrap().launches,
+            17 * 17
+        );
+        // Conv-OP: tiles × 9 taps × output rows.
+        assert_eq!(
+            KernelModel::for_mapping(Mapping::OpDirect, &s, &cfg).unwrap().launches,
+            2 * 9 * 3
+        );
+        // Im2col-OP: tiles × pixels.
+        assert_eq!(
+            KernelModel::for_mapping(Mapping::OpIm2col, &s, &cfg).unwrap().launches,
+            2 * 12
+        );
+        // Im2col-IP: pixels × K.
+        assert_eq!(KernelModel::for_mapping(Mapping::Ip, &s, &cfg).unwrap().launches, 12 * 17);
+        // CPU: no launches, pure cycles.
+        let cpu = KernelModel::for_mapping(Mapping::Cpu, &s, &cfg).unwrap();
+        assert_eq!(cpu.launches, 0);
+        assert_eq!(cpu.cpu_compute_cycles, CpuModel::default().conv_cycles(&s));
+    }
+
+    #[test]
+    fn over_bound_shapes_are_refused_like_the_kernels() {
+        let cfg = CgraConfig::default();
+        let s = ConvShape::new3x3(144, 144, 64, 64);
+        for m in [Mapping::Wp, Mapping::Ip, Mapping::Cpu] {
+            assert!(KernelModel::for_mapping(m, &s, &cfg).is_err(), "{m}");
+        }
+    }
+
+    #[test]
+    fn auto_is_rejected() {
+        let err = KernelModel::for_mapping(Mapping::Auto, &ConvShape::baseline(), &CgraConfig::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("concrete"));
+    }
+
+    #[test]
+    fn parity_reps_pick_first_and_last_of_each_slot() {
+        assert_eq!(parity_reps(1, 0), vec![0]);
+        assert_eq!(parity_reps(2, 0), vec![0]);
+        assert_eq!(parity_reps(2, 1), vec![1]);
+        assert_eq!(parity_reps(5, 0), vec![0, 4]);
+        assert_eq!(parity_reps(5, 1), vec![1, 3]);
+    }
+}

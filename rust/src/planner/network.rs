@@ -1,0 +1,184 @@
+//! Network-level planning: choose a mapping per [`ConvNet`] layer by
+//! predicted cost under the 512 KiB working-set constraint.
+//!
+//! The per-layer candidate set is every concrete strategy (the four
+//! CGRA mappings *and* the CPU baseline — a layer too big for any CGRA
+//! route can still run on the host if its tensors fit); candidates
+//! whose working set exceeds the memory bound are excluded by the same
+//! layout checks the kernels enforce. Host-side ReLU cycles/energy are
+//! charged exactly as `engine::Engine::run_network` charges them, so a
+//! plan's totals are directly comparable to a simulated inference.
+
+use anyhow::{Context, Result};
+
+use crate::conv::ConvShape;
+use crate::coordinator::network::ConvNet;
+use crate::kernels::Mapping;
+
+use super::{CostEstimate, Planner};
+
+/// What a plan optimizes per layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanObjective {
+    /// Minimize predicted end-to-end cycles (the paper's Fig. 4 x-axis).
+    Latency,
+    /// Minimize predicted total energy in µJ (the Fig. 4 y-axis).
+    Energy,
+}
+
+impl PlanObjective {
+    /// Parse a user-facing name, case-insensitively.
+    pub fn parse(s: &str) -> Result<PlanObjective> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" | "cycles" => Ok(PlanObjective::Latency),
+            "energy" | "uj" => Ok(PlanObjective::Energy),
+            other => anyhow::bail!("unknown objective '{other}' (valid: latency, energy)"),
+        }
+    }
+
+    /// Display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            PlanObjective::Latency => "latency",
+            PlanObjective::Energy => "energy",
+        }
+    }
+}
+
+/// The chosen strategy and predicted cost of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// Layer index in execution order.
+    pub index: usize,
+    /// Layer shape.
+    pub shape: ConvShape,
+    /// The winning mapping under the objective.
+    pub mapping: Mapping,
+    /// Its full predicted cost point.
+    pub estimate: CostEstimate,
+    /// Host ReLU cycles (0 when the layer has no activation).
+    pub relu_cycles: u64,
+    /// Host ReLU energy, µJ.
+    pub relu_energy_uj: f64,
+}
+
+impl LayerPlan {
+    /// Predicted layer latency including the activation, cycles.
+    pub fn total_cycles(&self) -> u64 {
+        self.estimate.cycles() + self.relu_cycles
+    }
+
+    /// Predicted layer energy including the activation, µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.estimate.energy_uj() + self.relu_energy_uj
+    }
+}
+
+/// A whole-network plan: per-layer choices plus predicted totals.
+#[derive(Clone, Debug)]
+pub struct NetworkPlan {
+    /// The objective the plan minimized.
+    pub objective: PlanObjective,
+    /// Per-layer choices, in execution order.
+    pub layers: Vec<LayerPlan>,
+    /// Predicted end-to-end cycles (convolutions + ReLUs).
+    pub total_cycles: u64,
+    /// Predicted end-to-end energy, µJ.
+    pub total_energy_uj: f64,
+}
+
+impl NetworkPlan {
+    /// The chosen mapping per layer.
+    pub fn mappings(&self) -> Vec<Mapping> {
+        self.layers.iter().map(|l| l.mapping).collect()
+    }
+
+    /// Write the chosen mappings back into a network, so a subsequent
+    /// `Engine::run_network` executes the plan.
+    pub fn apply(&self, net: &mut ConvNet) -> Result<()> {
+        net.apply_mappings(&self.mappings())
+    }
+}
+
+/// Plan every layer of `net`: predict each candidate mapping's cost and
+/// keep the best under `objective`. Ties break in [`Mapping::ALL`]
+/// order (WP first), keeping plans deterministic.
+pub fn plan_network(
+    planner: &Planner,
+    net: &ConvNet,
+    objective: PlanObjective,
+) -> Result<NetworkPlan> {
+    net.validate()?;
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut total_cycles = 0u64;
+    let mut total_energy_uj = 0.0f64;
+    for (index, layer) in net.layers.iter().enumerate() {
+        let estimate = planner
+            .best_of(&layer.shape, &Mapping::ALL, objective)
+            .with_context(|| format!("planning layer {index} ({})", layer.shape))?;
+        let (relu_cycles, relu_energy_uj) = if layer.relu {
+            crate::engine::relu_cost(planner.energy_model(), layer.shape.output_elems())
+        } else {
+            (0, 0.0)
+        };
+        total_cycles += estimate.cycles() + relu_cycles;
+        total_energy_uj += estimate.energy_uj() + relu_energy_uj;
+        layers.push(LayerPlan {
+            index,
+            shape: layer.shape,
+            mapping: estimate.mapping,
+            estimate,
+            relu_cycles,
+            relu_energy_uj,
+        });
+    }
+    Ok(NetworkPlan { objective, layers, total_cycles, total_energy_uj })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::energy::EnergyModel;
+
+    fn planner() -> Planner {
+        Planner::new(&CgraConfig::default(), &EnergyModel::default()).unwrap()
+    }
+
+    #[test]
+    fn plans_every_layer_and_totals_add_up() {
+        let p = planner();
+        let net = ConvNet::random(3, 2, 5, 9, 9, 4);
+        let plan = plan_network(&p, &net, PlanObjective::Latency).unwrap();
+        assert_eq!(plan.layers.len(), 3);
+        let cycles: u64 = plan.layers.iter().map(|l| l.total_cycles()).sum();
+        assert_eq!(cycles, plan.total_cycles);
+        let uj: f64 = plan.layers.iter().map(|l| l.total_energy_uj()).sum();
+        assert!((uj - plan.total_energy_uj).abs() < 1e-9);
+        // ReLU charged on every layer but the last (ConvNet::random).
+        assert!(plan.layers[0].relu_cycles > 0);
+        assert_eq!(plan.layers[2].relu_cycles, 0);
+        assert!(plan.layers.iter().all(|l| !l.mapping.is_auto()));
+    }
+
+    #[test]
+    fn apply_writes_concrete_mappings_back() {
+        let p = planner();
+        let mut net = ConvNet::random(2, 2, 4, 8, 8, 9);
+        assert!(net.layers.iter().all(|l| l.mapping.is_auto()));
+        let plan = plan_network(&p, &net, PlanObjective::Energy).unwrap();
+        plan.apply(&mut net).unwrap();
+        assert_eq!(
+            net.layers.iter().map(|l| l.mapping).collect::<Vec<_>>(),
+            plan.mappings()
+        );
+    }
+
+    #[test]
+    fn objective_parsing() {
+        assert_eq!(PlanObjective::parse("Latency").unwrap(), PlanObjective::Latency);
+        assert_eq!(PlanObjective::parse("ENERGY").unwrap(), PlanObjective::Energy);
+        assert!(PlanObjective::parse("speed").is_err());
+        assert_eq!(PlanObjective::Latency.label(), "latency");
+    }
+}

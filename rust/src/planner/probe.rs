@@ -1,0 +1,174 @@
+//! Micro-probe calibration: simulate one or two representative launches
+//! per [`LaunchClass`](super::model::LaunchClass) and scale by the
+//! closed-form counts.
+//!
+//! Why this is sound: launch timing in this simulator is
+//! *data-independent* — every branch counter, address register and
+//! auto-increment is driven by immediates derived from the shape, never
+//! by tensor values — so a class representative executed against a
+//! zero-filled memory takes exactly the cycles the real launch takes.
+//! Members of a class can differ only in the bank alignment of their
+//! address immediates (a ±`bank_penalty` ripple on a minority of
+//! steps); probing the first and last member of each class and
+//! averaging bounds that residual well under the 5 % acceptance bar.
+//! Where the representatives *are* the whole class (small C/K, few
+//! pixels) the prediction is cycle-exact — the unit tests in
+//! `planner::tests` pin that down.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cgra::{decode, Cgra, Memory, RunStats};
+use crate::conv::{ConvShape, TensorChw};
+use crate::energy::EnergyModel;
+use crate::kernels::{ConvOutcome, LatencyBreakdown};
+use crate::metrics::MappingReport;
+
+use super::model::{KernelModel, LaunchClass};
+use super::CostEstimate;
+
+/// Measured cost of one launch class.
+struct ClassProbe {
+    /// Number of probe launches simulated (1–2).
+    n: u64,
+    /// Summed cycles over the probes.
+    cycles_sum: u64,
+    /// Summed `min(cycles, hidden_cap)` over the probes — the im2col
+    /// overlap term of the drivers.
+    hidden_sum: u64,
+    /// Per-launch statistics (steps, op mix, memory traffic) — identical
+    /// for every member of the class, taken from the first probe.
+    stats: RunStats,
+}
+
+/// `count × (sum / n)`, rounded to nearest, without u64 overflow.
+fn scale(count: u64, sum: u64, n: u64) -> u64 {
+    ((count as u128 * sum as u128 + n as u128 / 2) / n as u128) as u64
+}
+
+/// Accumulate `count` copies of a per-launch `RunStats` (everything but
+/// `cycles`, which the caller sets from the averaged probe cycles).
+fn merge_scaled(dst: &mut RunStats, src: &RunStats, count: u64) {
+    dst.steps += src.steps * count;
+    dst.contention_cycles += src.contention_cycles * count;
+    if dst.op_mix.len() < src.op_mix.len() {
+        dst.op_mix.resize(src.op_mix.len(), [0; crate::cgra::OpClass::COUNT]);
+    }
+    for (a, b) in dst.op_mix.iter_mut().zip(src.op_mix.iter()) {
+        for (x, y) in a.iter_mut().zip(b.iter()) {
+            *x += y * count;
+        }
+    }
+    dst.mem.loads += src.mem.loads * count;
+    dst.mem.stores += src.mem.stores * count;
+    dst.exited &= src.exited;
+}
+
+/// Run one class's representative launches against `mem`.
+fn probe_class(cgra: &Cgra, mem: &mut Memory, class: &LaunchClass, cap: u64) -> Result<ClassProbe> {
+    ensure!(!class.probes.is_empty(), "launch class '{}' has no probe", class.label);
+    let mut cycles_sum = 0u64;
+    let mut hidden_sum = 0u64;
+    let mut stats: Option<RunStats> = None;
+    for prog in &class.probes {
+        let s = cgra
+            .run_decoded(&decode(prog), mem)
+            .with_context(|| format!("planner probe '{}'", class.label))?;
+        cycles_sum += s.cycles;
+        hidden_sum += s.cycles.min(cap);
+        if stats.is_none() {
+            stats = Some(s);
+        }
+    }
+    Ok(ClassProbe { n: class.probes.len() as u64, cycles_sum, hidden_sum, stats: stats.unwrap() })
+}
+
+/// Calibrate `km`'s classes against the simulator and assemble the full
+/// cost estimate (latency breakdown, run statistics, metric row).
+pub(crate) fn assemble(
+    cgra: &Cgra,
+    emodel: &EnergyModel,
+    shape: &ConvShape,
+    km: KernelModel,
+) -> Result<CostEstimate> {
+    let cfg = cgra.config();
+    let mut stats = RunStats::new();
+    stats.exited = true;
+    let mut cgra_cycles = 0u64;
+    let mut hidden = 0u64;
+    let mut probe_launches = 0u64;
+    if !km.classes.is_empty() {
+        // One zeroed memory serves every probe: values never influence
+        // timing, and the probe programs only touch in-layout addresses.
+        let mut mem = Memory::new(cfg.mem_words, cfg.n_banks);
+        for class in &km.classes {
+            let p = probe_class(cgra, &mut mem, class, km.hidden_cap_per_launch)?;
+            cgra_cycles += scale(class.count, p.cycles_sum, p.n);
+            hidden += scale(class.count, p.hidden_sum, p.n);
+            merge_scaled(&mut stats, &p.stats, class.count);
+            probe_launches += p.n;
+        }
+    }
+    stats.cycles = cgra_cycles;
+    let latency = LatencyBreakdown {
+        cgra_cycles,
+        // Same charging as every kernel driver (the instruction-load
+        // term applies once per convolution, CGRA mappings only).
+        launch_cycles: if km.launches > 0 {
+            km.launches * cfg.launch_overhead + cfg.instruction_load_overhead
+        } else {
+            0
+        },
+        cpu_im2col_cycles: km.cpu_im2col_cycles,
+        cpu_hidden_cycles: hidden,
+        cpu_compute_cycles: km.cpu_compute_cycles,
+        launches: km.launches,
+    };
+    // A metric row is evaluated exactly like a simulated outcome's —
+    // same energy integration, same derived metrics — over the
+    // predicted breakdown and statistics. The output tensor is never
+    // materialized (this is the whole point of the planner).
+    let outcome = ConvOutcome {
+        mapping: km.mapping,
+        shape: *shape,
+        output: TensorChw::zeros(0, 0, 0),
+        latency,
+        cgra_stats: stats,
+        cpu_mem: km.cpu_mem,
+        footprint_bytes: km.footprint_bytes,
+    };
+    let report = MappingReport::from_outcome(&outcome, emodel);
+    Ok(CostEstimate { mapping: km.mapping, shape: *shape, latency, report, probe_launches })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_rounds_to_nearest_and_is_exact_on_full_coverage() {
+        // count == n: the probes ARE the class — exact sum.
+        assert_eq!(scale(2, 101 + 99, 2), 200);
+        // Averaging: 3 launches at (10+12)/2 each.
+        assert_eq!(scale(3, 22, 2), 33);
+        // Rounding to nearest.
+        assert_eq!(scale(1, 3, 2), 2); // 1.5 -> 2 (half away from zero)
+        // Intermediate products beyond u32 ranges stay exact (u128 math).
+        assert_eq!(scale(1 << 32, (1 << 20) + 2, 2), (1u64 << 51) + (1 << 32));
+    }
+
+    #[test]
+    fn merge_scaled_multiplies_everything() {
+        let mut a = RunStats::new();
+        a.exited = true;
+        let mut b = RunStats::new();
+        b.exited = true;
+        b.steps = 7;
+        b.mem.loads = 3;
+        b.op_mix[5][0] = 2;
+        merge_scaled(&mut a, &b, 4);
+        assert_eq!(a.steps, 28);
+        assert_eq!(a.mem.loads, 12);
+        assert_eq!(a.op_mix[5][0], 8);
+        assert!(a.exited);
+    }
+}

@@ -1,0 +1,305 @@
+//! Predicted-vs-simulated validation of the cost model.
+//!
+//! Runs a sweep grid through the engine (ground truth: the decoded
+//! simulator, cache-assisted) and the planner (cost model only), and
+//! reports per-point and aggregate error. This is the calibration
+//! protocol of DESIGN.md §6 and the `cgra plan --validate` CLI path;
+//! CI runs it on [`SweepSpec::validation`] and fails the build when the
+//! mean absolute latency error exceeds the checked-in bound (the
+//! tentpole's ≤ 5 % acceptance criterion).
+
+use anyhow::Result;
+
+use crate::conv::ConvShape;
+use crate::coordinator::sweep::SweepSpec;
+use crate::engine::Engine;
+use crate::kernels::Mapping;
+use crate::util::fmt::Table;
+use crate::util::Json;
+
+/// One validated point.
+#[derive(Clone, Debug)]
+pub struct ValidationRow {
+    /// Varied sweep axis label (`C` / `K` / `OxOy`).
+    pub axis: &'static str,
+    /// Axis value.
+    pub value: usize,
+    /// The concrete mapping compared.
+    pub mapping: Mapping,
+    /// Full layer shape.
+    pub shape: ConvShape,
+    /// Ground-truth cycles from the decoded simulator.
+    pub simulated_cycles: u64,
+    /// Cost-model cycles.
+    pub predicted_cycles: u64,
+    /// Signed latency error, percent of the simulated value.
+    pub latency_err_pct: f64,
+    /// Ground-truth energy, µJ.
+    pub simulated_uj: f64,
+    /// Cost-model energy, µJ.
+    pub predicted_uj: f64,
+    /// Signed energy error, percent.
+    pub energy_err_pct: f64,
+}
+
+/// Aggregate validation results.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    /// Every compared point.
+    pub rows: Vec<ValidationRow>,
+    /// Points both sides refuse (memory bound) — expected skips.
+    pub skipped: usize,
+    /// Points where simulator and planner disagree on feasibility
+    /// (must be 0: both consult the same layout bounds).
+    pub bound_mismatches: usize,
+    /// One line per feasibility mismatch naming the point, the side
+    /// that disagreed and why — so the CI hard gate is debuggable from
+    /// the log alone.
+    pub mismatch_details: Vec<String>,
+    /// Mean of |latency error| over the rows, percent.
+    pub mean_abs_latency_err_pct: f64,
+    /// Worst |latency error|, percent.
+    pub max_abs_latency_err_pct: f64,
+    /// Mean of |energy error|, percent.
+    pub mean_abs_energy_err_pct: f64,
+    /// Worst |energy error|, percent.
+    pub max_abs_energy_err_pct: f64,
+    /// Probe launches the planner simulated to calibrate, in total.
+    pub probe_launches: u64,
+    /// Launches the ground-truth simulations executed, in total.
+    pub simulated_launches: u64,
+}
+
+/// Validate the planner against the simulator over `spec`'s grid.
+///
+/// `Mapping::Auto` points are resolved through the same static policy
+/// the sweep uses, so both sides compare the identical concrete kernel.
+pub fn validate(engine: &Engine, spec: &SweepSpec) -> Result<ValidationReport> {
+    let sweep_rows = engine.sweep(spec)?;
+    let planner = engine.planner();
+    let probes_before = planner.stats().probe_launches;
+    let mut rows = Vec::new();
+    let mut skipped = 0usize;
+    let mut mismatch_details: Vec<String> = Vec::new();
+    let mut simulated_launches = 0u64;
+    for r in &sweep_rows {
+        let mapping = match r.point.mapping.resolve(&r.point.shape, engine.config()) {
+            Ok((m, _reason)) => m,
+            // Auto past the bound: the sweep recorded a skip; the
+            // planner refuses too — counted below via the Err arm.
+            Err(_) => r.point.mapping,
+        };
+        let est = if mapping.is_auto() {
+            Err(anyhow::anyhow!("unresolvable Auto point"))
+        } else {
+            planner.estimate(&r.point.shape, mapping)
+        };
+        match (&r.report, est) {
+            (Some(sim), Ok(est)) => {
+                simulated_launches += sim.launches;
+                let (sc, pc) = (sim.latency_cycles, est.cycles());
+                let latency_err_pct =
+                    (pc as f64 - sc as f64) / sc.max(1) as f64 * 100.0;
+                let energy_err_pct =
+                    (est.energy_uj() - sim.energy_uj) / sim.energy_uj * 100.0;
+                rows.push(ValidationRow {
+                    axis: r.point.axis.label(),
+                    value: r.point.value,
+                    mapping,
+                    shape: r.point.shape,
+                    simulated_cycles: sc,
+                    predicted_cycles: pc,
+                    latency_err_pct,
+                    simulated_uj: sim.energy_uj,
+                    predicted_uj: est.energy_uj(),
+                    energy_err_pct,
+                });
+            }
+            (None, Err(_)) => skipped += 1,
+            (Some(_), Err(e)) => mismatch_details.push(format!(
+                "{}={} {} ({}): simulator produced a row but the planner refused: {e:#}",
+                r.point.axis.label(),
+                r.point.value,
+                mapping,
+                r.point.shape,
+            )),
+            (None, Ok(_)) => mismatch_details.push(format!(
+                "{}={} {} ({}): planner produced an estimate but the simulator skipped: {}",
+                r.point.axis.label(),
+                r.point.value,
+                mapping,
+                r.point.shape,
+                r.skipped.as_deref().unwrap_or("no reason recorded"),
+            )),
+        }
+    }
+    let n = rows.len().max(1) as f64;
+    let mean_lat = rows.iter().map(|r| r.latency_err_pct.abs()).sum::<f64>() / n;
+    let max_lat = rows.iter().map(|r| r.latency_err_pct.abs()).fold(0.0f64, f64::max);
+    let mean_e = rows.iter().map(|r| r.energy_err_pct.abs()).sum::<f64>() / n;
+    let max_e = rows.iter().map(|r| r.energy_err_pct.abs()).fold(0.0f64, f64::max);
+    Ok(ValidationReport {
+        mean_abs_latency_err_pct: mean_lat,
+        max_abs_latency_err_pct: max_lat,
+        mean_abs_energy_err_pct: mean_e,
+        max_abs_energy_err_pct: max_e,
+        probe_launches: planner.stats().probe_launches - probes_before,
+        simulated_launches,
+        rows,
+        skipped,
+        bound_mismatches: mismatch_details.len(),
+        mismatch_details,
+    })
+}
+
+impl ValidationReport {
+    /// The per-point comparison as a table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "axis",
+            "value",
+            "mapping",
+            "sim_cycles",
+            "pred_cycles",
+            "lat_err%",
+            "sim_uJ",
+            "pred_uJ",
+            "energy_err%",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.axis.into(),
+                r.value.to_string(),
+                r.mapping.label().into(),
+                r.simulated_cycles.to_string(),
+                r.predicted_cycles.to_string(),
+                format!("{:+.3}", r.latency_err_pct),
+                format!("{:.3}", r.simulated_uj),
+                format!("{:.3}", r.predicted_uj),
+                format!("{:+.3}", r.energy_err_pct),
+            ]);
+        }
+        t
+    }
+
+    /// Human-readable report: table + aggregate summary.
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "Planner validation — cost model vs decoded simulator\n\
+             (per point: predicted closed-form+probe cost vs full simulation)\n\n",
+        );
+        out.push_str(&self.table().render());
+        out.push_str(&format!(
+            "\n{} points compared, {} skipped (memory bound), {} feasibility mismatches\n\
+             latency: mean |err| {:.3}%  max |err| {:.3}%\n\
+             energy:  mean |err| {:.3}%  max |err| {:.3}%\n\
+             calibration: {} probe launches vs {} simulated launches ({}x fewer)\n",
+            self.rows.len(),
+            self.skipped,
+            self.bound_mismatches,
+            self.mean_abs_latency_err_pct,
+            self.max_abs_latency_err_pct,
+            self.mean_abs_energy_err_pct,
+            self.max_abs_energy_err_pct,
+            self.probe_launches,
+            self.simulated_launches,
+            self.simulated_launches / self.probe_launches.max(1),
+        ));
+        for m in &self.mismatch_details {
+            out.push_str(&format!("MISMATCH: {m}\n"));
+        }
+        out
+    }
+
+    /// JSON form (persisted by `cgra plan --validate --out DIR`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("points", (self.rows.len() as u64).into()),
+            ("skipped", (self.skipped as u64).into()),
+            ("bound_mismatches", (self.bound_mismatches as u64).into()),
+            (
+                "mismatch_details",
+                Json::Arr(self.mismatch_details.iter().map(|m| m.clone().into()).collect()),
+            ),
+            ("mean_abs_latency_err_pct", self.mean_abs_latency_err_pct.into()),
+            ("max_abs_latency_err_pct", self.max_abs_latency_err_pct.into()),
+            ("mean_abs_energy_err_pct", self.mean_abs_energy_err_pct.into()),
+            ("max_abs_energy_err_pct", self.max_abs_energy_err_pct.into()),
+            ("probe_launches", self.probe_launches.into()),
+            ("simulated_launches", self.simulated_launches.into()),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("axis", r.axis.into()),
+                                ("value", (r.value as u64).into()),
+                                ("mapping", r.mapping.label().into()),
+                                ("shape", r.shape.id().into()),
+                                ("simulated_cycles", r.simulated_cycles.into()),
+                                ("predicted_cycles", r.predicted_cycles.into()),
+                                ("latency_err_pct", r.latency_err_pct.into()),
+                                ("simulated_uj", r.simulated_uj.into()),
+                                ("predicted_uj", r.predicted_uj.into()),
+                                ("energy_err_pct", r.energy_err_pct.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+
+    /// A two-point grid end to end: CPU rows are closed-form exact, WP
+    /// rows probe-calibrated; the report renders and serializes.
+    #[test]
+    fn tiny_grid_validates_exactly_for_cpu_and_tightly_for_wp() {
+        let engine = EngineBuilder::new().workers(2).private_cache().build().unwrap();
+        let spec = SweepSpec {
+            c_values: vec![2],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp, Mapping::Cpu],
+            mag: 6,
+            seed: 5,
+        };
+        let report = validate(&engine, &spec).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.bound_mismatches, 0);
+        let cpu = report.rows.iter().find(|r| r.mapping == Mapping::Cpu).unwrap();
+        assert_eq!(cpu.latency_err_pct, 0.0, "CPU baseline is closed form");
+        let wp = report.rows.iter().find(|r| r.mapping == Mapping::Wp).unwrap();
+        assert!(wp.latency_err_pct.abs() <= 5.0, "WP err {}%", wp.latency_err_pct);
+        let text = report.render();
+        assert!(text.contains("mean |err|"));
+        let json = report.to_json();
+        assert_eq!(json.req("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// Memory-bound points must be refused by both sides.
+    #[test]
+    fn over_bound_points_skip_on_both_sides() {
+        let engine = EngineBuilder::new().workers(1).private_cache().build().unwrap();
+        let spec = SweepSpec {
+            c_values: vec![],
+            k_values: vec![],
+            spatial_values: vec![64],
+            mappings: vec![Mapping::Ip],
+            mag: 4,
+            seed: 6,
+        };
+        // Ox=Oy=64 at C=K=16: the IP aux buffers blow the 512 KiB bound
+        // (the paper's sweep skips this point too).
+        let report = validate(&engine, &spec).unwrap();
+        assert_eq!(report.bound_mismatches, 0);
+        assert_eq!(report.rows.len() + report.skipped, 1);
+    }
+}

@@ -163,6 +163,24 @@ pub fn fig5(engine: &Engine, spec: &SweepSpec) -> Result<Figure> {
     Ok(Figure { id: "fig5".into(), text, csv: table.to_csv() })
 }
 
+/// **Planner validation** — predicted-vs-simulated comparison of the
+/// analytical cost model over a sweep grid, packaged as a persistable
+/// [`Figure`] (id `planner`) alongside the raw
+/// [`crate::planner::ValidationReport`]. `cgra plan --validate` prints
+/// and saves it; CI gates on the report's mean absolute latency error.
+pub fn planner_fig(
+    engine: &Engine,
+    spec: &SweepSpec,
+) -> Result<(Figure, crate::planner::ValidationReport)> {
+    let report = crate::planner::validate(engine, spec)?;
+    let figure = Figure {
+        id: "planner".into(),
+        text: report.render(),
+        csv: report.table().to_csv(),
+    };
+    Ok((figure, report))
+}
+
 /// Summarize the paper's §3.2 claims against the sweep rows.
 fn findings(rows: &[SweepRow]) -> String {
     let mut out = String::from("\nfindings vs paper §3.2:\n");
@@ -276,6 +294,25 @@ mod tests {
         assert!(f.text.contains("findings"));
         assert!(f.text.contains("WP is the best mapping"));
         assert!(f.text.contains("=17"));
+    }
+
+    #[test]
+    fn planner_fig_renders_and_reports() {
+        let spec = SweepSpec {
+            c_values: vec![2],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Wp, Mapping::Cpu],
+            mag: 8,
+            seed: 3,
+        };
+        let engine = EngineBuilder::new().workers(2).private_cache().build().unwrap();
+        let (fig, report) = planner_fig(&engine, &spec).unwrap();
+        assert_eq!(fig.id, "planner");
+        assert!(fig.text.contains("mean |err|"));
+        assert!(fig.csv.contains("pred_cycles"));
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.bound_mismatches, 0);
     }
 
     /// The deprecated wrapper matches the engine path row for row.

@@ -145,6 +145,72 @@ fn cache_hit_flags_on_repeat_submission() {
     assert_eq!(second.auto.unwrap().mapping, first.auto.unwrap().mapping);
 }
 
+/// Cached and freshly simulated results report identical host-ReLU
+/// accounting: the `RELU_CYCLES_PER_ELEM` path in `engine::submit` runs
+/// after cache resolution, so a hit's golden-reconstructed output must
+/// be clamped and charged exactly like the simulated one.
+#[test]
+fn cached_and_fresh_results_share_relu_accounting() {
+    let engine = private_engine(2);
+    let shape = ConvShape::new3x3(3, 2, 4, 4);
+    let req = ConvRequest::seeded(shape, Mapping::Wp, 5).relu(true);
+    let fresh = engine.submit(&req).unwrap();
+    let cached = engine.submit(&req).unwrap();
+    assert!(!fresh.cache_hit && cached.cache_hit, "second submission must hit");
+    assert_eq!(fresh.relu_cycles, cached.relu_cycles);
+    assert_eq!(fresh.relu_cycles, 3 * shape.output_elems() as u64);
+    assert_eq!(fresh.relu_energy_uj.to_bits(), cached.relu_energy_uj.to_bits());
+    assert_eq!(fresh.total_cycles(), cached.total_cycles());
+    assert_eq!(fresh.total_energy_uj().to_bits(), cached.total_energy_uj().to_bits());
+    assert_eq!(fresh.output.data, cached.output.data);
+    assert!(fresh.output.data.iter().all(|&v| v >= 0), "ReLU applied on both paths");
+    // The convolution row itself excludes the ReLU on both paths.
+    assert_eq!(fresh.report.latency_cycles, cached.report.latency_cycles);
+}
+
+/// `CacheStats` counters stay coherent under concurrent `submit_batch`
+/// traffic with duplicate keys and a cached skip: every lookup is
+/// counted, entries dedup, and the second pass is served entirely from
+/// the cache (including the memory-bound skip).
+#[test]
+fn cache_stats_under_concurrent_batches() {
+    let engine = private_engine(8);
+    let shapes: Vec<ConvShape> = (1..=6).map(|i| ConvShape::new3x3(i, 2, 3, 3)).collect();
+    let mut reqs: Vec<ConvRequest> = Vec::new();
+    for _ in 0..3 {
+        reqs.extend(shapes.iter().map(|&s| ConvRequest::seeded(s, Mapping::Wp, 99)));
+    }
+    // One oversized request: the error is cached as a skip entry.
+    reqs.push(ConvRequest::seeded(ConvShape::new3x3(16, 16, 64, 64), Mapping::Wp, 99));
+    let first = engine.submit_batch(&reqs);
+    assert_eq!(first.iter().filter(|r| r.is_err()).count(), 1);
+    let s = engine.cache_stats();
+    // 6 unique points + 1 skip resident; duplicate keys racing through
+    // the pool may each miss (check-then-insert), but inserts dedup.
+    assert_eq!(s.entries, 7);
+    assert_eq!(s.hits + s.misses, reqs.len() as u64, "every lookup is counted");
+    assert!(s.misses >= 7, "at least one miss per unique key, got {}", s.misses);
+    assert_eq!(s.evictions, 0);
+    // Second identical batch: all 19 lookups hit, nothing new resident.
+    let second = engine.submit_batch(&reqs);
+    assert_eq!(second.iter().filter(|r| r.is_err()).count(), 1);
+    let s2 = engine.cache_stats();
+    assert_eq!(s2.entries, 7);
+    assert_eq!(s2.hits, s.hits + reqs.len() as u64);
+    assert_eq!(s2.misses, s.misses);
+    // Hit results are bit-identical to the originals.
+    for (a, b) in first.iter().zip(second.iter()) {
+        match (a, b) {
+            (Ok(x), Ok(y)) => {
+                assert!(y.cache_hit);
+                assert_eq!(x.report.latency_cycles, y.report.latency_cycles);
+            }
+            (Err(x), Err(y)) => assert_eq!(format!("{x:#}"), format!("{y:#}")),
+            _ => panic!("outcome flipped between passes"),
+        }
+    }
+}
+
 /// Engines with different configs never share cache entries even when
 /// they share one cache (the config fingerprint is part of the key).
 #[test]

@@ -9,9 +9,9 @@ build:
 test:
 	cargo test -q --workspace
 
-# All six bench targets (the figure generators + engine batching).
-# BENCH_WARMUP / BENCH_SAMPLES env vars trade accuracy for speed (see
-# benchkit).
+# All bench targets (the figure generators, engine batching, planner
+# vs sim, network throughput). BENCH_WARMUP / BENCH_SAMPLES env vars
+# trade accuracy for speed (see benchkit).
 bench:
 	cargo bench --workspace
 

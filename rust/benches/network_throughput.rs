@@ -1,0 +1,67 @@
+//! Bench: end-to-end network throughput through the `nn` layer-graph
+//! subsystem, in layers per second — how fast the stack can move a
+//! MobileNet-style edge network through the simulated CGRA.
+//!
+//! Three measurements over the same preset:
+//!
+//!   1. sequential execution (`nn::run_network` with a 1-thread pool —
+//!      every group submission serialized),
+//!   2. batched execution (default worker pool — grouped layers fan
+//!      their independent per-group convolutions over the workers),
+//!   3. plan-only (`nn::plan_network` — the analytical cost model
+//!      prices every layer, nothing is simulated; cache-hot after the
+//!      first call thanks to the planner memo).
+//!
+//! `cargo bench --bench network_throughput`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::coordinator::default_workers;
+use openedge_cgra::engine::EngineBuilder;
+use openedge_cgra::nn;
+use openedge_cgra::planner::PlanObjective;
+
+fn main() {
+    let preset = "mobilenet-mini";
+    let net = nn::build_preset(preset, 7).expect("preset");
+    let input = net.random_input(8, 7);
+    let n_layers = net.layers.len() as f64;
+    println!(
+        "network '{preset}': {} layers, {} true MACs, {} workers\n",
+        net.layers.len(),
+        net.macs(),
+        default_workers()
+    );
+
+    let b = Bench::new(1, 5);
+
+    // 1. Sequential: one worker, group submissions serialized.
+    let seq_engine = EngineBuilder::new().workers(1).private_cache().build().expect("engine");
+    let seq = b.run("run_network (sequential)", Some(n_layers), || {
+        nn::run_network(&seq_engine, &net, &input).expect("run")
+    });
+
+    // 2. Batched: the default pool fans grouped layers out.
+    let pool_engine = EngineBuilder::new()
+        .workers(default_workers())
+        .private_cache()
+        .build()
+        .expect("engine");
+    let batched = b.run("run_network (batched)", Some(n_layers), || {
+        nn::run_network(&pool_engine, &net, &input).expect("run")
+    });
+
+    // 3. Plan-only: the cost model instead of the simulator.
+    let planned = b.run("plan_network (plan-only)", Some(n_layers), || {
+        nn::plan_network(pool_engine.planner(), &net, PlanObjective::Latency).expect("plan")
+    });
+
+    println!(
+        "\nbatched vs sequential: {:.2}x layers/s ({:.1} -> {:.1}); \
+         plan-only serves {:.0} layers/s ({:.0}x over simulating)",
+        seq.median() / batched.median(),
+        n_layers / seq.median(),
+        n_layers / batched.median(),
+        n_layers / planned.median(),
+        batched.median() / planned.median(),
+    );
+}

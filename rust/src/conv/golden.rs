@@ -1,7 +1,10 @@
 //! Golden direct convolution — the bit-exact functional reference every
-//! mapping kernel and the XLA artifact are checked against.
+//! mapping kernel and the XLA artifact are checked against — plus its
+//! stride/padding/groups generalization ([`conv2d_general`]) and the
+//! depthwise special case ([`depthwise2d`]) the `nn` subsystem and the
+//! `Dw-WP` kernel are checked against.
 
-use super::shape::ConvShape;
+use super::shape::{ConvShape, GenConvShape};
 use super::tensor::{TensorChw, Weights};
 
 /// Direct 2-D convolution (valid padding, stride 1, groups 1), wrapping
@@ -31,6 +34,94 @@ pub fn conv2d(shape: &ConvShape, input: &TensorChw, weights: &Weights) -> Tensor
                     }
                 }
                 out.set(k, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Generalized direct convolution: stride, symmetric zero padding and
+/// channel groups, wrapping int32 — the functional reference of the
+/// `nn` subsystem. Input CHW `(C, ih, iw)`, weights `(K, C/groups, Fy,
+/// Fx)`, output CHW `(K, Ox, Oy)`.
+///
+/// On a stride-1 / pad-0 / groups-1 / 3×3 shape this loop nest walks
+/// exactly the same (k, y, x, c, fy, fx) order as [`conv2d`] with the
+/// same wrapping arithmetic, so the results are bit-identical (pinned
+/// by `stride1_pad0_groups1_is_bit_identical_to_conv2d` below).
+pub fn conv2d_general(shape: &GenConvShape, input: &TensorChw, weights: &Weights) -> TensorChw {
+    assert_eq!(input.c, shape.c, "input channel mismatch");
+    assert_eq!(input.h, shape.ih, "input height mismatch");
+    assert_eq!(input.w, shape.iw, "input width mismatch");
+    assert_eq!(weights.k, shape.k);
+    assert_eq!(weights.c, shape.c_per_group(), "weights must hold C/groups channels");
+    assert_eq!(weights.fy, shape.fx, "weights fy must equal shape fx (rows)");
+    assert_eq!(weights.fx, shape.fy, "weights fx must equal shape fy (cols)");
+
+    let (ox, oy) = (shape.ox(), shape.oy());
+    let (cg, kg) = (shape.c_per_group(), shape.k_per_group());
+    let (s, p) = (shape.stride, shape.pad as isize);
+    let mut out = TensorChw::zeros(shape.k, ox, oy);
+    for k in 0..shape.k {
+        let group = k / kg;
+        for y in 0..ox {
+            for x in 0..oy {
+                let mut acc: i32 = 0;
+                for c in 0..cg {
+                    for fy in 0..shape.fx {
+                        for fx in 0..shape.fy {
+                            let iy = (y * s + fy) as isize - p;
+                            let ix = (x * s + fx) as isize - p;
+                            // Zero padding: out-of-bounds taps add 0.
+                            if iy < 0
+                                || ix < 0
+                                || iy >= shape.ih as isize
+                                || ix >= shape.iw as isize
+                            {
+                                continue;
+                            }
+                            let iv = input.at(group * cg + c, iy as usize, ix as usize);
+                            let wv = weights.at(k, c, fy, fx);
+                            acc = acc.wrapping_add(iv.wrapping_mul(wv));
+                        }
+                    }
+                }
+                out.set(k, y, x, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Golden depthwise convolution (stride 1, valid padding): channel `c`
+/// of the output is channel `c` of the input convolved with filter `c`
+/// — the functional reference of the `Dw-WP` kernel. `shape` uses the
+/// depthwise convention `k == c`; weights are `(C, 1, Fy, Fx)`.
+/// Strided/padded depthwise layers are handled by the `nn` lowering
+/// (pad the input, decimate the output) around this stride-1 core.
+pub fn depthwise2d(shape: &ConvShape, input: &TensorChw, weights: &Weights) -> TensorChw {
+    assert_eq!(shape.k, shape.c, "depthwise convention: K == C");
+    assert_eq!(input.c, shape.c, "input channel mismatch");
+    assert_eq!(input.h, shape.ih(), "input height mismatch");
+    assert_eq!(input.w, shape.iw(), "input width mismatch");
+    assert_eq!(weights.k, shape.c);
+    assert_eq!(weights.c, 1, "depthwise weights hold one channel per filter");
+    assert_eq!(weights.fy, shape.fx);
+    assert_eq!(weights.fx, shape.fy);
+
+    let mut out = TensorChw::zeros(shape.k, shape.ox, shape.oy);
+    for c in 0..shape.c {
+        for y in 0..shape.ox {
+            for x in 0..shape.oy {
+                let mut acc: i32 = 0;
+                for fy in 0..shape.fx {
+                    for fx in 0..shape.fy {
+                        let iv = input.at(c, y + fy, x + fx);
+                        let wv = weights.at(c, 0, fy, fx);
+                        acc = acc.wrapping_add(iv.wrapping_mul(wv));
+                    }
+                }
+                out.set(c, y, x, acc);
             }
         }
     }
@@ -120,5 +211,115 @@ mod tests {
         let input = TensorChw::zeros(1, 4, 5); // wrong height
         let w = Weights::zeros(1, 1, 3, 3);
         let _ = conv2d(&s, &input, &w);
+    }
+
+    /// The generalized model degenerates to the paper's golden model
+    /// bit for bit on stride-1 / pad-0 / groups-1 shapes (the key
+    /// regression of the generalization).
+    #[test]
+    fn stride1_pad0_groups1_is_bit_identical_to_conv2d() {
+        let basic = ConvShape::new3x3(3, 4, 5, 6);
+        let gen = GenConvShape::from_basic(&basic);
+        let mut rng = Rng::new(17);
+        let input = TensorChw::random(basic.c, basic.ih(), basic.iw(), 80, &mut rng);
+        let weights = Weights::random(basic.k, basic.c, 3, 3, 11, &mut rng);
+        let a = conv2d(&basic, &input, &weights);
+        let b = conv2d_general(&gen, &input, &weights);
+        assert_eq!(a, b);
+    }
+
+    /// Stride-s output is the stride-1 output sampled every s pixels
+    /// (same filter, same data) — the decimation identity the nn
+    /// lowering relies on.
+    #[test]
+    fn strided_output_is_decimated_stride1_output() {
+        let mut rng = Rng::new(23);
+        let s1 = GenConvShape::new(2, 3, 9, 11, 3, 3, 1, 0, 1).unwrap();
+        let s2 = GenConvShape { stride: 2, ..s1 };
+        let input = TensorChw::random(2, 9, 11, 50, &mut rng);
+        let w = Weights::random(3, 2, 3, 3, 9, &mut rng);
+        let full = conv2d_general(&s1, &input, &w);
+        let dec = conv2d_general(&s2, &input, &w);
+        for k in 0..3 {
+            for y in 0..s2.ox() {
+                for x in 0..s2.oy() {
+                    assert_eq!(dec.at(k, y, x), full.at(k, 2 * y, 2 * x));
+                }
+            }
+        }
+    }
+
+    /// Padding by p equals convolving an explicitly zero-bordered input
+    /// with no padding.
+    #[test]
+    fn padding_equals_explicit_zero_border() {
+        let mut rng = Rng::new(29);
+        let padded = GenConvShape::new(2, 2, 6, 7, 3, 3, 1, 1, 1).unwrap();
+        let input = TensorChw::random(2, 6, 7, 40, &mut rng);
+        let w = Weights::random(2, 2, 3, 3, 7, &mut rng);
+        // Embed into an 8x9 zero tensor.
+        let mut big = TensorChw::zeros(2, 8, 9);
+        for c in 0..2 {
+            for y in 0..6 {
+                for x in 0..7 {
+                    big.set(c, y + 1, x + 1, input.at(c, y, x));
+                }
+            }
+        }
+        let valid = GenConvShape::new(2, 2, 8, 9, 3, 3, 1, 0, 1).unwrap();
+        let a = conv2d_general(&padded, &input, &w);
+        let b = conv2d_general(&valid, &big, &w);
+        assert_eq!(a, b);
+    }
+
+    /// A grouped conv is the channel-concatenation of per-group dense
+    /// convs over the corresponding input slices.
+    #[test]
+    fn grouped_conv_is_concatenated_group_convs() {
+        let mut rng = Rng::new(31);
+        let g = GenConvShape::new(4, 6, 6, 6, 3, 3, 1, 0, 2).unwrap();
+        let input = TensorChw::random(4, 6, 6, 30, &mut rng);
+        let w = Weights::random(6, 2, 3, 3, 9, &mut rng); // C/groups = 2
+        let whole = conv2d_general(&g, &input, &w);
+        for group in 0..2usize {
+            let sub = GenConvShape::new(2, 3, 6, 6, 3, 3, 1, 0, 1).unwrap();
+            let in_slice = TensorChw::from_vec(
+                2,
+                6,
+                6,
+                input.data[group * 2 * 36..(group + 1) * 2 * 36].to_vec(),
+            );
+            let w_slice = Weights::from_vec(
+                3,
+                2,
+                3,
+                3,
+                w.data[group * 3 * 18..(group + 1) * 3 * 18].to_vec(),
+            );
+            let part = conv2d_general(&sub, &in_slice, &w_slice);
+            let out_base = group * 3 * whole.h * whole.w;
+            assert_eq!(
+                &whole.data[out_base..out_base + part.data.len()],
+                &part.data[..],
+                "group {group}"
+            );
+        }
+    }
+
+    /// Depthwise is the groups = C special case of the generalized
+    /// model.
+    #[test]
+    fn depthwise_equals_grouped_conv_with_groups_c() {
+        let mut rng = Rng::new(37);
+        let basic = ConvShape::new3x3(5, 5, 4, 6);
+        let gen = GenConvShape {
+            groups: 5,
+            ..GenConvShape::from_basic(&basic)
+        };
+        let input = TensorChw::random(5, 6, 8, 45, &mut rng);
+        let w = Weights::random(5, 1, 3, 3, 9, &mut rng);
+        let via_groups = conv2d_general(&gen, &input, &w);
+        let via_depthwise = depthwise2d(&basic, &input, &w);
+        assert_eq!(via_groups, via_depthwise);
     }
 }

@@ -7,7 +7,7 @@
 //! `(fy, fx, c)` — consecutive channels innermost — which makes each
 //! patch a gather of `Fx·Fy` contiguous C-element runs.
 
-use super::shape::ConvShape;
+use super::shape::{ConvShape, GenConvShape};
 use super::tensor::TensorHwc;
 
 /// Number of elements in one im2col patch vector: C × Fx × Fy.
@@ -80,6 +80,83 @@ pub fn conv2d_im2col(shape: &ConvShape, input: &TensorHwc, w_matrix: &[i32]) -> 
     out
 }
 
+/// Patch length of one generalized im2col vector: `C/groups × Fx × Fy`
+/// (a grouped layer's reorder buffer only stages its own group's
+/// channels).
+pub fn patch_len_general(shape: &GenConvShape) -> usize {
+    shape.c_per_group() * shape.fx * shape.fy
+}
+
+/// Generalized im2col patch: gather the window of output pixel
+/// `(oy_row, ox_col)` of `group` under stride/padding into `out`
+/// (length [`patch_len_general`]), same `(fy, fx, c)` order as
+/// [`im2col_patch`]. Taps that fall into the zero padding write zeros.
+/// Returns the CPU element copies performed (= patch length — padding
+/// zeros are stores too).
+pub fn im2col_patch_general(
+    shape: &GenConvShape,
+    input: &TensorHwc,
+    group: usize,
+    oy_row: usize,
+    ox_col: usize,
+    out: &mut [i32],
+) -> usize {
+    assert_eq!(out.len(), patch_len_general(shape));
+    let cg = shape.c_per_group();
+    let (s, p) = (shape.stride, shape.pad as isize);
+    let mut idx = 0;
+    for fy in 0..shape.fx {
+        for fx in 0..shape.fy {
+            let iy = (oy_row * s + fy) as isize - p;
+            let ix = (ox_col * s + fx) as isize - p;
+            if iy < 0 || ix < 0 || iy >= input.h as isize || ix >= input.w as isize {
+                out[idx..idx + cg].fill(0);
+            } else {
+                let base = input.offset(iy as usize, ix as usize, group * cg);
+                out[idx..idx + cg].copy_from_slice(&input.data[base..base + cg]);
+            }
+            idx += cg;
+        }
+    }
+    idx
+}
+
+/// Golden generalized im2col convolution: per group, im2col matrix ×
+/// weight matrix, wrapping int32. `w_matrix` is the whole layer's
+/// im2col weight matrix (`K` rows of [`patch_len_general`] columns, as
+/// produced by `Weights::to_im2col_matrix` on `(K, C/groups, Fy, Fx)`
+/// weights). Output is CHW-ordered `(K, Ox, Oy)` flattened, matching
+/// [`super::golden::conv2d_general`].
+pub fn conv2d_im2col_general(
+    shape: &GenConvShape,
+    input: &TensorHwc,
+    w_matrix: &[i32],
+) -> Vec<i32> {
+    let pl = patch_len_general(shape);
+    assert_eq!(w_matrix.len(), shape.k * pl);
+    let (ox, oy) = (shape.ox(), shape.oy());
+    let n_pix = ox * oy;
+    let kg = shape.k_per_group();
+    let mut patch = vec![0i32; pl];
+    let mut out = vec![0i32; shape.k * n_pix];
+    for group in 0..shape.groups {
+        for y in 0..ox {
+            for x in 0..oy {
+                im2col_patch_general(shape, input, group, y, x, &mut patch);
+                for k in group * kg..(group + 1) * kg {
+                    let wrow = &w_matrix[k * pl..(k + 1) * pl];
+                    let mut acc = 0i32;
+                    for i in 0..pl {
+                        acc = acc.wrapping_add(patch[i].wrapping_mul(wrow[i]));
+                    }
+                    out[k * n_pix + y * oy + x] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +210,45 @@ mod tests {
         let mut patch = vec![0; patch_len(&s)];
         let copied = im2col_patch(&s, &input, 0, 0, &mut patch);
         assert_eq!(copied, 36);
+    }
+
+    /// The generalized patch agrees with the basic one on stride-1 /
+    /// pad-0 / groups-1 shapes, and pads with zeros otherwise.
+    #[test]
+    fn general_patch_degenerates_and_zero_pads() {
+        let basic = ConvShape::new3x3(2, 1, 2, 2);
+        let gen = crate::conv::GenConvShape::from_basic(&basic);
+        let mut input = TensorHwc::zeros(4, 4, 2);
+        for i in 0..input.data.len() {
+            input.data[i] = i as i32 + 1;
+        }
+        let mut a = vec![0; patch_len(&basic)];
+        let mut b = vec![0; patch_len_general(&gen)];
+        im2col_patch(&basic, &input, 1, 1, &mut a);
+        im2col_patch_general(&gen, &input, 0, 1, 1, &mut b);
+        assert_eq!(a, b);
+        // With pad 1, the (0,0) patch's first row/col taps are zeros.
+        let padded = crate::conv::GenConvShape { pad: 1, ..gen };
+        let mut p = vec![-1; patch_len_general(&padded)];
+        im2col_patch_general(&padded, &input, 0, 0, 0, &mut p);
+        // fy=0 row (3 taps x 2 channels) and the fx=0 taps are zero.
+        assert_eq!(&p[..6], &[0; 6]);
+        assert_eq!(&p[6..8], &[0, 0]); // (fy=1, fx=0)
+        assert_eq!(p[8], input.at(0, 0, 0));
+    }
+
+    /// Generalized im2col matmul ≡ generalized direct convolution over
+    /// a strided + padded + grouped shape.
+    #[test]
+    fn general_im2col_matches_general_direct() {
+        use crate::conv::golden::conv2d_general;
+        use crate::conv::{TensorChw, Weights};
+        let shape = crate::conv::GenConvShape::new(4, 6, 9, 8, 3, 3, 2, 1, 2).unwrap();
+        let mut rng = Rng::new(44);
+        let input = TensorChw::random(shape.c, shape.ih, shape.iw, 50, &mut rng);
+        let weights = Weights::random(shape.k, shape.c_per_group(), 3, 3, 9, &mut rng);
+        let direct = conv2d_general(&shape, &input, &weights);
+        let via = conv2d_im2col_general(&shape, &input.to_hwc(), &weights.to_im2col_matrix());
+        assert_eq!(direct.data, via);
     }
 }

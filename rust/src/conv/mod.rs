@@ -1,11 +1,19 @@
-//! Convolution substrate: shapes, tensors/layouts, golden models, im2col.
+//! Convolution substrate: shapes, tensors/layouts, golden models, im2col
+//! — both the paper's stride-1/valid/groups-1 fast path and the
+//! generalized (stride / padding / groups / depthwise) forms the `nn`
+//! subsystem lowers from.
 
 mod golden;
 mod im2col;
 mod shape;
 mod tensor;
 
-pub use golden::conv2d;
-pub use im2col::{conv2d_im2col, im2col_full, im2col_patch, patch_len};
-pub use shape::ConvShape;
-pub use tensor::{random_input, random_weights, TensorChw, TensorHwc, Weights};
+pub use golden::{conv2d, conv2d_general, depthwise2d};
+pub use im2col::{
+    conv2d_im2col, conv2d_im2col_general, im2col_full, im2col_patch, im2col_patch_general,
+    patch_len, patch_len_general,
+};
+pub use shape::{ConvShape, GenConvShape, MAX_DIM};
+pub use tensor::{
+    random_depthwise_weights, random_input, random_weights, TensorChw, TensorHwc, Weights,
+};

@@ -1,6 +1,17 @@
-//! Convolution layer hyper-parameters (the paper's sweep axes).
+//! Convolution layer hyper-parameters: the paper's stride-1 / valid /
+//! groups-1 [`ConvShape`] (the sweep axes, and the shape every cache and
+//! planner key is built from), plus the generalized [`GenConvShape`]
+//! the `nn` layer-graph subsystem lowers from (stride / padding /
+//! groups / 1×1 filters).
 
 use anyhow::{ensure, Result};
+
+/// Upper bound on any single shape dimension. Far beyond anything the
+/// 512 KiB memory bound admits, but low enough that every derived
+/// quantity (`macs`, element counts, byte footprints) fits u64/usize
+/// arithmetic with room to spare, so validated shapes can never
+/// overflow downstream.
+pub const MAX_DIM: usize = 4096;
 
 /// Shape of a 2D convolution, groups = 1, stride 1, no padding, as in
 /// the paper (§2.2: "we always consider convolutions with groups = 1 and
@@ -35,6 +46,17 @@ impl ConvShape {
         ConvShape { c, k, ox, oy, fx: 3, fy: 3 }
     }
 
+    /// The validating constructor: a 3×3 shape, rejected up front when
+    /// any dimension is zero or exceeds [`MAX_DIM`] — an actionable
+    /// error instead of a downstream panic/overflow in `macs` /
+    /// `input_elems`. Paths that take dimensions from outside the crate
+    /// (the CLI, the `nn` lowering) build shapes through this.
+    pub fn checked(c: usize, k: usize, ox: usize, oy: usize) -> Result<ConvShape> {
+        let s = ConvShape::new3x3(c, k, ox, oy);
+        s.validate()?;
+        Ok(s)
+    }
+
     /// Input rows (valid convolution): Ox + Fx − 1.
     pub fn ih(&self) -> usize {
         self.ox + self.fx - 1
@@ -45,9 +67,16 @@ impl ConvShape {
         self.oy + self.fy - 1
     }
 
-    /// Total multiply-accumulate operations of the layer.
+    /// Total multiply-accumulate operations of the layer. Computed in
+    /// u64 so even unvalidated (but [`MAX_DIM`]-bounded) shapes cannot
+    /// overflow.
     pub fn macs(&self) -> u64 {
-        (self.c * self.k * self.ox * self.oy * self.fx * self.fy) as u64
+        self.c as u64
+            * self.k as u64
+            * self.ox as u64
+            * self.oy as u64
+            * self.fx as u64
+            * self.fy as u64
     }
 
     /// Input tensor elements (C × ih × iw).
@@ -72,7 +101,9 @@ impl ConvShape {
         4 * (self.input_elems() + self.weight_elems() + self.output_elems())
     }
 
-    /// Validity for the kernels in this repo.
+    /// Validity for the kernels in this repo: non-zero channels and
+    /// output, 3×3 filter, every dimension within [`MAX_DIM`] (so no
+    /// derived count can overflow).
     pub fn validate(&self) -> Result<()> {
         ensure!(self.c >= 1 && self.k >= 1, "need at least one channel");
         ensure!(self.ox >= 1 && self.oy >= 1, "need a non-empty output");
@@ -82,6 +113,13 @@ impl ConvShape {
             self.fx,
             self.fy
         );
+        for (name, v) in [("C", self.c), ("K", self.k), ("Ox", self.ox), ("Oy", self.oy)] {
+            ensure!(
+                v <= MAX_DIM,
+                "{name}={v} exceeds the {MAX_DIM} per-dimension limit (any such layer \
+                 is far past the 512 KiB memory bound anyway)"
+            );
+        }
         Ok(())
     }
 
@@ -97,6 +135,214 @@ impl std::fmt::Display for ConvShape {
             f,
             "C={} K={} Ox={} Oy={} F={}x{}",
             self.c, self.k, self.ox, self.oy, self.fx, self.fy
+        )
+    }
+}
+
+/// A generalized 2-D convolution shape: stride, zero padding, grouped
+/// channels, and 3×3 **or 1×1** filters — the layer vocabulary of the
+/// `nn` subsystem (MobileNet-style edge networks).
+///
+/// Unlike [`ConvShape`] (output-driven: `Ox`/`Oy` given, input derived)
+/// this is *input-driven*: the input spatial size `ih × iw` is given and
+/// the output size follows from stride/padding, the way network layers
+/// chain. A `GenConvShape` with stride 1, no padding, one group and a
+/// 3×3 filter is exactly a [`ConvShape`] ([`GenConvShape::to_basic`]),
+/// and that `ConvShape` is what the lowering hands to the engine — so
+/// every cache and planner key of the stride-1 fast path is unchanged.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct GenConvShape {
+    /// Input channels (C).
+    pub c: usize,
+    /// Output channels (K).
+    pub k: usize,
+    /// Input rows (pre-padding).
+    pub ih: usize,
+    /// Input columns (pre-padding).
+    pub iw: usize,
+    /// Filter rows (3 or 1).
+    pub fx: usize,
+    /// Filter columns (3 or 1).
+    pub fy: usize,
+    /// Stride (both spatial dimensions).
+    pub stride: usize,
+    /// Zero padding (both spatial dimensions, symmetric).
+    pub pad: usize,
+    /// Channel groups: input channels split into `groups` blocks of
+    /// `C/groups`, each convolved with its own `K/groups` filters.
+    /// `groups == c` (with `k == c`) is depthwise.
+    pub groups: usize,
+}
+
+impl GenConvShape {
+    /// Validating constructor (the only way the `nn` subsystem builds
+    /// shapes): rejects zero dimensions, dimensions past [`MAX_DIM`],
+    /// filters other than 3×3 / 1×1, groups that do not divide both
+    /// channel counts, and windows that do not fit the padded input.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        c: usize,
+        k: usize,
+        ih: usize,
+        iw: usize,
+        fx: usize,
+        fy: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> Result<GenConvShape> {
+        let s = GenConvShape { c, k, ih, iw, fx, fy, stride, pad, groups };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// A stride-1 / no-padding / single-group 3×3 shape equivalent to
+    /// `basic` (the round trip [`GenConvShape::to_basic`] inverts).
+    pub fn from_basic(basic: &ConvShape) -> GenConvShape {
+        GenConvShape {
+            c: basic.c,
+            k: basic.k,
+            ih: basic.ih(),
+            iw: basic.iw(),
+            fx: basic.fx,
+            fy: basic.fy,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+        }
+    }
+
+    /// The exact [`ConvShape`] this layer *is* when it needs no
+    /// generalization (stride 1, no padding, one group, 3×3). `None`
+    /// otherwise. The lowering uses this so stride-1 layers hit the
+    /// same engine/cache/planner keys as before the generalization.
+    pub fn to_basic(&self) -> Option<ConvShape> {
+        if self.stride == 1 && self.pad == 0 && self.groups == 1 && (self.fx, self.fy) == (3, 3)
+        {
+            Some(ConvShape {
+                c: self.c,
+                k: self.k,
+                ox: self.ox(),
+                oy: self.oy(),
+                fx: 3,
+                fy: 3,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Output rows: `(ih + 2·pad − fx) / stride + 1`.
+    pub fn ox(&self) -> usize {
+        (self.ih + 2 * self.pad - self.fx) / self.stride + 1
+    }
+
+    /// Output columns: `(iw + 2·pad − fy) / stride + 1`.
+    pub fn oy(&self) -> usize {
+        (self.iw + 2 * self.pad - self.fy) / self.stride + 1
+    }
+
+    /// Input channels per group.
+    pub fn c_per_group(&self) -> usize {
+        self.c / self.groups
+    }
+
+    /// Output channels per group.
+    pub fn k_per_group(&self) -> usize {
+        self.k / self.groups
+    }
+
+    /// Whether this is a depthwise layer (one input channel per group,
+    /// one filter per channel).
+    pub fn is_depthwise(&self) -> bool {
+        self.groups == self.c && self.k == self.c && self.groups > 1
+    }
+
+    /// True multiply-accumulates of the layer (group-aware — a grouped
+    /// layer does `1/groups` the work of its dense counterpart).
+    pub fn macs(&self) -> u64 {
+        self.c_per_group() as u64
+            * self.k as u64
+            * self.ox() as u64
+            * self.oy() as u64
+            * self.fx as u64
+            * self.fy as u64
+    }
+
+    /// Input tensor elements (pre-padding).
+    pub fn input_elems(&self) -> usize {
+        self.c * self.ih * self.iw
+    }
+
+    /// Weight tensor elements: `K × C/groups × Fx × Fy`.
+    pub fn weight_elems(&self) -> usize {
+        self.k * self.c_per_group() * self.fx * self.fy
+    }
+
+    /// Output tensor elements.
+    pub fn output_elems(&self) -> usize {
+        self.k * self.ox() * self.oy()
+    }
+
+    /// Validity (see [`GenConvShape::new`]).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.c >= 1 && self.k >= 1, "need at least one channel");
+        ensure!(self.ih >= 1 && self.iw >= 1, "need a non-empty input");
+        ensure!(self.stride >= 1, "stride must be at least 1");
+        ensure!(
+            (self.fx, self.fy) == (3, 3) || (self.fx, self.fy) == (1, 1),
+            "the nn lowering supports 3x3 and 1x1 filters (got {}x{})",
+            self.fx,
+            self.fy
+        );
+        ensure!(self.groups >= 1, "need at least one group");
+        ensure!(
+            self.c % self.groups == 0 && self.k % self.groups == 0,
+            "groups={} must divide both C={} and K={}",
+            self.groups,
+            self.c,
+            self.k
+        );
+        ensure!(
+            self.ih + 2 * self.pad >= self.fx && self.iw + 2 * self.pad >= self.fy,
+            "padded input {}x{} is smaller than the {}x{} filter",
+            self.ih + 2 * self.pad,
+            self.iw + 2 * self.pad,
+            self.fx,
+            self.fy
+        );
+        for (name, v) in [
+            ("C", self.c),
+            ("K", self.k),
+            ("ih", self.ih),
+            ("iw", self.iw),
+            ("stride", self.stride),
+            ("pad", self.pad),
+        ] {
+            ensure!(
+                v <= MAX_DIM,
+                "{name}={v} exceeds the {MAX_DIM} per-dimension limit (any such layer \
+                 is far past the 512 KiB memory bound anyway)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Short display id, e.g. `c8k16i32x32f3s2p1g1`.
+    pub fn id(&self) -> String {
+        format!(
+            "c{}k{}i{}x{}f{}s{}p{}g{}",
+            self.c, self.k, self.ih, self.iw, self.fx, self.stride, self.pad, self.groups
+        )
+    }
+}
+
+impl std::fmt::Display for GenConvShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "C={} K={} in={}x{} F={}x{} s={} p={} g={}",
+            self.c, self.k, self.ih, self.iw, self.fx, self.fy, self.stride, self.pad, self.groups
         )
     }
 }
@@ -135,5 +381,82 @@ mod tests {
         let s = ConvShape::baseline();
         assert_eq!(s.id(), "c16k16o16x16");
         assert!(s.to_string().contains("F=3x3"));
+    }
+
+    #[test]
+    fn checked_constructor_rejects_zero_and_oversized_dims() {
+        assert!(ConvShape::checked(16, 16, 16, 16).is_ok());
+        for (c, k, ox, oy) in [(0, 1, 1, 1), (1, 0, 1, 1), (1, 1, 0, 1), (1, 1, 1, 0)] {
+            let err = format!("{:#}", ConvShape::checked(c, k, ox, oy).unwrap_err());
+            assert!(
+                err.contains("channel") || err.contains("output"),
+                "zero dim must be actionable: {err}"
+            );
+        }
+        let err = format!("{:#}", ConvShape::checked(MAX_DIM + 1, 1, 1, 1).unwrap_err());
+        assert!(err.contains("per-dimension limit"), "{err}");
+        // The validated bound keeps macs() exact in u64.
+        let big = ConvShape::checked(MAX_DIM, MAX_DIM, MAX_DIM, MAX_DIM).unwrap();
+        assert_eq!(big.macs(), 9 * (MAX_DIM as u64).pow(4));
+    }
+
+    #[test]
+    fn gen_shape_output_arithmetic() {
+        // 32x32 input, 3x3, stride 2, pad 1 -> 16x16 (the MobileNet rule).
+        let g = GenConvShape::new(3, 8, 32, 32, 3, 3, 2, 1, 1).unwrap();
+        assert_eq!((g.ox(), g.oy()), (16, 16));
+        // Valid stride-1: matches ConvShape's input/output relation.
+        let g = GenConvShape::new(2, 4, 18, 18, 3, 3, 1, 0, 1).unwrap();
+        assert_eq!((g.ox(), g.oy()), (16, 16));
+        // 1x1 pointwise preserves the spatial size.
+        let g = GenConvShape::new(8, 16, 7, 9, 1, 1, 1, 0, 1).unwrap();
+        assert_eq!((g.ox(), g.oy()), (7, 9));
+        assert_eq!(g.weight_elems(), 16 * 8);
+    }
+
+    #[test]
+    fn gen_shape_round_trips_the_basic_shape() {
+        let basic = ConvShape::new3x3(5, 7, 11, 13);
+        let g = GenConvShape::from_basic(&basic);
+        assert_eq!(g.to_basic(), Some(basic));
+        assert_eq!(g.macs(), basic.macs());
+        assert_eq!(g.input_elems(), basic.input_elems());
+        assert_eq!(g.weight_elems(), basic.weight_elems());
+        assert_eq!(g.output_elems(), basic.output_elems());
+        // Any generalization breaks the fast path.
+        assert_eq!(GenConvShape { stride: 2, ..g }.to_basic(), None);
+        assert_eq!(GenConvShape { pad: 1, ..g }.to_basic(), None);
+        assert_eq!(GenConvShape { c: 4, k: 4, groups: 2, ..g }.to_basic(), None);
+    }
+
+    #[test]
+    fn gen_shape_groups_and_depthwise() {
+        let g = GenConvShape::new(8, 8, 10, 10, 3, 3, 1, 1, 8).unwrap();
+        assert!(g.is_depthwise());
+        assert_eq!((g.c_per_group(), g.k_per_group()), (1, 1));
+        // Depthwise does C× less work than the dense layer.
+        let dense = GenConvShape { groups: 1, ..g };
+        assert_eq!(dense.macs(), 8 * g.macs());
+        // Groups must divide the channel counts.
+        assert!(GenConvShape::new(8, 8, 10, 10, 3, 3, 1, 0, 3).is_err());
+        assert!(GenConvShape::new(6, 8, 10, 10, 3, 3, 1, 0, 2).is_ok());
+    }
+
+    #[test]
+    fn gen_shape_rejects_bad_windows_and_filters() {
+        // 2x2 padded input smaller than the 3x3 filter.
+        assert!(GenConvShape::new(1, 1, 2, 2, 3, 3, 1, 0, 1).is_err());
+        // Padding can rescue it.
+        assert!(GenConvShape::new(1, 1, 2, 2, 3, 3, 1, 1, 1).is_ok());
+        // Only 3x3 and 1x1 filters lower onto the kernels.
+        assert!(GenConvShape::new(1, 1, 8, 8, 5, 5, 1, 0, 1).is_err());
+        assert!(GenConvShape::new(1, 1, 8, 8, 3, 3, 0, 0, 1).is_err());
+    }
+
+    #[test]
+    fn gen_shape_display_and_id() {
+        let g = GenConvShape::new(8, 16, 32, 32, 3, 3, 2, 1, 1).unwrap();
+        assert_eq!(g.id(), "c8k16i32x32f3s2p1g1");
+        assert!(g.to_string().contains("s=2"));
     }
 }

@@ -220,6 +220,13 @@ pub fn random_weights(shape: &ConvShape, mag: i32, rng: &mut Rng) -> Weights {
     Weights::random(shape.k, shape.c, shape.fy, shape.fx, mag, rng)
 }
 
+/// Deterministic random *depthwise* weights for a shape under the
+/// depthwise convention (`k == c`, one single-channel filter per
+/// channel): dimensions `(K, 1, Fy, Fx)`.
+pub fn random_depthwise_weights(shape: &ConvShape, mag: i32, rng: &mut Rng) -> Weights {
+    Weights::random(shape.k, 1, shape.fy, shape.fx, mag, rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -49,7 +49,10 @@ pub use request::{
 use anyhow::{bail, ensure, Result};
 
 use crate::cgra::{Cgra, CgraConfig};
-use crate::conv::{conv2d, random_input, random_weights, ConvShape, TensorChw};
+use crate::conv::{
+    conv2d, depthwise2d, random_depthwise_weights, random_input, random_weights, ConvShape,
+    TensorChw, Weights,
+};
 use crate::coordinator::cache::{self, CacheStats, CachedOutcome, PointCache, PointKey};
 use crate::coordinator::network::{ConvNet, NetworkOutcome};
 use crate::coordinator::pool::{default_workers, run_jobs};
@@ -231,10 +234,13 @@ impl Engine {
                     // invariant every kernel test enforces), one CPU
                     // convolution instead of a cycle-level simulation.
                     None => {
-                        let mut rng = Rng::new(*seed);
-                        let input = random_input(&req.shape, *in_mag, &mut rng);
-                        let weights = random_weights(&req.shape, *w_mag, &mut rng);
-                        conv2d(&req.shape, &input, &weights)
+                        let (input, weights) =
+                            seeded_tensors(&req.shape, mapping, *seed, *in_mag, *w_mag);
+                        if mapping == Mapping::DwWp {
+                            depthwise2d(&req.shape, &input, &weights)
+                        } else {
+                            conv2d(&req.shape, &input, &weights)
+                        }
                     }
                 };
                 let (relu_cycles, relu_energy_uj) = self.apply_relu(req.relu, &mut output);
@@ -303,9 +309,7 @@ impl Engine {
                 CachedOutcome::Skipped(s) => bail!("{s}"),
             };
         }
-        let mut rng = Rng::new(seed);
-        let input = random_input(shape, in_mag, &mut rng);
-        let weights = random_weights(shape, w_mag, &mut rng);
+        let (input, weights) = seeded_tensors(shape, mapping, seed, in_mag, w_mag);
         match dispatch(&self.cgra, mapping, shape, &input, &weights) {
             Ok(out) => {
                 let report = MappingReport::from_outcome(&out, &self.model);
@@ -322,9 +326,10 @@ impl Engine {
     }
 
     /// The uncached borrow-based execution path shared by the `Tensors`
-    /// arm of [`Engine::submit`] and [`Engine::run_network`] (which
-    /// chains activations without cloning layer weights).
-    fn run_one(
+    /// arm of [`Engine::submit`], [`Engine::run_network`] and the `nn`
+    /// graph executor (all of which chain activations without cloning
+    /// layer weights).
+    pub(crate) fn run_one(
         &self,
         shape: &ConvShape,
         mapping: Mapping,
@@ -341,12 +346,20 @@ impl Engine {
             shape,
             shape.input_elems()
         );
-        ensure!(
-            weights.data.len() == shape.weight_elems(),
-            "weight tensor has {} elements, shape {} needs {}",
-            weights.data.len(),
-            shape,
+        // The depthwise operator carries one single-channel filter per
+        // channel; the dense mappings carry the full K×C filter bank.
+        let expected_w = if mapping == Mapping::DwWp {
+            shape.k * shape.fx * shape.fy
+        } else {
             shape.weight_elems()
+        };
+        ensure!(
+            weights.data.len() == expected_w,
+            "weight tensor has {} elements, {} on shape {} needs {}",
+            weights.data.len(),
+            mapping,
+            shape,
+            expected_w
         );
         let out = dispatch(&self.cgra, mapping, shape, input, weights)?;
         let report = MappingReport::from_outcome(&out, &self.model);
@@ -486,6 +499,29 @@ impl Engine {
     }
 }
 
+/// The deterministic seeded tensors of a request: input then weights
+/// drawn from one `Rng::new(seed)` stream. Depthwise submissions draw
+/// the `(K, 1, 3, 3)` filter bank the Dw-WP kernel consumes; every
+/// other mapping draws the dense `(K, C, 3, 3)` bank. Shared by the
+/// simulate path and the cache-hit golden reconstruction so both see
+/// identical data.
+fn seeded_tensors(
+    shape: &ConvShape,
+    mapping: Mapping,
+    seed: u64,
+    in_mag: i32,
+    w_mag: i32,
+) -> (TensorChw, Weights) {
+    let mut rng = Rng::new(seed);
+    let input = random_input(shape, in_mag, &mut rng);
+    let weights = if mapping == Mapping::DwWp {
+        random_depthwise_weights(shape, w_mag, &mut rng)
+    } else {
+        random_weights(shape, w_mag, &mut rng)
+    };
+    (input, weights)
+}
+
 /// Host-side ReLU cost — one load + compare + store per element at
 /// [`RELU_CYCLES_PER_ELEM`], CPU-active + memory power over that time
 /// plus two memory accesses per element. Shared by the execution path
@@ -588,6 +624,51 @@ mod tests {
         assert!(relued.relu_energy_uj > 0.0);
         assert_eq!(plain.relu_cycles, 0);
         assert_eq!(relued.total_cycles(), relued.report.latency_cycles + relued.relu_cycles);
+    }
+
+    /// Seeded depthwise submissions simulate the Dw-WP kernel, cache
+    /// under the DwWp key, and reconstruct cache-hit outputs through
+    /// the depthwise golden model bit-exactly.
+    #[test]
+    fn seeded_depthwise_submits_cache_and_reconstruct() {
+        let e = quick_engine();
+        let shape = ConvShape::new3x3(5, 5, 6, 6);
+        let req = ConvRequest::seeded(shape, Mapping::DwWp, 13);
+        let a = e.submit(&req).unwrap();
+        assert!(!a.cache_hit);
+        assert_eq!(a.mapping, Mapping::DwWp);
+        assert_eq!(a.report.launches, 5, "one launch per channel");
+        let b = e.submit(&req).unwrap();
+        assert!(b.cache_hit);
+        assert_eq!(a.output.data, b.output.data, "golden reconstruction must match the sim");
+        // A dense WP request on the same shape/seed is a distinct
+        // cache entry (different operator, different key).
+        let dense = e.submit(&ConvRequest::seeded(shape, Mapping::Wp, 13)).unwrap();
+        assert!(!dense.cache_hit);
+        assert_ne!(dense.output.data, a.output.data);
+    }
+
+    /// Depthwise tensor requests enforce the (K, 1, 3, 3) weight bank.
+    #[test]
+    fn depthwise_tensor_request_checks_weight_dims() {
+        let e = quick_engine();
+        let shape = ConvShape::new3x3(4, 4, 5, 5);
+        let mut rng = Rng::new(3);
+        let input = random_input(&shape, 10, &mut rng);
+        let dw = crate::conv::random_depthwise_weights(&shape, 5, &mut rng);
+        let golden = depthwise2d(&shape, &input, &dw);
+        let res = e
+            .submit(&ConvRequest::with_data(shape, Mapping::DwWp, input.clone(), dw))
+            .unwrap();
+        assert_eq!(res.output.data, golden.data);
+        // Dense weights are rejected with the expected count named.
+        let dense_w = random_weights(&shape, 5, &mut rng);
+        let err = format!(
+            "{:#}",
+            e.submit(&ConvRequest::with_data(shape, Mapping::DwWp, input, dense_w))
+                .unwrap_err()
+        );
+        assert!(err.contains("needs 36"), "{err}");
     }
 
     #[test]

@@ -92,6 +92,13 @@ pub enum Mapping {
     OpIm2col,
     /// Direct convolution, output-channel parallelism.
     OpDirect,
+    /// Depthwise convolution with weight parallelism: one WP-style
+    /// launch per channel (`kernels::dw`, reusing the WP program
+    /// generator). Computes the *depthwise* operator — shape convention
+    /// `k == c`, weights `(C, 1, 3, 3)` — so it is not interchangeable
+    /// with the dense mappings above and is excluded from
+    /// [`Mapping::ALL`] / [`Mapping::CGRA`].
+    DwWp,
     /// CPU-only baseline (no CGRA).
     Cpu,
     /// Pick the strategy per shape at submission time (see
@@ -113,10 +120,16 @@ impl Mapping {
     /// All CGRA mappings (excludes the CPU baseline and `Auto`).
     pub const CGRA: [Mapping; 4] = [Mapping::Wp, Mapping::Ip, Mapping::OpIm2col, Mapping::OpDirect];
 
-    /// All *concrete* strategies including the CPU baseline (excludes
-    /// `Auto`, which always resolves to one of these).
+    /// All *concrete* dense-convolution strategies including the CPU
+    /// baseline (excludes `Auto`, which always resolves to one of
+    /// these, and the depthwise-operator mapping [`Mapping::DwWp`],
+    /// listed in [`Mapping::DEPTHWISE`]).
     pub const ALL: [Mapping; 5] =
         [Mapping::Wp, Mapping::Ip, Mapping::OpIm2col, Mapping::OpDirect, Mapping::Cpu];
+
+    /// The depthwise-capable CGRA mappings (a different operator —
+    /// see [`Mapping::DwWp`]).
+    pub const DEPTHWISE: [Mapping; 1] = [Mapping::DwWp];
 
     /// Paper label.
     pub fn label(self) -> &'static str {
@@ -125,25 +138,30 @@ impl Mapping {
             Mapping::Ip => "Im2col-IP",
             Mapping::OpIm2col => "Im2col-OP",
             Mapping::OpDirect => "Conv-OP",
+            Mapping::DwWp => "Dw-WP",
             Mapping::Cpu => "CPU",
             Mapping::Auto => "Auto",
         }
     }
 
     /// Parse a user-facing name, case-insensitively. Accepts the short
-    /// names, the paper labels, and `auto`.
+    /// names, the paper labels, `dw` / `depthwise` for the depthwise
+    /// kernel, and `auto`. The error lists every accepted name, sorted
+    /// by canonical name, so a typo is self-correcting from the message
+    /// alone.
     pub fn parse(s: &str) -> Result<Mapping> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "wp" | "conv-wp" => Mapping::Wp,
             "ip" | "im2col-ip" => Mapping::Ip,
             "op-im2col" | "im2col-op" => Mapping::OpIm2col,
             "op-direct" | "conv-op" | "op" => Mapping::OpDirect,
+            "dw" | "dw-wp" | "depthwise" => Mapping::DwWp,
             "cpu" => Mapping::Cpu,
             "auto" => Mapping::Auto,
             other => anyhow::bail!(
-                "unknown mapping '{other}' (valid: wp | conv-wp, ip | im2col-ip, \
-                 op-im2col | im2col-op, op-direct | conv-op | op, cpu, auto; \
-                 names are case-insensitive)"
+                "unknown mapping '{other}' (valid, case-insensitive, sorted: \
+                 auto; conv-op | op-direct | op; cpu; dw-wp | dw | depthwise; \
+                 im2col-ip | ip; im2col-op | op-im2col; wp | conv-wp)"
             ),
         })
     }
@@ -298,7 +316,7 @@ mod tests {
 
     #[test]
     fn mapping_parse_roundtrip() {
-        for m in Mapping::ALL {
+        for m in Mapping::ALL.into_iter().chain(Mapping::DEPTHWISE) {
             assert_eq!(Mapping::parse(m.label()).unwrap(), m);
         }
         assert_eq!(Mapping::parse(Mapping::Auto.label()).unwrap(), Mapping::Auto);
@@ -312,14 +330,21 @@ mod tests {
         assert_eq!(Mapping::parse("IM2COL-OP").unwrap(), Mapping::OpIm2col);
         assert_eq!(Mapping::parse("AuTo").unwrap(), Mapping::Auto);
         assert_eq!(Mapping::parse("CPU").unwrap(), Mapping::Cpu);
+        assert_eq!(Mapping::parse("Depthwise").unwrap(), Mapping::DwWp);
+        assert_eq!(Mapping::parse("DW").unwrap(), Mapping::DwWp);
     }
 
     #[test]
     fn mapping_parse_error_lists_valid_values() {
         let err = format!("{:#}", Mapping::parse("bogus").unwrap_err());
-        for name in ["wp", "ip", "op-im2col", "op-direct", "cpu", "auto"] {
+        for name in ["wp", "ip", "op-im2col", "op-direct", "cpu", "auto", "dw-wp", "depthwise"]
+        {
             assert!(err.contains(name), "error should list '{name}': {err}");
         }
+        // The canonical names appear in sorted order.
+        let canon = ["auto", "conv-op", "cpu", "dw-wp", "im2col-ip", "im2col-op", "; wp"];
+        let pos: Vec<usize> = canon.iter().map(|n| err.find(n).expect(n)).collect();
+        assert!(pos.windows(2).all(|w| w[0] < w[1]), "not sorted: {err}");
     }
 
     #[test]

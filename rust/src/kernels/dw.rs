@@ -1,0 +1,253 @@
+//! **Dw-WP — depthwise convolution with weight parallelism.**
+//!
+//! Depthwise convolution is exactly the WP dataflow with one input
+//! channel per output channel: channel `c` of the output is channel `c`
+//! of the input convolved with its own 3×3 filter, no cross-channel
+//! accumulation. So this kernel *reuses the WP launch machinery* rather
+//! than forking it: every launch is [`wp::build_program`] on a
+//! `C = K = 1` shape — the `ci == 0` / no-accumulate launch class WP
+//! already has — with the per-channel input/weight/output base
+//! addresses supplied through the launch's [`MemLayout`]. One memory
+//! image holds the whole layer; the layer runs in `C` launches (vs
+//! `K·C` for dense WP).
+//!
+//! Shape convention: `shape.k == shape.c` (one filter per channel),
+//! weights `(C, 1, 3, 3)`. Strided/padded depthwise layers are lowered
+//! by `nn` (host pad + output decimation) around this stride-1 core,
+//! like every other kernel in this crate.
+
+use anyhow::{ensure, Result};
+
+use crate::cgra::{decode, decode_cached, Cgra, RunStats, DECODE_CACHE_CAPACITY};
+use crate::conv::{ConvShape, TensorChw, Weights};
+use crate::isa::Program;
+
+use super::common::{ConvOutcome, LatencyBreakdown, Mapping, MemLayout};
+use super::wp::{self, WpLaunch};
+
+/// Word addresses of the depthwise memory image:
+/// `[input (C·ih·iw) | weights (C·9) | output (C·Ox·Oy) | margin]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DwLayout {
+    /// Input tensor base (CHW).
+    pub input: usize,
+    /// Weights base (`(C, 1, 3, 3)` flattened).
+    pub weights: usize,
+    /// Output tensor base (CHW).
+    pub output: usize,
+    /// Total words used (including the WP pipeline-overshoot margin).
+    pub total_words: usize,
+}
+
+/// Words a depthwise layer requires: the three tensor regions plus the
+/// same pipeline-overshoot margin the dense WP layout reserves (the
+/// loaders read two rows past the last channel's input; with no
+/// accumulation there is no prev-partial overshoot).
+pub fn required_words(shape: &ConvShape) -> usize {
+    shape.c * shape.ih() * shape.iw() + shape.c * 9 + shape.c * shape.ox * shape.oy
+        + 2 * shape.iw()
+        + 16
+}
+
+/// Depthwise memory usage in bytes (the paper's footprint metric):
+/// input + one single-channel filter per channel + output.
+pub fn footprint_bytes(shape: &ConvShape) -> usize {
+    4 * (shape.c * shape.ih() * shape.iw() + shape.c * 9 + shape.c * shape.ox * shape.oy)
+}
+
+/// Validate the depthwise shape convention and build the layout under
+/// the memory bound (same actionable error style as [`MemLayout::new`]).
+pub fn layout(shape: &ConvShape, cfg: &crate::cgra::CgraConfig) -> Result<DwLayout> {
+    shape.validate()?;
+    ensure!(
+        shape.k == shape.c,
+        "depthwise convention: K must equal C (one filter per channel), got {shape}"
+    );
+    let total_words = required_words(shape);
+    ensure!(
+        total_words <= cfg.mem_words,
+        "depthwise layer {shape} needs {total_words} words but the memory holds {} \
+         (the paper bounds its sweep by the 512 KiB HEEPsilon RAM the same way)",
+        cfg.mem_words
+    );
+    let input = 0;
+    let weights = input + shape.c * shape.ih() * shape.iw();
+    let output = weights + shape.c * 9;
+    Ok(DwLayout { input, weights, output, total_words })
+}
+
+/// The per-launch `C = K = 1` view of the layer (what the WP generator
+/// sees for one channel).
+fn channel_shape(shape: &ConvShape) -> ConvShape {
+    ConvShape::new3x3(1, 1, shape.ox, shape.oy)
+}
+
+/// Build channel `g`'s launch program: [`wp::build_program`] on the
+/// single-channel shape, with the layout's bases shifted to channel
+/// `g`'s slices. The WP generator reads only the `input`/`weights`/
+/// `output` bases from the layout, so the shifted copy is a complete
+/// description of the launch.
+pub fn build_channel_program(shape: &ConvShape, lay: &DwLayout, g: usize) -> Program {
+    let per_ch = MemLayout {
+        input: lay.input + g * shape.ih() * shape.iw(),
+        weights: lay.weights + g * 9,
+        output: lay.output + g * shape.ox * shape.oy,
+        im2col: lay.total_words,
+        im2col_words: 0,
+        scratch: lay.total_words,
+        total_words: lay.total_words,
+    };
+    wp::build_program(&channel_shape(shape), &per_ch, WpLaunch { k: 0, ci: 0, acc: false })
+}
+
+/// Execute the full depthwise convolution with the Dw-WP mapping.
+pub fn run(
+    cgra: &Cgra,
+    shape: &ConvShape,
+    input: &TensorChw,
+    weights: &Weights,
+) -> Result<ConvOutcome> {
+    let cfg = cgra.config();
+    let lay = layout(shape, cfg)?;
+    ensure!(
+        weights.k == shape.c && weights.c == 1 && weights.fy == 3 && weights.fx == 3,
+        "depthwise weights must be (C={}, 1, 3, 3), got ({}, {}, {}, {})",
+        shape.c,
+        weights.k,
+        weights.c,
+        weights.fy,
+        weights.fx
+    );
+    ensure!(
+        input.c == shape.c && input.h == shape.ih() && input.w == shape.iw(),
+        "depthwise input must be ({}, {}, {}), got ({}, {}, {})",
+        shape.c,
+        shape.ih(),
+        shape.iw(),
+        input.c,
+        input.h,
+        input.w
+    );
+    let mut mem = crate::cgra::Memory::new(cfg.mem_words, cfg.n_banks);
+    mem.poke_slice(lay.input, &input.data);
+    mem.poke_slice(lay.weights, &weights.data);
+
+    let mut stats = RunStats::new();
+    stats.exited = true;
+    let mut launches = 0u64;
+    // Same memoization policy as dense WP: decode-cache the lowering
+    // when the layer's launch set fits with headroom.
+    let memoize = shape.c <= DECODE_CACHE_CAPACITY / 2;
+    for g in 0..shape.c {
+        let prog = build_channel_program(shape, &lay, g);
+        let s = if memoize {
+            cgra.run_decoded(&decode_cached(&prog), &mut mem)?
+        } else {
+            cgra.run_decoded(&decode(&prog), &mut mem)?
+        };
+        stats.merge(&s);
+        launches += 1;
+    }
+
+    let output = TensorChw::from_vec(
+        shape.k,
+        shape.ox,
+        shape.oy,
+        mem.peek_slice(lay.output, shape.k * shape.ox * shape.oy).to_vec(),
+    );
+    let latency = LatencyBreakdown {
+        cgra_cycles: stats.cycles,
+        launch_cycles: launches * cfg.launch_overhead + cfg.instruction_load_overhead,
+        launches,
+        ..Default::default()
+    };
+    Ok(ConvOutcome {
+        mapping: Mapping::DwWp,
+        shape: *shape,
+        output,
+        latency,
+        cgra_stats: stats,
+        cpu_mem: Default::default(),
+        footprint_bytes: footprint_bytes(shape),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::conv::{depthwise2d, random_depthwise_weights, random_input};
+    use crate::prop::Rng;
+
+    fn check_shape(shape: ConvShape, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let input = random_input(&shape, 50, &mut rng);
+        let weights = random_depthwise_weights(&shape, 9, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let out = run(&cgra, &shape, &input, &weights).unwrap();
+        let golden = depthwise2d(&shape, &input, &weights);
+        assert_eq!(out.output.data, golden.data, "Dw-WP mismatch on {shape}");
+        assert_eq!(out.latency.launches, shape.c as u64, "one launch per channel");
+    }
+
+    #[test]
+    fn single_channel_is_plain_wp() {
+        check_shape(ConvShape::new3x3(1, 1, 3, 4), 1);
+    }
+
+    #[test]
+    fn multi_channel_depthwise_exact() {
+        check_shape(ConvShape::new3x3(5, 5, 4, 6), 2);
+        check_shape(ConvShape::new3x3(16, 16, 8, 8), 3);
+    }
+
+    #[test]
+    fn rectangular_and_tiny_outputs() {
+        check_shape(ConvShape::new3x3(3, 3, 1, 5), 4);
+        check_shape(ConvShape::new3x3(2, 2, 5, 1), 5);
+    }
+
+    /// Dw-WP runs C launches where dense WP runs K·C, and does C× less
+    /// multiply work on the same channel count.
+    #[test]
+    fn launch_count_is_linear_in_channels() {
+        let shape = ConvShape::new3x3(8, 8, 6, 6);
+        let mut rng = Rng::new(6);
+        let input = random_input(&shape, 20, &mut rng);
+        let dw_w = random_depthwise_weights(&shape, 9, &mut rng);
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let dw = run(&cgra, &shape, &input, &dw_w).unwrap();
+        assert_eq!(dw.latency.launches, 8);
+        let dense_w = crate::conv::random_weights(&shape, 9, &mut rng);
+        let dense = wp::run(&cgra, &shape, &input, &dense_w).unwrap();
+        assert_eq!(dense.latency.launches, 64);
+        assert!(dense.latency.total_cycles() > 7 * dw.latency.total_cycles());
+    }
+
+    #[test]
+    fn rejects_non_depthwise_shapes_and_bad_weights() {
+        let cgra = Cgra::new(CgraConfig::default()).unwrap();
+        let mut rng = Rng::new(7);
+        // K != C.
+        let bad = ConvShape::new3x3(4, 5, 4, 4);
+        let input = random_input(&bad, 5, &mut rng);
+        let w = random_depthwise_weights(&ConvShape::new3x3(5, 5, 4, 4), 5, &mut rng);
+        let err = format!("{:#}", run(&cgra, &bad, &input, &w).unwrap_err());
+        assert!(err.contains("K must equal C"), "{err}");
+        // Dense weights on a depthwise run.
+        let shape = ConvShape::new3x3(4, 4, 4, 4);
+        let input = random_input(&shape, 5, &mut rng);
+        let dense = crate::conv::random_weights(&shape, 5, &mut rng);
+        let err = format!("{:#}", run(&cgra, &shape, &input, &dense).unwrap_err());
+        assert!(err.contains("(C=4, 1, 3, 3)"), "{err}");
+    }
+
+    #[test]
+    fn memory_bound_is_enforced_actionably() {
+        let shape = ConvShape::new3x3(64, 64, 64, 64);
+        let mut cfg = CgraConfig::default();
+        cfg.mem_words = 2048;
+        let err = format!("{:#}", layout(&shape, &cfg).unwrap_err());
+        assert!(err.contains("words") && err.contains("2048"), "{err}");
+    }
+}

@@ -8,6 +8,7 @@
 //! in [`crate::engine`].
 
 pub mod common;
+pub mod dw;
 pub mod ip;
 pub mod op_direct;
 pub mod op_im2col;
@@ -41,6 +42,10 @@ pub(crate) fn dispatch(
         Mapping::Ip => ip::run(cgra, shape, input, weights),
         Mapping::OpIm2col => op_im2col::run(cgra, shape, input, weights),
         Mapping::OpDirect => op_direct::run(cgra, shape, input, weights),
+        // The depthwise operator: shape convention k == c, weights
+        // (C, 1, 3, 3) — callers route depthwise layers here explicitly
+        // (the nn lowering, `cgra run --mapping dw`).
+        Mapping::DwWp => dw::run(cgra, shape, input, weights),
         Mapping::Cpu => {
             // The CPU shares the same 512 KiB system RAM: the paper's
             // sweep bound applies to it too.

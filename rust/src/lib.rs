@@ -45,6 +45,11 @@
 //!   per `(shape, mapping)` without simulating (`Engine::plan`,
 //!   `submit_planned`, `plan_network`), validated against the decoded
 //!   simulator by `cgra plan --validate`.
+//! - [`nn`] — the layer-graph subsystem: generalized convolutions
+//!   (stride / padding / groups), depthwise (`Dw-WP`) and pointwise
+//!   layers, pooling, named presets, and a graph executor + planner
+//!   that lower MobileNet-style networks end to end onto the engine
+//!   (`cgra net --preset <name>`).
 //! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and verifies the simulator element-exactly against them.
 //! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5),
@@ -66,6 +71,7 @@ pub mod engine;
 pub mod isa;
 pub mod kernels;
 pub mod metrics;
+pub mod nn;
 pub mod planner;
 pub mod prop;
 pub mod report;

@@ -6,7 +6,7 @@
 //! cgra plan    [--c ...] | --validate | --network            cost model: predict, don't simulate
 //! cgra report  fig3|fig4|fig5|all [--out DIR] [--full]      regenerate figures
 //! cgra sweep   [--full] [--out DIR]                          Fig. 5 sweep
-//! cgra net     [--depth 4] [--k 16] [--hw 32]                CNN on the CGRA
+//! cgra net     [--preset NAME] [--plan-only]                 edge network on the CGRA (nn)
 //! cgra verify  [--artifacts DIR]                             CGRA vs XLA artifact
 //! cgra asm     FILE.casm                                     assemble + run + dump
 //! ```
@@ -51,12 +51,14 @@ fn dispatch() -> Result<()> {
 }
 
 fn shape_from(a: &Args) -> Result<ConvShape> {
-    Ok(ConvShape::new3x3(
+    // The validating constructor: zero/oversized dimensions fail here
+    // with an actionable message instead of panicking downstream.
+    ConvShape::checked(
         a.num_or("c", 16usize)?,
         a.num_or("k", 16usize)?,
         a.num_or("ox", 16usize)?,
         a.num_or("oy", 16usize)?,
-    ))
+    )
 }
 
 fn engine_with_workers(workers: usize) -> Result<Engine> {
@@ -70,8 +72,9 @@ fn cmd_run() -> Result<()> {
         vec![
             OptSpec {
                 name: "mapping",
-                value: "wp|ip|im2col-op|conv-op|cpu|auto|all",
-                help: "strategy (auto lets the engine pick)",
+                value: "wp|ip|im2col-op|conv-op|dw|cpu|auto|all",
+                help: "strategy (auto lets the engine pick; dw = depthwise Dw-WP, \
+                       needs k == c, not part of 'all' — it computes a different operator)",
             },
             OptSpec { name: "c", value: "INT", help: "input channels" },
             OptSpec { name: "k", value: "INT", help: "output channels" },
@@ -101,9 +104,31 @@ fn cmd_run() -> Result<()> {
     let input = random_input(&shape, 30, &mut rng);
     let weights = random_weights(&shape, 9, &mut rng);
     let golden = openedge_cgra::conv::conv2d(&shape, &input, &weights);
+    // The depthwise operator has its own filter bank and golden model;
+    // reject impossible requests up front with the kernel's diagnostic
+    // instead of a downstream weight-count mismatch.
+    if mappings.contains(&Mapping::DwWp) && shape.k != shape.c {
+        bail!(
+            "depthwise convention: K must equal C (one filter per channel), \
+             got K={} C={} — pass matching --c/--k for --mapping dw",
+            shape.k,
+            shape.c
+        );
+    }
+    let dw_data = (shape.k == shape.c && mappings.contains(&Mapping::DwWp)).then(|| {
+        let mut rng = Rng::new(seed ^ 0xd3);
+        let w = openedge_cgra::conv::random_depthwise_weights(&shape, 9, &mut rng);
+        let golden = openedge_cgra::conv::depthwise2d(&shape, &input, &w);
+        (w, golden)
+    });
     let reqs: Vec<ConvRequest> = mappings
         .iter()
-        .map(|&m| ConvRequest::with_data(shape, m, input.clone(), weights.clone()))
+        .map(|&m| match (m, &dw_data) {
+            (Mapping::DwWp, Some((w, _))) => {
+                ConvRequest::with_data(shape, m, input.clone(), w.clone())
+            }
+            _ => ConvRequest::with_data(shape, m, input.clone(), weights.clone()),
+        })
         .collect();
 
     println!("layer {shape}  ({} MACs)\n", shape.macs());
@@ -115,7 +140,10 @@ fn cmd_run() -> Result<()> {
     for (&m, res) in mappings.iter().zip(engine.submit_batch(&reqs)) {
         match res {
             Ok(res) => {
-                let exact = res.output.data == golden.data;
+                let exact = match (&res.mapping, &dw_data) {
+                    (Mapping::DwWp, Some((_, dw_golden))) => res.output.data == dw_golden.data,
+                    _ => res.output.data == golden.data,
+                };
                 let r = &res.report;
                 table.row(vec![
                     res.mapping.label().into(),
@@ -174,8 +202,9 @@ fn cmd_plan() -> Result<()> {
             OptSpec { name: "oy", value: "INT", help: "output cols" },
             OptSpec {
                 name: "mapping",
-                value: "wp|ip|im2col-op|conv-op|cpu|auto|all",
-                help: "strategy to cost (default: all + the auto choice)",
+                value: "wp|ip|im2col-op|conv-op|dw|cpu|auto|all",
+                help: "strategy to cost (default: all + the auto choice; dw = depthwise \
+                       Dw-WP, needs k == c, not part of 'all')",
             },
             OptSpec { name: "validate", value: "", help: "predicted-vs-simulated sweep" },
             OptSpec { name: "full", value: "", help: "validate on the full paper grid (slow)" },
@@ -393,53 +422,85 @@ fn cmd_sweep() -> Result<()> {
     Ok(())
 }
 
+/// `cgra net` — run (or plan) an edge network end to end on the
+/// simulated CGRA through the `nn` layer-graph subsystem: generalized
+/// convolutions (stride / padding / groups), depthwise (`Dw-WP`) and
+/// pointwise layers, pooling, per-layer planner-chosen mappings.
 fn cmd_net() -> Result<()> {
     let a = Args::from_env(
         2,
-        &[],
+        &["plan-only"],
         vec![
-            OptSpec { name: "depth", value: "INT", help: "number of conv layers" },
-            OptSpec { name: "c0", value: "INT", help: "input channels" },
-            OptSpec { name: "k", value: "INT", help: "channels per layer" },
-            OptSpec { name: "hw", value: "INT", help: "input height=width" },
+            OptSpec {
+                name: "preset",
+                value: "NAME",
+                help: "named network: mobilenet-mini | paper-baseline | vgg-mini \
+                       (default: a plain --depth/--c0/--k/--hw conv stack)",
+            },
+            OptSpec {
+                name: "plan-only",
+                value: "",
+                help: "predict per-layer cost via the planner, simulate nothing",
+            },
+            OptSpec {
+                name: "objective",
+                value: "latency|energy",
+                help: "what --plan-only minimizes per layer (default latency)",
+            },
+            OptSpec { name: "depth", value: "INT", help: "plain stack: conv layers" },
+            OptSpec { name: "c0", value: "INT", help: "plain stack: input channels" },
+            OptSpec { name: "k", value: "INT", help: "plain stack: channels per layer" },
+            OptSpec { name: "hw", value: "INT", help: "plain stack: input height=width" },
             OptSpec { name: "seed", value: "INT", help: "weight/data seed" },
+            OptSpec { name: "out", value: "DIR", help: "save the report (.txt/.csv)" },
+            OptSpec { name: "workers", value: "INT", help: "worker threads (group batches)" },
         ],
     )?;
+    let seed = a.num_or("seed", 7u64)?;
+    let preset = a.opt_str("preset").map(str::to_string);
     let depth = a.num_or("depth", 4usize)?;
     let c0 = a.num_or("c0", 3usize)?;
     let k = a.num_or("k", 16usize)?;
     let hw = a.num_or("hw", 32usize)?;
-    let seed = a.num_or("seed", 7u64)?;
+    let plan_only = a.flag("plan-only");
+    let objective =
+        openedge_cgra::planner::PlanObjective::parse(&a.str_or("objective", "latency"))?;
+    let out_dir = a.opt_str("out").map(std::path::PathBuf::from);
+    let workers = a.num_or("workers", default_workers())?;
     a.reject_unknown()?;
 
-    let net = ConvNet::random(depth, c0, k, hw, hw, seed);
-    let mut rng = Rng::new(seed ^ 0xabcd);
-    let input = random_input(&net.layers[0].shape, 8, &mut rng);
-    let engine = EngineBuilder::new().build()?;
-    let out = engine.run_network(&net, &input)?;
-    let golden = openedge_cgra::coordinator::golden_network(&net, &input)?;
-    println!("CNN: {depth} conv layers, {} MACs, input {c0}x{hw}x{hw}", net.macs());
-    let mut table = openedge_cgra::util::fmt::Table::new(&[
-        "layer", "shape", "mapping", "cycles", "MAC/cycle", "energy_uJ",
-    ]);
-    for (i, (l, r)) in net.layers.iter().zip(out.layers.iter()).enumerate() {
-        table.row(vec![
-            i.to_string(),
-            l.shape.id(),
-            r.mapping.label().into(),
-            r.latency_cycles.to_string(),
-            format!("{:.3}", r.mac_per_cycle),
-            format!("{:.2}", r.energy_uj),
-        ]);
-    }
-    print!("{}", table.render());
+    let net = match &preset {
+        Some(name) => openedge_cgra::nn::build_preset(name, seed)?,
+        None => openedge_cgra::nn::Net::plain_stack(depth, c0, k, hw, seed)?,
+    };
+    let (c, h, w) = net.input_dims;
     println!(
-        "\ntotal: {} cycles ({:.3} MAC/cycle), {:.2} uJ, output exact vs golden: {}",
-        out.total_cycles,
-        out.mac_per_cycle(&net),
-        out.total_energy_uj,
-        out.output.data == golden.data
+        "network '{}': {} layers, {} true MACs, input {c}x{h}x{w}\n",
+        net.name,
+        net.layers.len(),
+        net.macs()
     );
+
+    let engine = engine_with_workers(workers)?;
+    let fig = if plan_only {
+        let plan = engine.planner();
+        let netplan = openedge_cgra::nn::plan_network(plan, &net, objective)?;
+        report::net_plan_fig(&netplan)
+    } else {
+        let input = net.random_input(8, seed ^ 0xabcd);
+        let rep = openedge_cgra::nn::run_network(&engine, &net, &input)?;
+        let fig = report::net_fig(&rep);
+        if !rep.exact {
+            println!("{}", fig.text);
+            bail!("network output diverged from the generalized golden model");
+        }
+        fig
+    };
+    println!("{}", fig.text);
+    if let Some(dir) = out_dir {
+        fig.save(&dir)?;
+        println!("saved {}/{}.{{txt,csv}}", dir.display(), fig.id);
+    }
     Ok(())
 }
 

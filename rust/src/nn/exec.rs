@@ -1,0 +1,390 @@
+//! The graph executor: run a [`Net`] end to end on the simulated CGRA
+//! through an [`Engine`] session.
+//!
+//! Every conv-like layer is lowered (`nn::lower`) onto stride-1 / valid
+//! engine convolutions — the planner-backed `Mapping::Auto` picks the
+//! strategy per layer unless the layer pins one — with the host glue
+//! (padding, group slicing, decimation, pooling, fused ReLU) charged by
+//! the shared closed-form cost model. Grouped layers fan their
+//! independent per-group convolutions over the engine's worker pool as
+//! one batch; activations thread through the chain by move, never by
+//! clone. Each layer's output is checked element-exactly against the
+//! generalized golden model.
+
+use anyhow::{Context, Result};
+
+use crate::conv::{TensorChw, Weights};
+use crate::engine::{relu_cost, ConvRequest, Engine};
+use crate::kernels::Mapping;
+
+use super::graph::{golden_layer, relu_in_place, Layer, Net};
+use super::lower::{
+    avgpool2d, concat_channels, decimate, embed_pointwise_weights, host_energy_uj, lower_conv,
+    maxpool2d, pad_input, slice_channels, HostOp,
+};
+
+/// Everything one executed layer reports.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    /// Layer index in execution order.
+    pub index: usize,
+    /// Layer kind label (`conv` / `depthwise` / `pointwise` / …).
+    pub kind: &'static str,
+    /// Short shape description.
+    pub desc: String,
+    /// The concrete strategy that ran on the CGRA (`None` for
+    /// host-only pooling layers).
+    pub mapping: Option<Mapping>,
+    /// End-to-end layer cycles: CGRA convolution + host glue + ReLU.
+    pub cycles: u64,
+    /// The CGRA convolution part (summed over group submissions).
+    pub conv_cycles: u64,
+    /// Host glue cycles (pad / slice / decimate / pool / ReLU).
+    pub host_cycles: u64,
+    /// Layer energy, µJ (convolution + glue + ReLU).
+    pub energy_uj: f64,
+    /// CGRA launches of the layer.
+    pub launches: u64,
+    /// True (logical) MACs of the layer.
+    pub macs: u64,
+    /// Scalar-CPU baseline cycles of the logical layer (0 for pools).
+    pub cpu_cycles: u64,
+    /// Whether the output matched the generalized golden model
+    /// element-exactly.
+    pub exact: bool,
+}
+
+impl LayerReport {
+    /// Speedup of the executed layer over the scalar-CPU baseline
+    /// (`None` for host-only layers).
+    pub fn speedup(&self) -> Option<f64> {
+        (self.cpu_cycles > 0).then(|| self.cpu_cycles as f64 / self.cycles.max(1) as f64)
+    }
+}
+
+/// The whole-network execution report.
+#[derive(Clone, Debug)]
+pub struct NetworkReport {
+    /// Network name.
+    pub name: String,
+    /// Per-layer rows, in execution order.
+    pub layers: Vec<LayerReport>,
+    /// End-to-end cycles.
+    pub total_cycles: u64,
+    /// End-to-end energy, µJ.
+    pub total_energy_uj: f64,
+    /// Final activation tensor.
+    pub output: TensorChw,
+    /// Whether every layer matched the golden model.
+    pub exact: bool,
+}
+
+impl NetworkReport {
+    /// Aggregate MAC/cycle over the true MACs.
+    pub fn mac_per_cycle(&self) -> f64 {
+        let macs: u64 = self.layers.iter().map(|l| l.macs).sum();
+        macs as f64 / self.total_cycles.max(1) as f64
+    }
+
+    /// Whole-network speedup over the scalar-CPU baseline. The CPU side
+    /// pays the scalar conv cost per conv layer and the *same* cycles
+    /// as the executed run for host-only layers (pooling runs on the
+    /// host either way); the CGRA lowering's glue (pad / decimate /
+    /// shuffle / embed) is charged to the CGRA side only — a scalar CPU
+    /// convolves strided/padded/1×1 layers directly.
+    pub fn speedup(&self) -> f64 {
+        let cpu: u64 = self
+            .layers
+            .iter()
+            .map(|l| if l.cpu_cycles > 0 { l.cpu_cycles } else { l.cycles })
+            .sum();
+        cpu as f64 / self.total_cycles.max(1) as f64
+    }
+}
+
+/// Weight bank of a conv-like layer, with the pointwise embedding
+/// applied when the lowering asks for it.
+fn effective_weights<'a>(
+    layer: &'a Layer,
+    embed: bool,
+    host: &mut HostOp,
+) -> std::borrow::Cow<'a, Weights> {
+    let w = match layer {
+        Layer::Conv { weights, .. }
+        | Layer::Depthwise { weights, .. }
+        | Layer::Pointwise { weights, .. } => weights,
+        _ => unreachable!("effective_weights is only called for conv-like layers"),
+    };
+    if embed {
+        let (e, op) = embed_pointwise_weights(w);
+        host.add(op);
+        std::borrow::Cow::Owned(e)
+    } else {
+        std::borrow::Cow::Borrowed(w)
+    }
+}
+
+/// Execute `net` on the engine. The returned report carries per-layer
+/// metrics, golden-exactness flags and the final activation.
+pub fn run_network(engine: &Engine, net: &Net, input: &TensorChw) -> Result<NetworkReport> {
+    net.validate()?;
+    let model = *engine.energy_model();
+
+    // The golden chain advances lazily alongside the executed chain, so
+    // a layer that fails (e.g. past the memory bound) costs no golden
+    // compute.
+    let mut golden_x = input.clone();
+    let mut x = input.clone();
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut total_cycles = 0u64;
+    let mut total_energy = 0.0f64;
+    for (index, layer) in net.layers.iter().enumerate() {
+        let ctx = || format!("layer {index} ({}) of '{}'", layer.kind(), net.name);
+        let mut host = HostOp::default();
+        let mut conv_cycles = 0u64;
+        let mut conv_energy = 0.0f64;
+        let mut launches = 0u64;
+        let mut mapping: Option<Mapping> = None;
+
+        let mut out = match layer {
+            Layer::MaxPool { size, stride } => {
+                let (out, op) = maxpool2d(&x, *size, *stride);
+                host.add(op);
+                out
+            }
+            Layer::AvgPool { size, stride } => {
+                let (out, op) = avgpool2d(&x, *size, *stride);
+                host.add(op);
+                out
+            }
+            conv_like => {
+                let shape = conv_like.conv_shape().expect("conv-like layer has a shape");
+                let depthwise = matches!(conv_like, Layer::Depthwise { .. });
+                let layer_mapping = match conv_like {
+                    Layer::Conv { mapping, .. } | Layer::Pointwise { mapping, .. } => *mapping,
+                    _ => Mapping::Auto,
+                };
+                let lc = lower_conv(shape, layer_mapping, depthwise).with_context(ctx)?;
+                // 1. Host padding (layer pad + pointwise ring). When no
+                //    padding is needed the activation moves in unchanged.
+                let conv_in = if lc.host_pad > 0 {
+                    let (p, op) = pad_input(&x, lc.host_pad);
+                    host.add(op);
+                    p
+                } else {
+                    std::mem::replace(&mut x, TensorChw::zeros(0, 0, 0))
+                };
+                // 2. Weights (pointwise banks are center-embedded).
+                let w_eff = effective_weights(conv_like, lc.embed_pointwise, &mut host);
+                // 3. The engine part: one borrow-based submission, or a
+                //    batch of independent per-group convolutions.
+                let full = if lc.groups == 1 {
+                    let res = engine
+                        .run_one(&lc.sub_shape, lc.mapping, false, &conv_in, &w_eff)
+                        .with_context(ctx)?;
+                    conv_cycles += res.report.latency_cycles;
+                    conv_energy += res.report.energy_uj;
+                    launches += res.report.launches;
+                    mapping = Some(res.mapping);
+                    res.output
+                } else {
+                    let (cg, kg) = (lc.sub_shape.c, lc.sub_shape.k);
+                    host.add(super::lower::group_shuffle_cost(
+                        conv_in.data.len(),
+                        lc.groups * kg * lc.sub_shape.ox * lc.sub_shape.oy,
+                    ));
+                    let wpg = kg * cg * 9;
+                    let reqs: Vec<ConvRequest> = (0..lc.groups)
+                        .map(|g| {
+                            ConvRequest::with_data(
+                                lc.sub_shape,
+                                lc.mapping,
+                                slice_channels(&conv_in, g * cg, (g + 1) * cg),
+                                Weights::from_vec(
+                                    kg,
+                                    cg,
+                                    3,
+                                    3,
+                                    w_eff.data[g * wpg..(g + 1) * wpg].to_vec(),
+                                ),
+                            )
+                        })
+                        .collect();
+                    let mut parts = Vec::with_capacity(lc.groups);
+                    for (g, res) in engine.submit_batch(&reqs).into_iter().enumerate() {
+                        let res = res.with_context(|| format!("group {g}")).with_context(ctx)?;
+                        conv_cycles += res.report.latency_cycles;
+                        conv_energy += res.report.energy_uj;
+                        launches += res.report.launches;
+                        mapping = Some(res.mapping);
+                        parts.push(res.output);
+                    }
+                    concat_channels(parts)
+                };
+                // 4. Stride: decimate the full stride-1 output.
+                let (_, ox, oy) = lc.out_dims;
+                if lc.stride > 1 {
+                    let (d, op) = decimate(&full, lc.stride, ox, oy);
+                    host.add(op);
+                    d
+                } else {
+                    full
+                }
+            }
+        };
+        // 5. Fused ReLU (host-side, same charge as the engine's).
+        let (mut relu_cycles, mut relu_uj) = (0u64, 0.0f64);
+        if layer.relu() {
+            relu_in_place(&mut out);
+            let (c, e) = relu_cost(&model, out.data.len());
+            relu_cycles = c;
+            relu_uj = e;
+        }
+
+        golden_x = golden_layer(layer, &golden_x)?;
+        let exact = out.data == golden_x.data;
+        let cycles = conv_cycles + host.cycles + relu_cycles;
+        let energy_uj = conv_energy + host_energy_uj(&model, host) + relu_uj;
+        total_cycles += cycles;
+        total_energy += energy_uj;
+        layers.push(LayerReport {
+            index,
+            kind: layer.kind(),
+            desc: layer.describe(),
+            mapping,
+            cycles,
+            conv_cycles,
+            host_cycles: host.cycles + relu_cycles,
+            energy_uj,
+            launches,
+            macs: layer.macs(),
+            cpu_cycles: super::lower::cpu_baseline_cycles(layer),
+            exact,
+        });
+        x = out;
+    }
+
+    let exact = layers.iter().all(|l| l.exact);
+    Ok(NetworkReport {
+        name: net.name.clone(),
+        layers,
+        total_cycles,
+        total_energy_uj: total_energy,
+        output: x,
+        exact,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineBuilder;
+    use crate::prop::Rng;
+
+    fn engine() -> Engine {
+        EngineBuilder::new().workers(2).private_cache().build().unwrap()
+    }
+
+    /// A network exercising every layer kind executes exactly against
+    /// the golden chain, with sensible accounting.
+    #[test]
+    fn mixed_network_is_exact_and_accounted() {
+        let mut rng = Rng::new(9);
+        let net = Net {
+            name: "mixed".into(),
+            input_dims: (2, 10, 10),
+            layers: vec![
+                Layer::conv(
+                    crate::conv::GenConvShape::new(2, 4, 10, 10, 3, 3, 2, 1, 1).unwrap(),
+                    true,
+                    4,
+                    &mut rng,
+                )
+                .unwrap(), // -> 4x5x5
+                Layer::depthwise(4, 5, 5, 1, 1, true, 4, &mut rng).unwrap(), // -> 4x5x5
+                Layer::pointwise(4, 8, 5, 5, true, 4, &mut rng).unwrap(), // -> 8x5x5
+                Layer::maxpool(2, 2), // -> 8x2x2
+            ],
+        };
+        let input = net.random_input(10, 3);
+        let report = run_network(&engine(), &net, &input).unwrap();
+        assert!(report.exact, "every layer must match the golden model");
+        assert_eq!(report.layers.len(), 4);
+        assert_eq!(report.layers[1].mapping, Some(Mapping::DwWp));
+        assert_eq!(report.layers[1].launches, 4, "one Dw-WP launch per channel");
+        assert!(report.layers[0].host_cycles > 0, "pad + decimate + relu charged");
+        assert_eq!(report.layers[3].mapping, None, "pooling is host-only");
+        assert_eq!(report.layers[3].conv_cycles, 0);
+        assert_eq!(
+            report.total_cycles,
+            report.layers.iter().map(|l| l.cycles).sum::<u64>()
+        );
+        assert_eq!((report.output.c, report.output.h, report.output.w), (8, 2, 2));
+        // Conv layers report a CPU baseline; the paper's headline says
+        // the CGRA should beat it on dense layers.
+        assert!(report.layers[0].speedup().is_some());
+        assert!(report.layers[3].speedup().is_none());
+    }
+
+    /// A grouped conv batches its independent group submissions and
+    /// still matches the golden model.
+    #[test]
+    fn grouped_conv_batches_and_is_exact() {
+        let mut rng = Rng::new(11);
+        let net = Net {
+            name: "grouped".into(),
+            input_dims: (4, 8, 8),
+            layers: vec![Layer::conv(
+                crate::conv::GenConvShape::new(4, 8, 8, 8, 3, 3, 1, 0, 2).unwrap(),
+                false,
+                4,
+                &mut rng,
+            )
+            .unwrap()],
+        };
+        let input = net.random_input(12, 7);
+        let report = run_network(&engine(), &net, &input).unwrap();
+        assert!(report.exact);
+        // Two groups of a 2->4 conv: 4*2 launches each under WP.
+        assert_eq!(report.layers[0].launches, 2 * 4 * 2);
+        assert!(report.layers[0].host_cycles > 0, "group shuffle charged");
+    }
+
+    /// The stride-1 fast path submits the layer's exact basic shape —
+    /// zero host glue besides the fused ReLU.
+    #[test]
+    fn plain_stack_has_no_glue_overhead() {
+        let net = Net::plain_stack(2, 2, 4, 8, 5).unwrap();
+        let input = net.random_input(8, 2);
+        let report = run_network(&engine(), &net, &input).unwrap();
+        assert!(report.exact);
+        // Layer 1 has no ReLU and no generalization: pure conv cycles.
+        let last = &report.layers[1];
+        assert_eq!(last.host_cycles, 0);
+        assert_eq!(last.cycles, last.conv_cycles);
+        // Auto resolved to the paper's winner on these shapes.
+        assert_eq!(report.layers[0].mapping, Some(Mapping::Wp));
+    }
+
+    /// Failures carry the layer context.
+    #[test]
+    fn layer_errors_are_contextualized() {
+        let mut rng = Rng::new(1);
+        // A conv too big for the 512 KiB bound (same shape class the
+        // engine's oversized-request test uses).
+        let net = Net {
+            name: "big".into(),
+            input_dims: (16, 66, 66),
+            layers: vec![Layer::conv(
+                crate::conv::GenConvShape::new(16, 16, 66, 66, 3, 3, 1, 0, 1).unwrap(),
+                false,
+                2,
+                &mut rng,
+            )
+            .unwrap()],
+        };
+        let input = net.random_input(2, 1);
+        let err = format!("{:#}", run_network(&engine(), &net, &input).unwrap_err());
+        assert!(err.contains("layer 0") && err.contains("big"), "{err}");
+    }
+}

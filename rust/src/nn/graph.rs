@@ -1,0 +1,393 @@
+//! The typed layer-graph IR: a feed-forward stack of generalized
+//! layers — dense/grouped convolutions with stride and padding,
+//! depthwise and pointwise convolutions, max/average pooling — each
+//! with an optional fused host-side ReLU, plus the golden CPU reference
+//! the executor is checked against layer by layer.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::conv::{conv2d_general, GenConvShape, TensorChw, Weights};
+use crate::kernels::Mapping;
+use crate::prop::Rng;
+
+use super::lower::{avgpool2d, maxpool2d};
+
+/// One layer of the graph. Convolution variants carry their weights
+/// inline; the mapping field may be [`Mapping::Auto`] (the planner
+/// picks per layer at lowering time) or any concrete dense mapping.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// Generalized convolution: stride / zero padding / channel groups,
+    /// 3×3 filter. Weights `(K, C/groups, 3, 3)`.
+    Conv {
+        /// Layer hyper-parameters.
+        shape: GenConvShape,
+        /// Filter bank.
+        weights: Weights,
+        /// Strategy for the lowered stride-1 convolutions.
+        mapping: Mapping,
+        /// Fused host-side ReLU after the convolution.
+        relu: bool,
+    },
+    /// Depthwise convolution (`groups == C == K`): one 3×3 filter per
+    /// channel, weights `(C, 1, 3, 3)`. Runs on the CGRA via the
+    /// `Dw-WP` kernel.
+    Depthwise {
+        /// Layer hyper-parameters (`is_depthwise()` holds).
+        shape: GenConvShape,
+        /// One single-channel filter per channel.
+        weights: Weights,
+        /// Fused host-side ReLU.
+        relu: bool,
+    },
+    /// Pointwise (1×1) convolution. Weights `(K, C, 1, 1)`. Lowered to
+    /// a center-embedded 3×3 over a one-zero-ring-padded input.
+    Pointwise {
+        /// Layer hyper-parameters (`fx == fy == 1`).
+        shape: GenConvShape,
+        /// The 1×1 filter bank.
+        weights: Weights,
+        /// Strategy for the lowered stride-1 convolutions.
+        mapping: Mapping,
+        /// Fused host-side ReLU.
+        relu: bool,
+    },
+    /// Host-side max pooling over `size × size` windows.
+    MaxPool {
+        /// Window side.
+        size: usize,
+        /// Window stride.
+        stride: usize,
+    },
+    /// Host-side average pooling (truncating integer mean).
+    AvgPool {
+        /// Window side.
+        size: usize,
+        /// Window stride.
+        stride: usize,
+    },
+}
+
+impl Layer {
+    /// A dense or grouped 3×3 convolution with deterministic random
+    /// weights.
+    pub fn conv(shape: GenConvShape, relu: bool, mag: i32, rng: &mut Rng) -> Result<Layer> {
+        shape.validate()?;
+        ensure!((shape.fx, shape.fy) == (3, 3), "Layer::conv is the 3x3 variant");
+        let weights = Weights::random(shape.k, shape.c_per_group(), 3, 3, mag, rng);
+        Ok(Layer::Conv { shape, weights, mapping: Mapping::Auto, relu })
+    }
+
+    /// A depthwise 3×3 convolution (`k == c`, one filter per channel)
+    /// with deterministic random weights.
+    #[allow(clippy::too_many_arguments)]
+    pub fn depthwise(
+        c: usize,
+        ih: usize,
+        iw: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+        mag: i32,
+        rng: &mut Rng,
+    ) -> Result<Layer> {
+        let shape = GenConvShape::new(c, c, ih, iw, 3, 3, stride, pad, c)?;
+        ensure!(shape.is_depthwise() || c == 1, "depthwise needs at least one channel");
+        let weights = Weights::random(c, 1, 3, 3, mag, rng);
+        Ok(Layer::Depthwise { shape, weights, relu })
+    }
+
+    /// A pointwise (1×1, stride 1, no padding) convolution with
+    /// deterministic random weights.
+    pub fn pointwise(
+        c: usize,
+        k: usize,
+        ih: usize,
+        iw: usize,
+        relu: bool,
+        mag: i32,
+        rng: &mut Rng,
+    ) -> Result<Layer> {
+        let shape = GenConvShape::new(c, k, ih, iw, 1, 1, 1, 0, 1)?;
+        let weights = Weights::random(k, c, 1, 1, mag, rng);
+        Ok(Layer::Pointwise { shape, weights, mapping: Mapping::Auto, relu })
+    }
+
+    /// Max pooling.
+    pub fn maxpool(size: usize, stride: usize) -> Layer {
+        Layer::MaxPool { size, stride }
+    }
+
+    /// Average pooling.
+    pub fn avgpool(size: usize, stride: usize) -> Layer {
+        Layer::AvgPool { size, stride }
+    }
+
+    /// Short kind label for reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Layer::Conv { .. } => "conv",
+            Layer::Depthwise { .. } => "depthwise",
+            Layer::Pointwise { .. } => "pointwise",
+            Layer::MaxPool { .. } => "maxpool",
+            Layer::AvgPool { .. } => "avgpool",
+        }
+    }
+
+    /// One-line description for reports.
+    pub fn describe(&self) -> String {
+        match self {
+            Layer::Conv { shape, .. }
+            | Layer::Depthwise { shape, .. }
+            | Layer::Pointwise { shape, .. } => shape.id(),
+            Layer::MaxPool { size, stride } | Layer::AvgPool { size, stride } => {
+                format!("{size}x{size}/s{stride}")
+            }
+        }
+    }
+
+    /// The convolution shape, for conv-like layers.
+    pub fn conv_shape(&self) -> Option<&GenConvShape> {
+        match self {
+            Layer::Conv { shape, .. }
+            | Layer::Depthwise { shape, .. }
+            | Layer::Pointwise { shape, .. } => Some(shape),
+            _ => None,
+        }
+    }
+
+    /// Whether a fused ReLU follows the layer.
+    pub fn relu(&self) -> bool {
+        match self {
+            Layer::Conv { relu, .. }
+            | Layer::Depthwise { relu, .. }
+            | Layer::Pointwise { relu, .. } => *relu,
+            _ => false,
+        }
+    }
+
+    /// True multiply-accumulates of the layer (0 for pooling).
+    pub fn macs(&self) -> u64 {
+        self.conv_shape().map(|s| s.macs()).unwrap_or(0)
+    }
+
+    /// Output dims `(c, h, w)` for an input of `dims`, validating that
+    /// the layer accepts it.
+    pub fn out_dims(&self, dims: (usize, usize, usize)) -> Result<(usize, usize, usize)> {
+        let (c, h, w) = dims;
+        match self {
+            Layer::Conv { shape, .. }
+            | Layer::Depthwise { shape, .. }
+            | Layer::Pointwise { shape, .. } => {
+                ensure!(
+                    (shape.c, shape.ih, shape.iw) == (c, h, w),
+                    "{} layer expects input {}x{}x{}, got {c}x{h}x{w}",
+                    self.kind(),
+                    shape.c,
+                    shape.ih,
+                    shape.iw
+                );
+                Ok((shape.k, shape.ox(), shape.oy()))
+            }
+            Layer::MaxPool { size, stride } | Layer::AvgPool { size, stride } => {
+                ensure!(*size >= 1 && *stride >= 1, "pool size/stride must be at least 1");
+                ensure!(
+                    h >= *size && w >= *size,
+                    "{}x{} input smaller than the {size}x{size} pool window",
+                    h,
+                    w
+                );
+                Ok((c, (h - size) / stride + 1, (w - size) / stride + 1))
+            }
+        }
+    }
+}
+
+/// A feed-forward layer graph with a fixed input signature.
+#[derive(Clone, Debug)]
+pub struct Net {
+    /// Network name (preset name, or a descriptive label).
+    pub name: String,
+    /// Input dims `(c, h, w)`.
+    pub input_dims: (usize, usize, usize),
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+}
+
+impl Net {
+    /// Validate the whole graph: every layer accepts its predecessor's
+    /// output.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "network '{}' has no layers", self.name);
+        let mut dims = self.input_dims;
+        for (i, layer) in self.layers.iter().enumerate() {
+            dims = layer
+                .out_dims(dims)
+                .with_context(|| format!("layer {i} ({}) of '{}'", layer.kind(), self.name))?;
+        }
+        Ok(())
+    }
+
+    /// Output dims of the whole network.
+    pub fn output_dims(&self) -> Result<(usize, usize, usize)> {
+        let mut dims = self.input_dims;
+        for layer in &self.layers {
+            dims = layer.out_dims(dims)?;
+        }
+        Ok(dims)
+    }
+
+    /// Total true MACs.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// A plain stride-1 / valid stack of `depth` dense 3×3 conv+ReLU
+    /// layers — the generalized equivalent of the pre-nn
+    /// `ConvNet::random` CNN (`cgra net` without a preset).
+    pub fn plain_stack(depth: usize, c0: usize, k: usize, hw: usize, seed: u64) -> Result<Net> {
+        ensure!(depth >= 1, "need at least one layer");
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        let (mut c, mut h, mut w) = (c0, hw, hw);
+        for d in 0..depth {
+            let shape = GenConvShape::new(c, k, h, w, 3, 3, 1, 0, 1)?;
+            let relu = d + 1 < depth;
+            layers.push(Layer::conv(shape, relu, 4, &mut rng)?);
+            c = k;
+            h = shape.ox();
+            w = shape.oy();
+        }
+        Ok(Net { name: format!("stack-{depth}x{k}"), input_dims: (c0, hw, hw), layers })
+    }
+
+    /// Deterministic random input tensor for this network.
+    pub fn random_input(&self, mag: i32, seed: u64) -> TensorChw {
+        let (c, h, w) = self.input_dims;
+        TensorChw::random(c, h, w, mag, &mut Rng::new(seed))
+    }
+}
+
+/// Apply a fused ReLU in place (shared by the golden chain and the
+/// executor so both clamp identically).
+pub(crate) fn relu_in_place(t: &mut TensorChw) {
+    for v in t.data.iter_mut() {
+        *v = (*v).max(0);
+    }
+}
+
+/// Golden CPU reference of one layer (wrapping int32 + ReLU): the
+/// generalized direct convolution for every conv variant (depthwise is
+/// its `groups == C` case), the host pooling ops for pools.
+pub fn golden_layer(layer: &Layer, input: &TensorChw) -> Result<TensorChw> {
+    let mut out = match layer {
+        Layer::Conv { shape, weights, .. }
+        | Layer::Depthwise { shape, weights, .. }
+        | Layer::Pointwise { shape, weights, .. } => conv2d_general(shape, input, weights),
+        Layer::MaxPool { size, stride } => maxpool2d(input, *size, *stride).0,
+        Layer::AvgPool { size, stride } => avgpool2d(input, *size, *stride).0,
+    };
+    if layer.relu() {
+        relu_in_place(&mut out);
+    }
+    Ok(out)
+}
+
+/// Golden CPU reference of the whole network: per-layer outputs in
+/// execution order (the executor checks its layer outputs against
+/// these, element-exactly).
+pub fn golden_network(net: &Net, input: &TensorChw) -> Result<Vec<TensorChw>> {
+    net.validate()?;
+    let (c, h, w) = net.input_dims;
+    if input.c != c || input.h != h || input.w != w {
+        bail!(
+            "network '{}' expects a {c}x{h}x{w} input, got {}x{}x{}",
+            net.name,
+            input.c,
+            input.h,
+            input.w
+        );
+    }
+    let mut outs = Vec::with_capacity(net.layers.len());
+    let mut x = input.clone();
+    for layer in &net.layers {
+        x = golden_layer(layer, &x)?;
+        outs.push(x.clone());
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_net() -> Net {
+        let mut rng = Rng::new(1);
+        let conv = Layer::conv(
+            GenConvShape::new(2, 4, 8, 8, 3, 3, 2, 1, 1).unwrap(),
+            true,
+            4,
+            &mut rng,
+        )
+        .unwrap(); // -> 4x4x4
+        let dw = Layer::depthwise(4, 4, 4, 1, 1, true, 4, &mut rng).unwrap(); // -> 4x4x4
+        let pw = Layer::pointwise(4, 6, 4, 4, false, 4, &mut rng).unwrap(); // -> 6x4x4
+        let pool = Layer::maxpool(2, 2); // -> 6x2x2
+        Net {
+            name: "tiny".into(),
+            input_dims: (2, 8, 8),
+            layers: vec![conv, dw, pw, pool],
+        }
+    }
+
+    #[test]
+    fn dims_chain_through_all_layer_kinds() {
+        let net = tiny_net();
+        net.validate().unwrap();
+        assert_eq!(net.output_dims().unwrap(), (6, 2, 2));
+        assert_eq!(net.layers[0].kind(), "conv");
+        assert_eq!(net.layers[1].kind(), "depthwise");
+        assert_eq!(net.layers[2].kind(), "pointwise");
+        assert_eq!(net.layers[3].kind(), "maxpool");
+        // MACs: conv 2*4*4*4*9 + dw 4*4*4*9 + pw 4*6*4*4; pool adds 0.
+        assert_eq!(net.macs(), 2 * 4 * 16 * 9 + 4 * 16 * 9 + 4 * 6 * 16);
+    }
+
+    #[test]
+    fn mismatched_chains_are_rejected_with_layer_index() {
+        let mut net = tiny_net();
+        // Drop the first conv: the depthwise layer now sees the 2x8x8
+        // network input instead of its expected 4x4x4.
+        net.layers.remove(0);
+        let err = format!("{:#}", net.validate().unwrap_err());
+        assert!(err.contains("layer 0") && err.contains("depthwise"), "{err}");
+    }
+
+    #[test]
+    fn golden_network_chains_and_applies_relu() {
+        let net = tiny_net();
+        let input = net.random_input(10, 5);
+        let outs = golden_network(&net, &input).unwrap();
+        assert_eq!(outs.len(), 4);
+        // ReLU layers have no negative outputs.
+        assert!(outs[0].data.iter().all(|&v| v >= 0));
+        assert!(outs[1].data.iter().all(|&v| v >= 0));
+        // Final dims match.
+        assert_eq!((outs[3].c, outs[3].h, outs[3].w), (6, 2, 2));
+        // Wrong input dims are rejected.
+        let bad = TensorChw::zeros(1, 8, 8);
+        assert!(golden_network(&net, &bad).is_err());
+    }
+
+    #[test]
+    fn plain_stack_matches_legacy_random_net_shapes() {
+        let net = Net::plain_stack(3, 3, 8, 12, 7).unwrap();
+        net.validate().unwrap();
+        assert_eq!(net.output_dims().unwrap(), (8, 6, 6));
+        assert!(net.layers[0].relu() && !net.layers[2].relu());
+        // Every layer is a stride-1 basic shape (the fast path).
+        for l in &net.layers {
+            assert!(l.conv_shape().unwrap().to_basic().is_some());
+        }
+    }
+}

@@ -1,0 +1,440 @@
+//! Lowering rules: how each generalized layer becomes stride-1 / valid
+//! 3×3 engine convolutions plus host-side glue, and the closed-form
+//! cost model of that glue. The executor (`nn::exec`) and the planner
+//! path (`nn::plan`) share these functions, so predicted and executed
+//! host costs are identical by construction.
+//!
+//! # The rules
+//!
+//! - **Padding `p`** — the host materializes the zero border
+//!   (`pad_input`); the engine then runs a *valid* convolution, exactly
+//!   as the kernels expect. Charged per copied element like the im2col
+//!   preparation the paper overlaps (§2.3).
+//! - **Stride `s > 1`** — the engine computes the full stride-1 output
+//!   and the host decimates it (`decimate`), keeping every `s`-th pixel
+//!   per axis. Exact (a strided conv *is* the stride-1 conv sampled —
+//!   pinned in `conv::golden`), at the cost of ~`s²` overcompute on the
+//!   CGRA; the per-layer report makes that overcompute visible instead
+//!   of hiding it. A strided 3×3 cannot decompose onto kernels that are
+//!   hard-wired to 3×3 taps, so this is the honest lowering.
+//! - **Groups `g`** — the layer splits into `g` independent
+//!   convolutions over contiguous channel slices (CHW keeps channel
+//!   ranges contiguous); the executor submits them as one batch over
+//!   the engine's worker pool.
+//! - **Depthwise** — a single `Dw-WP` submission (`kernels::dw`); no
+//!   group split, one launch per channel inside the kernel.
+//! - **Pointwise (1×1)** — lowered to a 3×3 with the filter embedded at
+//!   the center tap and one extra zero ring of padding: zero taps
+//!   contribute nothing (wrapping multiply by 0 is 0), so the result is
+//!   exact with 9× tap overcompute, again reported rather than hidden.
+//! - **Pooling** — host-side ops with a documented per-element cycle
+//!   cost ([`maxpool2d`], [`avgpool2d`]); the paper's system runs
+//!   pooling on the MCU too.
+
+use anyhow::{ensure, Result};
+
+use crate::conv::{ConvShape, GenConvShape, TensorChw, Weights};
+use crate::cpu_ref::CpuModel;
+use crate::energy::EnergyModel;
+use crate::kernels::{HostCostModel, Mapping};
+
+use super::graph::Layer;
+
+/// Cycles/accesses of one host-side glue operation (pad, slice,
+/// decimate, concat, pool). Energy follows from the session model via
+/// [`host_energy_uj`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HostOp {
+    /// CPU cycles charged.
+    pub cycles: u64,
+    /// Memory accesses charged (reads + writes).
+    pub accesses: u64,
+}
+
+impl HostOp {
+    /// Accumulate another op.
+    pub fn add(&mut self, other: HostOp) {
+        self.cycles += other.cycles;
+        self.accesses += other.accesses;
+    }
+}
+
+/// Energy of a host op, µJ: CPU-active + memory-static power over its
+/// duration plus per-access dynamic energy — the same integration the
+/// engine's ReLU charge uses, so every host-side cycle in the system is
+/// priced identically.
+pub fn host_energy_uj(model: &EnergyModel, op: HostOp) -> f64 {
+    let t_s = op.cycles as f64 / model.clock_hz;
+    (model.p_cpu_active_mw + model.p_mem_static_mw) * t_s * 1e3
+        + op.accesses as f64 * model.e_mem_access_pj * 1e-6
+}
+
+/// Cycles per element copied/compared by host glue loops (load +
+/// store/compare + address bookkeeping on the in-order RV32 core) —
+/// the same figure the im2col driver charges.
+fn cycles_per_elem() -> u64 {
+    HostCostModel::default().im2col_cycles_per_elem
+}
+
+/// Zero-pad a CHW tensor by `p` on every spatial side. Returns the
+/// padded tensor and the host charge (one pass over the padded tensor:
+/// every destination element is written, interior elements are read
+/// from the source).
+pub fn pad_input(x: &TensorChw, p: usize) -> (TensorChw, HostOp) {
+    if p == 0 {
+        return (x.clone(), HostOp::default());
+    }
+    let (h, w) = (x.h + 2 * p, x.w + 2 * p);
+    let mut out = TensorChw::zeros(x.c, h, w);
+    for c in 0..x.c {
+        for y in 0..x.h {
+            let src = x.offset(c, y, 0);
+            let dst = out.offset(c, y + p, p);
+            out.data[dst..dst + x.w].copy_from_slice(&x.data[src..src + x.w]);
+        }
+    }
+    let op = HostOp {
+        cycles: cycles_per_elem() * out.data.len() as u64,
+        accesses: (x.data.len() + out.data.len()) as u64,
+    };
+    (out, op)
+}
+
+/// Cost of [`pad_input`] without materializing it (the planner path).
+pub fn pad_cost(c: usize, h: usize, w: usize, p: usize) -> HostOp {
+    if p == 0 {
+        return HostOp::default();
+    }
+    let padded = c * (h + 2 * p) * (w + 2 * p);
+    HostOp {
+        cycles: cycles_per_elem() * padded as u64,
+        accesses: (c * h * w + padded) as u64,
+    }
+}
+
+/// Keep every `stride`-th pixel per axis of a CHW tensor (`ox × oy`
+/// outputs). The inverse charge of the stride lowering's overcompute.
+pub fn decimate(full: &TensorChw, stride: usize, ox: usize, oy: usize) -> (TensorChw, HostOp) {
+    if stride == 1 {
+        // Nothing to do; the caller uses `full` as-is.
+        return (full.clone(), HostOp::default());
+    }
+    let mut out = TensorChw::zeros(full.c, ox, oy);
+    for c in 0..full.c {
+        for y in 0..ox {
+            for x in 0..oy {
+                out.set(c, y, x, full.at(c, y * stride, x * stride));
+            }
+        }
+    }
+    let op = decimate_cost(full.c, stride, ox, oy);
+    (out, op)
+}
+
+/// Cost of [`decimate`] (shared with the planner path).
+pub fn decimate_cost(c: usize, stride: usize, ox: usize, oy: usize) -> HostOp {
+    if stride == 1 {
+        return HostOp::default();
+    }
+    let elems = (c * ox * oy) as u64;
+    HostOp { cycles: cycles_per_elem() * elems, accesses: 2 * elems }
+}
+
+/// Copy channels `[lo, hi)` of a CHW tensor (contiguous in CHW).
+pub fn slice_channels(x: &TensorChw, lo: usize, hi: usize) -> TensorChw {
+    let per = x.h * x.w;
+    TensorChw::from_vec(hi - lo, x.h, x.w, x.data[lo * per..hi * per].to_vec())
+}
+
+/// Concatenate per-group CHW outputs along the channel axis.
+pub fn concat_channels(parts: Vec<TensorChw>) -> TensorChw {
+    let (h, w) = (parts[0].h, parts[0].w);
+    let c: usize = parts.iter().map(|p| p.c).sum();
+    let mut data = Vec::with_capacity(c * h * w);
+    for p in parts {
+        assert_eq!((p.h, p.w), (h, w), "group outputs must share spatial dims");
+        data.extend_from_slice(&p.data);
+    }
+    TensorChw::from_vec(c, h, w, data)
+}
+
+/// Cost of the group split + merge: each input element is sliced into
+/// its group's buffer once, each output element concatenated once.
+pub fn group_shuffle_cost(in_elems: usize, out_elems: usize) -> HostOp {
+    let elems = (in_elems + out_elems) as u64;
+    HostOp { cycles: cycles_per_elem() * elems, accesses: 2 * elems }
+}
+
+/// Per-window-element cycles of the pooling loops: one load plus one
+/// compare/accumulate.
+const POOL_CYCLES_PER_TAP: u64 = 5;
+/// Per-output-element store cycles of the pooling loops.
+const POOL_STORE_CYCLES: u64 = 4;
+
+/// Max pooling over `size × size` windows at `stride` (host-side).
+pub fn maxpool2d(x: &TensorChw, size: usize, stride: usize) -> (TensorChw, HostOp) {
+    pool2d(x, size, stride, |acc, v| acc.max(v), i32::MIN, |acc, _| acc)
+}
+
+/// Average pooling (truncating integer division by the window size,
+/// wrapping accumulation like every other integer op in the crate).
+pub fn avgpool2d(x: &TensorChw, size: usize, stride: usize) -> (TensorChw, HostOp) {
+    pool2d(x, size, stride, |acc, v| acc.wrapping_add(v), 0, |acc, n| acc / n)
+}
+
+fn pool2d(
+    x: &TensorChw,
+    size: usize,
+    stride: usize,
+    fold: impl Fn(i32, i32) -> i32,
+    init: i32,
+    finish: impl Fn(i32, i32) -> i32,
+) -> (TensorChw, HostOp) {
+    assert!(size >= 1 && stride >= 1 && x.h >= size && x.w >= size);
+    let (oh, ow) = ((x.h - size) / stride + 1, (x.w - size) / stride + 1);
+    let mut out = TensorChw::zeros(x.c, oh, ow);
+    for c in 0..x.c {
+        for y in 0..oh {
+            for xx in 0..ow {
+                let mut acc = init;
+                for dy in 0..size {
+                    for dx in 0..size {
+                        acc = fold(acc, x.at(c, y * stride + dy, xx * stride + dx));
+                    }
+                }
+                out.set(c, y, xx, finish(acc, (size * size) as i32));
+            }
+        }
+    }
+    (out, pool_cost(x.c, oh, ow, size))
+}
+
+/// Cost of one pooling pass (shared with the planner path).
+pub fn pool_cost(c: usize, oh: usize, ow: usize, size: usize) -> HostOp {
+    let outs = (c * oh * ow) as u64;
+    let taps = outs * (size * size) as u64;
+    HostOp {
+        cycles: taps * POOL_CYCLES_PER_TAP + outs * POOL_STORE_CYCLES,
+        accesses: taps + outs,
+    }
+}
+
+/// How a conv-like layer reaches the engine: the stride-1 / valid 3×3
+/// sub-convolution (per group), and the host glue around it.
+#[derive(Clone, Debug)]
+pub struct LoweredConv {
+    /// The engine-visible per-group shape. For a stride-1 / pad-0 /
+    /// groups-1 dense 3×3 layer this is exactly the layer's
+    /// [`GenConvShape::to_basic`] shape — byte-identical cache and
+    /// planner keys to the pre-generalization fast path.
+    pub sub_shape: ConvShape,
+    /// Independent group convolutions (1 for dense/depthwise).
+    pub groups: usize,
+    /// Strategy per sub-convolution ([`Mapping::DwWp`] for depthwise;
+    /// the layer's mapping — often `Auto` — otherwise).
+    pub mapping: Mapping,
+    /// Zeros the host pads on each side before submission (layer pad,
+    /// plus one extra ring for the pointwise embedding).
+    pub host_pad: usize,
+    /// The layer stride (host decimation factor after the engine runs).
+    pub stride: usize,
+    /// Logical output dims `(k, ox, oy)` after decimation/concat.
+    pub out_dims: (usize, usize, usize),
+    /// Whether the weights need the pointwise center-embedding pass.
+    pub embed_pointwise: bool,
+}
+
+/// Lower a conv-like layer's shape. `depthwise` selects the Dw-WP
+/// single-submission route.
+pub fn lower_conv(shape: &GenConvShape, mapping: Mapping, depthwise: bool) -> Result<LoweredConv> {
+    shape.validate()?;
+    let pointwise = (shape.fx, shape.fy) == (1, 1);
+    let host_pad = shape.pad + usize::from(pointwise);
+    let (ihp, iwp) = (shape.ih + 2 * host_pad, shape.iw + 2 * host_pad);
+    // Full stride-1 3×3 output of the padded input.
+    let (oxf, oyf) = (ihp - 2, iwp - 2);
+    let (sub_c, sub_k, groups) = if depthwise {
+        ensure!(
+            shape.k == shape.c && shape.groups == shape.c,
+            "depthwise lowering needs groups == C == K, got {shape}"
+        );
+        (shape.c, shape.k, 1)
+    } else {
+        (shape.c_per_group(), shape.k_per_group(), shape.groups)
+    };
+    let sub_shape = ConvShape::checked(sub_c, sub_k, oxf, oyf)?;
+    Ok(LoweredConv {
+        sub_shape,
+        groups,
+        mapping: if depthwise { Mapping::DwWp } else { mapping },
+        host_pad,
+        stride: shape.stride,
+        out_dims: (shape.k, shape.ox(), shape.oy()),
+        embed_pointwise: pointwise,
+    })
+}
+
+/// Center-embed a `(K, C, 1, 1)` filter bank into `(K, C, 3, 3)` (zero
+/// taps everywhere else). One-time preparation, charged like the IP
+/// kernel's padded weight image.
+pub fn embed_pointwise_weights(w: &Weights) -> (Weights, HostOp) {
+    assert_eq!((w.fy, w.fx), (1, 1), "embed_pointwise_weights takes a 1x1 bank");
+    let mut out = Weights::zeros(w.k, w.c, 3, 3);
+    for k in 0..w.k {
+        for c in 0..w.c {
+            out.set(k, c, 1, 1, w.at(k, c, 0, 0));
+        }
+    }
+    let op = embed_pointwise_cost(w.k, w.c);
+    (out, op)
+}
+
+/// Cost of [`embed_pointwise_weights`] (shared with the planner path).
+pub fn embed_pointwise_cost(k: usize, c: usize) -> HostOp {
+    let elems = (k * c * 9) as u64;
+    HostOp {
+        cycles: HostCostModel::default().prep_cycles_per_elem * elems,
+        accesses: (k * c) as u64 + elems,
+    }
+}
+
+/// Scalar-CPU baseline cycles of the *logical* layer (true MACs, true
+/// output size) — the per-layer speedup denominator of the network
+/// report. Pools return 0 (they run on the host either way).
+pub fn cpu_baseline_cycles(layer: &Layer) -> u64 {
+    match layer.conv_shape() {
+        None => 0,
+        Some(s) => {
+            let m = CpuModel::default();
+            (s.macs() as f64 * m.cycles_per_mac()
+                + s.output_elems() as f64 * m.store_latency)
+                .round() as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+
+    #[test]
+    fn pad_embeds_and_charges() {
+        let mut rng = Rng::new(1);
+        let x = TensorChw::random(2, 3, 4, 10, &mut rng);
+        let (p, op) = pad_input(&x, 1);
+        assert_eq!((p.c, p.h, p.w), (2, 5, 6));
+        assert_eq!(p.at(0, 0, 0), 0);
+        assert_eq!(p.at(1, 1, 1), x.at(1, 0, 0));
+        assert_eq!(p.at(1, 3, 4), x.at(1, 2, 3));
+        assert_eq!(op.cycles, 3 * 2 * 5 * 6);
+        assert_eq!(op, pad_cost(2, 3, 4, 1));
+        // p = 0 is free.
+        assert_eq!(pad_input(&x, 0).1, HostOp::default());
+    }
+
+    #[test]
+    fn decimate_samples_every_stride() {
+        let x = TensorChw::from_vec(1, 4, 4, (0..16).collect());
+        let (d, op) = decimate(&x, 2, 2, 2);
+        assert_eq!(d.data, vec![0, 2, 8, 10]);
+        assert_eq!(op, decimate_cost(1, 2, 2, 2));
+        assert!(op.cycles > 0);
+    }
+
+    #[test]
+    fn slice_concat_round_trip() {
+        let mut rng = Rng::new(2);
+        let x = TensorChw::random(6, 3, 3, 9, &mut rng);
+        let parts: Vec<TensorChw> =
+            (0..3).map(|g| slice_channels(&x, g * 2, (g + 1) * 2)).collect();
+        assert_eq!(concat_channels(parts), x);
+    }
+
+    #[test]
+    fn pooling_math_and_identities() {
+        let x = TensorChw::from_vec(1, 4, 4, (1..=16).collect());
+        let (mx, _) = maxpool2d(&x, 2, 2);
+        assert_eq!(mx.data, vec![6, 8, 14, 16]);
+        let (avg, _) = avgpool2d(&x, 2, 2);
+        // Truncated window means: 14/4, 22/4, 46/4, 54/4.
+        assert_eq!(avg.data, vec![3, 5, 11, 13]);
+        // size-1 stride-1 pooling is the identity.
+        assert_eq!(maxpool2d(&x, 1, 1).0, x);
+        assert_eq!(avgpool2d(&x, 1, 1).0, x);
+        // Max of a window is >= its truncated mean.
+        for (a, b) in mx.data.iter().zip(avg.data.iter()) {
+            assert!(a >= b);
+        }
+    }
+
+    #[test]
+    fn lower_conv_fast_path_is_the_basic_shape() {
+        let g = GenConvShape::new(3, 5, 10, 12, 3, 3, 1, 0, 1).unwrap();
+        let l = lower_conv(&g, Mapping::Auto, false).unwrap();
+        assert_eq!(Some(l.sub_shape), g.to_basic());
+        assert_eq!(l.groups, 1);
+        assert_eq!(l.host_pad, 0);
+        assert_eq!(l.stride, 1);
+        assert!(!l.embed_pointwise);
+    }
+
+    #[test]
+    fn lower_conv_strided_padded_grouped() {
+        let g = GenConvShape::new(4, 8, 16, 16, 3, 3, 2, 1, 2).unwrap();
+        let l = lower_conv(&g, Mapping::Auto, false).unwrap();
+        // Padded to 18x18, full stride-1 output 16x16, per group 2->4.
+        assert_eq!(l.sub_shape, ConvShape::new3x3(2, 4, 16, 16));
+        assert_eq!(l.groups, 2);
+        assert_eq!(l.host_pad, 1);
+        assert_eq!(l.stride, 2);
+        assert_eq!(l.out_dims, (8, 8, 8));
+    }
+
+    #[test]
+    fn lower_pointwise_adds_the_embedding_ring() {
+        let g = GenConvShape::new(8, 16, 7, 7, 1, 1, 1, 0, 1).unwrap();
+        let l = lower_conv(&g, Mapping::Auto, false).unwrap();
+        assert!(l.embed_pointwise);
+        assert_eq!(l.host_pad, 1);
+        // 9x9 padded input, 3x3 valid -> 7x7: the pointwise output size.
+        assert_eq!(l.sub_shape, ConvShape::new3x3(8, 16, 7, 7));
+        assert_eq!(l.out_dims, (16, 7, 7));
+    }
+
+    #[test]
+    fn lower_depthwise_routes_to_dw_wp() {
+        let g = GenConvShape::new(8, 8, 10, 10, 3, 3, 1, 1, 8).unwrap();
+        let l = lower_conv(&g, Mapping::Auto, true).unwrap();
+        assert_eq!(l.mapping, Mapping::DwWp);
+        assert_eq!(l.groups, 1, "depthwise is one submission, C launches inside");
+        assert_eq!(l.sub_shape, ConvShape::new3x3(8, 8, 10, 10));
+    }
+
+    #[test]
+    fn pointwise_embedding_is_exact() {
+        let mut rng = Rng::new(3);
+        let w = Weights::random(3, 2, 1, 1, 9, &mut rng);
+        let (e, op) = embed_pointwise_weights(&w);
+        assert_eq!(e.at(2, 1, 1, 1), w.at(2, 1, 0, 0));
+        assert_eq!(e.at(2, 1, 0, 0), 0);
+        assert_eq!(op, embed_pointwise_cost(3, 2));
+        // A 1x1 conv over x equals the embedded 3x3 over zero-ring-padded x.
+        let g1 = GenConvShape::new(2, 3, 4, 4, 1, 1, 1, 0, 1).unwrap();
+        let x = TensorChw::random(2, 4, 4, 20, &mut rng);
+        let direct = crate::conv::conv2d_general(&g1, &x, &w);
+        let (xp, _) = pad_input(&x, 1);
+        let g3 = GenConvShape::new(2, 3, 6, 6, 3, 3, 1, 0, 1).unwrap();
+        let via3x3 = crate::conv::conv2d_general(&g3, &xp, &e);
+        assert_eq!(direct.data, via3x3.data);
+    }
+
+    #[test]
+    fn host_energy_is_positive_and_linear_in_cycles() {
+        let m = EnergyModel::default();
+        let a = host_energy_uj(&m, HostOp { cycles: 100, accesses: 10 });
+        let b = host_energy_uj(&m, HostOp { cycles: 200, accesses: 20 });
+        assert!(a > 0.0);
+        assert!((b - 2.0 * a).abs() < 1e-12);
+    }
+}

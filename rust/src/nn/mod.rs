@@ -1,0 +1,45 @@
+//! # The `nn` layer-graph subsystem
+//!
+//! End-to-end edge networks on the simulated CGRA: a typed layer IR
+//! ([`Layer`] — generalized convolutions with stride / padding /
+//! groups, depthwise and pointwise convolutions, pooling, fused ReLU),
+//! named presets ([`presets`]), and a graph executor ([`run_network`])
+//! that lowers every layer onto the existing [`Engine`] with per-layer
+//! planner-backed mapping choice.
+//!
+//! ## Lowering (see [`lower`] for the rules in full)
+//!
+//! The paper's kernels are stride-1 / valid / groups-1 / 3×3. Each
+//! generalized layer becomes host glue around exactly those kernels:
+//! padding is materialized by the host; strides decimate the full
+//! stride-1 output; groups split into independent convolutions batched
+//! over the engine's pool; pointwise filters are center-embedded into
+//! 3×3; depthwise layers run the dedicated `Dw-WP` kernel (one
+//! WP-machinery launch per channel). A stride-1 / pad-0 / groups-1
+//! dense layer lowers to its exact [`crate::conv::ConvShape`] — the
+//! untouched fast path with byte-identical cache and planner keys.
+//!
+//! Every lowering is *exact* (zero taps and decimation commute with the
+//! wrapping arithmetic); the executor checks each layer element-exactly
+//! against the generalized golden model ([`graph::golden_network`]) and
+//! reports the overcompute the glue pays instead of hiding it.
+//!
+//! ## Planning
+//!
+//! [`plan_network`] prices a whole network through the analytical
+//! planner — same lowered shapes, same closed-form glue costs — so
+//! `cgra net --plan-only` predicts end-to-end cycles/energy without
+//! simulating, within the planner's validated ≤ 5 % bound.
+//!
+//! [`Engine`]: crate::engine::Engine
+
+pub mod exec;
+pub mod graph;
+pub mod lower;
+pub mod plan;
+pub mod presets;
+
+pub use exec::{run_network, LayerReport, NetworkReport};
+pub use graph::{golden_layer, golden_network, Layer, Net};
+pub use plan::{plan_network, LayerPlanReport, NetPlan};
+pub use presets::{build as build_preset, preset_names, Preset, PRESETS};

@@ -1,0 +1,265 @@
+//! Plan a whole [`Net`] through the analytical cost model — per-layer
+//! mapping choice and predicted cycles/energy — **without simulating a
+//! single convolution**.
+//!
+//! The conv part of each layer is priced by the [`Planner`] on the same
+//! lowered stride-1 shapes the executor submits; the host glue (pad /
+//! group shuffle / decimate / pool / fused ReLU) uses the identical
+//! closed forms from `nn::lower`. Under the **latency** objective a
+//! plan resolves `Mapping::Auto` exactly like the executor (the
+//! engine's cost-backed policy is latency-only), so plan totals are
+//! directly comparable to `nn::exec::run_network`'s within the
+//! planner's ≤ 5 % validated bound — `cgra plan --validate` checks one
+//! strided layer end to end this way. Under the **energy** objective
+//! the plan may choose mappings the executor's `Auto` would not; pin
+//! the planned mappings into the layers to execute such a plan.
+
+use anyhow::{Context, Result};
+
+use crate::engine::relu_cost;
+use crate::kernels::Mapping;
+use crate::planner::{PlanObjective, Planner};
+
+use super::graph::{Layer, Net};
+use super::lower::{
+    cpu_baseline_cycles, decimate_cost, embed_pointwise_cost, group_shuffle_cost, host_energy_uj,
+    lower_conv, pad_cost, pool_cost, HostOp,
+};
+
+/// The predicted cost and chosen strategy of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlanReport {
+    /// Layer index in execution order.
+    pub index: usize,
+    /// Layer kind label.
+    pub kind: &'static str,
+    /// Short shape description.
+    pub desc: String,
+    /// The strategy the plan costs (`None` for host-only pooling).
+    pub mapping: Option<Mapping>,
+    /// Predicted end-to-end layer cycles (conv + glue + ReLU).
+    pub cycles: u64,
+    /// Predicted CGRA convolution cycles.
+    pub conv_cycles: u64,
+    /// Predicted host glue cycles (incl. the fused ReLU).
+    pub host_cycles: u64,
+    /// Predicted layer energy, µJ.
+    pub energy_uj: f64,
+    /// True MACs of the layer.
+    pub macs: u64,
+    /// Scalar-CPU baseline cycles (0 for pools).
+    pub cpu_cycles: u64,
+}
+
+/// A whole-network plan.
+#[derive(Clone, Debug)]
+pub struct NetPlan {
+    /// Network name.
+    pub name: String,
+    /// The objective the per-layer choice minimized.
+    pub objective: PlanObjective,
+    /// Per-layer predictions, in execution order.
+    pub layers: Vec<LayerPlanReport>,
+    /// Predicted end-to-end cycles.
+    pub total_cycles: u64,
+    /// Predicted end-to-end energy, µJ.
+    pub total_energy_uj: f64,
+}
+
+/// Plan every layer of `net` under `objective`. Layers with
+/// [`Mapping::Auto`] pick the cheapest in-bound CGRA mapping by
+/// predicted cost; depthwise layers cost the `Dw-WP` kernel; explicit
+/// mappings are priced as requested.
+pub fn plan_network(planner: &Planner, net: &Net, objective: PlanObjective) -> Result<NetPlan> {
+    net.validate()?;
+    let model = *planner.energy_model();
+    let mut dims = net.input_dims;
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut total_cycles = 0u64;
+    let mut total_energy = 0.0f64;
+    for (index, layer) in net.layers.iter().enumerate() {
+        let ctx = || format!("planning layer {index} ({}) of '{}'", layer.kind(), net.name);
+        let (c, h, w) = dims;
+        let out_dims = layer.out_dims(dims)?;
+        let mut host = HostOp::default();
+        let mut conv_cycles = 0u64;
+        let mut conv_energy = 0.0f64;
+        let mut mapping: Option<Mapping> = None;
+
+        match layer {
+            Layer::MaxPool { size, stride } | Layer::AvgPool { size, stride } => {
+                let (oc, oh, ow) = out_dims;
+                debug_assert_eq!(oc, c);
+                let _ = stride;
+                host.add(pool_cost(c, oh, ow, *size));
+            }
+            conv_like => {
+                let shape = conv_like.conv_shape().expect("conv-like layer has a shape");
+                let depthwise = matches!(conv_like, Layer::Depthwise { .. });
+                let layer_mapping = match conv_like {
+                    Layer::Conv { mapping, .. } | Layer::Pointwise { mapping, .. } => *mapping,
+                    _ => Mapping::Auto,
+                };
+                let lc = lower_conv(shape, layer_mapping, depthwise).with_context(ctx)?;
+                host.add(pad_cost(c, h, w, lc.host_pad));
+                if lc.embed_pointwise {
+                    host.add(embed_pointwise_cost(shape.k, shape.c_per_group()));
+                }
+                if lc.groups > 1 {
+                    let padded =
+                        c * (h + 2 * lc.host_pad) * (w + 2 * lc.host_pad);
+                    host.add(group_shuffle_cost(
+                        padded,
+                        lc.groups * lc.sub_shape.output_elems(),
+                    ));
+                }
+                // The per-group estimate: every group shares one
+                // (shape, mapping) point, so the planner memo makes the
+                // repeats free; multiplying is exact because the
+                // executor submits `groups` independent convolutions.
+                let est = match lc.mapping {
+                    Mapping::Auto => planner
+                        .best_of(&lc.sub_shape, &Mapping::CGRA, objective)
+                        .with_context(ctx)?,
+                    m => planner.estimate(&lc.sub_shape, m).with_context(ctx)?,
+                };
+                mapping = Some(est.mapping);
+                conv_cycles = est.cycles() * lc.groups as u64;
+                conv_energy = est.energy_uj() * lc.groups as f64;
+                if lc.stride > 1 {
+                    let (k, ox, oy) = lc.out_dims;
+                    host.add(decimate_cost(k, lc.stride, ox, oy));
+                }
+            }
+        }
+        let (relu_cycles, relu_uj) = if layer.relu() {
+            let (oc, oh, ow) = out_dims;
+            relu_cost(&model, oc * oh * ow)
+        } else {
+            (0, 0.0)
+        };
+
+        let cycles = conv_cycles + host.cycles + relu_cycles;
+        let energy_uj = conv_energy + host_energy_uj(&model, host) + relu_uj;
+        total_cycles += cycles;
+        total_energy += energy_uj;
+        layers.push(LayerPlanReport {
+            index,
+            kind: layer.kind(),
+            desc: layer.describe(),
+            mapping,
+            cycles,
+            conv_cycles,
+            host_cycles: host.cycles + relu_cycles,
+            energy_uj,
+            macs: layer.macs(),
+            cpu_cycles: cpu_baseline_cycles(layer),
+        });
+        dims = out_dims;
+    }
+    Ok(NetPlan {
+        name: net.name.clone(),
+        objective,
+        layers,
+        total_cycles,
+        total_energy_uj: total_energy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::energy::EnergyModel;
+    use crate::engine::EngineBuilder;
+    use crate::prop::Rng;
+
+    fn planner() -> Planner {
+        Planner::new(&CgraConfig::default(), &EnergyModel::default()).unwrap()
+    }
+
+    fn mixed_net() -> Net {
+        let mut rng = Rng::new(9);
+        Net {
+            name: "mixed".into(),
+            input_dims: (2, 10, 10),
+            layers: vec![
+                Layer::conv(
+                    crate::conv::GenConvShape::new(2, 4, 10, 10, 3, 3, 2, 1, 1).unwrap(),
+                    true,
+                    4,
+                    &mut rng,
+                )
+                .unwrap(),
+                Layer::depthwise(4, 5, 5, 1, 1, true, 4, &mut rng).unwrap(),
+                Layer::pointwise(4, 8, 5, 5, true, 4, &mut rng).unwrap(),
+                Layer::maxpool(2, 2),
+            ],
+        }
+    }
+
+    /// The plan prices every layer, never simulates a full layer, and
+    /// tracks the executed network within the planner's bound.
+    #[test]
+    fn plan_tracks_execution_within_the_bound() {
+        let p = planner();
+        let net = mixed_net();
+        let plan = plan_network(&p, &net, PlanObjective::Latency).unwrap();
+        assert_eq!(plan.layers.len(), 4);
+        assert_eq!(plan.layers[1].mapping, Some(Mapping::DwWp));
+        assert_eq!(plan.layers[3].mapping, None);
+        assert_eq!(
+            plan.total_cycles,
+            plan.layers.iter().map(|l| l.cycles).sum::<u64>()
+        );
+        // Compare against the real execution.
+        let engine = EngineBuilder::new().workers(2).private_cache().build().unwrap();
+        let input = net.random_input(10, 3);
+        let report = super::super::exec::run_network(&engine, &net, &input).unwrap();
+        let (pc, sc) = (plan.total_cycles as f64, report.total_cycles as f64);
+        assert!(
+            ((pc - sc) / sc).abs() <= 0.05,
+            "planned {pc} vs executed {sc} cycles"
+        );
+        // Host glue is closed-form-identical, layer by layer.
+        for (a, b) in plan.layers.iter().zip(report.layers.iter()) {
+            assert_eq!(a.host_cycles, b.host_cycles, "layer {} glue", a.index);
+            assert_eq!(a.mapping, b.mapping, "layer {} mapping", a.index);
+            assert_eq!(a.cpu_cycles, b.cpu_cycles, "layer {} baseline", a.index);
+        }
+    }
+
+    /// Objectives steer the per-layer choice deterministically.
+    #[test]
+    fn objective_is_threaded_through() {
+        let p = planner();
+        let net = Net::plain_stack(2, 2, 4, 8, 5).unwrap();
+        let lat = plan_network(&p, &net, PlanObjective::Latency).unwrap();
+        let eng = plan_network(&p, &net, PlanObjective::Energy).unwrap();
+        assert_eq!(lat.objective, PlanObjective::Latency);
+        assert_eq!(eng.objective, PlanObjective::Energy);
+        // On the paper's shapes WP wins both objectives.
+        assert_eq!(lat.layers[0].mapping, Some(Mapping::Wp));
+        assert_eq!(eng.layers[0].mapping, Some(Mapping::Wp));
+    }
+
+    /// Over-bound layers fail with the layer context, like the executor.
+    #[test]
+    fn plan_errors_carry_layer_context() {
+        let p = planner();
+        let mut rng = Rng::new(1);
+        let net = Net {
+            name: "big".into(),
+            input_dims: (16, 66, 66),
+            layers: vec![Layer::conv(
+                crate::conv::GenConvShape::new(16, 16, 66, 66, 3, 3, 1, 0, 1).unwrap(),
+                false,
+                2,
+                &mut rng,
+            )
+            .unwrap()],
+        };
+        let err = format!("{:#}", plan_network(&p, &net, PlanObjective::Latency).unwrap_err());
+        assert!(err.contains("planning layer 0"), "{err}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Named network presets: the edge-CNN layer mixes the paper targets,
+//! buildable by name from the CLI (`cgra net --preset <name>`).
+//! Weights are deterministic in the seed, so every run (and CI) sees
+//! identical networks.
+
+use anyhow::{bail, Result};
+
+use crate::conv::GenConvShape;
+use crate::prop::Rng;
+
+use super::graph::{Layer, Net};
+
+/// A named preset.
+#[derive(Clone, Copy, Debug)]
+pub struct Preset {
+    /// CLI name.
+    pub name: &'static str,
+    /// One-line description (shown in `cgra net` help/errors).
+    pub about: &'static str,
+}
+
+/// Every available preset, in display order.
+pub const PRESETS: [Preset; 3] = [
+    Preset {
+        name: "mobilenet-mini",
+        about: "depthwise-separable stack (strided conv, dw/pw pairs, avgpool) on 3x32x32",
+    },
+    Preset {
+        name: "paper-baseline",
+        about: "the paper's baseline layer (C=K=Ox=Oy=16, 3x3, stride 1) as a one-layer net",
+    },
+    Preset {
+        name: "vgg-mini",
+        about: "VGG-ish stack: padded 3x3 convs, maxpools, one strided conv, on 3x16x16",
+    },
+];
+
+/// The comma-separated preset list (help text and error messages).
+pub fn preset_names() -> String {
+    PRESETS.iter().map(|p| p.name).collect::<Vec<_>>().join(" | ")
+}
+
+/// Build a preset by name with weights deterministic in `seed`. The
+/// error for an unknown name lists every preset with its description.
+pub fn build(name: &str, seed: u64) -> Result<Net> {
+    let mut rng = Rng::new(seed);
+    match name {
+        "mobilenet-mini" => mobilenet_mini(&mut rng),
+        "paper-baseline" => paper_baseline(&mut rng),
+        "vgg-mini" => vgg_mini(&mut rng),
+        other => {
+            let list = PRESETS
+                .iter()
+                .map(|p| format!("  {:<16} {}", p.name, p.about))
+                .collect::<Vec<_>>()
+                .join("\n");
+            bail!("unknown preset '{other}'. Available presets:\n{list}")
+        }
+    }
+}
+
+/// MobileNet-style depthwise-separable stack on a 3×32×32 input:
+/// strided dense stem, then depthwise/pointwise pairs (one depthwise
+/// strided), average pooling, and a pointwise classifier head.
+fn mobilenet_mini(rng: &mut Rng) -> Result<Net> {
+    let layers = vec![
+        // Stem: 3 -> 8, stride 2, pad 1 (32 -> 16).
+        Layer::conv(GenConvShape::new(3, 8, 32, 32, 3, 3, 2, 1, 1)?, true, 4, rng)?,
+        // dw/pw pair at 16x16.
+        Layer::depthwise(8, 16, 16, 1, 1, true, 4, rng)?,
+        Layer::pointwise(8, 16, 16, 16, true, 4, rng)?,
+        // Strided depthwise (16 -> 8) + pw expansion.
+        Layer::depthwise(16, 16, 16, 2, 1, true, 4, rng)?,
+        Layer::pointwise(16, 32, 8, 8, true, 4, rng)?,
+        // Pool + classifier head.
+        Layer::avgpool(2, 2),
+        Layer::pointwise(32, 10, 4, 4, false, 4, rng)?,
+    ];
+    Ok(Net { name: "mobilenet-mini".into(), input_dims: (3, 32, 32), layers })
+}
+
+/// The paper's baseline layer as a single-layer network: lowered, it
+/// submits exactly `ConvShape::baseline()` — same engine, cache and
+/// planner keys as every figure driver.
+fn paper_baseline(rng: &mut Rng) -> Result<Net> {
+    let layers =
+        vec![Layer::conv(GenConvShape::new(16, 16, 18, 18, 3, 3, 1, 0, 1)?, false, 4, rng)?];
+    Ok(Net { name: "paper-baseline".into(), input_dims: (16, 18, 18), layers })
+}
+
+/// A small VGG-flavored stack on 3×16×16: padded stride-1 convs with
+/// maxpool downsampling, finished by a strided conv.
+fn vgg_mini(rng: &mut Rng) -> Result<Net> {
+    let layers = vec![
+        Layer::conv(GenConvShape::new(3, 8, 16, 16, 3, 3, 1, 1, 1)?, true, 4, rng)?,
+        Layer::maxpool(2, 2), // 8x8
+        Layer::conv(GenConvShape::new(8, 16, 8, 8, 3, 3, 1, 1, 1)?, true, 4, rng)?,
+        Layer::maxpool(2, 2), // 4x4
+        Layer::conv(GenConvShape::new(16, 16, 4, 4, 3, 3, 2, 1, 1)?, true, 4, rng)?, // 2x2
+    ];
+    Ok(Net { name: "vgg-mini".into(), input_dims: (3, 16, 16), layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_build_and_validate() {
+        for p in PRESETS {
+            let net = build(p.name, 7).unwrap();
+            net.validate().unwrap();
+            assert_eq!(net.name, p.name);
+            assert!(net.macs() > 0);
+        }
+    }
+
+    #[test]
+    fn preset_dims_are_as_documented() {
+        assert_eq!(build("mobilenet-mini", 1).unwrap().output_dims().unwrap(), (10, 4, 4));
+        assert_eq!(build("paper-baseline", 1).unwrap().output_dims().unwrap(), (16, 16, 16));
+        assert_eq!(build("vgg-mini", 1).unwrap().output_dims().unwrap(), (16, 2, 2));
+    }
+
+    #[test]
+    fn paper_baseline_lowers_to_the_exact_baseline_shape() {
+        let net = build("paper-baseline", 3).unwrap();
+        let shape = net.layers[0].conv_shape().unwrap();
+        assert_eq!(shape.to_basic(), Some(crate::conv::ConvShape::baseline()));
+    }
+
+    #[test]
+    fn mobilenet_mini_covers_the_depthwise_separable_mix() {
+        let net = build("mobilenet-mini", 2).unwrap();
+        let kinds: Vec<&str> = net.layers.iter().map(|l| l.kind()).collect();
+        assert_eq!(
+            kinds,
+            ["conv", "depthwise", "pointwise", "depthwise", "pointwise", "avgpool", "pointwise"]
+        );
+        // Strided layers present (the stem and one depthwise).
+        assert_eq!(net.layers[0].conv_shape().unwrap().stride, 2);
+        assert_eq!(net.layers[3].conv_shape().unwrap().stride, 2);
+    }
+
+    #[test]
+    fn unknown_preset_error_lists_all_presets() {
+        let err = format!("{:#}", build("resnet", 1).unwrap_err());
+        for p in PRESETS {
+            assert!(err.contains(p.name), "{err}");
+        }
+    }
+
+    #[test]
+    fn presets_are_deterministic_in_the_seed() {
+        let a = build("vgg-mini", 9).unwrap();
+        let b = build("vgg-mini", 9).unwrap();
+        let (wa, wb) = (&a.layers[0], &b.layers[0]);
+        match (wa, wb) {
+            (Layer::Conv { weights: x, .. }, Layer::Conv { weights: y, .. }) => {
+                assert_eq!(x.data, y.data);
+            }
+            _ => panic!("expected conv layers"),
+        }
+    }
+}

@@ -43,7 +43,7 @@ mod probe;
 mod validate;
 
 pub use network::{plan_network, LayerPlan, NetworkPlan, PlanObjective};
-pub use validate::{validate, ValidationReport, ValidationRow};
+pub use validate::{validate, validate_extended, ValidationReport, ValidationRow};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

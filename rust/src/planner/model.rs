@@ -20,6 +20,9 @@
 //!   the only address difference between consecutive pixels).
 //! - **Im2col-IP** (`kernels::ip::run`): one launch per `(pixel, k)`;
 //!   classes split by patch-slot parity.
+//! - **Dw-WP** (`kernels::dw::run`): one launch per channel — a single
+//!   class, structurally the WP `ci == 0` class on a `C = K = 1` shape
+//!   (the depthwise kernel reuses the WP generator).
 //! - **CPU**: no launches — the scalar cost model
 //!   ([`CpuModel::conv_cycles`]) is already closed-form.
 //!
@@ -90,6 +93,7 @@ impl KernelModel {
             Mapping::OpDirect => op_direct_model(shape, cfg),
             Mapping::OpIm2col => op_im2col_model(shape, cfg),
             Mapping::Ip => ip_model(shape, cfg),
+            Mapping::DwWp => dw_model(shape, cfg),
             Mapping::Cpu => cpu_baseline_model(shape, cfg),
             Mapping::Auto => bail!(
                 "the cost model needs a concrete mapping — resolve Auto first \
@@ -142,6 +146,32 @@ fn wp_model(shape: &ConvShape, cfg: &CgraConfig) -> Result<KernelModel> {
         hidden_cap_per_launch: 0,
         cpu_mem: MemStats::default(),
         footprint_bytes: shape.base_bytes(),
+        cpu_compute_cycles: 0,
+    })
+}
+
+/// One launch per channel, all of one structural kind — the WP `ci == 0`
+/// class on the per-channel `C = K = 1` shape (see `kernels::dw`).
+fn dw_model(shape: &ConvShape, cfg: &CgraConfig) -> Result<KernelModel> {
+    use crate::kernels::dw;
+    let lay = dw::layout(shape, cfg)?;
+    let c = shape.c;
+    let classes = vec![LaunchClass {
+        label: "dw/ch".into(),
+        count: c as u64,
+        probes: uniq(vec![0, c - 1])
+            .into_iter()
+            .map(|g| dw::build_channel_program(shape, &lay, g))
+            .collect(),
+    }];
+    Ok(KernelModel {
+        mapping: Mapping::DwWp,
+        launches: c as u64,
+        classes,
+        cpu_im2col_cycles: 0,
+        hidden_cap_per_launch: 0,
+        cpu_mem: MemStats::default(),
+        footprint_bytes: dw::footprint_bytes(shape),
         cpu_compute_cycles: 0,
     })
 }
@@ -386,6 +416,24 @@ mod tests {
         let cpu = KernelModel::for_mapping(Mapping::Cpu, &s, &cfg).unwrap();
         assert_eq!(cpu.launches, 0);
         assert_eq!(cpu.cpu_compute_cycles, CpuModel::default().conv_cycles(&s));
+    }
+
+    #[test]
+    fn dw_model_is_one_class_with_one_launch_per_channel() {
+        let cfg = CgraConfig::default();
+        for c in [1usize, 2, 16] {
+            let s = ConvShape::new3x3(c, c, 8, 8);
+            let km = KernelModel::for_mapping(Mapping::DwWp, &s, &cfg).unwrap();
+            assert_eq!(km.launches, c as u64);
+            assert_eq!(km.classes.len(), 1);
+            assert_eq!(km.classes[0].count, c as u64);
+            // First/last channel dedup onto one probe when C == 1.
+            assert_eq!(km.classes[0].probes.len(), if c == 1 { 1 } else { 2 });
+            assert_eq!(km.footprint_bytes, crate::kernels::dw::footprint_bytes(&s));
+        }
+        // The depthwise convention is enforced.
+        assert!(KernelModel::for_mapping(Mapping::DwWp, &ConvShape::new3x3(2, 3, 4, 4), &cfg)
+            .is_err());
     }
 
     #[test]

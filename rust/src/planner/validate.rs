@@ -98,10 +98,8 @@ pub fn validate(engine: &Engine, spec: &SweepSpec) -> Result<ValidationReport> {
             (Some(sim), Ok(est)) => {
                 simulated_launches += sim.launches;
                 let (sc, pc) = (sim.latency_cycles, est.cycles());
-                let latency_err_pct =
-                    (pc as f64 - sc as f64) / sc.max(1) as f64 * 100.0;
-                let energy_err_pct =
-                    (est.energy_uj() - sim.energy_uj) / sim.energy_uj * 100.0;
+                let latency_err_pct = err_pct(pc as f64, sc as f64);
+                let energy_err_pct = err_pct(est.energy_uj(), sim.energy_uj);
                 rows.push(ValidationRow {
                     axis: r.point.axis.label(),
                     value: r.point.value,
@@ -133,23 +131,117 @@ pub fn validate(engine: &Engine, spec: &SweepSpec) -> Result<ValidationReport> {
             )),
         }
     }
-    let n = rows.len().max(1) as f64;
-    let mean_lat = rows.iter().map(|r| r.latency_err_pct.abs()).sum::<f64>() / n;
-    let max_lat = rows.iter().map(|r| r.latency_err_pct.abs()).fold(0.0f64, f64::max);
-    let mean_e = rows.iter().map(|r| r.energy_err_pct.abs()).sum::<f64>() / n;
-    let max_e = rows.iter().map(|r| r.energy_err_pct.abs()).fold(0.0f64, f64::max);
-    Ok(ValidationReport {
-        mean_abs_latency_err_pct: mean_lat,
-        max_abs_latency_err_pct: max_lat,
-        mean_abs_energy_err_pct: mean_e,
-        max_abs_energy_err_pct: max_e,
+    let mut report = ValidationReport {
+        mean_abs_latency_err_pct: 0.0,
+        max_abs_latency_err_pct: 0.0,
+        mean_abs_energy_err_pct: 0.0,
+        max_abs_energy_err_pct: 0.0,
         probe_launches: planner.stats().probe_launches - probes_before,
         simulated_launches,
         rows,
         skipped,
         bound_mismatches: mismatch_details.len(),
         mismatch_details,
-    })
+    };
+    recompute_aggregates(&mut report);
+    Ok(report)
+}
+
+/// Signed percentage error of `pred` against `sim`.
+fn err_pct(pred: f64, sim: f64) -> f64 {
+    (pred - sim) / sim.max(1e-12) * 100.0
+}
+
+/// Recompute the aggregate error statistics from the current rows
+/// (used after [`validate_extended`] appends its extension points).
+fn recompute_aggregates(report: &mut ValidationReport) {
+    let n = report.rows.len().max(1) as f64;
+    report.mean_abs_latency_err_pct =
+        report.rows.iter().map(|r| r.latency_err_pct.abs()).sum::<f64>() / n;
+    report.max_abs_latency_err_pct =
+        report.rows.iter().map(|r| r.latency_err_pct.abs()).fold(0.0f64, f64::max);
+    report.mean_abs_energy_err_pct =
+        report.rows.iter().map(|r| r.energy_err_pct.abs()).sum::<f64>() / n;
+    report.max_abs_energy_err_pct =
+        report.rows.iter().map(|r| r.energy_err_pct.abs()).fold(0.0f64, f64::max);
+}
+
+/// The `cgra plan --validate` protocol since the `nn` subsystem landed:
+/// the [`validate`] grid **plus two generalized-layer points** —
+///
+/// - a **depthwise** shape (`axis "DW"`): the planner's `Dw-WP` launch
+///   class vs the simulated `kernels::dw` run, and
+/// - a **strided** layer (`axis "stride"`): the nn plan (conv estimate
+///   + closed-form host glue) vs the executed nn lowering of a
+///   stride-2 / pad-1 convolution, end to end.
+///
+/// Both rows enter the same aggregate error statistics, so the CI MAE
+/// gate covers the new layer classes too.
+pub fn validate_extended(engine: &Engine, spec: &SweepSpec) -> Result<ValidationReport> {
+    let mut report = validate(engine, spec)?;
+    let planner = engine.planner();
+    let probes_before = planner.stats().probe_launches;
+
+    // Depthwise point: predicted vs simulated Dw-WP.
+    let dw_shape = ConvShape::new3x3(16, 16, 16, 16);
+    let est = planner.estimate(&dw_shape, Mapping::DwWp)?;
+    let req = crate::engine::ConvRequest::seeded_with_mags(
+        dw_shape,
+        Mapping::DwWp,
+        spec.seed,
+        spec.mag,
+        spec.mag,
+    );
+    let (sim, _) = engine.submit_report(&req)?;
+    report.simulated_launches += sim.launches;
+    report.rows.push(ValidationRow {
+        axis: "DW",
+        value: dw_shape.c,
+        mapping: Mapping::DwWp,
+        shape: dw_shape,
+        simulated_cycles: sim.latency_cycles,
+        predicted_cycles: est.cycles(),
+        latency_err_pct: err_pct(est.cycles() as f64, sim.latency_cycles as f64),
+        simulated_uj: sim.energy_uj,
+        predicted_uj: est.energy_uj(),
+        energy_err_pct: err_pct(est.energy_uj(), sim.energy_uj),
+    });
+
+    // Strided point: nn plan vs nn execution of one stride-2 / pad-1
+    // convolution (conv estimate plus identical closed-form glue).
+    let gen = crate::conv::GenConvShape::new(8, 8, 18, 18, 3, 3, 2, 1, 1)?;
+    let mut rng = crate::prop::Rng::new(spec.seed ^ 0x57de);
+    let layer = crate::nn::Layer::conv(gen, false, spec.mag.min(9), &mut rng)?;
+    let net = crate::nn::Net {
+        name: "validate-strided".into(),
+        input_dims: (gen.c, gen.ih, gen.iw),
+        layers: vec![layer],
+    };
+    let plan = crate::nn::plan_network(planner, &net, crate::planner::PlanObjective::Latency)?;
+    let input = net.random_input(spec.mag, spec.seed);
+    let exec = crate::nn::run_network(engine, &net, &input)?;
+    anyhow::ensure!(
+        exec.exact,
+        "strided validation layer diverged from the generalized golden model"
+    );
+    report.simulated_launches += exec.layers[0].launches;
+    let lowered = crate::nn::lower::lower_conv(&gen, Mapping::Auto, false)?;
+    report.rows.push(ValidationRow {
+        axis: "stride",
+        value: gen.stride,
+        mapping: plan.layers[0].mapping.expect("conv layer has a mapping"),
+        shape: lowered.sub_shape,
+        simulated_cycles: exec.total_cycles,
+        predicted_cycles: plan.total_cycles,
+        latency_err_pct: err_pct(plan.total_cycles as f64, exec.total_cycles as f64),
+        simulated_uj: exec.total_energy_uj,
+        predicted_uj: plan.total_energy_uj,
+        energy_err_pct: err_pct(plan.total_energy_uj, exec.total_energy_uj),
+    });
+
+    report.probe_launches += planner.stats().probe_launches - probes_before;
+    recompute_aggregates(&mut report);
+    Ok(report)
 }
 
 impl ValidationReport {
@@ -282,6 +374,35 @@ mod tests {
         assert!(text.contains("mean |err|"));
         let json = report.to_json();
         assert_eq!(json.req("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// The extended protocol appends exactly the depthwise and strided
+    /// rows, both inside the 5% bound, and keeps the aggregates
+    /// consistent with the row set.
+    #[test]
+    fn extended_validation_adds_dw_and_stride_rows_within_bound() {
+        let engine = EngineBuilder::new().workers(2).private_cache().build().unwrap();
+        let spec = SweepSpec {
+            c_values: vec![2],
+            k_values: vec![],
+            spatial_values: vec![],
+            mappings: vec![Mapping::Cpu],
+            mag: 6,
+            seed: 5,
+        };
+        let report = validate_extended(&engine, &spec).unwrap();
+        assert_eq!(report.rows.len(), 3, "grid row + DW + stride");
+        let dw = report.rows.iter().find(|r| r.axis == "DW").unwrap();
+        assert_eq!(dw.mapping, Mapping::DwWp);
+        assert!(dw.latency_err_pct.abs() <= 5.0, "DW err {}%", dw.latency_err_pct);
+        let st = report.rows.iter().find(|r| r.axis == "stride").unwrap();
+        assert_eq!(st.value, 2);
+        assert!(st.latency_err_pct.abs() <= 5.0, "stride err {}%", st.latency_err_pct);
+        // Aggregates reflect the appended rows.
+        let mean = report.rows.iter().map(|r| r.latency_err_pct.abs()).sum::<f64>()
+            / report.rows.len() as f64;
+        assert!((report.mean_abs_latency_err_pct - mean).abs() < 1e-12);
+        assert!(report.simulated_launches > 0);
     }
 
     /// Memory-bound points must be refused by both sides.

@@ -164,7 +164,9 @@ pub fn fig5(engine: &Engine, spec: &SweepSpec) -> Result<Figure> {
 }
 
 /// **Planner validation** — predicted-vs-simulated comparison of the
-/// analytical cost model over a sweep grid, packaged as a persistable
+/// analytical cost model over a sweep grid **plus the nn extension
+/// points** (one depthwise and one strided layer — see
+/// [`crate::planner::validate_extended`]), packaged as a persistable
 /// [`Figure`] (id `planner`) alongside the raw
 /// [`crate::planner::ValidationReport`]. `cgra plan --validate` prints
 /// and saves it; CI gates on the report's mean absolute latency error.
@@ -172,13 +174,87 @@ pub fn planner_fig(
     engine: &Engine,
     spec: &SweepSpec,
 ) -> Result<(Figure, crate::planner::ValidationReport)> {
-    let report = crate::planner::validate(engine, spec)?;
+    let report = crate::planner::validate_extended(engine, spec)?;
     let figure = Figure {
         id: "planner".into(),
         text: report.render(),
         csv: report.table().to_csv(),
     };
     Ok((figure, report))
+}
+
+/// Render an executed network report (`cgra net`) as a persistable
+/// [`Figure`] (id `net-<name>`): per-layer rows — cycles, energy,
+/// chosen mapping, CPU-baseline speedup — plus network totals.
+pub fn net_fig(report: &crate::nn::NetworkReport) -> Figure {
+    let mut table = Table::new(&[
+        "layer", "kind", "shape", "mapping", "cycles", "conv_cycles", "host_cycles",
+        "energy_uJ", "MAC/cycle", "cpu_speedup", "exact",
+    ]);
+    for l in &report.layers {
+        table.row(vec![
+            l.index.to_string(),
+            l.kind.into(),
+            l.desc.clone(),
+            l.mapping.map(|m| m.label().to_string()).unwrap_or_else(|| "host".into()),
+            l.cycles.to_string(),
+            l.conv_cycles.to_string(),
+            l.host_cycles.to_string(),
+            format!("{:.2}", l.energy_uj),
+            format!("{:.3}", l.macs as f64 / l.cycles.max(1) as f64),
+            l.speedup().map(|s| format!("{s:.2}x")).unwrap_or_default(),
+            if l.exact { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    let mut text = format!(
+        "Network '{}' on the simulated CGRA — per-layer planner-chosen mappings\n\n",
+        report.name
+    );
+    text.push_str(&table.render());
+    text.push_str(&format!(
+        "\ntotal: {} cycles, {:.2} uJ, {:.3} MAC/cycle, {:.2}x vs scalar CPU, \
+         output exact vs generalized golden: {}\n",
+        report.total_cycles,
+        report.total_energy_uj,
+        report.mac_per_cycle(),
+        report.speedup(),
+        report.exact,
+    ));
+    Figure { id: format!("net-{}", report.name), text, csv: table.to_csv() }
+}
+
+/// Render a plan-only network report (`cgra net --plan-only`) as a
+/// persistable [`Figure`] (id `net-<name>-plan`). No layer was
+/// simulated; every number is the cost model's prediction.
+pub fn net_plan_fig(plan: &crate::nn::NetPlan) -> Figure {
+    let mut table = Table::new(&[
+        "layer", "kind", "shape", "mapping", "pred_cycles", "pred_conv", "pred_host",
+        "pred_uJ", "cpu_cycles",
+    ]);
+    for l in &plan.layers {
+        table.row(vec![
+            l.index.to_string(),
+            l.kind.into(),
+            l.desc.clone(),
+            l.mapping.map(|m| m.label().to_string()).unwrap_or_else(|| "host".into()),
+            l.cycles.to_string(),
+            l.conv_cycles.to_string(),
+            l.host_cycles.to_string(),
+            format!("{:.2}", l.energy_uj),
+            l.cpu_cycles.to_string(),
+        ]);
+    }
+    let mut text = format!(
+        "Network '{}' — planned per layer (objective: {}), no layer simulated\n\n",
+        plan.name,
+        plan.objective.label()
+    );
+    text.push_str(&table.render());
+    text.push_str(&format!(
+        "\npredicted total: {} cycles, {:.2} uJ\n",
+        plan.total_cycles, plan.total_energy_uj
+    ));
+    Figure { id: format!("net-{}-plan", plan.name), text, csv: table.to_csv() }
 }
 
 /// Summarize the paper's §3.2 claims against the sweep rows.
@@ -311,8 +387,33 @@ mod tests {
         assert_eq!(fig.id, "planner");
         assert!(fig.text.contains("mean |err|"));
         assert!(fig.csv.contains("pred_cycles"));
-        assert_eq!(report.rows.len(), 2);
+        // 2 grid rows + the DW and stride extension rows.
+        assert_eq!(report.rows.len(), 4);
+        assert!(report.rows.iter().any(|r| r.axis == "DW"));
+        assert!(report.rows.iter().any(|r| r.axis == "stride"));
         assert_eq!(report.bound_mismatches, 0);
+    }
+
+    #[test]
+    fn net_figs_render_executed_and_planned_networks() {
+        let engine = EngineBuilder::new().workers(2).private_cache().build().unwrap();
+        let net = crate::nn::build_preset("vgg-mini", 4).unwrap();
+        let input = net.random_input(8, 4);
+        let report = crate::nn::run_network(&engine, &net, &input).unwrap();
+        let fig = net_fig(&report);
+        assert_eq!(fig.id, "net-vgg-mini");
+        assert!(fig.text.contains("maxpool") && fig.text.contains("host"));
+        assert!(fig.text.contains("exact vs generalized golden: true"));
+        assert!(fig.csv.contains("cpu_speedup"));
+        let plan = crate::nn::plan_network(
+            engine.planner(),
+            &net,
+            crate::planner::PlanObjective::Latency,
+        )
+        .unwrap();
+        let pfig = net_plan_fig(&plan);
+        assert_eq!(pfig.id, "net-vgg-mini-plan");
+        assert!(pfig.text.contains("no layer simulated"));
     }
 
     /// The deprecated wrapper matches the engine path row for row.

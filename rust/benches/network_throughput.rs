@@ -1,21 +1,33 @@
 //! Bench: end-to-end network throughput through the `nn` layer-graph
-//! subsystem, in layers per second — how fast the stack can move a
-//! MobileNet-style edge network through the simulated CGRA.
+//! subsystem — layers/s and inferences/s over a MobileNet-style edge
+//! network.
 //!
-//! Three measurements over the same preset:
+//! Since the compile-once refactor, `nn::run_network` compiles (and
+//! golden-verifies) on every call, and parallelism lives *across*
+//! inferences (one `Arc<CompiledNet>`, one `NetCtx` per worker) rather
+//! than inside one. The measurements reflect that architecture:
 //!
-//!   1. sequential execution (`nn::run_network` with a 1-thread pool —
-//!      every group submission serialized),
-//!   2. batched execution (default worker pool — grouped layers fan
-//!      their independent per-group convolutions over the workers),
-//!   3. plan-only (`nn::plan_network` — the analytical cost model
+//!   1. per-call path (`nn::run_network` — compile + golden verify +
+//!      run on every call: the pre-refactor per-inference cost),
+//!   2. plan-only (`nn::plan_network` — the analytical cost model
 //!      prices every layer, nothing is simulated; cache-hot after the
-//!      first call thanks to the planner memo).
+//!      first call thanks to the planner memo),
+//!   3. compiled warm run (`CompiledNet::run`, one context — the
+//!      single-stream serving steady state),
+//!   4. compiled parallel serving (one `Arc`-shared artifact, a batch
+//!      of inferences fanned over the worker pool, one context per
+//!      worker).
+//!
+//! Reported both as layers/s and inferences/s so the compile-once
+//! amortization win lands in the perf trajectory. See
+//! `serving_throughput` for the cold-compile amortization curve.
 //!
 //! `cargo bench --bench network_throughput`
 
+use std::sync::Arc;
+
 use openedge_cgra::benchkit::Bench;
-use openedge_cgra::coordinator::default_workers;
+use openedge_cgra::coordinator::{default_workers, run_jobs};
 use openedge_cgra::engine::EngineBuilder;
 use openedge_cgra::nn;
 use openedge_cgra::planner::PlanObjective;
@@ -25,43 +37,71 @@ fn main() {
     let net = nn::build_preset(preset, 7).expect("preset");
     let input = net.random_input(8, 7);
     let n_layers = net.layers.len() as f64;
+    let workers = default_workers();
     println!(
         "network '{preset}': {} layers, {} true MACs, {} workers\n",
         net.layers.len(),
         net.macs(),
-        default_workers()
+        workers
     );
 
     let b = Bench::new(1, 5);
+    let engine = EngineBuilder::new().private_cache().build().expect("engine");
 
-    // 1. Sequential: one worker, group submissions serialized.
-    let seq_engine = EngineBuilder::new().workers(1).private_cache().build().expect("engine");
-    let seq = b.run("run_network (sequential)", Some(n_layers), || {
-        nn::run_network(&seq_engine, &net, &input).expect("run")
+    // 1. Per-call path: compile + golden verify + run, every call.
+    let per_call = b.run("run_network (compile per call)", Some(n_layers), || {
+        nn::run_network(&engine, &net, &input).expect("run")
     });
 
-    // 2. Batched: the default pool fans grouped layers out.
-    let pool_engine = EngineBuilder::new()
-        .workers(default_workers())
-        .private_cache()
-        .build()
-        .expect("engine");
-    let batched = b.run("run_network (batched)", Some(n_layers), || {
-        nn::run_network(&pool_engine, &net, &input).expect("run")
-    });
-
-    // 3. Plan-only: the cost model instead of the simulator.
+    // 2. Plan-only: the cost model instead of the simulator.
     let planned = b.run("plan_network (plan-only)", Some(n_layers), || {
-        nn::plan_network(pool_engine.planner(), &net, PlanObjective::Latency).expect("plan")
+        nn::plan_network(engine.planner(), &net, PlanObjective::Latency).expect("plan")
     });
+
+    // 3. Compiled warm run: compile once, replay per sample.
+    let compiled = Arc::new(engine.compile(&net).expect("compile"));
+    let mut ctx = compiled.new_ctx();
+    let warm = b.run("CompiledNet::run (compiled, warm)", Some(n_layers), || {
+        compiled.run(&mut ctx, &input).expect("run")
+    });
+
+    // 4. Parallel serving: a batch of inferences per sample, fanned
+    //    over the pool — one pre-built context per worker.
+    let batch = 2 * workers;
+    let mut ctxs: Vec<_> = (0..workers).map(|_| compiled.new_ctx()).collect();
+    let shard = batch.div_ceil(workers);
+    let fan = b.run(
+        &format!("CompiledNet::run (x{batch} over {workers} workers)"),
+        Some(batch as f64 * n_layers),
+        || {
+            let jobs: Vec<_> = ctxs
+                .iter_mut()
+                .map(|ctx| {
+                    let compiled = compiled.clone();
+                    let input = &input;
+                    move || {
+                        for _ in 0..shard {
+                            compiled.run(ctx, input).expect("run");
+                        }
+                    }
+                })
+                .collect();
+            run_jobs(workers, jobs)
+        },
+    );
 
     println!(
-        "\nbatched vs sequential: {:.2}x layers/s ({:.1} -> {:.1}); \
-         plan-only serves {:.0} layers/s ({:.0}x over simulating)",
-        seq.median() / batched.median(),
-        n_layers / seq.median(),
-        n_layers / batched.median(),
-        n_layers / planned.median(),
-        batched.median() / planned.median(),
+        "\ninferences/s: per-call {:.1} -> compiled warm {:.1} ({:.2}x); \
+         plan-only answers {:.0}/s ({:.0}x over simulating)",
+        1.0 / per_call.median(),
+        1.0 / warm.median(),
+        per_call.median() / warm.median(),
+        1.0 / planned.median(),
+        warm.median() / planned.median(),
+    );
+    println!(
+        "parallel serving: {:.1} inf/s over {workers} workers ({:.2}x one warm stream)",
+        batch as f64 / fan.median(),
+        (batch as f64 / fan.median()) * warm.median(),
     );
 }

@@ -1,0 +1,67 @@
+//! Bench: the compile-once / run-many amortization story, in
+//! inferences per second over `mobilenet-mini`.
+//!
+//! Three measurements:
+//!
+//!   1. **cold compile** — `Engine::compile` per sample: what every
+//!      inference used to pay implicitly (program building, µop
+//!      decoding, planner resolution, arena sizing),
+//!   2. **warm compiled run** — one `CompiledNet` + one `NetCtx`, a
+//!      pre-decoded allocation-free replay per sample: the serving
+//!      steady state,
+//!   3. **legacy per-call path** — `nn::run_network`, which compiles
+//!      *and* golden-verifies on every call: the pre-refactor
+//!      per-inference cost.
+//!
+//! The printed ratio is the amortization win: how many warm inferences
+//! one compile buys, and how much faster the steady state is than the
+//! compile-every-call path. Modeled cycles/energy are identical on
+//! every path by construction — this bench measures host wall-clock.
+//!
+//! `cargo bench --bench serving_throughput`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::engine::EngineBuilder;
+use openedge_cgra::nn;
+
+fn main() {
+    let preset = "mobilenet-mini";
+    let net = nn::build_preset(preset, 7).expect("preset");
+    let input = net.random_input(8, 7);
+    let engine = EngineBuilder::new().private_cache().build().expect("engine");
+
+    let b = Bench::new(1, 5);
+
+    // 1. Cold compile: the full build-and-decode phase.
+    let cold = b.run("Engine::compile (cold)", None, || engine.compile(&net).expect("compile"));
+
+    // 2. Warm compiled run: artifact + context built once, replay per
+    //    sample.
+    let compiled = engine.compile(&net).expect("compile");
+    let mut ctx = compiled.new_ctx();
+    println!(
+        "artifact: {} launches/inference, {} pre-decoded uops, arena {} words",
+        compiled.total_launches(),
+        compiled.total_uops(),
+        compiled.arena_words()
+    );
+    let warm = b.run("CompiledNet::run (warm)", None, || {
+        compiled.run(&mut ctx, &input).expect("run")
+    });
+
+    // 3. Legacy path: compile + golden verify on every call.
+    let legacy = b.run("nn::run_network (compile per call)", None, || {
+        nn::run_network(&engine, &net, &input).expect("run")
+    });
+
+    let warm_ips = 1.0 / warm.median();
+    println!(
+        "\nwarm serving: {:.1} inf/s; legacy per-call path: {:.1} inf/s ({:.2}x); \
+         one cold compile ({:.1} ms) amortizes in {:.1} warm inferences",
+        warm_ips,
+        1.0 / legacy.median(),
+        legacy.median() / warm.median(),
+        cold.median() * 1e3,
+        cold.median() / warm.median().max(1e-12),
+    );
+}

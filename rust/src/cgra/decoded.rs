@@ -251,8 +251,19 @@ impl DecodedProgram {
     }
 }
 
+/// Process-wide count of µop decodes actually performed (cache hits do
+/// not count — they re-lower nothing). The compile-once / run-many
+/// tests assert a warm `CompiledNet::run` leaves this unchanged.
+static DECODES: AtomicU64 = AtomicU64::new(0);
+
+/// Total µop decodes performed so far in this process.
+pub fn decode_count() -> u64 {
+    DECODES.load(Ordering::Relaxed)
+}
+
 /// Lower `prog` into its µop representation.
 pub fn decode(prog: &Program) -> DecodedProgram {
+    DECODES.fetch_add(1, Ordering::Relaxed);
     let code: [Vec<UInstr>; N_PES] = std::array::from_fn(|i| {
         let pe = prog.pe(PeId::from_index(i));
         let mut v: Vec<UInstr> = pe.instrs().iter().map(|&ins| lower(ins, i)).collect();

@@ -18,8 +18,8 @@ mod stats;
 
 pub use config::CgraConfig;
 pub use decoded::{
-    clear_decode_cache, decode, decode_cache_stats, decode_cached, DecodeCacheStats,
-    DecodedProgram, DECODE_CACHE_CAPACITY,
+    clear_decode_cache, decode, decode_cache_stats, decode_cached, decode_count,
+    DecodeCacheStats, DecodedProgram, DECODE_CACHE_CAPACITY,
 };
 pub use exec::{column_pes, Cgra, StepTrace};
 pub use memory::{MemStats, Memory};

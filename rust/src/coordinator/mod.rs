@@ -2,9 +2,8 @@
 //! cross-driver point cache, and the layer-wise CNN data model.
 //!
 //! Session-level execution — one object owning config, energy model,
-//! workers and caches — lives in [`crate::engine`]; the deprecated free
-//! functions re-exported here (`run_sweep`, `run_network`,
-//! `auto_mapping`) are thin wrappers over it.
+//! workers and caches — lives in [`crate::engine`] (the pre-0.2 free
+//! functions were removed in 0.5 once every consumer had migrated).
 
 pub mod cache;
 pub mod network;
@@ -20,9 +19,3 @@ pub use sweep::{
     paper_axis_values, run_sweep_cached, run_sweep_with_model, Axis, SweepPoint, SweepRow,
     SweepSpec,
 };
-
-// Deprecated entry points, re-exported for source compatibility.
-#[allow(deprecated)]
-pub use network::run_network;
-#[allow(deprecated)]
-pub use sweep::{auto_mapping, run_sweep};

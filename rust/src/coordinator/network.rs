@@ -11,7 +11,6 @@
 
 use anyhow::{ensure, Result};
 
-use crate::cgra::Cgra;
 use crate::conv::{ConvShape, TensorChw, Weights};
 use crate::kernels::Mapping;
 use crate::metrics::MappingReport;
@@ -130,19 +129,6 @@ impl NetworkOutcome {
     }
 }
 
-/// Run the network on the CGRA.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `engine::Engine::run_network` — the engine owns the energy \
-            model and caches this wrapper rebuilds per call"
-)]
-pub fn run_network(cgra: &Cgra, net: &ConvNet, input: &TensorChw) -> Result<NetworkOutcome> {
-    crate::engine::EngineBuilder::new()
-        .config(cgra.config().clone())
-        .build()?
-        .run_network(net, input)
-}
-
 /// Golden CPU reference of the same network (wrapping int32 + ReLU),
 /// for verification.
 pub fn golden_network(net: &ConvNet, input: &TensorChw) -> Result<TensorChw> {
@@ -162,7 +148,6 @@ pub fn golden_network(net: &ConvNet, input: &TensorChw) -> Result<TensorChw> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cgra::CgraConfig;
     use crate::conv::random_input;
     use crate::engine::EngineBuilder;
 
@@ -190,22 +175,6 @@ mod tests {
         assert_eq!(out.layers.len(), 2);
         assert!(out.total_cycles > 0 && out.total_energy_uj > 0.0);
         assert!(out.relu_cycles > 0);
-    }
-
-    /// The deprecated wrapper produces the same totals as the engine
-    /// (it builds one from the passed simulator's config).
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_run_network_matches_engine() {
-        let net = ConvNet::random(2, 2, 4, 8, 8, 3);
-        let mut rng = Rng::new(4);
-        let input = random_input(&net.layers[0].shape, 8, &mut rng);
-        let cgra = Cgra::new(CgraConfig::default()).unwrap();
-        let a = run_network(&cgra, &net, &input).unwrap();
-        let engine = EngineBuilder::new().build().unwrap();
-        let b = engine.run_network(&net, &input).unwrap();
-        assert_eq!(a.output.data, b.output.data);
-        assert_eq!(a.total_cycles, b.total_cycles);
     }
 
     #[test]

@@ -228,21 +228,10 @@ fn eval_point(
     row
 }
 
-/// Run the sweep on `workers` threads through the process-wide point
-/// cache. Deterministic: the per-point data seed depends only on the
-/// shape, and rows come back in `spec.points()` order regardless of
-/// worker count or cache state.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `engine::Engine::sweep` — the engine owns the config, worker \
-            width and cache this free function re-threads per call"
-)]
-pub fn run_sweep(spec: &SweepSpec, cfg: &CgraConfig, workers: usize) -> Result<Vec<SweepRow>> {
-    run_sweep_cached(spec, cfg, workers, cache::global())
-}
-
-/// [`run_sweep`] against an explicit cache (tests; isolated sweeps),
-/// with the calibrated default energy model.
+/// Run the sweep against an explicit cache (tests; isolated sweeps),
+/// with the calibrated default energy model. Session-level sweeps go
+/// through `engine::Engine::sweep`, which owns the config, worker
+/// width and cache.
 pub fn run_sweep_cached(
     spec: &SweepSpec,
     cfg: &CgraConfig,
@@ -288,21 +277,6 @@ pub fn run_sweep_with_model(
         })
         .collect();
     Ok(run_jobs(workers, jobs).into_iter().flatten().collect())
-}
-
-/// The paper's conclusion as an operator: pick the mapping for a shape.
-/// WP dominates every hyper-parameter combination in the paper ("WP
-/// remains the best approach for any hyperparameter combination"), so
-/// the chooser returns WP; the Fig. 5 sweep bench re-verifies that claim
-/// against the simulator on every run.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `Mapping::Auto` in requests/specs (resolved via \
-            `Mapping::resolve` / `engine::auto::choose`, which also checks \
-            the memory bound and records the reason)"
-)]
-pub fn auto_mapping(_shape: &ConvShape) -> Mapping {
-    Mapping::Wp
 }
 
 #[cfg(test)]
@@ -388,11 +362,10 @@ mod tests {
         assert!(rows[0].skipped.as_ref().unwrap().contains("words"));
     }
 
+    /// The paper's conclusion as a resolver check: `Mapping::Auto`
+    /// resolves to WP on the baseline layer.
     #[test]
-    #[allow(deprecated)]
-    fn auto_mapping_is_wp() {
-        assert_eq!(auto_mapping(&ConvShape::baseline()), Mapping::Wp);
-        // The replacement agrees on the paper's grid.
+    fn auto_resolves_to_wp_on_baseline() {
         let (m, _) = Mapping::Auto.resolve(&ConvShape::baseline(), &CgraConfig::default()).unwrap();
         assert_eq!(m, Mapping::Wp);
     }

@@ -1,0 +1,708 @@
+//! **`CompiledNet` — the compile-once / run-many inference artifact.**
+//!
+//! [`Engine::compile`] turns a [`Net`] (or, via
+//! [`Engine::compile_conv_net`], a legacy [`ConvNet`]) into a frozen
+//! executable: per-layer mapping resolved by the planner **once**,
+//! every CGRA launch program built and pre-decoded into the µop IR,
+//! memory layouts fixed, the host-op glue (pad / group-slice /
+//! decimate / pool / fused ReLU) specialized into a step list with its
+//! closed-form charges precomputed, and a ping-pong scratch arena sized
+//! at compile time. Steady-state [`CompiledNet::run`] then performs
+//! **zero program building, zero µop decoding, zero planner work and
+//! zero activation allocation** — the contract is assertable through
+//! [`RunCounters`] and pinned by `tests/compiled_counters.rs`.
+//!
+//! The artifact is immutable and `Send + Sync`: share one behind an
+//! `Arc` across the worker pool, give each worker its own [`NetCtx`]
+//! (the mutable arena), and fan inference traffic out.
+//!
+//! Golden verification — the per-inference tax the interpreted
+//! executor used to pay on every layer — is demoted to the opt-in
+//! [`CompiledNet::run_verified`] debug mode (`cgra serve --verify`, the
+//! CI serving job, and the legacy-compatible `nn::run_network` wrapper
+//! use it; the hot path does not).
+//!
+//! Modeled cycles and energy are **identical** to the interpreted path
+//! by construction — same launch schedules, same closed-form glue, same
+//! energy integration — so a compiled artifact changes the simulator's
+//! serving throughput (host wall-clock), never the paper's numbers.
+
+use anyhow::{bail, Context, Result};
+
+use crate::cgra::{self, Cgra};
+use crate::conv::{GenConvShape, TensorChw, Weights};
+use crate::coordinator::network::ConvNet;
+use crate::energy::EnergyModel;
+use crate::kernels::{
+    self, CompiledKernel, ConvOutcome, KernelScratch, Mapping, ScratchNeed,
+};
+use crate::metrics::MappingReport;
+use crate::nn::graph::{golden_layer, Layer, Net};
+use crate::nn::lower::{
+    cpu_baseline_cycles, decimate_into, glue_spec, host_energy_uj, pad_into, pool_into, HostOp,
+};
+
+use super::auto::{self, AutoDecision};
+use super::{relu_cost, Engine};
+
+/// How one compiled layer executes at run time.
+#[derive(Clone, Debug)]
+enum LayerExec {
+    /// A conv-like layer: optional host pad, one prebuilt kernel per
+    /// group, optional decimation.
+    Conv {
+        /// Host zero-pad per side (0 = input used as-is).
+        pad: usize,
+        /// Input dims after the pad `(c, h, w)`.
+        padded_dims: (usize, usize, usize),
+        /// Full stride-1 output dims `(k, oxf, oyf)` before decimation.
+        full_dims: (usize, usize, usize),
+        /// Decimation factor (1 = the full output is the layer output).
+        stride: usize,
+        /// One prebuilt kernel per group, sharing decoded programs.
+        kernels: Vec<CompiledKernel>,
+    },
+    /// Host-side max pooling.
+    MaxPool {
+        /// Window side.
+        size: usize,
+        /// Window stride.
+        stride: usize,
+    },
+    /// Host-side average pooling.
+    AvgPool {
+        /// Window side.
+        size: usize,
+        /// Window stride.
+        stride: usize,
+    },
+}
+
+/// One frozen layer of the artifact: execution plan plus the static
+/// metadata and charges every run reuses.
+#[derive(Clone, Debug)]
+struct CompiledLayer {
+    kind: &'static str,
+    desc: String,
+    /// Concrete strategy (None for host-only pools).
+    mapping: Option<Mapping>,
+    /// Recorded planner decision when the layer asked for `Auto`.
+    auto: Option<AutoDecision>,
+    macs: u64,
+    cpu_cycles: u64,
+    /// Static host-glue charge of the layer (pad + embed + shuffle +
+    /// decimate + pool; excludes the fused ReLU).
+    host: HostOp,
+    relu: bool,
+    relu_elems: usize,
+    in_dims: (usize, usize, usize),
+    out_dims: (usize, usize, usize),
+    exec: LayerExec,
+}
+
+/// Compile-time arena sizing: the warm path resizes within these
+/// capacities and never allocates.
+#[derive(Clone, Copy, Debug, Default)]
+struct ArenaSpec {
+    /// Ping-pong activation buffers (each this big).
+    act_elems: usize,
+    /// Padded-input staging buffer.
+    stage_elems: usize,
+    /// Full stride-1 output staging (strided layers only).
+    full_elems: usize,
+    /// Per-group input slice buffer (grouped layers only).
+    group_elems: usize,
+    /// Kernel scratch (HWC conversion, im2col patches).
+    scratch: ScratchNeed,
+}
+
+/// Per-layer result of one inference through a [`CompiledNet`].
+#[derive(Clone, Debug)]
+pub struct LayerRun {
+    /// End-to-end layer cycles (conv + host glue + ReLU).
+    pub cycles: u64,
+    /// CGRA convolution cycles (summed over group replays).
+    pub conv_cycles: u64,
+    /// Host cycles (static glue + fused ReLU).
+    pub host_cycles: u64,
+    /// Fused-ReLU share of `host_cycles`.
+    pub relu_cycles: u64,
+    /// Layer energy, µJ.
+    pub energy_uj: f64,
+    /// CGRA launches replayed.
+    pub launches: u64,
+    /// Concrete strategy (None for host-only pools).
+    pub mapping: Option<Mapping>,
+    /// Full metric row of the conv (only when the context collects
+    /// reports and the layer is a single-group convolution).
+    pub report: Option<MappingReport>,
+    /// Golden-exactness of the layer (`Some` only in verified runs).
+    pub exact: Option<bool>,
+}
+
+/// Aggregate result of one inference.
+#[derive(Clone, Debug)]
+pub struct InferRun {
+    /// Per-layer rows, in execution order.
+    pub layers: Vec<LayerRun>,
+    /// End-to-end cycles.
+    pub total_cycles: u64,
+    /// End-to-end energy, µJ.
+    pub total_energy_uj: f64,
+    /// Total fused-ReLU cycles.
+    pub relu_cycles: u64,
+    /// Whether every layer matched the golden model (`Some` only in
+    /// verified runs).
+    pub exact: Option<bool>,
+}
+
+/// Static summary of one compiled layer (CLI `cgra compile` table).
+#[derive(Clone, Debug)]
+pub struct LayerInfo<'a> {
+    /// Layer kind label.
+    pub kind: &'static str,
+    /// Short shape description.
+    pub desc: &'a str,
+    /// Concrete frozen strategy.
+    pub mapping: Option<Mapping>,
+    /// Recorded `Auto` decision, if the layer asked for one.
+    pub auto: Option<AutoDecision>,
+    /// CGRA launches one inference replays.
+    pub launches: u64,
+    /// Pre-decoded µops owned for this layer.
+    pub uops: usize,
+    /// True MACs.
+    pub macs: u64,
+    /// Scalar-CPU baseline cycles.
+    pub cpu_cycles: u64,
+}
+
+/// A network compiled into a reusable inference artifact. Build with
+/// [`Engine::compile`]; run with [`CompiledNet::run`] /
+/// [`CompiledNet::run_verified`] against a [`NetCtx`].
+pub struct CompiledNet {
+    /// The source graph (kept for golden verification and summaries).
+    net: Net,
+    layers: Vec<CompiledLayer>,
+    cgra: Cgra,
+    model: EnergyModel,
+    arena: ArenaSpec,
+}
+
+/// The mutable side of inference: ping-pong activation buffers, the
+/// padded/full/group staging buffers, the kernel scratch (CGRA memory
+/// image + host staging) and the output tensor. Allocated once by
+/// [`CompiledNet::new_ctx`]; every warm [`CompiledNet::run`] reuses it
+/// allocation-free. One context serves one thread; pool workers each
+/// build their own and share the `Arc<CompiledNet>`.
+pub struct NetCtx {
+    bufs: [Vec<i32>; 2],
+    stage: Vec<i32>,
+    full: Vec<i32>,
+    group_in: Vec<i32>,
+    scratch: KernelScratch,
+    out: TensorChw,
+    collect_reports: bool,
+}
+
+impl NetCtx {
+    /// The final activation of the most recent run.
+    pub fn output(&self) -> &TensorChw {
+        &self.out
+    }
+
+    /// Collect a full [`MappingReport`] per single-group conv layer on
+    /// subsequent runs (the legacy `Engine::run_network` surface needs
+    /// them; the serving hot path skips the row construction).
+    pub fn collect_reports(&mut self, on: bool) {
+        self.collect_reports = on;
+    }
+}
+
+/// Resize a buffer, counting any capacity growth as an arena allocation
+/// (a correctly sized arena never grows after construction).
+fn ensure_len(v: &mut Vec<i32>, len: usize) {
+    if len > v.capacity() {
+        kernels::common::note_arena_alloc();
+    }
+    v.resize(len, 0);
+}
+
+impl Engine {
+    /// Compile a layer graph into a [`CompiledNet`]: resolve every
+    /// `Auto` mapping through the planner once, build and pre-decode
+    /// every launch program, freeze layouts and host-glue charges, and
+    /// size the run arena. All compile-side failure modes (memory
+    /// bound, weight conventions, graph validation) surface here, with
+    /// the failing layer named.
+    ///
+    /// The artifact keeps the source graph (for the opt-in golden
+    /// verification and for summaries) in addition to the weight
+    /// images baked into the kernels; this borrowing entry point
+    /// clones it — callers that own their `Net` and are done with it
+    /// should use [`Engine::compile_owned`] instead.
+    pub fn compile(&self, net: &Net) -> Result<CompiledNet> {
+        self.compile_owned(net.clone())
+    }
+
+    /// [`Engine::compile`] over an owned graph — the artifact absorbs
+    /// `net` (weights and all) without cloning it. The CLI
+    /// `compile`/`serve` verbs and `compile_conv_net` use this.
+    pub fn compile_owned(&self, net: Net) -> Result<CompiledNet> {
+        net.validate()?;
+        let mut layers = Vec::with_capacity(net.layers.len());
+        let mut arena = ArenaSpec::default();
+        let mut dims = net.input_dims;
+        arena.act_elems = dims.0 * dims.1 * dims.2;
+        for (index, layer) in net.layers.iter().enumerate() {
+            let ctx = || format!("layer {index} ({}) of '{}'", layer.kind(), net.name);
+            let spec = glue_spec(layer, dims).with_context(ctx)?;
+            let out_dims = spec.out_dims;
+            let relu_elems = if layer.relu() { out_dims.0 * out_dims.1 * out_dims.2 } else { 0 };
+            let mut auto_decision = None;
+            let exec = match &spec.lowered {
+                None => match layer {
+                    Layer::MaxPool { size, stride } => {
+                        LayerExec::MaxPool { size: *size, stride: *stride }
+                    }
+                    Layer::AvgPool { size, stride } => {
+                        LayerExec::AvgPool { size: *size, stride: *stride }
+                    }
+                    _ => unreachable!("only pools lower to host-only steps"),
+                },
+                Some(lc) => {
+                    let (ks, decision) =
+                        self.build_layer_kernels(layer, lc).with_context(ctx)?;
+                    auto_decision = decision;
+                    arena.scratch =
+                        ks.iter().fold(arena.scratch, |need, k| need.max(k.scratch_need()));
+                    let shape = layer.conv_shape().expect("conv-like layer");
+                    let full_dims = (shape.k, lc.sub_shape.ox, lc.sub_shape.oy);
+                    if lc.host_pad > 0 {
+                        arena.stage_elems = arena
+                            .stage_elems
+                            .max(spec.padded_dims.0 * spec.padded_dims.1 * spec.padded_dims.2);
+                    }
+                    if lc.stride > 1 {
+                        arena.full_elems =
+                            arena.full_elems.max(full_dims.0 * full_dims.1 * full_dims.2);
+                    }
+                    if lc.groups > 1 {
+                        arena.group_elems =
+                            arena.group_elems.max(lc.sub_shape.input_elems());
+                    }
+                    LayerExec::Conv {
+                        pad: lc.host_pad,
+                        padded_dims: spec.padded_dims,
+                        full_dims,
+                        stride: lc.stride,
+                        kernels: ks,
+                    }
+                }
+            };
+            let mapping = match &exec {
+                LayerExec::Conv { kernels: ks, .. } => Some(ks[0].mapping()),
+                _ => None,
+            };
+            // Activation buffers must hold the layer's input, its full
+            // (pre-decimation) output and its final output.
+            if let LayerExec::Conv { full_dims, stride, .. } = &exec {
+                if *stride == 1 {
+                    arena.act_elems =
+                        arena.act_elems.max(full_dims.0 * full_dims.1 * full_dims.2);
+                }
+            }
+            arena.act_elems = arena.act_elems.max(out_dims.0 * out_dims.1 * out_dims.2);
+            layers.push(CompiledLayer {
+                kind: layer.kind(),
+                desc: layer.describe(),
+                mapping,
+                auto: auto_decision,
+                macs: layer.macs(),
+                cpu_cycles: cpu_baseline_cycles(layer),
+                host: spec.host,
+                relu: layer.relu(),
+                relu_elems,
+                in_dims: dims,
+                out_dims,
+                exec,
+            });
+            dims = out_dims;
+        }
+        Ok(CompiledNet {
+            net,
+            layers,
+            cgra: Cgra::new(self.config().clone())?,
+            model: self.model,
+            arena,
+        })
+    }
+
+    /// Compile a legacy [`ConvNet`] (plain stride-1 / valid conv stack
+    /// with per-layer mappings and ReLU flags) by converting it into
+    /// the equivalent layer graph. [`Engine::run_network`] routes
+    /// through this, so the legacy surface and the `nn` executor share
+    /// one compiled execution path.
+    pub fn compile_conv_net(&self, net: &ConvNet) -> Result<CompiledNet> {
+        net.validate()?;
+        let first = &net.layers[0].shape;
+        let nn_net = Net {
+            name: "conv-net".into(),
+            input_dims: (first.c, first.ih(), first.iw()),
+            layers: net
+                .layers
+                .iter()
+                .map(|l| Layer::Conv {
+                    shape: GenConvShape::from_basic(&l.shape),
+                    weights: l.weights.clone(),
+                    mapping: l.mapping,
+                    relu: l.relu,
+                })
+                .collect(),
+        };
+        self.compile_owned(nn_net)
+    }
+
+    /// Build the per-group prebuilt kernels of one conv-like layer:
+    /// resolve `Auto` through the planner (recording the decision),
+    /// apply the pointwise center-embedding to the weights, slice
+    /// per-group filter banks. Group 0 builds (and decodes) the
+    /// programs; the siblings share them via `Arc`.
+    fn build_layer_kernels(
+        &self,
+        layer: &Layer,
+        lc: &crate::nn::lower::LoweredConv,
+    ) -> Result<(Vec<CompiledKernel>, Option<AutoDecision>)> {
+        let decision = if lc.mapping.is_auto() {
+            Some(auto::choose_planned(&self.planner, &lc.sub_shape, self.config())?)
+        } else {
+            None
+        };
+        let mapping = decision.map(|d| d.mapping).unwrap_or(lc.mapping);
+        let weights = match layer {
+            Layer::Conv { weights, .. }
+            | Layer::Depthwise { weights, .. }
+            | Layer::Pointwise { weights, .. } => weights,
+            _ => unreachable!("conv-like layer carries weights"),
+        };
+        let w_eff: std::borrow::Cow<'_, Weights> = if lc.embed_pointwise {
+            std::borrow::Cow::Owned(crate::nn::lower::embed_pointwise_weights(weights).0)
+        } else {
+            std::borrow::Cow::Borrowed(weights)
+        };
+        if lc.groups == 1 {
+            let k = CompiledKernel::build(self.config(), &lc.sub_shape, mapping, &w_eff)?;
+            return Ok((vec![k], decision));
+        }
+        let (cg, kg) = (lc.sub_shape.c, lc.sub_shape.k);
+        let wpg = kg * cg * 9;
+        let slice = |g: usize| {
+            Weights::from_vec(kg, cg, 3, 3, w_eff.data[g * wpg..(g + 1) * wpg].to_vec())
+        };
+        let base = CompiledKernel::build(self.config(), &lc.sub_shape, mapping, &slice(0))?;
+        let mut ks = Vec::with_capacity(lc.groups);
+        for g in 1..lc.groups {
+            ks.push(base.with_weights(&slice(g))?);
+        }
+        ks.insert(0, base);
+        Ok((ks, decision))
+    }
+}
+
+impl CompiledNet {
+    /// The source graph the artifact was compiled from.
+    pub fn net(&self) -> &Net {
+        &self.net
+    }
+
+    /// Network name.
+    pub fn name(&self) -> &str {
+        &self.net.name
+    }
+
+    /// Number of layers.
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Static per-layer summary.
+    pub fn layer_info(&self, index: usize) -> LayerInfo<'_> {
+        let l = &self.layers[index];
+        let (launches, uops) = match &l.exec {
+            LayerExec::Conv { kernels, .. } => (
+                kernels.iter().map(|k| k.launches()).sum(),
+                kernels.iter().map(|k| k.total_uops()).sum(),
+            ),
+            _ => (0, 0),
+        };
+        LayerInfo {
+            kind: l.kind,
+            desc: &l.desc,
+            mapping: l.mapping,
+            auto: l.auto,
+            launches,
+            uops,
+            macs: l.macs,
+            cpu_cycles: l.cpu_cycles,
+        }
+    }
+
+    /// CGRA launches one inference replays.
+    pub fn total_launches(&self) -> u64 {
+        (0..self.layers.len()).map(|i| self.layer_info(i).launches).sum()
+    }
+
+    /// Pre-decoded µops the artifact owns.
+    pub fn total_uops(&self) -> usize {
+        (0..self.layers.len()).map(|i| self.layer_info(i).uops).sum()
+    }
+
+    /// Words the run arena holds (activations ping-pong + staging +
+    /// group slices; excludes the fixed-size CGRA memory image).
+    pub fn arena_words(&self) -> usize {
+        2 * self.arena.act_elems
+            + self.arena.stage_elems
+            + self.arena.full_elems
+            + self.arena.group_elems
+            + self.arena.scratch.hwc_elems
+            + self.arena.scratch.patch_elems
+    }
+
+    /// Allocate a fresh execution context sized for this artifact. The
+    /// only allocating step of the warm path — do it once per worker.
+    pub fn new_ctx(&self) -> NetCtx {
+        kernels::common::note_arena_alloc();
+        let (c, h, w) = self.net.input_dims;
+        NetCtx {
+            bufs: [
+                Vec::with_capacity(self.arena.act_elems),
+                Vec::with_capacity(self.arena.act_elems),
+            ],
+            stage: Vec::with_capacity(self.arena.stage_elems),
+            full: Vec::with_capacity(self.arena.full_elems),
+            group_in: Vec::with_capacity(self.arena.group_elems),
+            scratch: KernelScratch::new(self.cgra.config(), self.arena.scratch),
+            out: TensorChw { c, h, w, data: Vec::with_capacity(self.arena.act_elems) },
+            collect_reports: false,
+        }
+    }
+
+    /// One inference: replay every compiled step against `ctx`'s arena.
+    /// The final activation lands in [`NetCtx::output`]. No golden
+    /// verification — use [`CompiledNet::run_verified`] for the debug
+    /// mode.
+    pub fn run(&self, ctx: &mut NetCtx, input: &TensorChw) -> Result<InferRun> {
+        self.run_inner(ctx, input, false)
+    }
+
+    /// One inference with the opt-in golden debug check: every layer's
+    /// output is compared element-exactly against the generalized
+    /// golden model and flagged in the result (this pays the golden
+    /// chain's CPU cost and allocates — it is the debug mode, not the
+    /// serving path).
+    pub fn run_verified(&self, ctx: &mut NetCtx, input: &TensorChw) -> Result<InferRun> {
+        self.run_inner(ctx, input, true)
+    }
+
+    fn run_inner(&self, ctx: &mut NetCtx, input: &TensorChw, verify: bool) -> Result<InferRun> {
+        let (c, h, w) = self.net.input_dims;
+        if (input.c, input.h, input.w) != (c, h, w) {
+            bail!(
+                "network '{}' expects a {c}x{h}x{w} input, got {}x{}x{}",
+                self.net.name,
+                input.c,
+                input.h,
+                input.w
+            );
+        }
+        let model = self.model;
+        let NetCtx { bufs, stage, full, group_in, scratch, out, collect_reports } = ctx;
+        let collect = *collect_reports;
+        let [buf_a, buf_b] = bufs;
+        let (mut cur, mut nxt) = (buf_a, buf_b);
+        ensure_len(cur, input.data.len());
+        cur.copy_from_slice(&input.data);
+
+        let mut golden_x = verify.then(|| input.clone());
+        let mut layers = Vec::with_capacity(self.layers.len());
+        let mut total_cycles = 0u64;
+        let mut total_energy = 0.0f64;
+        let mut relu_total = 0u64;
+        let mut all_exact = true;
+
+        for (index, cl) in self.layers.iter().enumerate() {
+            let lctx =
+                || format!("layer {index} ({}) of '{}'", cl.kind, self.net.name);
+            let out_elems = cl.out_dims.0 * cl.out_dims.1 * cl.out_dims.2;
+            let mut conv_cycles = 0u64;
+            let mut conv_energy = 0.0f64;
+            let mut launches = 0u64;
+            let mut report = None;
+
+            match &cl.exec {
+                LayerExec::MaxPool { size, stride } => {
+                    ensure_len(nxt, out_elems);
+                    pool_into(cur, cl.in_dims, *size, *stride, true, nxt, cl.out_dims);
+                }
+                LayerExec::AvgPool { size, stride } => {
+                    ensure_len(nxt, out_elems);
+                    pool_into(cur, cl.in_dims, *size, *stride, false, nxt, cl.out_dims);
+                }
+                LayerExec::Conv { pad, padded_dims, full_dims, stride, kernels } => {
+                    // 1. Host padding into the staging buffer.
+                    let conv_in: &[i32] = if *pad > 0 {
+                        let (pc, ph, pw) = *padded_dims;
+                        ensure_len(stage, pc * ph * pw);
+                        pad_into(cur, cl.in_dims, *pad, stage);
+                        &stage[..]
+                    } else {
+                        &cur[..]
+                    };
+                    // 2. The prebuilt kernel replays, per group, into
+                    //    the full stride-1 output.
+                    let (fk, fh, fw) = *full_dims;
+                    let full_elems = fk * fh * fw;
+                    let dst: &mut Vec<i32> =
+                        if *stride > 1 { &mut *full } else { &mut *nxt };
+                    ensure_len(dst, full_elems);
+                    if kernels.len() == 1 {
+                        let outcome = kernels[0]
+                            .run_into(&self.cgra, conv_in, scratch, dst)
+                            .with_context(lctx)?;
+                        conv_cycles += outcome.latency.total_cycles();
+                        conv_energy += outcome_energy(&outcome, &model);
+                        launches += outcome.latency.launches;
+                        if collect {
+                            report = Some(MappingReport::from_outcome(&outcome, &model));
+                        }
+                    } else {
+                        let sub = kernels[0].shape();
+                        let (cg, per_in) = (sub.c, sub.input_elems());
+                        let per_out = sub.output_elems();
+                        let (_, ph, pw) = *padded_dims;
+                        ensure_len(group_in, per_in);
+                        for (g, kernel) in kernels.iter().enumerate() {
+                            let lo = g * cg * ph * pw;
+                            group_in.copy_from_slice(&conv_in[lo..lo + per_in]);
+                            let outcome = kernel
+                                .run_into(
+                                    &self.cgra,
+                                    group_in,
+                                    scratch,
+                                    &mut dst[g * per_out..(g + 1) * per_out],
+                                )
+                                .with_context(|| format!("group {g}"))
+                                .with_context(lctx)?;
+                            conv_cycles += outcome.latency.total_cycles();
+                            conv_energy += outcome_energy(&outcome, &model);
+                            launches += outcome.latency.launches;
+                        }
+                    }
+                    // 3. Decimate the full output down to the layer
+                    //    output.
+                    if *stride > 1 {
+                        ensure_len(nxt, out_elems);
+                        decimate_into(full, *full_dims, *stride, nxt, cl.out_dims);
+                    }
+                }
+            }
+
+            // 4. Fused ReLU in place, charged like the engine's.
+            let (mut relu_cycles, mut relu_uj) = (0u64, 0.0f64);
+            if cl.relu {
+                for v in nxt.iter_mut() {
+                    *v = (*v).max(0);
+                }
+                let (rc, re) = relu_cost(&model, cl.relu_elems);
+                relu_cycles = rc;
+                relu_uj = re;
+            }
+
+            // 5. Opt-in golden debug check.
+            let exact = match &mut golden_x {
+                None => None,
+                Some(gx) => {
+                    *gx = golden_layer(&self.net.layers[index], gx)?;
+                    let ok = gx.data[..] == nxt[..out_elems];
+                    all_exact &= ok;
+                    Some(ok)
+                }
+            };
+
+            let cycles = conv_cycles + cl.host.cycles + relu_cycles;
+            let energy_uj = conv_energy + host_energy_uj(&model, cl.host) + relu_uj;
+            total_cycles += cycles;
+            total_energy += energy_uj;
+            relu_total += relu_cycles;
+            layers.push(LayerRun {
+                cycles,
+                conv_cycles,
+                host_cycles: cl.host.cycles + relu_cycles,
+                relu_cycles,
+                energy_uj,
+                launches,
+                mapping: cl.mapping,
+                report,
+                exact,
+            });
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        let (oc, oh, ow) = self.layers.last().map(|l| l.out_dims).unwrap_or((c, h, w));
+        ensure_len(&mut out.data, oc * oh * ow);
+        out.data.copy_from_slice(&cur[..oc * oh * ow]);
+        out.c = oc;
+        out.h = oh;
+        out.w = ow;
+
+        Ok(InferRun {
+            layers,
+            total_cycles,
+            total_energy_uj: total_energy,
+            relu_cycles: relu_total,
+            exact: verify.then_some(all_exact),
+        })
+    }
+}
+
+/// Layer conv energy — the same [`MappingReport::from_outcome`] energy
+/// evaluation, without constructing the row (the hot path skips the
+/// string work).
+fn outcome_energy(outcome: &ConvOutcome, model: &EnergyModel) -> f64 {
+    model.evaluate(outcome).total_uj()
+}
+
+/// Snapshot of every compile-side work counter the warm path must not
+/// move: launch-program builds, µop decodes, planner estimate calls,
+/// and arena allocations. `tests/compiled_counters.rs` asserts a warm
+/// [`CompiledNet::run`] leaves all four unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunCounters {
+    /// Launch programs built, process-wide.
+    pub program_builds: u64,
+    /// µop decodes performed, process-wide.
+    pub uop_decodes: u64,
+    /// Planner estimates served by this engine's planner (memo hits
+    /// included — a warm run must not even consult the memo).
+    pub planner_estimates: u64,
+    /// Arena allocations (context buffers created or grown),
+    /// process-wide.
+    pub arena_allocs: u64,
+}
+
+impl RunCounters {
+    /// Read the current counter values.
+    pub fn snapshot(engine: &Engine) -> RunCounters {
+        RunCounters {
+            program_builds: kernels::program_builds(),
+            uop_decodes: cgra::decode_count(),
+            planner_estimates: engine.planner().stats().estimates,
+            arena_allocs: kernels::arena_allocs(),
+        }
+    }
+}
+
+// Unit tests live in `tests/compiled.rs` (equivalence grid, Arc
+// concurrency) and `tests/compiled_counters.rs` (warm-path counters):
+// the contract spans the whole stack, so it is pinned at the
+// integration level.

@@ -1,10 +1,9 @@
 //! The session-based front door of the crate.
 //!
-//! Everything the old free-function entry points (`kernels::run_mapping`,
-//! `coordinator::run_sweep`, `coordinator::run_network`,
-//! `report::run_all_mappings`) re-threaded by hand — simulator config,
-//! energy model, worker pool width, the sweep-point cache — is owned
-//! once by an [`Engine`], built via [`EngineBuilder`]:
+//! Everything the pre-0.2 free-function entry points re-threaded by
+//! hand — simulator config, energy model, worker pool width, the
+//! sweep-point cache — is owned once by an [`Engine`], built via
+//! [`EngineBuilder`]:
 //!
 //! ```no_run
 //! use openedge_cgra::conv::ConvShape;
@@ -35,13 +34,22 @@
 //! requests over the worker pool, order-preserving and
 //! cache-consulting; [`Engine::run_network`] chains a [`ConvNet`]
 //! layer-by-layer; [`Engine::sweep`] and [`Engine::run_all_mappings`]
-//! drive the figure protocols. The old free functions survive as thin
-//! `#[deprecated]` wrappers over a per-call engine.
+//! drive the figure protocols.
+//!
+//! For repeated inference traffic, [`Engine::compile`] turns a network
+//! into a reusable [`CompiledNet`] artifact — mappings frozen,
+//! programs pre-decoded, arena pre-sized — whose warm
+//! [`CompiledNet::run`] does zero compile-side work (see
+//! [`compiled`]). `run_network` and the `nn` executor route through
+//! the same compiled steps, so the crate has exactly one lowering
+//! path.
 
 pub mod auto;
+pub mod compiled;
 mod request;
 
 pub use auto::{choose, choose_planned, AutoDecision};
+pub use compiled::{CompiledNet, InferRun, LayerInfo, LayerRun, NetCtx, RunCounters};
 pub use request::{
     ConvRequest, ConvResult, PlannedResult, RequestData, DEFAULT_INPUT_MAG, DEFAULT_WEIGHT_MAG,
 };
@@ -68,8 +76,8 @@ const RELU_CYCLES_PER_ELEM: u64 = 3;
 
 /// Which point cache an engine consults.
 enum CacheChoice {
-    /// The process-wide cache shared with every other engine and the
-    /// deprecated free-function wrappers (the default).
+    /// The process-wide cache shared with every other engine (the
+    /// default).
     Global,
     /// An engine-private cache (isolation for tests and benches).
     Private(PointCache),
@@ -325,10 +333,9 @@ impl Engine {
         }
     }
 
-    /// The uncached borrow-based execution path shared by the `Tensors`
-    /// arm of [`Engine::submit`], [`Engine::run_network`] and the `nn`
-    /// graph executor (all of which chain activations without cloning
-    /// layer weights).
+    /// The uncached borrow-based execution path behind the `Tensors`
+    /// arm of [`Engine::submit`] (network execution routes through
+    /// [`CompiledNet`] instead since the compile-once refactor).
     pub(crate) fn run_one(
         &self,
         shape: &ConvShape,
@@ -390,28 +397,30 @@ impl Engine {
     /// Run a feed-forward CNN layer by layer, chaining activations and
     /// charging host-side ReLUs, exactly like the paper's end-to-end
     /// experiment (E7).
+    ///
+    /// Since the compile-once refactor this routes through the same
+    /// compiled steps as everything else: the network is compiled
+    /// ([`Engine::compile_conv_net`]) and run once. Callers serving
+    /// repeated traffic should hold the [`CompiledNet`] themselves and
+    /// amortize the compile across inferences — parallelism now lives
+    /// *across* inferences (one `Arc<CompiledNet>`, one [`NetCtx`] per
+    /// worker), not inside one.
     pub fn run_network(&self, net: &ConvNet, input: &TensorChw) -> Result<NetworkOutcome> {
-        net.validate()?;
-        let mut x = input.clone();
-        let mut layers = Vec::with_capacity(net.layers.len());
-        let mut total_cycles = 0u64;
-        let mut total_energy = 0.0f64;
-        let mut relu_cycles_total = 0u64;
-        for layer in &net.layers {
-            let res =
-                self.run_one(&layer.shape, layer.mapping, layer.relu, &x, &layer.weights)?;
-            total_cycles += res.report.latency_cycles + res.relu_cycles;
-            total_energy += res.report.energy_uj + res.relu_energy_uj;
-            relu_cycles_total += res.relu_cycles;
-            layers.push(res.report);
-            x = res.output;
-        }
+        let compiled = self.compile_conv_net(net)?;
+        let mut ctx = compiled.new_ctx();
+        ctx.collect_reports(true);
+        let run = compiled.run(&mut ctx, input)?;
+        let layers = run
+            .layers
+            .into_iter()
+            .map(|l| l.report.expect("ConvNet layers are single-group convolutions"))
+            .collect();
         Ok(NetworkOutcome {
             layers,
-            output: x,
-            total_cycles,
-            total_energy_uj: total_energy,
-            relu_cycles: relu_cycles_total,
+            output: ctx.output().clone(),
+            total_cycles: run.total_cycles,
+            total_energy_uj: run.total_energy_uj,
+            relu_cycles: run.relu_cycles,
         })
     }
 

@@ -7,10 +7,46 @@
 //! addressing, so Figure 3's "sum" vs "other" split falls out of the
 //! static op class.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{ensure, Result};
 
 use crate::cgra::{CgraConfig, MemStats, RunStats};
 use crate::conv::{ConvShape, TensorChw};
+
+/// Process-wide count of CGRA launch `Program`s built (every
+/// `build_program` of every kernel notes one). Together with
+/// [`crate::cgra::decode_count`] and [`arena_allocs`] this makes the
+/// compile-once / run-many contract *assertable*: a warm
+/// `CompiledNet::run` must not move any of these counters
+/// (`engine::compiled::RunCounters`).
+static PROGRAM_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of execution-arena allocations (context buffers,
+/// kernel scratch) — growth after warm-up indicates a sizing bug.
+static ARENA_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Total launch programs built so far in this process.
+pub fn program_builds() -> u64 {
+    PROGRAM_BUILDS.load(Ordering::Relaxed)
+}
+
+/// Record one launch-program construction.
+pub(crate) fn note_program_build() {
+    PROGRAM_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total arena allocations so far in this process.
+pub fn arena_allocs() -> u64 {
+    ARENA_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Record one arena (de)allocation-class event: a buffer created or
+/// grown on an execution path that promises steady-state zero
+/// allocation.
+pub(crate) fn note_arena_alloc() {
+    ARENA_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Word addresses of each region in CGRA memory.
 ///

@@ -58,6 +58,7 @@ pub fn build_program(
     w_base: i32,
     out_addr: i32,
 ) -> Program {
+    super::common::note_program_build();
     let slice = (padded_c(shape) / N_PES * 9) as i32;
     let mut prog = Program::new(format!("ip-{}", shape.id()));
     for id in PeId::all() {

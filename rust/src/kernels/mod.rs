@@ -2,19 +2,26 @@
 //! generators, plus the shared host-driver plumbing and a dispatcher.
 //!
 //! The per-mapping generators (`wp::run`, `ip::run`, …) remain the
-//! low-level API and expose the full [`ConvOutcome`] including raw
-//! `RunStats`. Session-level execution — config/energy/worker/cache
-//! ownership, batching, `Mapping::Auto` decisions — lives one layer up
-//! in [`crate::engine`].
+//! low-level one-shot API and expose the full [`ConvOutcome`] including
+//! raw `RunStats`; [`prebuilt::CompiledKernel`] is their build/run
+//! split — programs built and decoded once, replayed many times — for
+//! the compile-once / run-many serving path. Session-level execution —
+//! config/energy/worker/cache ownership, batching, `Mapping::Auto`
+//! decisions — lives one layer up in [`crate::engine`].
 
 pub mod common;
 pub mod dw;
 pub mod ip;
 pub mod op_direct;
 pub mod op_im2col;
+pub mod prebuilt;
 pub mod wp;
 
-pub use common::{ConvOutcome, HostCostModel, LatencyBreakdown, Mapping, MemLayout};
+pub use common::{
+    arena_allocs, program_builds, ConvOutcome, HostCostModel, LatencyBreakdown, Mapping,
+    MemLayout,
+};
+pub use prebuilt::{CompiledKernel, KernelScratch, ScratchNeed};
 
 use anyhow::Result;
 
@@ -53,23 +60,6 @@ pub(crate) fn dispatch(
             crate::cpu_ref::run(&CpuModel::default(), shape, input, weights)
         }
     }
-}
-
-/// Run one convolution with the chosen strategy.
-#[deprecated(
-    since = "0.2.0",
-    note = "build an `engine::Engine` and call `submit` — the engine owns the \
-            config/energy-model/worker/cache state this free function re-threads \
-            per call, and it records `Mapping::Auto` decisions in the result"
-)]
-pub fn run_mapping(
-    cgra: &Cgra,
-    mapping: Mapping,
-    shape: &ConvShape,
-    input: &TensorChw,
-    weights: &Weights,
-) -> Result<ConvOutcome> {
-    dispatch(cgra, mapping, shape, input, weights)
 }
 
 #[cfg(test)]
@@ -112,16 +102,4 @@ mod tests {
         assert_eq!(auto.latency.total_cycles(), wp.latency.total_cycles());
     }
 
-    /// The deprecated wrapper still routes to the dispatcher.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_run_mapping_still_works() {
-        let shape = ConvShape::new3x3(2, 2, 3, 3);
-        let mut rng = Rng::new(1);
-        let input = random_input(&shape, 10, &mut rng);
-        let weights = random_weights(&shape, 5, &mut rng);
-        let cgra = Cgra::new(CgraConfig::default()).unwrap();
-        let out = run_mapping(&cgra, Mapping::Wp, &shape, &input, &weights).unwrap();
-        assert_eq!(out.output.data, conv2d(&shape, &input, &weights).data);
-    }
 }

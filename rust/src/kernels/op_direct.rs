@@ -37,6 +37,7 @@ pub struct OpDirectLaunch {
 
 /// Build the program for one launch.
 pub fn build_program(shape: &ConvShape, layout: &MemLayout, l: OpDirectLaunch) -> Program {
+    super::common::note_program_build();
     let (c, oy) = (shape.c as i32, shape.oy as i32);
     let (ih, iw) = (shape.ih() as i32, shape.iw() as i32);
     let oxy = (shape.ox * shape.oy) as i32;

@@ -76,6 +76,7 @@ pub fn build_program(
     w_base: impl Fn(usize) -> i32,
     out_addr: impl Fn(usize) -> i32,
 ) -> Program {
+    super::common::note_program_build();
     let pl = patch_len(shape) as i32;
     let mut prog = Program::new(format!("op-im2col-{}", shape.id()));
     for id in PeId::all() {

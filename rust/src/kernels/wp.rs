@@ -78,6 +78,7 @@ pub struct WpLaunch {
 
 /// Build the 16 PE programs for one (k, ci) launch.
 pub fn build_program(shape: &ConvShape, layout: &MemLayout, launch: WpLaunch) -> Program {
+    super::common::note_program_build();
     let (ox, oy) = (shape.ox as i32, shape.oy as i32);
     let ih = shape.ih() as i32;
     let iw = shape.iw() as i32;

@@ -11,8 +11,9 @@
 //! CNN inferences (`run_network`), or as whole figure sweeps (`sweep`,
 //! `run_all_mappings`). `Mapping::Auto` lets the engine pick the
 //! strategy per the paper's findings and records the decision in the
-//! result. The pre-0.2 free-function entry points survive as
-//! `#[deprecated]` wrappers.
+//! result. For repeated inference traffic, `Engine::compile` freezes a
+//! network into a reusable `CompiledNet` artifact whose warm `run`
+//! does zero compile-side work (`cgra compile` / `cgra serve`).
 //!
 //! The crate contains, from the bottom up:
 //!
@@ -39,7 +40,9 @@
 //!   cross-driver sweep-point cache — plus a layer-wise network runner.
 //! - [`engine`] — the session front door: `Engine` / `EngineBuilder`,
 //!   typed `ConvRequest` → `ConvResult` submission (single, batched,
-//!   network, sweep) and `Mapping::Auto` strategy selection.
+//!   network, sweep), `Mapping::Auto` strategy selection, and the
+//!   compile-once / run-many `CompiledNet` artifact (`engine::compiled`,
+//!   DESIGN.md §8).
 //! - [`planner`] — the analytical cost model: closed-form launch
 //!   decomposition + micro-probe calibration predicts latency/energy
 //!   per `(shape, mapping)` without simulating (`Engine::plan`,

@@ -1,27 +1,38 @@
 //! The graph executor: run a [`Net`] end to end on the simulated CGRA
 //! through an [`Engine`] session.
 //!
-//! Every conv-like layer is lowered (`nn::lower`) onto stride-1 / valid
-//! engine convolutions — the planner-backed `Mapping::Auto` picks the
-//! strategy per layer unless the layer pins one — with the host glue
-//! (padding, group slicing, decimation, pooling, fused ReLU) charged by
-//! the shared closed-form cost model. Grouped layers fan their
-//! independent per-group convolutions over the engine's worker pool as
-//! one batch; activations thread through the chain by move, never by
-//! clone. Each layer's output is checked element-exactly against the
-//! generalized golden model.
+//! Since the compile-once refactor this is a thin wrapper over the
+//! crate's single lowering path: the network is compiled into a
+//! [`CompiledNet`] (`engine::compiled`) — planner-resolved mappings,
+//! pre-decoded launch programs, frozen layouts, specialized host-op
+//! steps — and executed once in the opt-in golden-verified debug mode,
+//! preserving the legacy per-layer exactness contract. Callers serving
+//! repeated inference traffic should compile once themselves
+//! ([`Engine::compile`]) and reuse the artifact: the warm path skips
+//! both the compile work and the golden tax.
+//!
+//! Cycle and energy accounting are unchanged: the compiled steps charge
+//! the identical closed-form host-glue and kernel costs the interpreted
+//! executor charged (pinned by `tests/compiled.rs`).
+//!
+//! One deliberate wall-clock trade: grouped layers used to fan their
+//! per-group submissions over the engine's worker pool *within* one
+//! inference; a compiled context replays them sequentially (one CGRA
+//! memory image per context), and parallelism moved *across*
+//! inferences instead — share an `Arc<CompiledNet>` and give each
+//! worker its own context (`cgra serve --workers N`). Modeled cycles
+//! are unaffected (group submissions were always summed).
+//!
+//! [`CompiledNet`]: crate::engine::CompiledNet
+//! [`Engine::compile`]: crate::engine::Engine::compile
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::conv::{TensorChw, Weights};
-use crate::engine::{relu_cost, ConvRequest, Engine};
+use crate::conv::TensorChw;
+use crate::engine::Engine;
 use crate::kernels::Mapping;
 
-use super::graph::{golden_layer, relu_in_place, Layer, Net};
-use super::lower::{
-    avgpool2d, concat_channels, decimate, embed_pointwise_weights, host_energy_uj, lower_conv,
-    maxpool2d, pad_input, slice_channels, HostOp,
-};
+use super::graph::Net;
 
 /// Everything one executed layer reports.
 #[derive(Clone, Debug)]
@@ -102,176 +113,44 @@ impl NetworkReport {
     }
 }
 
-/// Weight bank of a conv-like layer, with the pointwise embedding
-/// applied when the lowering asks for it.
-fn effective_weights<'a>(
-    layer: &'a Layer,
-    embed: bool,
-    host: &mut HostOp,
-) -> std::borrow::Cow<'a, Weights> {
-    let w = match layer {
-        Layer::Conv { weights, .. }
-        | Layer::Depthwise { weights, .. }
-        | Layer::Pointwise { weights, .. } => weights,
-        _ => unreachable!("effective_weights is only called for conv-like layers"),
-    };
-    if embed {
-        let (e, op) = embed_pointwise_weights(w);
-        host.add(op);
-        std::borrow::Cow::Owned(e)
-    } else {
-        std::borrow::Cow::Borrowed(w)
-    }
-}
-
-/// Execute `net` on the engine. The returned report carries per-layer
-/// metrics, golden-exactness flags and the final activation.
+/// Execute `net` on the engine: compile (mappings resolved, programs
+/// decoded, arena sized) and run once in golden-verified debug mode.
+/// The returned report carries per-layer metrics, golden-exactness
+/// flags and the final activation — the same contract as before the
+/// compile/run split.
 pub fn run_network(engine: &Engine, net: &Net, input: &TensorChw) -> Result<NetworkReport> {
-    net.validate()?;
-    let model = *engine.energy_model();
-
-    // The golden chain advances lazily alongside the executed chain, so
-    // a layer that fails (e.g. past the memory bound) costs no golden
-    // compute.
-    let mut golden_x = input.clone();
-    let mut x = input.clone();
-    let mut layers = Vec::with_capacity(net.layers.len());
-    let mut total_cycles = 0u64;
-    let mut total_energy = 0.0f64;
-    for (index, layer) in net.layers.iter().enumerate() {
-        let ctx = || format!("layer {index} ({}) of '{}'", layer.kind(), net.name);
-        let mut host = HostOp::default();
-        let mut conv_cycles = 0u64;
-        let mut conv_energy = 0.0f64;
-        let mut launches = 0u64;
-        let mut mapping: Option<Mapping> = None;
-
-        let mut out = match layer {
-            Layer::MaxPool { size, stride } => {
-                let (out, op) = maxpool2d(&x, *size, *stride);
-                host.add(op);
-                out
+    let compiled = engine.compile(net)?;
+    let mut ctx = compiled.new_ctx();
+    let run = compiled.run_verified(&mut ctx, input)?;
+    let layers = run
+        .layers
+        .into_iter()
+        .enumerate()
+        .map(|(index, l)| {
+            let info = compiled.layer_info(index);
+            LayerReport {
+                index,
+                kind: info.kind,
+                desc: info.desc.to_string(),
+                mapping: l.mapping,
+                cycles: l.cycles,
+                conv_cycles: l.conv_cycles,
+                host_cycles: l.host_cycles,
+                energy_uj: l.energy_uj,
+                launches: l.launches,
+                macs: info.macs,
+                cpu_cycles: info.cpu_cycles,
+                exact: l.exact.expect("verified run flags every layer"),
             }
-            Layer::AvgPool { size, stride } => {
-                let (out, op) = avgpool2d(&x, *size, *stride);
-                host.add(op);
-                out
-            }
-            conv_like => {
-                let shape = conv_like.conv_shape().expect("conv-like layer has a shape");
-                let depthwise = matches!(conv_like, Layer::Depthwise { .. });
-                let layer_mapping = match conv_like {
-                    Layer::Conv { mapping, .. } | Layer::Pointwise { mapping, .. } => *mapping,
-                    _ => Mapping::Auto,
-                };
-                let lc = lower_conv(shape, layer_mapping, depthwise).with_context(ctx)?;
-                // 1. Host padding (layer pad + pointwise ring). When no
-                //    padding is needed the activation moves in unchanged.
-                let conv_in = if lc.host_pad > 0 {
-                    let (p, op) = pad_input(&x, lc.host_pad);
-                    host.add(op);
-                    p
-                } else {
-                    std::mem::replace(&mut x, TensorChw::zeros(0, 0, 0))
-                };
-                // 2. Weights (pointwise banks are center-embedded).
-                let w_eff = effective_weights(conv_like, lc.embed_pointwise, &mut host);
-                // 3. The engine part: one borrow-based submission, or a
-                //    batch of independent per-group convolutions.
-                let full = if lc.groups == 1 {
-                    let res = engine
-                        .run_one(&lc.sub_shape, lc.mapping, false, &conv_in, &w_eff)
-                        .with_context(ctx)?;
-                    conv_cycles += res.report.latency_cycles;
-                    conv_energy += res.report.energy_uj;
-                    launches += res.report.launches;
-                    mapping = Some(res.mapping);
-                    res.output
-                } else {
-                    let (cg, kg) = (lc.sub_shape.c, lc.sub_shape.k);
-                    host.add(super::lower::group_shuffle_cost(
-                        conv_in.data.len(),
-                        lc.groups * kg * lc.sub_shape.ox * lc.sub_shape.oy,
-                    ));
-                    let wpg = kg * cg * 9;
-                    let reqs: Vec<ConvRequest> = (0..lc.groups)
-                        .map(|g| {
-                            ConvRequest::with_data(
-                                lc.sub_shape,
-                                lc.mapping,
-                                slice_channels(&conv_in, g * cg, (g + 1) * cg),
-                                Weights::from_vec(
-                                    kg,
-                                    cg,
-                                    3,
-                                    3,
-                                    w_eff.data[g * wpg..(g + 1) * wpg].to_vec(),
-                                ),
-                            )
-                        })
-                        .collect();
-                    let mut parts = Vec::with_capacity(lc.groups);
-                    for (g, res) in engine.submit_batch(&reqs).into_iter().enumerate() {
-                        let res = res.with_context(|| format!("group {g}")).with_context(ctx)?;
-                        conv_cycles += res.report.latency_cycles;
-                        conv_energy += res.report.energy_uj;
-                        launches += res.report.launches;
-                        mapping = Some(res.mapping);
-                        parts.push(res.output);
-                    }
-                    concat_channels(parts)
-                };
-                // 4. Stride: decimate the full stride-1 output.
-                let (_, ox, oy) = lc.out_dims;
-                if lc.stride > 1 {
-                    let (d, op) = decimate(&full, lc.stride, ox, oy);
-                    host.add(op);
-                    d
-                } else {
-                    full
-                }
-            }
-        };
-        // 5. Fused ReLU (host-side, same charge as the engine's).
-        let (mut relu_cycles, mut relu_uj) = (0u64, 0.0f64);
-        if layer.relu() {
-            relu_in_place(&mut out);
-            let (c, e) = relu_cost(&model, out.data.len());
-            relu_cycles = c;
-            relu_uj = e;
-        }
-
-        golden_x = golden_layer(layer, &golden_x)?;
-        let exact = out.data == golden_x.data;
-        let cycles = conv_cycles + host.cycles + relu_cycles;
-        let energy_uj = conv_energy + host_energy_uj(&model, host) + relu_uj;
-        total_cycles += cycles;
-        total_energy += energy_uj;
-        layers.push(LayerReport {
-            index,
-            kind: layer.kind(),
-            desc: layer.describe(),
-            mapping,
-            cycles,
-            conv_cycles,
-            host_cycles: host.cycles + relu_cycles,
-            energy_uj,
-            launches,
-            macs: layer.macs(),
-            cpu_cycles: super::lower::cpu_baseline_cycles(layer),
-            exact,
-        });
-        x = out;
-    }
-
-    let exact = layers.iter().all(|l| l.exact);
+        })
+        .collect();
     Ok(NetworkReport {
         name: net.name.clone(),
         layers,
-        total_cycles,
-        total_energy_uj: total_energy,
-        output: x,
-        exact,
+        total_cycles: run.total_cycles,
+        total_energy_uj: run.total_energy_uj,
+        output: ctx.output().clone(),
+        exact: run.exact.expect("verified run reports exactness"),
     })
 }
 
@@ -279,6 +158,7 @@ pub fn run_network(engine: &Engine, net: &Net, input: &TensorChw) -> Result<Netw
 mod tests {
     use super::*;
     use crate::engine::EngineBuilder;
+    use crate::nn::graph::Layer;
     use crate::prop::Rng;
 
     fn engine() -> Engine {
@@ -326,8 +206,8 @@ mod tests {
         assert!(report.layers[3].speedup().is_none());
     }
 
-    /// A grouped conv batches its independent group submissions and
-    /// still matches the golden model.
+    /// A grouped conv replays its per-group prebuilt kernels and still
+    /// matches the golden model.
     #[test]
     fn grouped_conv_batches_and_is_exact() {
         let mut rng = Rng::new(11);

@@ -1,8 +1,19 @@
 //! Lowering rules: how each generalized layer becomes stride-1 / valid
 //! 3×3 engine convolutions plus host-side glue, and the closed-form
-//! cost model of that glue. The executor (`nn::exec`) and the planner
-//! path (`nn::plan`) share these functions, so predicted and executed
-//! host costs are identical by construction.
+//! cost model of that glue. [`glue_spec`] resolves both at once and is
+//! the crate's single lowering path: the planner (`nn::plan`) prices
+//! from it and the compiler (`engine::compiled`) freezes step lists
+//! from it, so predicted and executed host costs are identical by
+//! construction.
+//!
+//! Every glue op has one allocation-free core ([`pad_into`],
+//! [`decimate_into`], [`pool_into`]) used directly by the compiled
+//! runner (`engine::compiled`) against its pre-sized arena; the
+//! allocating forms here ([`pad_input`], [`decimate`], [`maxpool2d`],
+//! [`avgpool2d`]) are thin allocate-then-fill wrappers over the same
+//! cores, so the reference and serving paths cannot diverge. Each op's
+//! cost function (`pad_cost`, `decimate_cost`, …) is the one charge
+//! both sides use.
 //!
 //! # The rules
 //!
@@ -76,6 +87,22 @@ fn cycles_per_elem() -> u64 {
     HostCostModel::default().im2col_cycles_per_elem
 }
 
+/// Allocation-free core of [`pad_input`]: zero-pad a CHW activation by
+/// `p` per side into `dst` (already sized to `c·(h+2p)·(w+2p)`). The
+/// compiled runner calls this against its arena.
+pub fn pad_into(src: &[i32], (c, h, w): (usize, usize, usize), p: usize, dst: &mut [i32]) {
+    let (ph, pw) = (h + 2 * p, w + 2 * p);
+    debug_assert_eq!(dst.len(), c * ph * pw);
+    dst.fill(0);
+    for ci in 0..c {
+        for y in 0..h {
+            let s = (ci * h + y) * w;
+            let d = (ci * ph + y + p) * pw + p;
+            dst[d..d + w].copy_from_slice(&src[s..s + w]);
+        }
+    }
+}
+
 /// Zero-pad a CHW tensor by `p` on every spatial side. Returns the
 /// padded tensor and the host charge (one pass over the padded tensor:
 /// every destination element is written, interior elements are read
@@ -84,20 +111,9 @@ pub fn pad_input(x: &TensorChw, p: usize) -> (TensorChw, HostOp) {
     if p == 0 {
         return (x.clone(), HostOp::default());
     }
-    let (h, w) = (x.h + 2 * p, x.w + 2 * p);
-    let mut out = TensorChw::zeros(x.c, h, w);
-    for c in 0..x.c {
-        for y in 0..x.h {
-            let src = x.offset(c, y, 0);
-            let dst = out.offset(c, y + p, p);
-            out.data[dst..dst + x.w].copy_from_slice(&x.data[src..src + x.w]);
-        }
-    }
-    let op = HostOp {
-        cycles: cycles_per_elem() * out.data.len() as u64,
-        accesses: (x.data.len() + out.data.len()) as u64,
-    };
-    (out, op)
+    let mut out = TensorChw::zeros(x.c, x.h + 2 * p, x.w + 2 * p);
+    pad_into(&x.data, (x.c, x.h, x.w), p, &mut out.data);
+    (out, pad_cost(x.c, x.h, x.w, p))
 }
 
 /// Cost of [`pad_input`] without materializing it (the planner path).
@@ -112,6 +128,26 @@ pub fn pad_cost(c: usize, h: usize, w: usize, p: usize) -> HostOp {
     }
 }
 
+/// Allocation-free core of [`decimate`]: keep every `stride`-th pixel
+/// per axis of the `(c, fh, fw)` source into the `(oc, oh, ow)`
+/// destination. The compiled runner calls this against its arena.
+pub fn decimate_into(
+    src: &[i32],
+    (c, fh, fw): (usize, usize, usize),
+    stride: usize,
+    dst: &mut [i32],
+    (oc, oh, ow): (usize, usize, usize),
+) {
+    debug_assert_eq!(c, oc);
+    for ci in 0..c {
+        for y in 0..oh {
+            for x in 0..ow {
+                dst[(ci * oh + y) * ow + x] = src[(ci * fh + y * stride) * fw + x * stride];
+            }
+        }
+    }
+}
+
 /// Keep every `stride`-th pixel per axis of a CHW tensor (`ox × oy`
 /// outputs). The inverse charge of the stride lowering's overcompute.
 pub fn decimate(full: &TensorChw, stride: usize, ox: usize, oy: usize) -> (TensorChw, HostOp) {
@@ -120,13 +156,7 @@ pub fn decimate(full: &TensorChw, stride: usize, ox: usize, oy: usize) -> (Tenso
         return (full.clone(), HostOp::default());
     }
     let mut out = TensorChw::zeros(full.c, ox, oy);
-    for c in 0..full.c {
-        for y in 0..ox {
-            for x in 0..oy {
-                out.set(c, y, x, full.at(c, y * stride, x * stride));
-            }
-        }
-    }
+    decimate_into(&full.data, (full.c, full.h, full.w), stride, &mut out.data, (full.c, ox, oy));
     let op = decimate_cost(full.c, stride, ox, oy);
     (out, op)
 }
@@ -171,41 +201,55 @@ const POOL_CYCLES_PER_TAP: u64 = 5;
 /// Per-output-element store cycles of the pooling loops.
 const POOL_STORE_CYCLES: u64 = 4;
 
+/// Allocation-free core of [`maxpool2d`] / [`avgpool2d`]: pool the
+/// `(c, h, w)` source over `size × size` windows at `stride` into the
+/// `(oc, oh, ow)` destination — max fold when `max`, else wrapping
+/// accumulation with a truncating integer mean (like every other
+/// integer op in the crate). The compiled runner calls this against
+/// its arena.
+pub fn pool_into(
+    src: &[i32],
+    (c, h, w): (usize, usize, usize),
+    size: usize,
+    stride: usize,
+    max: bool,
+    dst: &mut [i32],
+    (oc, oh, ow): (usize, usize, usize),
+) {
+    debug_assert_eq!(c, oc);
+    let n = (size * size) as i32;
+    for ci in 0..c {
+        for y in 0..oh {
+            for x in 0..ow {
+                let mut acc = if max { i32::MIN } else { 0 };
+                for dy in 0..size {
+                    for dx in 0..size {
+                        let v = src[(ci * h + y * stride + dy) * w + x * stride + dx];
+                        acc = if max { acc.max(v) } else { acc.wrapping_add(v) };
+                    }
+                }
+                dst[(ci * oh + y) * ow + x] = if max { acc } else { acc / n };
+            }
+        }
+    }
+}
+
 /// Max pooling over `size × size` windows at `stride` (host-side).
 pub fn maxpool2d(x: &TensorChw, size: usize, stride: usize) -> (TensorChw, HostOp) {
-    pool2d(x, size, stride, |acc, v| acc.max(v), i32::MIN, |acc, _| acc)
+    pool2d(x, size, stride, true)
 }
 
 /// Average pooling (truncating integer division by the window size,
 /// wrapping accumulation like every other integer op in the crate).
 pub fn avgpool2d(x: &TensorChw, size: usize, stride: usize) -> (TensorChw, HostOp) {
-    pool2d(x, size, stride, |acc, v| acc.wrapping_add(v), 0, |acc, n| acc / n)
+    pool2d(x, size, stride, false)
 }
 
-fn pool2d(
-    x: &TensorChw,
-    size: usize,
-    stride: usize,
-    fold: impl Fn(i32, i32) -> i32,
-    init: i32,
-    finish: impl Fn(i32, i32) -> i32,
-) -> (TensorChw, HostOp) {
+fn pool2d(x: &TensorChw, size: usize, stride: usize, max: bool) -> (TensorChw, HostOp) {
     assert!(size >= 1 && stride >= 1 && x.h >= size && x.w >= size);
     let (oh, ow) = ((x.h - size) / stride + 1, (x.w - size) / stride + 1);
     let mut out = TensorChw::zeros(x.c, oh, ow);
-    for c in 0..x.c {
-        for y in 0..oh {
-            for xx in 0..ow {
-                let mut acc = init;
-                for dy in 0..size {
-                    for dx in 0..size {
-                        acc = fold(acc, x.at(c, y * stride + dy, xx * stride + dx));
-                    }
-                }
-                out.set(c, y, xx, finish(acc, (size * size) as i32));
-            }
-        }
-    }
+    pool_into(&x.data, (x.c, x.h, x.w), size, stride, max, &mut out.data, (x.c, oh, ow));
     (out, pool_cost(x.c, oh, ow, size))
 }
 
@@ -295,6 +339,71 @@ pub fn embed_pointwise_cost(k: usize, c: usize) -> HostOp {
     HostOp {
         cycles: HostCostModel::default().prep_cycles_per_elem * elems,
         accesses: (k * c) as u64 + elems,
+    }
+}
+
+/// Everything the execution stack needs to know about one layer's
+/// lowering, resolved once: the engine-visible sub-convolution (for
+/// conv-like layers), the layer's **static host-glue charge** (pad +
+/// pointwise embed + group shuffle + decimate + pool — every term is
+/// closed-form in the dims, so it is identical for the planner, the
+/// compiler and the executor *by construction*), and the output dims.
+///
+/// This is the single lowering path of the crate: `nn::plan` prices
+/// layers from it, `engine::compiled` freezes step lists from it, and
+/// `nn::exec` executes through those compiled steps — the three
+/// formerly-duplicated per-layer glue sequences collapsed into one.
+#[derive(Clone, Debug)]
+pub struct GlueSpec {
+    /// The lowered sub-convolution (`None` for host-only pooling).
+    pub lowered: Option<LoweredConv>,
+    /// Static host glue of the layer (excludes the fused ReLU, which is
+    /// charged separately like the engine does).
+    pub host: HostOp,
+    /// Input dims `(c, h, w)` the layer consumes.
+    pub in_dims: (usize, usize, usize),
+    /// Input dims after the host pad (equals `in_dims` when no pad).
+    pub padded_dims: (usize, usize, usize),
+    /// Output dims `(c, h, w)` the layer produces.
+    pub out_dims: (usize, usize, usize),
+}
+
+/// Resolve a layer's lowering and its static glue charge for an input
+/// of `in_dims`. Validates that the layer accepts those dims.
+pub fn glue_spec(layer: &Layer, in_dims: (usize, usize, usize)) -> Result<GlueSpec> {
+    let (c, h, w) = in_dims;
+    let out_dims = layer.out_dims(in_dims)?;
+    let mut host = HostOp::default();
+    match layer {
+        Layer::MaxPool { size, .. } | Layer::AvgPool { size, .. } => {
+            let (oc, oh, ow) = out_dims;
+            debug_assert_eq!(oc, c);
+            host.add(pool_cost(c, oh, ow, *size));
+            Ok(GlueSpec { lowered: None, host, in_dims, padded_dims: in_dims, out_dims })
+        }
+        conv_like => {
+            let shape = conv_like.conv_shape().expect("conv-like layer has a shape");
+            let depthwise = matches!(conv_like, Layer::Depthwise { .. });
+            let mapping = match conv_like {
+                Layer::Conv { mapping, .. } | Layer::Pointwise { mapping, .. } => *mapping,
+                _ => Mapping::Auto,
+            };
+            let lc = lower_conv(shape, mapping, depthwise)?;
+            host.add(pad_cost(c, h, w, lc.host_pad));
+            if lc.embed_pointwise {
+                host.add(embed_pointwise_cost(shape.k, shape.c_per_group()));
+            }
+            let padded_dims = (c, h + 2 * lc.host_pad, w + 2 * lc.host_pad);
+            if lc.groups > 1 {
+                let padded = c * padded_dims.1 * padded_dims.2;
+                host.add(group_shuffle_cost(padded, lc.groups * lc.sub_shape.output_elems()));
+            }
+            if lc.stride > 1 {
+                let (k, ox, oy) = lc.out_dims;
+                host.add(decimate_cost(k, lc.stride, ox, oy));
+            }
+            Ok(GlueSpec { lowered: Some(lc), host, in_dims, padded_dims, out_dims })
+        }
     }
 }
 

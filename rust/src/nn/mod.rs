@@ -31,6 +31,15 @@
 //! `cgra net --plan-only` predicts end-to-end cycles/energy without
 //! simulating, within the planner's validated ≤ 5 % bound.
 //!
+//! ## One lowering path
+//!
+//! Since the compile-once refactor (DESIGN.md §8) the lowering glue is
+//! resolved exactly once, in [`lower::glue_spec`]: the planner prices
+//! it, `Engine::compile` freezes it into a `CompiledNet` step list,
+//! and [`run_network`] executes through that compiled artifact in
+//! golden-verified debug mode. Serve repeated traffic by compiling
+//! once yourself (`cgra serve`, `Engine::compile`).
+//!
 //! [`Engine`]: crate::engine::Engine
 
 pub mod exec;

@@ -20,11 +20,8 @@ use crate::engine::relu_cost;
 use crate::kernels::Mapping;
 use crate::planner::{PlanObjective, Planner};
 
-use super::graph::{Layer, Net};
-use super::lower::{
-    cpu_baseline_cycles, decimate_cost, embed_pointwise_cost, group_shuffle_cost, host_energy_uj,
-    lower_conv, pad_cost, pool_cost, HostOp,
-};
+use super::graph::Net;
+use super::lower::{cpu_baseline_cycles, glue_spec, host_energy_uj};
 
 /// The predicted cost and chosen strategy of one layer.
 #[derive(Clone, Debug)]
@@ -79,58 +76,31 @@ pub fn plan_network(planner: &Planner, net: &Net, objective: PlanObjective) -> R
     let mut total_energy = 0.0f64;
     for (index, layer) in net.layers.iter().enumerate() {
         let ctx = || format!("planning layer {index} ({}) of '{}'", layer.kind(), net.name);
-        let (c, h, w) = dims;
-        let out_dims = layer.out_dims(dims)?;
-        let mut host = HostOp::default();
+        // The one lowering path of the crate: the same `glue_spec` the
+        // compiler freezes step lists from (engine::compiled) prices
+        // this plan's host glue, so predicted and executed glue are
+        // identical by construction.
+        let spec = glue_spec(layer, dims).with_context(ctx)?;
+        let out_dims = spec.out_dims;
+        let host = spec.host;
         let mut conv_cycles = 0u64;
         let mut conv_energy = 0.0f64;
         let mut mapping: Option<Mapping> = None;
 
-        match layer {
-            Layer::MaxPool { size, stride } | Layer::AvgPool { size, stride } => {
-                let (oc, oh, ow) = out_dims;
-                debug_assert_eq!(oc, c);
-                let _ = stride;
-                host.add(pool_cost(c, oh, ow, *size));
-            }
-            conv_like => {
-                let shape = conv_like.conv_shape().expect("conv-like layer has a shape");
-                let depthwise = matches!(conv_like, Layer::Depthwise { .. });
-                let layer_mapping = match conv_like {
-                    Layer::Conv { mapping, .. } | Layer::Pointwise { mapping, .. } => *mapping,
-                    _ => Mapping::Auto,
-                };
-                let lc = lower_conv(shape, layer_mapping, depthwise).with_context(ctx)?;
-                host.add(pad_cost(c, h, w, lc.host_pad));
-                if lc.embed_pointwise {
-                    host.add(embed_pointwise_cost(shape.k, shape.c_per_group()));
-                }
-                if lc.groups > 1 {
-                    let padded =
-                        c * (h + 2 * lc.host_pad) * (w + 2 * lc.host_pad);
-                    host.add(group_shuffle_cost(
-                        padded,
-                        lc.groups * lc.sub_shape.output_elems(),
-                    ));
-                }
-                // The per-group estimate: every group shares one
-                // (shape, mapping) point, so the planner memo makes the
-                // repeats free; multiplying is exact because the
-                // executor submits `groups` independent convolutions.
-                let est = match lc.mapping {
-                    Mapping::Auto => planner
-                        .best_of(&lc.sub_shape, &Mapping::CGRA, objective)
-                        .with_context(ctx)?,
-                    m => planner.estimate(&lc.sub_shape, m).with_context(ctx)?,
-                };
-                mapping = Some(est.mapping);
-                conv_cycles = est.cycles() * lc.groups as u64;
-                conv_energy = est.energy_uj() * lc.groups as f64;
-                if lc.stride > 1 {
-                    let (k, ox, oy) = lc.out_dims;
-                    host.add(decimate_cost(k, lc.stride, ox, oy));
-                }
-            }
+        if let Some(lc) = &spec.lowered {
+            // The per-group estimate: every group shares one
+            // (shape, mapping) point, so the planner memo makes the
+            // repeats free; multiplying is exact because the executor
+            // submits `groups` independent convolutions.
+            let est = match lc.mapping {
+                Mapping::Auto => planner
+                    .best_of(&lc.sub_shape, &Mapping::CGRA, objective)
+                    .with_context(ctx)?,
+                m => planner.estimate(&lc.sub_shape, m).with_context(ctx)?,
+            };
+            mapping = Some(est.mapping);
+            conv_cycles = est.cycles() * lc.groups as u64;
+            conv_energy = est.energy_uj() * lc.groups as f64;
         }
         let (relu_cycles, relu_uj) = if layer.relu() {
             let (oc, oh, ow) = out_dims;
@@ -168,6 +138,7 @@ pub fn plan_network(planner: &Planner, net: &Net, objective: PlanObjective) -> R
 
 #[cfg(test)]
 mod tests {
+    use super::super::graph::Layer;
     use super::*;
     use crate::cgra::CgraConfig;
     use crate::energy::EnergyModel;

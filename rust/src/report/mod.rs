@@ -5,12 +5,11 @@
 
 use anyhow::Result;
 
-use crate::cgra::{CgraConfig, OpClass};
+use crate::cgra::OpClass;
 use crate::conv::ConvShape;
 use crate::coordinator::{SweepRow, SweepSpec};
-use crate::engine::{Engine, EngineBuilder};
+use crate::engine::Engine;
 use crate::kernels::Mapping;
-use crate::metrics::MappingReport;
 use crate::util::fmt::{bar_chart, kib, Table};
 
 /// A rendered report: human text + CSV + the metric rows.
@@ -32,22 +31,6 @@ impl Figure {
         std::fs::write(dir.join(format!("{}.csv", self.id)), &self.csv)?;
         Ok(())
     }
-}
-
-/// Run all five strategies on one shape (in parallel) and return the
-/// metric rows in `Mapping::ALL` order.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `engine::Engine::run_all_mappings` — this wrapper builds a \
-            throwaway engine (global cache) per call"
-)]
-pub fn run_all_mappings(
-    cfg: &CgraConfig,
-    shape: &ConvShape,
-    seed: u64,
-    workers: usize,
-) -> Result<Vec<MappingReport>> {
-    EngineBuilder::new().config(cfg.clone()).workers(workers).build()?.run_all_mappings(shape, seed)
 }
 
 /// **Figure 3** — operation distribution of the mapping strategies'
@@ -321,6 +304,7 @@ fn findings(rows: &[SweepRow]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineBuilder;
 
     fn quick_engine() -> Engine {
         EngineBuilder::new().workers(4).build().unwrap()
@@ -414,20 +398,6 @@ mod tests {
         let pfig = net_plan_fig(&plan);
         assert_eq!(pfig.id, "net-vgg-mini-plan");
         assert!(pfig.text.contains("no layer simulated"));
-    }
-
-    /// The deprecated wrapper matches the engine path row for row.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_run_all_mappings_matches_engine() {
-        let shape = ConvShape::new3x3(4, 4, 4, 4);
-        let a = run_all_mappings(&CgraConfig::default(), &shape, 12, 4).unwrap();
-        let b = quick_engine().run_all_mappings(&shape, 12).unwrap();
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(b.iter()) {
-            assert_eq!(x.mapping, y.mapping);
-            assert_eq!(x.latency_cycles, y.latency_cycles);
-        }
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Integration tests of the compile-once / run-many artifact:
+//! compiled-vs-interpreted equivalence across the stride / pad / groups
+//! grid and every preset, run-to-run determinism, the legacy
+//! `Engine::run_network` reroute, and `Arc<CompiledNet>` sharing across
+//! the worker pool.
+//!
+//! The kernel-level bit-exactness anchor (prebuilt replay ≡ the legacy
+//! per-call kernel drivers, per mapping) lives in
+//! `src/kernels/prebuilt.rs`; these tests pin the network-level
+//! contract on top.
+
+use std::sync::Arc;
+
+use openedge_cgra::conv::GenConvShape;
+use openedge_cgra::coordinator::{golden_network as conv_golden_network, run_jobs, ConvNet};
+use openedge_cgra::engine::{Engine, EngineBuilder};
+use openedge_cgra::nn::{self, Layer, Net};
+use openedge_cgra::prop::Rng;
+
+fn engine() -> Engine {
+    EngineBuilder::new().workers(2).private_cache().build().unwrap()
+}
+
+/// A 2-layer net exercising one (stride, pad, groups) combination:
+/// a generalized conv into a depthwise layer.
+fn grid_net(stride: usize, pad: usize, groups: usize, seed: u64) -> Net {
+    let mut rng = Rng::new(seed);
+    let (c, k, hw) = (4, 8, 9);
+    let shape = GenConvShape::new(c, k, hw, hw, 3, 3, stride, pad, groups).unwrap();
+    let (oc, oh, ow) = (shape.k, shape.ox(), shape.oy());
+    let conv = Layer::conv(shape, true, 4, &mut rng).unwrap();
+    let dw = Layer::depthwise(oc, oh, ow, 1, 1, false, 4, &mut rng).unwrap();
+    Net {
+        name: format!("grid-s{stride}p{pad}g{groups}"),
+        input_dims: (c, hw, hw),
+        layers: vec![conv, dw],
+    }
+}
+
+/// Property: across the stride × pad × groups grid, `CompiledNet::run`
+/// is bit-exact with the `nn::exec` path — same outputs, same cycles,
+/// same energy (bitwise), per layer — and deterministic across warm
+/// replays.
+#[test]
+fn prop_compiled_matches_exec_across_grid() {
+    let engine = engine();
+    let mut cases = 0;
+    for &stride in &[1usize, 2] {
+        for &pad in &[0usize, 1] {
+            for &groups in &[1usize, 2, 4] {
+                let net = grid_net(stride, pad, groups, 31 + cases);
+                let input = net.random_input(10, 5 + cases);
+
+                let exec = nn::run_network(&engine, &net, &input).unwrap();
+                assert!(exec.exact, "{}: exec must match golden", net.name);
+
+                let compiled = engine.compile(&net).unwrap();
+                let mut ctx = compiled.new_ctx();
+                let a = compiled.run(&mut ctx, &input).unwrap();
+                assert_eq!(
+                    ctx.output().data,
+                    exec.output.data,
+                    "{}: compiled output",
+                    net.name
+                );
+                assert_eq!(a.total_cycles, exec.total_cycles, "{}", net.name);
+                assert_eq!(
+                    a.total_energy_uj.to_bits(),
+                    exec.total_energy_uj.to_bits(),
+                    "{}",
+                    net.name
+                );
+                for (lr, er) in a.layers.iter().zip(exec.layers.iter()) {
+                    assert_eq!(lr.cycles, er.cycles, "{} layer {}", net.name, er.index);
+                    assert_eq!(
+                        lr.conv_cycles, er.conv_cycles,
+                        "{} layer {}",
+                        net.name, er.index
+                    );
+                    assert_eq!(
+                        lr.host_cycles, er.host_cycles,
+                        "{} layer {}",
+                        net.name, er.index
+                    );
+                    assert_eq!(
+                        lr.energy_uj.to_bits(),
+                        er.energy_uj.to_bits(),
+                        "{} layer {}",
+                        net.name,
+                        er.index
+                    );
+                    assert_eq!(lr.launches, er.launches, "{} layer {}", net.name, er.index);
+                    assert_eq!(lr.mapping, er.mapping, "{} layer {}", net.name, er.index);
+                }
+                // Warm replay is deterministic and allocation-stable.
+                let b = compiled.run(&mut ctx, &input).unwrap();
+                assert_eq!(b.total_cycles, a.total_cycles, "{}", net.name);
+                assert_eq!(
+                    b.total_energy_uj.to_bits(),
+                    a.total_energy_uj.to_bits(),
+                    "{}",
+                    net.name
+                );
+                assert_eq!(ctx.output().data, exec.output.data, "{}", net.name);
+                cases += 1;
+            }
+        }
+    }
+    assert_eq!(cases, 12, "full grid covered");
+}
+
+/// Every preset compiles, and the compiled run matches the interpreted
+/// wrapper bit-for-bit while the verified mode confirms golden
+/// exactness per layer.
+#[test]
+fn presets_compile_and_match_exec() {
+    let engine = engine();
+    for preset in ["mobilenet-mini", "paper-baseline", "vgg-mini"] {
+        let net = nn::build_preset(preset, 7).unwrap();
+        let input = net.random_input(8, 7);
+        let exec = nn::run_network(&engine, &net, &input).unwrap();
+        assert!(exec.exact, "{preset}");
+
+        let compiled = engine.compile(&net).unwrap();
+        let mut ctx = compiled.new_ctx();
+        let run = compiled.run_verified(&mut ctx, &input).unwrap();
+        assert_eq!(run.exact, Some(true), "{preset}: verified mode");
+        assert_eq!(ctx.output().data, exec.output.data, "{preset}");
+        assert_eq!(run.total_cycles, exec.total_cycles, "{preset}");
+        assert_eq!(
+            run.total_energy_uj.to_bits(),
+            exec.total_energy_uj.to_bits(),
+            "{preset}"
+        );
+        // Per-layer rows agree (cycles decompose identically).
+        for (lr, er) in run.layers.iter().zip(exec.layers.iter()) {
+            assert_eq!(lr.cycles, er.cycles, "{preset} layer {}", er.index);
+            assert_eq!(lr.conv_cycles, er.conv_cycles, "{preset} layer {}", er.index);
+            assert_eq!(lr.host_cycles, er.host_cycles, "{preset} layer {}", er.index);
+            assert_eq!(lr.exact, Some(er.exact), "{preset} layer {}", er.index);
+        }
+        // The artifact owns pre-decoded programs for every conv layer.
+        assert!(compiled.total_launches() > 0 && compiled.total_uops() > 0, "{preset}");
+    }
+}
+
+/// The legacy `Engine::run_network` (ConvNet surface) routes through
+/// the compiled artifact and still matches the golden chain and the
+/// direct `compile_conv_net` path.
+#[test]
+fn conv_net_reroute_matches_golden_and_compiled() {
+    let engine = engine();
+    let net = ConvNet::random(3, 2, 4, 9, 9, 11);
+    let input = {
+        let mut rng = Rng::new(5);
+        openedge_cgra::conv::random_input(&net.layers[0].shape, 8, &mut rng)
+    };
+    let out = engine.run_network(&net, &input).unwrap();
+    let golden = conv_golden_network(&net, &input).unwrap();
+    assert_eq!(out.output.data, golden.data);
+    assert_eq!(out.layers.len(), 3);
+    assert!(out.layers.iter().all(|r| r.latency_cycles > 0));
+
+    let compiled = engine.compile_conv_net(&net).unwrap();
+    let mut ctx = compiled.new_ctx();
+    let run = compiled.run(&mut ctx, &input).unwrap();
+    assert_eq!(ctx.output().data, out.output.data);
+    assert_eq!(run.total_cycles, out.total_cycles);
+    assert_eq!(run.total_energy_uj.to_bits(), out.total_energy_uj.to_bits());
+    assert_eq!(run.relu_cycles, out.relu_cycles);
+}
+
+/// One `Arc<CompiledNet>` shared across the worker pool: every worker
+/// builds its own context and replays concurrently; results are
+/// bit-identical to the single-threaded reference, per input.
+#[test]
+fn arc_shared_artifact_serves_pool_workers_exactly() {
+    let engine = engine();
+    let net = nn::build_preset("mobilenet-mini", 3).unwrap();
+    let compiled = Arc::new(engine.compile(&net).unwrap());
+
+    // Single-threaded reference outputs for 8 distinct inputs.
+    let inputs: Vec<_> = (0..8u64).map(|i| net.random_input(8, 100 + i)).collect();
+    let mut ref_ctx = compiled.new_ctx();
+    let reference: Vec<(Vec<i32>, u64)> = inputs
+        .iter()
+        .map(|input| {
+            let run = compiled.run(&mut ref_ctx, input).unwrap();
+            (ref_ctx.output().data.clone(), run.total_cycles)
+        })
+        .collect();
+
+    // Fan the same inputs over 4 workers, each with its own context.
+    let jobs: Vec<_> = inputs
+        .iter()
+        .map(|input| {
+            let compiled = compiled.clone();
+            move || {
+                let mut ctx = compiled.new_ctx();
+                let run = compiled.run_verified(&mut ctx, input).unwrap();
+                assert_eq!(run.exact, Some(true));
+                (ctx.output().data.clone(), run.total_cycles)
+            }
+        })
+        .collect();
+    let results = run_jobs(4, jobs);
+    assert_eq!(results.len(), reference.len());
+    for (i, (got, want)) in results.iter().zip(reference.iter()).enumerate() {
+        assert_eq!(got.0, want.0, "input {i}: concurrent output diverged");
+        assert_eq!(got.1, want.1, "input {i}: concurrent cycles diverged");
+    }
+}
+
+/// Compile-time failures carry the layer context, and a compiled
+/// artifact rejects inputs with the wrong dims.
+#[test]
+fn compile_and_run_errors_are_actionable() {
+    let engine = engine();
+    let mut rng = Rng::new(1);
+    let net = Net {
+        name: "big".into(),
+        input_dims: (16, 66, 66),
+        layers: vec![Layer::conv(
+            GenConvShape::new(16, 16, 66, 66, 3, 3, 1, 0, 1).unwrap(),
+            false,
+            2,
+            &mut rng,
+        )
+        .unwrap()],
+    };
+    let err = format!("{:#}", engine.compile(&net).unwrap_err());
+    assert!(err.contains("layer 0") && err.contains("big"), "{err}");
+
+    let ok = nn::build_preset("paper-baseline", 2).unwrap();
+    let compiled = engine.compile(&ok).unwrap();
+    let mut ctx = compiled.new_ctx();
+    let bad_input = openedge_cgra::conv::TensorChw::zeros(1, 4, 4);
+    let err = format!("{:#}", compiled.run(&mut ctx, &bad_input).unwrap_err());
+    assert!(err.contains("expects"), "{err}");
+}

@@ -1,0 +1,78 @@
+//! The compile-once / run-many **counter contract**: a warm
+//! `CompiledNet::run` performs zero program building, zero µop
+//! decoding, zero planner work and zero arena allocation — asserted
+//! against the process-wide [`RunCounters`], not assumed.
+//!
+//! This file deliberately holds a single `#[test]`: the counters are
+//! process-wide, so any concurrently running test in the same binary
+//! would move them. Other integration binaries are separate processes
+//! and cannot interfere.
+
+use openedge_cgra::engine::{EngineBuilder, RunCounters};
+use openedge_cgra::nn;
+
+#[test]
+fn warm_compiled_runs_do_zero_compile_side_work() {
+    let engine = EngineBuilder::new().workers(2).private_cache().build().unwrap();
+    let net = nn::build_preset("mobilenet-mini", 7).unwrap();
+
+    // Compile-side work happens here — and the counters prove it.
+    let before_compile = RunCounters::snapshot(&engine);
+    let compiled = engine.compile(&net).unwrap();
+    let after_compile = RunCounters::snapshot(&engine);
+    assert!(
+        after_compile.program_builds > before_compile.program_builds,
+        "compile must build launch programs"
+    );
+    assert!(
+        after_compile.uop_decodes > before_compile.uop_decodes,
+        "compile must decode programs into the µop IR"
+    );
+    assert!(
+        after_compile.planner_estimates > before_compile.planner_estimates,
+        "compile must resolve Auto mappings through the planner"
+    );
+
+    // Context creation is the one allocating step of the warm path.
+    let mut ctx = compiled.new_ctx();
+    let after_ctx = RunCounters::snapshot(&engine);
+    assert!(
+        after_ctx.arena_allocs > after_compile.arena_allocs,
+        "context creation allocates the arena"
+    );
+
+    // Warm runs: several inferences over distinct inputs, verified and
+    // unverified, through one shared context.
+    let warmup = net.random_input(8, 1);
+    let first = compiled.run_verified(&mut ctx, &warmup).unwrap();
+    assert_eq!(first.exact, Some(true), "the artifact must stay golden-exact");
+
+    let warm_before = RunCounters::snapshot(&engine);
+    let mut last_cycles = 0;
+    for seed in 2..6u64 {
+        let input = net.random_input(8, seed);
+        let run = compiled.run(&mut ctx, &input).unwrap();
+        assert!(run.total_cycles > 0);
+        last_cycles = run.total_cycles;
+    }
+    let warm_after = RunCounters::snapshot(&engine);
+
+    assert_eq!(
+        warm_after, warm_before,
+        "a warm CompiledNet::run must perform no program building, no µop \
+         decoding, no planner calls and no arena allocation"
+    );
+    // Timing is data-independent: every inference costs the same
+    // modeled cycles.
+    assert_eq!(last_cycles, first.total_cycles);
+
+    // A second context allocates again (per-worker arenas), but its
+    // warm runs are clean too.
+    let mut ctx2 = compiled.new_ctx();
+    let mid = RunCounters::snapshot(&engine);
+    assert!(mid.arena_allocs > warm_after.arena_allocs);
+    let run = compiled.run(&mut ctx2, &warmup).unwrap();
+    assert_eq!(run.total_cycles, first.total_cycles);
+    let end = RunCounters::snapshot(&engine);
+    assert_eq!(end, mid, "warm runs on a fresh context are also clean");
+}

@@ -1,7 +1,7 @@
 //! Bench: the compile-once / run-many amortization story, in
 //! inferences per second over `mobilenet-mini`.
 //!
-//! Three measurements:
+//! Four measurements:
 //!
 //!   1. **cold compile** — `Engine::compile` per sample: what every
 //!      inference used to pay implicitly (program building, µop
@@ -11,7 +11,13 @@
 //!      steady state,
 //!   3. **legacy per-call path** — `nn::run_network`, which compiles
 //!      *and* golden-verifies on every call: the pre-refactor
-//!      per-inference cost.
+//!      per-inference cost,
+//!   4. **batched warm runs** — `CompiledNet::run_batch` at
+//!      B ∈ {1, 8, 16, 32} lanes per shared µop walk (DESIGN.md §9,
+//!      EXPERIMENTS.md E13), in inf/s with the speedup over B=1.
+//!      Before timing, every B is gated on batched outputs being
+//!      bit-identical to B scalar runs with unchanged modeled
+//!      cycles/energy.
 //!
 //! The printed ratio is the amortization win: how many warm inferences
 //! one compile buys, and how much faster the steady state is than the
@@ -64,4 +70,43 @@ fn main() {
         cold.median() * 1e3,
         cold.median() / warm.median().max(1e-12),
     );
+
+    // 4. Batched warm runs: one shared µop walk serving B lanes.
+    //    Gate each B on the differential contract first: batched
+    //    outputs bit-identical to B scalar runs, modeled per-inference
+    //    cycles/energy unchanged.
+    println!("\nbatched serving (B lanes per shared uop walk):");
+    let mut b1_ips = warm_ips;
+    for bsz in [1usize, 8, 16, 32] {
+        let mut bctx = compiled.new_batch_ctx(bsz);
+        let inputs: Vec<_> =
+            (0..bsz as u64).map(|l| net.random_input(8, 7 ^ (l << 8))).collect();
+        let brun = compiled.run_batch(&mut bctx, &inputs).expect("batched run");
+        for (l, inp) in inputs.iter().enumerate() {
+            let srun = compiled.run(&mut ctx, inp).expect("scalar run");
+            assert_eq!(
+                bctx.outputs()[l].data,
+                ctx.output().data,
+                "batched lane {l} output diverged from the scalar run"
+            );
+            assert_eq!(brun.total_cycles, srun.total_cycles, "modeled cycles changed");
+            assert_eq!(
+                brun.total_energy_uj.to_bits(),
+                srun.total_energy_uj.to_bits(),
+                "modeled energy changed"
+            );
+        }
+        let r = b.run(&format!("CompiledNet::run_batch (B={bsz})"), None, || {
+            compiled.run_batch(&mut bctx, &inputs).expect("batched run")
+        });
+        let ips = bsz as f64 / r.median();
+        if bsz == 1 {
+            b1_ips = ips;
+        }
+        println!(
+            "  B={bsz:<2}: {ips:.1} inf/s ({:.2}x over B=1 batched, {:.2}x over scalar warm)",
+            ips / b1_ips,
+            ips / warm_ips,
+        );
+    }
 }

@@ -13,7 +13,7 @@
 //! `cargo bench --bench sim_throughput`
 
 use openedge_cgra::benchkit::Bench;
-use openedge_cgra::cgra::{decode, decode_cached, Cgra, CgraConfig, Memory};
+use openedge_cgra::cgra::{decode, decode_cached, BatchMemory, Cgra, CgraConfig, Memory};
 use openedge_cgra::conv::{random_input, random_weights, ConvShape};
 use openedge_cgra::isa::N_PES;
 use openedge_cgra::kernels::{wp, MemLayout};
@@ -74,6 +74,44 @@ fn main() {
         slots / before.median() / 1e6,
         slots / after.median() / 1e6,
     );
+
+    // Batched replay: one shared µop walk across B lane images
+    // (DESIGN.md §9) — the walk simulates B lanes' worth of PE slots,
+    // so throughput is slots × B per batched run. Gate: the batched
+    // walk's per-inference stats equal the scalar decoded run's.
+    println!("batched replay (B lanes per shared uop walk):");
+    let s_scalar = {
+        let mut m = Memory::new(cfg.mem_words, cfg.n_banks);
+        m.poke_slice(layout.input, &input.data);
+        m.poke_slice(layout.weights, &weights.data);
+        cgra.run_decoded(&dp, &mut m).expect("scalar run")
+    };
+    let mut b1_rate = 0.0f64;
+    for bsz in [1usize, 8, 16, 32] {
+        let mut bmem = BatchMemory::new(cfg.mem_words, cfg.n_banks, bsz);
+        for l in 0..bsz {
+            bmem.poke_slice_lane(layout.input, l, &input.data);
+            bmem.poke_slice_lane(layout.weights, l, &weights.data);
+        }
+        let s_b = cgra.run_decoded_batch(&dp, &mut bmem, bsz).expect("batched run");
+        assert_eq!(s_b, s_scalar, "batched per-inference stats diverged from scalar");
+        let r = b.run(
+            &format!("executor[batched B={bsz}]: WP launch"),
+            Some(slots * bsz as f64),
+            || cgra.run_decoded_batch(&dp, &mut bmem, bsz).expect("run"),
+        );
+        let rate = slots * bsz as f64 / r.median();
+        if bsz == 1 {
+            b1_rate = rate;
+        }
+        println!(
+            "  B={bsz:<2}: {:.1}M PE-slots/s ({:.2}x over B=1 batched, {:.2}x over scalar)",
+            rate / 1e6,
+            rate / b1_rate,
+            rate / (slots / after.median()),
+        );
+    }
+    println!();
 
     // Decode cost in isolation (paid once per distinct program).
     b.run("decode: WP launch program (uncached)", Some(1.0), || decode(&prog));

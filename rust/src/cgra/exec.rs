@@ -27,6 +27,21 @@
 //! [`Cgra::run_reference`]: it is the differential baseline the decoded
 //! engine is required to match step-for-step (`RunStats` equality) and
 //! the "before" side of the `sim_throughput` bench.
+//!
+//! # Batched execution (DESIGN.md §9)
+//!
+//! [`Cgra::run_decoded_batch`] replays one decoded program against `B`
+//! independent memory images in a single shared program walk: the
+//! per-step fixed costs (µop dispatch, column metadata, branch
+//! resolution, bank/port accounting, watchdog) are paid once per step,
+//! and only the data plane — ALU lanes and load/store word copies —
+//! scales with `B`, as tight contiguous loops over structure-of-arrays
+//! state. The batch models `B` copies of the *same* hardware run, so
+//! its `RunStats` is per-inference and bit-identical to a scalar run;
+//! lane-divergent control flow or addresses abort with a
+//! "batch divergence" error (kernel programs derive both from
+//! immediates and counters, never loaded data, so real launches never
+//! diverge).
 
 use anyhow::{bail, Context, Result};
 
@@ -34,7 +49,7 @@ use crate::isa::{Dst, Instr, Op, PeId, Program, Src, COLS, N_PES, N_REGS, ROWS};
 
 use super::config::CgraConfig;
 use super::decoded::{self, AluFn, BrFn, DecodedProgram, UKind, USrc, NO_REG};
-use super::memory::Memory;
+use super::memory::{BatchMemory, Memory};
 use super::stats::{OpClass, RunStats};
 
 /// Torus neighbour lookup table: `NEIGH[pe][dir]` = neighbour PE index
@@ -431,6 +446,396 @@ impl Cgra {
         Ok(stats)
     }
 
+    /// Execute an already-decoded program against `lanes` independent
+    /// memory images in **one shared µop program walk** (DESIGN.md §9).
+    ///
+    /// All lanes run in strict lockstep: column PCs, branch decisions,
+    /// memory addresses, the watchdog and every piece of timing/energy
+    /// accounting are shared, and only register/memory *values* are
+    /// per-lane (structure-of-arrays, contiguous per µop — the inner
+    /// loops autovectorize). The returned [`RunStats`] is therefore
+    /// **per-inference** and bit-identical to what [`Cgra::run_decoded`]
+    /// reports for any single lane: batching is a simulator-throughput
+    /// trick, not a hardware-model change.
+    ///
+    /// `lanes` may be any `1..=mem.batch_capacity()` (the ragged final
+    /// chunk of a request stream); inactive tail lanes are never read
+    /// or written. If lanes disagree on a branch outcome or a memory
+    /// address — impossible for the generated kernel programs, whose
+    /// control flow and addressing derive from immediates and loop
+    /// counters only — the run aborts with a "batch divergence" error
+    /// naming the program, step and PE; rerun such inputs scalar.
+    pub fn run_decoded_batch(
+        &self,
+        dp: &DecodedProgram,
+        mem: &mut BatchMemory,
+        lanes: usize,
+    ) -> Result<RunStats> {
+        let nb = lanes;
+        if nb == 0 || nb > mem.batch_capacity() {
+            bail!(
+                "batch lane count {} out of range 1..={} (program '{}')",
+                nb,
+                mem.batch_capacity(),
+                dp.name()
+            );
+        }
+
+        // Per-lane architectural state, structure-of-arrays: the B
+        // copies of one register live contiguously, so every operand
+        // read/writeback is a contiguous copy of `nb` words.
+        let mut rout = vec![0i32; N_PES * nb];
+        let mut regs = vec![0i32; N_PES * N_REGS * nb];
+        let mut addr_reg = vec![0i32; N_PES * nb];
+
+        let mut pcs = [0usize; COLS];
+        let mut stats = RunStats::new();
+        let mem0 = mem.stats();
+
+        let mut visits: [Vec<u64>; COLS] =
+            std::array::from_fn(|c| vec![0u64; dp.col_meta(c).len()]);
+
+        // Scratch reused across steps (no per-step allocation).
+        let mut abuf = vec![0i32; nb];
+        let mut bbuf = vec![0i32; nb];
+        // Deferred writebacks: value arenas indexed by slot, metadata
+        // alongside — the batched mirror of the scalar `Latch` records.
+        let mut latch_vals = vec![0i32; N_PES * nb];
+        let mut latch_meta = [(0u8, false, NO_REG); N_PES];
+        let mut addr_vals = vec![0i32; N_PES * nb];
+        let mut addr_meta = [0u8; N_PES];
+        let mut store_vals = vec![0i32; N_PES * nb];
+        // Pending stores: (addr, value_slot, pe_index).
+        let mut store_meta: Vec<(i32, usize, usize)> = Vec::with_capacity(N_PES);
+        let mut branch: [Option<(bool, usize)>; COLS];
+        let mut bank_hits = vec![0u32; self.cfg.n_banks.max(1)];
+
+        loop {
+            if stats.steps >= self.cfg.max_steps {
+                bail!(
+                    "watchdog: program '{}' exceeded {} steps without exit",
+                    dp.name(),
+                    self.cfg.max_steps
+                );
+            }
+
+            // ---- static per-column step metadata (shared by all lanes) ----
+            let mut any_mul = false;
+            let mut any_mem = false;
+            let mut max_port_ops = 0u32;
+            for c in 0..COLS {
+                let meta = dp.col_meta(c);
+                let idx = pcs[c].min(meta.len() - 1);
+                visits[c][idx] += 1;
+                let m = meta[idx];
+                any_mul |= m.any_mul;
+                any_mem |= m.mem_ops > 0;
+                max_port_ops = max_port_ops.max(m.mem_ops);
+            }
+
+            // ---- evaluate & execute ----
+            let mut exit = false;
+            let mut n_latch = 0usize;
+            let mut n_addr = 0usize;
+            store_meta.clear();
+            branch = [None; COLS];
+            if any_mem {
+                bank_hits.iter_mut().for_each(|x| *x = 0);
+            }
+
+            for i in 0..N_PES {
+                let col = i % COLS;
+                let pc = pcs[col];
+                let u = dp.uop(i, pc);
+
+                match u.kind {
+                    UKind::Nop => {}
+                    UKind::Exit => exit = true,
+                    UKind::Alu(f) => {
+                        // An ALU op with no destination has no
+                        // architectural effect — skip the lane loop.
+                        if u.wout || u.wreg != NO_REG {
+                            read_batch(u.a, i, nb, &rout, &regs, &addr_reg, &mut abuf);
+                            read_batch(u.b, i, nb, &rout, &regs, &addr_reg, &mut bbuf);
+                            let dst = &mut latch_vals[n_latch * nb..(n_latch + 1) * nb];
+                            match f {
+                                AluFn::Mov => dst.copy_from_slice(&abuf),
+                                AluFn::Add => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l].wrapping_add(bbuf[l]);
+                                    }
+                                }
+                                AluFn::Sub => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l].wrapping_sub(bbuf[l]);
+                                    }
+                                }
+                                AluFn::Mul => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l].wrapping_mul(bbuf[l]);
+                                    }
+                                }
+                                AluFn::Shl => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l].wrapping_shl(bbuf[l] as u32 & 31);
+                                    }
+                                }
+                                AluFn::Shr => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l].wrapping_shr(bbuf[l] as u32 & 31);
+                                    }
+                                }
+                                AluFn::And => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l] & bbuf[l];
+                                    }
+                                }
+                                AluFn::Or => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l] | bbuf[l];
+                                    }
+                                }
+                                AluFn::Xor => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l] ^ bbuf[l];
+                                    }
+                                }
+                                AluFn::Min => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l].min(bbuf[l]);
+                                    }
+                                }
+                                AluFn::Max => {
+                                    for l in 0..nb {
+                                        dst[l] = abuf[l].max(bbuf[l]);
+                                    }
+                                }
+                            }
+                            latch_meta[n_latch] = (i as u8, u.wout, u.wreg);
+                            n_latch += 1;
+                        }
+                    }
+                    UKind::SetAddr => {
+                        read_batch(u.a, i, nb, &rout, &regs, &addr_reg, &mut abuf);
+                        read_batch(u.b, i, nb, &rout, &regs, &addr_reg, &mut bbuf);
+                        let dst = &mut addr_vals[n_addr * nb..(n_addr + 1) * nb];
+                        for l in 0..nb {
+                            dst[l] = abuf[l].wrapping_add(bbuf[l]);
+                        }
+                        addr_meta[n_addr] = i as u8;
+                        n_addr += 1;
+                    }
+                    UKind::Lw => {
+                        read_batch(u.a, i, nb, &rout, &regs, &addr_reg, &mut abuf);
+                        read_batch(u.b, i, nb, &rout, &regs, &addr_reg, &mut bbuf);
+                        for l in 0..nb {
+                            abuf[l] = abuf[l].wrapping_add(bbuf[l]);
+                        }
+                        let addr = uniform_addr(&abuf, i, "lw", stats.steps, dp)?;
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        if u.wout || u.wreg != NO_REG {
+                            let dst = &mut latch_vals[n_latch * nb..(n_latch + 1) * nb];
+                            mem.load_lanes(addr, dst).with_context(|| {
+                                format!("{} lw at step {}", PeId::from_index(i), stats.steps)
+                            })?;
+                            latch_meta[n_latch] = (i as u8, u.wout, u.wreg);
+                            n_latch += 1;
+                        } else {
+                            // Destination-less load: still counted.
+                            mem.load_lanes(addr, &mut abuf).with_context(|| {
+                                format!("{} lw at step {}", PeId::from_index(i), stats.steps)
+                            })?;
+                        }
+                    }
+                    UKind::LwInc => {
+                        let addr =
+                            uniform_addr(&addr_reg[i * nb..(i + 1) * nb], i, "lwinc", stats.steps, dp)?;
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        if u.wout || u.wreg != NO_REG {
+                            let dst = &mut latch_vals[n_latch * nb..(n_latch + 1) * nb];
+                            mem.load_lanes(addr, dst).with_context(|| {
+                                format!("{} lwinc at step {}", PeId::from_index(i), stats.steps)
+                            })?;
+                            latch_meta[n_latch] = (i as u8, u.wout, u.wreg);
+                            n_latch += 1;
+                        } else {
+                            mem.load_lanes(addr, &mut abuf).with_context(|| {
+                                format!("{} lwinc at step {}", PeId::from_index(i), stats.steps)
+                            })?;
+                        }
+                        read_batch(u.a, i, nb, &rout, &regs, &addr_reg, &mut abuf);
+                        read_batch(u.b, i, nb, &rout, &regs, &addr_reg, &mut bbuf);
+                        let dst = &mut addr_vals[n_addr * nb..(n_addr + 1) * nb];
+                        for l in 0..nb {
+                            dst[l] = addr_reg[i * nb + l]
+                                .wrapping_add(abuf[l].wrapping_add(bbuf[l]));
+                        }
+                        addr_meta[n_addr] = i as u8;
+                        n_addr += 1;
+                    }
+                    UKind::SwInc => {
+                        let addr =
+                            uniform_addr(&addr_reg[i * nb..(i + 1) * nb], i, "swinc", stats.steps, dp)?;
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        let slot = store_meta.len();
+                        read_batch(u.a, i, nb, &rout, &regs, &addr_reg, &mut abuf);
+                        store_vals[slot * nb..(slot + 1) * nb].copy_from_slice(&abuf);
+                        store_meta.push((addr, slot, i));
+                        read_batch(u.b, i, nb, &rout, &regs, &addr_reg, &mut bbuf);
+                        let dst = &mut addr_vals[n_addr * nb..(n_addr + 1) * nb];
+                        for l in 0..nb {
+                            dst[l] = addr_reg[i * nb + l].wrapping_add(bbuf[l]);
+                        }
+                        addr_meta[n_addr] = i as u8;
+                        n_addr += 1;
+                    }
+                    UKind::SwAt => {
+                        read_batch(u.a, i, nb, &rout, &regs, &addr_reg, &mut abuf);
+                        read_batch(u.b, i, nb, &rout, &regs, &addr_reg, &mut bbuf);
+                        for l in 0..nb {
+                            abuf[l] = abuf[l].wrapping_add(bbuf[l]);
+                        }
+                        let addr = uniform_addr(&abuf, i, "swat", stats.steps, dp)?;
+                        bank_hits[mem.bank_of(addr.max(0) as usize % mem.len())] += 1;
+                        let slot = store_meta.len();
+                        store_vals[slot * nb..(slot + 1) * nb]
+                            .copy_from_slice(&rout[i * nb..(i + 1) * nb]);
+                        store_meta.push((addr, slot, i));
+                    }
+                    UKind::Br(f) => {
+                        read_batch(u.a, i, nb, &rout, &regs, &addr_reg, &mut abuf);
+                        read_batch(u.b, i, nb, &rout, &regs, &addr_reg, &mut bbuf);
+                        let decide = |a: i32, b: i32| match f {
+                            BrFn::Eq => a == b,
+                            BrFn::Ne => a != b,
+                            BrFn::Lt => a < b,
+                            BrFn::Ge => a >= b,
+                            BrFn::Always => true,
+                        };
+                        let taken = decide(abuf[0], bbuf[0]);
+                        for l in 1..nb {
+                            if decide(abuf[l], bbuf[l]) != taken {
+                                bail!(
+                                    "batch divergence: branch at {} resolves differently \
+                                     across lanes at step {} (program '{}'); batched \
+                                     execution requires lane-uniform control flow — rerun \
+                                     these inputs through the scalar executor",
+                                    PeId::from_index(i),
+                                    stats.steps,
+                                    dp.name()
+                                );
+                            }
+                        }
+                        if branch[col].is_some() {
+                            bail!(
+                                "two control-flow ops in column {} at step {} (program '{}')",
+                                col,
+                                stats.steps,
+                                dp.name()
+                            );
+                        }
+                        branch[col] = Some((taken, u.target as usize));
+                    }
+                }
+            }
+
+            // ---- apply stores (loads already saw pre-step memory) ----
+            store_meta.sort_unstable_by_key(|&(a, _, _)| a);
+            for w in store_meta.windows(2) {
+                if w[0].0 == w[1].0 {
+                    bail!(
+                        "store conflict: PEs {} and {} both store to word {} at step {} \
+                         (program '{}')",
+                        PeId::from_index(w[0].2),
+                        PeId::from_index(w[1].2),
+                        w[0].0,
+                        stats.steps,
+                        dp.name()
+                    );
+                }
+            }
+            for &(addr, slot, pe) in &store_meta {
+                mem.store_lanes(addr, &store_vals[slot * nb..(slot + 1) * nb]).with_context(
+                    || format!("{} store at step {}", PeId::from_index(pe), stats.steps),
+                )?;
+            }
+
+            // ---- cycle cost (identical to the scalar engine: the batch
+            // models B copies of the same hardware run) ----
+            let alu_part = if any_mul { self.cfg.mul_latency } else { self.cfg.alu_latency }
+                .max(self.cfg.alu_latency);
+            let port_part = max_port_ops as u64 * self.cfg.mem_latency;
+            let bank_part = if any_mem {
+                bank_hits
+                    .iter()
+                    .map(|&n| {
+                        if n == 0 {
+                            0
+                        } else {
+                            self.cfg.mem_latency + (n as u64 - 1) * self.cfg.bank_penalty
+                        }
+                    })
+                    .max()
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            let ideal = alu_part.max(if any_mem { self.cfg.mem_latency } else { 0 });
+            let step_cycles = alu_part.max(port_part).max(bank_part).max(1);
+            stats.cycles += step_cycles;
+            stats.contention_cycles += step_cycles - ideal.min(step_cycles);
+
+            // ---- writeback (latches, then addresses — scalar order) ----
+            for k in 0..n_latch {
+                let (pe, wout, wreg) = latch_meta[k];
+                let vals = &latch_vals[k * nb..(k + 1) * nb];
+                if wout {
+                    rout[pe as usize * nb..(pe as usize + 1) * nb].copy_from_slice(vals);
+                }
+                if wreg != NO_REG {
+                    let base = (pe as usize * N_REGS + wreg as usize) * nb;
+                    regs[base..base + nb].copy_from_slice(vals);
+                }
+            }
+            for k in 0..n_addr {
+                let pe = addr_meta[k] as usize;
+                addr_reg[pe * nb..(pe + 1) * nb]
+                    .copy_from_slice(&addr_vals[k * nb..(k + 1) * nb]);
+            }
+
+            // ---- PC update ----
+            for c in 0..COLS {
+                pcs[c] = match branch[c] {
+                    Some((true, t)) => t,
+                    _ => pcs[c] + 1,
+                };
+            }
+
+            stats.steps += 1;
+            if exit {
+                stats.exited = true;
+                break;
+            }
+        }
+
+        // Fold the per-slot visit counters into the op-mix histogram.
+        for c in 0..COLS {
+            for (p, &n) in visits[c].iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                for r in 0..ROWS {
+                    let i = r * COLS + c;
+                    stats.op_mix[i][dp.class_at(i, p)] += n;
+                }
+            }
+        }
+        let m1 = mem.stats();
+        stats.mem.loads = m1.loads - mem0.loads;
+        stats.mem.stores = m1.stores - mem0.stores;
+        Ok(stats)
+    }
+
     /// The pre-refactor enum-matching interpreter, kept verbatim as the
     /// differential baseline: the decoded engine must produce identical
     /// `RunStats` and memory effects on every program. Also the "before"
@@ -702,6 +1107,55 @@ impl Cgra {
         stats.mem.stores = m1.stores - mem_loads0.stores;
         Ok(stats)
     }
+}
+
+/// Batched operand read: fill `out` (one word per lane) from the
+/// structure-of-arrays state. Every case is a fill or a contiguous copy
+/// of `nb` words — the batched mirror of [`read_usrc`].
+#[inline(always)]
+fn read_batch(
+    s: USrc,
+    i: usize,
+    nb: usize,
+    rout: &[i32],
+    regs: &[i32],
+    addr: &[i32],
+    out: &mut [i32],
+) {
+    match s {
+        USrc::Zero => out.fill(0),
+        USrc::Imm(v) => out.fill(v),
+        USrc::Reg(r) => {
+            let base = (i * N_REGS + r as usize) * nb;
+            out.copy_from_slice(&regs[base..base + nb]);
+        }
+        USrc::Own => out.copy_from_slice(&rout[i * nb..(i + 1) * nb]),
+        USrc::Neigh(n) => out.copy_from_slice(&rout[n as usize * nb..(n as usize + 1) * nb]),
+        USrc::Addr => out.copy_from_slice(&addr[i * nb..(i + 1) * nb]),
+    }
+}
+
+/// Require a per-lane address vector to be lane-uniform (the batched
+/// lockstep contract) and return the shared value.
+#[inline(always)]
+fn uniform_addr(
+    vals: &[i32],
+    pe: usize,
+    what: &str,
+    step: u64,
+    dp: &DecodedProgram,
+) -> Result<i32> {
+    let v0 = vals[0];
+    if vals.iter().any(|&v| v != v0) {
+        bail!(
+            "batch divergence: {} {what} at step {step} computed a lane-varying address \
+             (program '{}'); batched execution requires lane-uniform addresses — rerun \
+             these inputs through the scalar executor",
+            PeId::from_index(pe),
+            dp.name()
+        );
+    }
+    Ok(v0)
 }
 
 #[inline(always)]
@@ -1149,5 +1603,181 @@ mod tests {
         assert_eq!(steps[1].1.op, Op::Exit);
         // Idle PEs trace as nop.
         assert_eq!(steps[0].0, 0);
+    }
+
+    /// Lane-varying memory images for the batched differential tests.
+    fn poke_batch_lane_images(bm: &mut BatchMemory, scalars: &mut [Memory]) {
+        for (lane, sm) in scalars.iter_mut().enumerate() {
+            for a in 0..32 {
+                let v = (a * a) as i32 - 17 + lane as i32 * 1000;
+                bm.poke_lane(a, lane, v);
+                sm.poke(a, v);
+            }
+        }
+    }
+
+    /// The batched executor is lane-for-lane identical to the scalar
+    /// decoded engine: same per-inference `RunStats` (steps, cycles,
+    /// contention, op mix, memory counts) and each lane's memory image
+    /// matches a scalar run over that lane's data — across streaming
+    /// loops, torus shifts and multiplies, at B = 1 (degeneracy) and at
+    /// a partial lane count below the batch capacity.
+    #[test]
+    fn batched_matches_scalar_per_lane() {
+        let mut programs: Vec<Program> = Vec::new();
+
+        let mut p1 = Program::new("batch-stream");
+        for col in 0..COLS {
+            let q = p1.pe_mut(PeId::new(0, col));
+            q.push(Instr::new(Op::SetAddr, Src::Imm(col as i32 * 8), Src::Zero, Dst::None));
+            q.push(Instr::mov(Dst::Reg(0), Src::Imm(4)));
+            q.push(Instr::new(Op::LwInc, Src::Imm(1), Src::Zero, Dst::Out));
+            q.push(Instr::new(Op::Sub, Src::Reg(0), Src::Imm(1), Dst::Reg(0)));
+            q.push(Instr::branch(Op::Bne, Src::Reg(0), Src::Zero, 2));
+            q.push(Instr::new(Op::SwAt, Src::Imm(64 + col as i32), Src::Zero, Dst::None));
+            if col == 3 {
+                q.push(Instr::exit());
+            }
+        }
+        programs.push(p1);
+
+        let mut p2 = Program::new("batch-torus-mul");
+        for col in 0..COLS {
+            let q = p2.pe_mut(PeId::new(1, col));
+            q.push(Instr::new(Op::Lw, Src::Imm(col as i32), Src::Zero, Dst::Out));
+            q.push(Instr::new(Op::Mul, Src::Own, Src::Imm(3), Dst::Out));
+            for _ in 0..2 {
+                q.push(Instr::mov(Dst::Out, Src::Neigh(Dir::East)));
+            }
+            q.push(Instr::new(Op::SwAt, Src::Imm(80 + col as i32), Src::Zero, Dst::None));
+            if col == 0 {
+                q.push(Instr::exit());
+            }
+        }
+        programs.push(p2);
+
+        for cfg in [CgraConfig::functional(), CgraConfig::default()] {
+            let c = Cgra::new(cfg).unwrap();
+            for prog in &programs {
+                let dp = super::decoded::decode(prog);
+                // nb = 1 (degeneracy), nb = 3 at capacity, nb = 3 of 5
+                // (partial — tail lanes must stay untouched).
+                for (nb, cap) in [(1usize, 1usize), (3, 3), (3, 5)] {
+                    let mut bm = BatchMemory::new(1024, 4, cap);
+                    let mut scalars: Vec<Memory> = (0..nb).map(|_| mem()).collect();
+                    poke_batch_lane_images(&mut bm, &mut scalars);
+                    let sb = c.run_decoded_batch(&dp, &mut bm, nb).unwrap();
+                    for (lane, sm) in scalars.iter_mut().enumerate() {
+                        let ss = c.run_decoded(&dp, sm).unwrap();
+                        assert_eq!(
+                            ss, sb,
+                            "per-inference stats diverge on '{}' lane {lane}",
+                            prog.name
+                        );
+                        let mut got = vec![0i32; 128];
+                        bm.peek_slice_lane(0, lane, &mut got);
+                        assert_eq!(
+                            &got[..],
+                            sm.peek_slice(0, 128),
+                            "memory diverges on '{}' lane {lane}",
+                            prog.name
+                        );
+                    }
+                    if cap > nb {
+                        // Inactive tail lanes: still all-zero.
+                        let mut tail = vec![0i32; 128];
+                        bm.peek_slice_lane(0, cap - 1, &mut tail);
+                        assert!(tail.iter().all(|&v| v == 0), "tail lane written");
+                    }
+                }
+            }
+        }
+    }
+
+    /// A branch whose outcome depends on loaded (lane-varying) data
+    /// breaks the lockstep contract and must abort with a divergence
+    /// error, not silently follow one lane.
+    #[test]
+    fn lane_divergent_branch_rejected() {
+        let mut prog = Program::new("div-branch");
+        let p = prog.pe_mut(PeId::new(0, 0));
+        p.push(Instr::new(Op::Lw, Src::Imm(0), Src::Zero, Dst::Reg(0)));
+        p.push(Instr::branch(Op::Bne, Src::Reg(0), Src::Zero, 0));
+        p.push(Instr::exit());
+        let dp = super::decoded::decode(&prog);
+        let mut bm = BatchMemory::new(64, 4, 2);
+        bm.poke_lane(0, 0, 0);
+        bm.poke_lane(0, 1, 1);
+        let err = cgra().run_decoded_batch(&dp, &mut bm, 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("batch divergence"), "{msg}");
+        assert!(msg.contains("lane-uniform control flow"), "{msg}");
+    }
+
+    /// A memory address computed from loaded (lane-varying) data must
+    /// abort with a divergence error naming the PE and op.
+    #[test]
+    fn lane_divergent_address_rejected() {
+        let mut prog = Program::new("div-addr");
+        let p = prog.pe_mut(PeId::new(0, 0));
+        p.push(Instr::new(Op::Lw, Src::Imm(0), Src::Zero, Dst::Reg(0)));
+        p.push(Instr::new(Op::Lw, Src::Reg(0), Src::Zero, Dst::Out));
+        p.push(Instr::exit());
+        let dp = super::decoded::decode(&prog);
+        let mut bm = BatchMemory::new(64, 4, 2);
+        bm.poke_lane(0, 0, 3);
+        bm.poke_lane(0, 1, 4);
+        let err = cgra().run_decoded_batch(&dp, &mut bm, 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("lane-varying address"), "{msg}");
+        assert!(msg.contains("lw"), "{msg}");
+    }
+
+    /// Uniform error paths (watchdog, double branch, store conflict,
+    /// out-of-bounds) report the same text as the scalar engines.
+    #[test]
+    fn batched_error_paths_match_scalar() {
+        let mut dbl = Program::new("dbl");
+        dbl.pe_mut(PeId::new(0, 0)).push(Instr::jump(0));
+        dbl.pe_mut(PeId::new(1, 0)).push(Instr::jump(0));
+        let mut conflict = Program::new("conflict");
+        for col in [0, 1] {
+            let p = conflict.pe_mut(PeId::new(0, col));
+            p.push(Instr::new(Op::SetAddr, Src::Imm(9), Src::Zero, Dst::None));
+            p.push(Instr::new(Op::SwInc, Src::Imm(1), Src::Zero, Dst::None));
+        }
+        let mut oob = Program::new("oob");
+        oob.pe_mut(PeId::new(2, 2)).push(Instr::new(
+            Op::Lw,
+            Src::Imm(1 << 20),
+            Src::Zero,
+            Dst::Out,
+        ));
+        let mut spin = Program::new("spin");
+        spin.pe_mut(PeId::new(0, 0)).push(Instr::jump(0));
+
+        let mut cfg = CgraConfig::functional();
+        cfg.max_steps = 100;
+        let c = Cgra::new(cfg).unwrap();
+        for prog in [&dbl, &conflict, &oob, &spin] {
+            let e_ref = format!("{:#}", c.run_reference(prog, &mut mem()).unwrap_err());
+            let dp = super::decoded::decode(prog);
+            let mut bm = BatchMemory::new(1024, 4, 2);
+            let e_bat = format!("{:#}", c.run_decoded_batch(&dp, &mut bm, 2).unwrap_err());
+            assert_eq!(e_ref, e_bat, "error text diverges on '{}'", prog.name);
+        }
+    }
+
+    /// Lane counts outside `1..=capacity` are rejected up front.
+    #[test]
+    fn batch_lane_count_validated() {
+        let mut prog = Program::new("one");
+        prog.pe_mut(PeId::new(0, 0)).push(Instr::exit());
+        let dp = super::decoded::decode(&prog);
+        let c = cgra();
+        let mut bm = BatchMemory::new(64, 4, 2);
+        assert!(c.run_decoded_batch(&dp, &mut bm, 0).is_err());
+        assert!(c.run_decoded_batch(&dp, &mut bm, 3).is_err());
+        assert!(c.run_decoded_batch(&dp, &mut bm, 2).is_ok());
     }
 }

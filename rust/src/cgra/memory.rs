@@ -114,6 +114,145 @@ impl Memory {
     }
 }
 
+/// `B` independent memory images laid out structure-of-arrays for the
+/// batched executor (DESIGN.md §9).
+///
+/// The layout is **word-major**: the `B` copies of word address `a`
+/// live contiguously at `backing[a * batch_capacity ..]`, one word per
+/// lane. A batched load or store of one address therefore touches one
+/// contiguous slice — the memcpy the batched executor's inner loop is
+/// built around — instead of `B` strided words.
+///
+/// Access accounting is **per lane**: one batched load counts as *one*
+/// load, because [`MemStats`] feeds the per-inference energy model and
+/// every lane models the same single hardware access. A batched run's
+/// `RunStats` is therefore bit-identical to one scalar run's.
+#[derive(Clone, Debug)]
+pub struct BatchMemory {
+    backing: Vec<i32>,
+    words: usize,
+    batch_cap: usize,
+    n_banks: usize,
+    stats: MemStats,
+}
+
+impl BatchMemory {
+    /// Zero-initialized batch of `batch_cap` images, each `words` 32-bit
+    /// words with `n_banks` word-interleaved banks.
+    pub fn new(words: usize, n_banks: usize, batch_cap: usize) -> Self {
+        assert!(n_banks >= 1);
+        assert!(batch_cap >= 1);
+        BatchMemory {
+            backing: vec![0; words * batch_cap],
+            words,
+            batch_cap,
+            n_banks,
+            stats: MemStats::default(),
+        }
+    }
+
+    /// Size of **one** lane's image in words (matches [`Memory::len`]).
+    pub fn len(&self) -> usize {
+        self.words
+    }
+
+    /// True if zero-sized (never for valid configs).
+    pub fn is_empty(&self) -> bool {
+        self.words == 0
+    }
+
+    /// Number of lanes this batch was allocated for. Runs may use any
+    /// `1..=batch_capacity()` lanes (the ragged final chunk of a stream).
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_cap
+    }
+
+    /// Bank index serving word address `addr` — same word-interleaving
+    /// as [`Memory::bank_of`]: lanes mirror one hardware image, so
+    /// banking is per-address, not per-backing-element.
+    pub fn bank_of(&self, addr: usize) -> usize {
+        addr % self.n_banks
+    }
+
+    /// Load word `addr` of lanes `0..out.len()` into `out` (counted as
+    /// **one** load — per-lane semantics, see the type docs).
+    pub fn load_lanes(&mut self, addr: i32, out: &mut [i32]) -> Result<()> {
+        let a = self.check(addr, "load")?;
+        debug_assert!(out.len() <= self.batch_cap);
+        self.stats.loads += 1;
+        out.copy_from_slice(&self.backing[a * self.batch_cap..a * self.batch_cap + out.len()]);
+        Ok(())
+    }
+
+    /// Store `values[l]` to word `addr` of lane `l` for lanes
+    /// `0..values.len()` (counted as **one** store).
+    pub fn store_lanes(&mut self, addr: i32, values: &[i32]) -> Result<()> {
+        let a = self.check(addr, "store")?;
+        debug_assert!(values.len() <= self.batch_cap);
+        self.stats.stores += 1;
+        self.backing[a * self.batch_cap..a * self.batch_cap + values.len()]
+            .copy_from_slice(values);
+        Ok(())
+    }
+
+    /// Uncounted read of word `addr` in lane `lane` (host/debug access).
+    pub fn peek_lane(&self, addr: usize, lane: usize) -> i32 {
+        self.backing[addr * self.batch_cap + lane]
+    }
+
+    /// Uncounted strided gather: words `addr..addr+out.len()` of lane
+    /// `lane` into `out` (the host reading one lane's output back).
+    pub fn peek_slice_lane(&self, addr: usize, lane: usize, out: &mut [i32]) {
+        for (k, dst) in out.iter_mut().enumerate() {
+            *dst = self.backing[(addr + k) * self.batch_cap + lane];
+        }
+    }
+
+    /// Uncounted write of word `addr` in lane `lane` (host initialization).
+    pub fn poke_lane(&mut self, addr: usize, lane: usize, value: i32) {
+        self.backing[addr * self.batch_cap + lane] = value;
+    }
+
+    /// Uncounted strided scatter: `values` into words
+    /// `addr..addr+values.len()` of lane `lane` (per-lane inputs).
+    pub fn poke_slice_lane(&mut self, addr: usize, lane: usize, values: &[i32]) {
+        for (k, &v) in values.iter().enumerate() {
+            self.backing[(addr + k) * self.batch_cap + lane] = v;
+        }
+    }
+
+    /// Uncounted broadcast: `values` into words `addr..addr+values.len()`
+    /// of **every** lane `0..lanes` (weights and other shared constants
+    /// — poked once, visible to the whole batch).
+    pub fn poke_broadcast(&mut self, addr: usize, values: &[i32], lanes: usize) {
+        debug_assert!(lanes <= self.batch_cap);
+        for (k, &v) in values.iter().enumerate() {
+            let base = (addr + k) * self.batch_cap;
+            self.backing[base..base + lanes].iter_mut().for_each(|w| *w = v);
+        }
+    }
+
+    /// Access totals so far (per-lane semantics).
+    pub fn stats(&self) -> MemStats {
+        self.stats
+    }
+
+    /// Reset the access counters (e.g. between launches of one batch).
+    pub fn reset_stats(&mut self) {
+        self.stats = MemStats::default();
+    }
+
+    fn check(&self, addr: i32, what: &str) -> Result<usize> {
+        if addr < 0 || addr as usize >= self.words {
+            bail!(
+                "CGRA {what} out of bounds: word address {addr} (memory is {} words)",
+                self.words
+            );
+        }
+        Ok(addr as usize)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +298,63 @@ mod tests {
         m.store(0, 1).unwrap();
         m.reset_stats();
         assert_eq!(m.stats().total(), 0);
+    }
+
+    #[test]
+    fn batch_lanes_are_independent_images() {
+        let mut m = BatchMemory::new(16, 4, 3);
+        m.poke_lane(5, 0, 10);
+        m.poke_lane(5, 1, 20);
+        m.poke_lane(5, 2, 30);
+        let mut out = [0i32; 3];
+        m.load_lanes(5, &mut out).unwrap();
+        assert_eq!(out, [10, 20, 30]);
+        m.store_lanes(6, &[-1, -2, -3]).unwrap();
+        assert_eq!(m.peek_lane(6, 1), -2);
+        // One batched load + one batched store = one of each, per-lane.
+        assert_eq!(m.stats(), MemStats { loads: 1, stores: 1 });
+    }
+
+    #[test]
+    fn batch_scatter_gather_and_broadcast() {
+        let mut m = BatchMemory::new(16, 4, 4);
+        m.poke_slice_lane(2, 3, &[7, 8, 9]);
+        let mut got = [0i32; 3];
+        m.peek_slice_lane(2, 3, &mut got);
+        assert_eq!(got, [7, 8, 9]);
+        assert_eq!(m.peek_lane(2, 0), 0, "other lanes untouched");
+
+        m.poke_broadcast(10, &[41, 42], 4);
+        for lane in 0..4 {
+            assert_eq!(m.peek_lane(10, lane), 41);
+            assert_eq!(m.peek_lane(11, lane), 42);
+        }
+        assert_eq!(m.stats().total(), 0, "pokes/peeks are uncounted");
+    }
+
+    #[test]
+    fn batch_partial_lane_runs_leave_tail_lanes_alone() {
+        let mut m = BatchMemory::new(8, 2, 4);
+        m.poke_lane(0, 3, 99);
+        m.store_lanes(0, &[1, 2]).unwrap(); // nb = 2 of capacity 4
+        assert_eq!(m.peek_lane(0, 0), 1);
+        assert_eq!(m.peek_lane(0, 1), 2);
+        assert_eq!(m.peek_lane(0, 3), 99, "inactive lanes untouched");
+    }
+
+    #[test]
+    fn batch_bounds_match_scalar_message() {
+        let mut m = BatchMemory::new(8, 4, 2);
+        let mut out = [0i32; 2];
+        let e = m.load_lanes(8, &mut out).unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "CGRA load out of bounds: word address 8 (memory is 8 words)"
+        );
+        assert!(m.store_lanes(-1, &[0, 0]).is_err());
+        assert!(m.load_lanes(7, &mut out).is_ok());
+        assert_eq!(m.len(), 8);
+        assert_eq!(m.batch_capacity(), 2);
+        assert_eq!(m.bank_of(5), 1);
     }
 }

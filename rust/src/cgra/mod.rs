@@ -9,6 +9,9 @@
 //! [`decode`] lowers a program once into a dense µop form, and the
 //! executor replays it; [`decode_cached`] memoizes decodes process-wide
 //! for the figure drivers and benches that relaunch identical programs.
+//! [`Cgra::run_decoded_batch`] replays one decoded program across a
+//! [`BatchMemory`] of independent lane images in a single shared µop
+//! walk (DESIGN.md §9) — per-inference stats stay bit-identical.
 
 mod config;
 mod decoded;
@@ -22,5 +25,5 @@ pub use decoded::{
     DecodeCacheStats, DecodedProgram, DECODE_CACHE_CAPACITY,
 };
 pub use exec::{column_pes, Cgra, StepTrace};
-pub use memory::{MemStats, Memory};
+pub use memory::{BatchMemory, MemStats, Memory};
 pub use stats::{OpClass, RunStats};

@@ -26,6 +26,20 @@
 //! by construction — same launch schedules, same closed-form glue, same
 //! energy integration — so a compiled artifact changes the simulator's
 //! serving throughput (host wall-clock), never the paper's numbers.
+//!
+//! For bulk traffic, [`CompiledNet::run_batch`] runs up to `B`
+//! independent inferences through **one shared µop program walk** per
+//! launch (DESIGN.md §9): allocate a [`BatchCtx`] once via
+//! [`CompiledNet::new_batch_ctx`], hand it a chunk of inputs, and read
+//! the per-lane outputs back from [`BatchCtx::outputs`]. Batched runs
+//! keep the same warm-path counter contract as scalar runs, and their
+//! modeled per-inference cycles/energy are bit-identical — batching
+//! amortizes the *simulator's* replay overhead, never the hardware
+//! model.
+
+// Every public item here is API surface for embedders; the CI docs job
+// (`RUSTDOCFLAGS: -D warnings`) turns a missing doc into a failure.
+#![warn(missing_docs)]
 
 use anyhow::{bail, Context, Result};
 
@@ -34,7 +48,7 @@ use crate::conv::{GenConvShape, TensorChw, Weights};
 use crate::coordinator::network::ConvNet;
 use crate::energy::EnergyModel;
 use crate::kernels::{
-    self, CompiledKernel, ConvOutcome, KernelScratch, Mapping, ScratchNeed,
+    self, BatchKernelScratch, CompiledKernel, ConvOutcome, KernelScratch, Mapping, ScratchNeed,
 };
 use crate::metrics::MappingReport;
 use crate::nn::graph::{golden_layer, Layer, Net};
@@ -179,7 +193,9 @@ pub struct LayerInfo<'a> {
 
 /// A network compiled into a reusable inference artifact. Build with
 /// [`Engine::compile`]; run with [`CompiledNet::run`] /
-/// [`CompiledNet::run_verified`] against a [`NetCtx`].
+/// [`CompiledNet::run_verified`] against a [`NetCtx`], or batch
+/// independent inferences with [`CompiledNet::run_batch`] against a
+/// [`BatchCtx`].
 pub struct CompiledNet {
     /// The source graph (kept for golden verification and summaries).
     net: Net,
@@ -216,6 +232,43 @@ impl NetCtx {
     /// them; the serving hot path skips the row construction).
     pub fn collect_reports(&mut self, on: bool) {
         self.collect_reports = on;
+    }
+}
+
+/// The mutable side of **batched** inference (DESIGN.md §9): the same
+/// arena as [`NetCtx`], widened to `B` lanes. Activation ping-pong and
+/// staging buffers are lane-major flat arrays (lane `l`'s image lives
+/// at `l * lane_stride`, one stride per buffer family), and the CGRA
+/// memory image is a structure-of-arrays [`BatchKernelScratch`] so one
+/// shared µop walk serves every lane.
+///
+/// Allocated once by [`CompiledNet::new_batch_ctx`]; every warm
+/// [`CompiledNet::run_batch`] reuses it allocation-free — buffers are
+/// sized to full capacity up front, so even the first batched run
+/// never grows them. One context serves one thread; pool workers each
+/// build their own and share the `Arc<CompiledNet>`.
+pub struct BatchCtx {
+    batch: usize,
+    served: usize,
+    bufs: [Vec<i32>; 2],
+    stage: Vec<i32>,
+    full: Vec<i32>,
+    scratch: BatchKernelScratch,
+    outs: Vec<TensorChw>,
+}
+
+impl BatchCtx {
+    /// The lane capacity this context was allocated for. Runs may
+    /// present fewer inputs (a ragged final chunk); never more.
+    pub fn batch_capacity(&self) -> usize {
+        self.batch
+    }
+
+    /// The final activations of the most recent run, one tensor per
+    /// input lane, in input order. Empty before the first run; after a
+    /// ragged run only the served lanes appear.
+    pub fn outputs(&self) -> &[TensorChw] {
+        &self.outs[..self.served]
     }
 }
 
@@ -654,6 +707,317 @@ impl CompiledNet {
         out.c = oc;
         out.h = oh;
         out.w = ow;
+
+        Ok(InferRun {
+            layers,
+            total_cycles,
+            total_energy_uj: total_energy,
+            relu_cycles: relu_total,
+            exact: verify.then_some(all_exact),
+        })
+    }
+
+    /// Allocate a batched execution context with capacity for `batch`
+    /// concurrent inference lanes. Like [`CompiledNet::new_ctx`], this
+    /// is the only allocating step of the warm batched path — do it
+    /// once per worker. Every buffer is sized to full capacity here, so
+    /// warm [`CompiledNet::run_batch`] calls (full or ragged) never
+    /// grow it.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `batch` is zero.
+    pub fn new_batch_ctx(&self, batch: usize) -> BatchCtx {
+        assert!(batch >= 1, "batch capacity must be at least 1");
+        kernels::common::note_arena_alloc();
+        let (c, h, w) = self.net.input_dims;
+        BatchCtx {
+            batch,
+            served: 0,
+            bufs: [
+                vec![0; batch * self.arena.act_elems],
+                vec![0; batch * self.arena.act_elems],
+            ],
+            stage: vec![0; batch * self.arena.stage_elems],
+            full: vec![0; batch * self.arena.full_elems],
+            scratch: BatchKernelScratch::new(self.cgra.config(), self.arena.scratch, batch),
+            outs: (0..batch)
+                .map(|_| TensorChw {
+                    c,
+                    h,
+                    w,
+                    data: Vec::with_capacity(self.arena.act_elems),
+                })
+                .collect(),
+        }
+    }
+
+    /// Run up to `B` independent inferences through **one shared µop
+    /// program walk** per launch (DESIGN.md §9). Accepts between 1 and
+    /// [`BatchCtx::batch_capacity`] inputs — a short slice is the
+    /// ragged final chunk of a stream and is charged/validated exactly
+    /// like a full one. Per-lane outputs land in [`BatchCtx::outputs`]
+    /// in input order.
+    ///
+    /// The returned [`InferRun`] is **per inference**, not per batch:
+    /// every lane replays the identical launch schedule against the
+    /// identical timing model, so modeled cycles and energy are
+    /// bit-equal to a scalar [`CompiledNet::run`] of any one input
+    /// (`tests/batched.rs` pins this). Batching amortizes the
+    /// *simulator's* host-side replay work across lanes; it never
+    /// changes the paper's modeled numbers.
+    ///
+    /// Per-layer [`MappingReport`]s are not collected on this path (it
+    /// is the bulk-serving hot path); use the scalar [`NetCtx`] with
+    /// [`NetCtx::collect_reports`] for report rows.
+    pub fn run_batch(&self, ctx: &mut BatchCtx, inputs: &[TensorChw]) -> Result<InferRun> {
+        self.run_batch_inner(ctx, inputs, false)
+    }
+
+    /// [`CompiledNet::run_batch`] with the opt-in golden debug check:
+    /// every layer's output is compared element-exactly against the
+    /// generalized golden model **per lane**. This pays `B` golden
+    /// chains on the CPU and allocates — it is the debug mode, not the
+    /// serving path.
+    pub fn run_batch_verified(
+        &self,
+        ctx: &mut BatchCtx,
+        inputs: &[TensorChw],
+    ) -> Result<InferRun> {
+        self.run_batch_inner(ctx, inputs, true)
+    }
+
+    fn run_batch_inner(
+        &self,
+        ctx: &mut BatchCtx,
+        inputs: &[TensorChw],
+        verify: bool,
+    ) -> Result<InferRun> {
+        let nb = inputs.len();
+        if nb == 0 || nb > ctx.batch {
+            bail!(
+                "run_batch got {} inputs for a context of capacity {} (want 1..={})",
+                nb,
+                ctx.batch,
+                ctx.batch
+            );
+        }
+        let (c, h, w) = self.net.input_dims;
+        for (l, input) in inputs.iter().enumerate() {
+            if (input.c, input.h, input.w) != (c, h, w) {
+                bail!(
+                    "network '{}' expects a {c}x{h}x{w} input, got {}x{}x{} (batch lane {l})",
+                    self.net.name,
+                    input.c,
+                    input.h,
+                    input.w
+                );
+            }
+        }
+        let model = self.model;
+        // Lane strides are the *capacity* arena sizes, fixed at context
+        // creation — a ragged chunk reuses the same layout and simply
+        // leaves the tail lanes untouched.
+        let a_str = self.arena.act_elems;
+        let s_str = self.arena.stage_elems;
+        let f_str = self.arena.full_elems;
+        let BatchCtx { batch: _, served, bufs, stage, full, scratch, outs } = ctx;
+        *served = 0;
+        let [buf_a, buf_b] = bufs;
+        let (mut cur, mut nxt) = (&mut buf_a[..], &mut buf_b[..]);
+        for (l, input) in inputs.iter().enumerate() {
+            cur[l * a_str..l * a_str + input.data.len()].copy_from_slice(&input.data);
+        }
+
+        let mut golden_x: Option<Vec<TensorChw>> = verify.then(|| inputs.to_vec());
+        let mut layers = Vec::with_capacity(self.layers.len());
+        let mut total_cycles = 0u64;
+        let mut total_energy = 0.0f64;
+        let mut relu_total = 0u64;
+        let mut all_exact = true;
+
+        for (index, cl) in self.layers.iter().enumerate() {
+            let lctx =
+                || format!("layer {index} ({}) of '{}'", cl.kind, self.net.name);
+            let out_elems = cl.out_dims.0 * cl.out_dims.1 * cl.out_dims.2;
+            let in_elems = cl.in_dims.0 * cl.in_dims.1 * cl.in_dims.2;
+            let mut conv_cycles = 0u64;
+            let mut conv_energy = 0.0f64;
+            let mut launches = 0u64;
+
+            match &cl.exec {
+                LayerExec::MaxPool { size, stride } => {
+                    for l in 0..nb {
+                        pool_into(
+                            &cur[l * a_str..l * a_str + in_elems],
+                            cl.in_dims,
+                            *size,
+                            *stride,
+                            true,
+                            &mut nxt[l * a_str..l * a_str + out_elems],
+                            cl.out_dims,
+                        );
+                    }
+                }
+                LayerExec::AvgPool { size, stride } => {
+                    for l in 0..nb {
+                        pool_into(
+                            &cur[l * a_str..l * a_str + in_elems],
+                            cl.in_dims,
+                            *size,
+                            *stride,
+                            false,
+                            &mut nxt[l * a_str..l * a_str + out_elems],
+                            cl.out_dims,
+                        );
+                    }
+                }
+                LayerExec::Conv { pad, padded_dims, full_dims, stride, kernels } => {
+                    // 1. Host padding, per lane, into the staging
+                    //    buffer. The kernel then reads a strided view:
+                    //    lane images at `in_stride` apart.
+                    let (conv_in, in_stride): (&[i32], usize) = if *pad > 0 {
+                        let (pc, ph, pw) = *padded_dims;
+                        let padded_elems = pc * ph * pw;
+                        for l in 0..nb {
+                            pad_into(
+                                &cur[l * a_str..l * a_str + in_elems],
+                                cl.in_dims,
+                                *pad,
+                                &mut stage[l * s_str..l * s_str + padded_elems],
+                            );
+                        }
+                        (&stage[..], s_str)
+                    } else {
+                        (&cur[..], a_str)
+                    };
+                    // 2. The prebuilt kernel replays every lane through
+                    //    one shared program walk, per group, into the
+                    //    full stride-1 output.
+                    let (fk, fh, fw) = *full_dims;
+                    let full_elems = fk * fh * fw;
+                    let (dst, dst_stride): (&mut [i32], usize) = if *stride > 1 {
+                        (&mut full[..], f_str)
+                    } else {
+                        (&mut nxt[..], a_str)
+                    };
+                    debug_assert!(dst_stride >= full_elems);
+                    if kernels.len() == 1 {
+                        let outcome = kernels[0]
+                            .run_batch_into(
+                                &self.cgra,
+                                nb,
+                                conv_in,
+                                in_stride,
+                                scratch,
+                                dst,
+                                dst_stride,
+                            )
+                            .with_context(lctx)?;
+                        conv_cycles += outcome.latency.total_cycles();
+                        conv_energy += outcome_energy(&outcome, &model);
+                        launches += outcome.latency.launches;
+                    } else {
+                        // A group's input channels are contiguous
+                        // *within each lane's padded image*, so the
+                        // group view is just an offset into the same
+                        // strided layout — no per-group staging copy.
+                        let sub = kernels[0].shape();
+                        let cg = sub.c;
+                        let per_out = sub.output_elems();
+                        let (_, ph, pw) = *padded_dims;
+                        for (g, kernel) in kernels.iter().enumerate() {
+                            let lo = g * cg * ph * pw;
+                            let outcome = kernel
+                                .run_batch_into(
+                                    &self.cgra,
+                                    nb,
+                                    &conv_in[lo..],
+                                    in_stride,
+                                    scratch,
+                                    &mut dst[g * per_out..],
+                                    dst_stride,
+                                )
+                                .with_context(|| format!("group {g}"))
+                                .with_context(lctx)?;
+                            conv_cycles += outcome.latency.total_cycles();
+                            conv_energy += outcome_energy(&outcome, &model);
+                            launches += outcome.latency.launches;
+                        }
+                    }
+                    // 3. Decimate each lane's full output down to the
+                    //    layer output.
+                    if *stride > 1 {
+                        for l in 0..nb {
+                            decimate_into(
+                                &full[l * f_str..l * f_str + full_elems],
+                                *full_dims,
+                                *stride,
+                                &mut nxt[l * a_str..l * a_str + out_elems],
+                                cl.out_dims,
+                            );
+                        }
+                    }
+                }
+            }
+
+            // 4. Fused ReLU in place, per lane, charged like the
+            //    engine's (once — the run is per-inference).
+            let (mut relu_cycles, mut relu_uj) = (0u64, 0.0f64);
+            if cl.relu {
+                for l in 0..nb {
+                    for v in nxt[l * a_str..l * a_str + out_elems].iter_mut() {
+                        *v = (*v).max(0);
+                    }
+                }
+                let (rc, re) = relu_cost(&model, cl.relu_elems);
+                relu_cycles = rc;
+                relu_uj = re;
+            }
+
+            // 5. Opt-in golden debug check, per lane.
+            let exact = match &mut golden_x {
+                None => None,
+                Some(gxs) => {
+                    let mut ok = true;
+                    for (l, gx) in gxs.iter_mut().enumerate() {
+                        *gx = golden_layer(&self.net.layers[index], gx)?;
+                        ok &= gx.data[..] == nxt[l * a_str..l * a_str + out_elems];
+                    }
+                    all_exact &= ok;
+                    Some(ok)
+                }
+            };
+
+            let cycles = conv_cycles + cl.host.cycles + relu_cycles;
+            let energy_uj = conv_energy + host_energy_uj(&model, cl.host) + relu_uj;
+            total_cycles += cycles;
+            total_energy += energy_uj;
+            relu_total += relu_cycles;
+            layers.push(LayerRun {
+                cycles,
+                conv_cycles,
+                host_cycles: cl.host.cycles + relu_cycles,
+                relu_cycles,
+                energy_uj,
+                launches,
+                mapping: cl.mapping,
+                report: None,
+                exact,
+            });
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+
+        let (oc, oh, ow) = self.layers.last().map(|l| l.out_dims).unwrap_or((c, h, w));
+        let out_elems = oc * oh * ow;
+        for (l, t) in outs.iter_mut().take(nb).enumerate() {
+            ensure_len(&mut t.data, out_elems);
+            t.data.copy_from_slice(&cur[l * a_str..l * a_str + out_elems]);
+            t.c = oc;
+            t.h = oh;
+            t.w = ow;
+        }
+        *served = nb;
 
         Ok(InferRun {
             layers,

@@ -42,14 +42,19 @@
 //! [`CompiledNet::run`] does zero compile-side work (see
 //! [`compiled`]). `run_network` and the `nn` executor route through
 //! the same compiled steps, so the crate has exactly one lowering
-//! path.
+//! path. For bulk traffic, [`CompiledNet::run_batch`] replays one
+//! shared µop walk across up to `B` independent inference lanes in a
+//! [`BatchCtx`] (DESIGN.md §9) — same modeled numbers per inference,
+//! a fraction of the host replay cost.
 
 pub mod auto;
 pub mod compiled;
 mod request;
 
 pub use auto::{choose, choose_planned, AutoDecision};
-pub use compiled::{CompiledNet, InferRun, LayerInfo, LayerRun, NetCtx, RunCounters};
+pub use compiled::{
+    BatchCtx, CompiledNet, InferRun, LayerInfo, LayerRun, NetCtx, RunCounters,
+};
 pub use request::{
     ConvRequest, ConvResult, PlannedResult, RequestData, DEFAULT_INPUT_MAG, DEFAULT_WEIGHT_MAG,
 };

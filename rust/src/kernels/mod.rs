@@ -21,7 +21,7 @@ pub use common::{
     arena_allocs, program_builds, ConvOutcome, HostCostModel, LatencyBreakdown, Mapping,
     MemLayout,
 };
-pub use prebuilt::{CompiledKernel, KernelScratch, ScratchNeed};
+pub use prebuilt::{BatchKernelScratch, CompiledKernel, KernelScratch, ScratchNeed};
 
 use anyhow::Result;
 

@@ -41,8 +41,8 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use crate::cgra::{
-    decode, decode_cached, Cgra, CgraConfig, DecodedProgram, Memory, MemStats, RunStats,
-    DECODE_CACHE_CAPACITY,
+    decode, decode_cached, BatchMemory, Cgra, CgraConfig, DecodedProgram, Memory, MemStats,
+    RunStats, DECODE_CACHE_CAPACITY,
 };
 use crate::conv::{im2col_patch, patch_len, ConvShape, TensorChw, TensorHwc, Weights};
 use crate::cpu_ref::CpuModel;
@@ -168,6 +168,63 @@ impl KernelScratch {
     }
 
     /// Reshape the patch staging buffer.
+    fn patch_for(&mut self, elems: usize) {
+        if elems > self.patch.capacity() {
+            super::common::note_arena_alloc();
+        }
+        self.patch.resize(elems, 0);
+    }
+}
+
+/// The batched counterpart of [`KernelScratch`]: one structure-of-arrays
+/// [`BatchMemory`] image plus per-lane HWC staging tensors, shared by
+/// every [`CompiledKernel::run_batch_into`] replay of one execution
+/// context. Allocated once per `(config, batch, need)` — counted by
+/// [`super::common::arena_allocs`] — and reused across layers and
+/// batches; runs may use any `1..=batch_capacity()` lanes.
+pub struct BatchKernelScratch {
+    /// The batched CGRA memory image (layers overwrite each other's
+    /// regions; every run re-pokes everything it reads, per lane).
+    pub mem: BatchMemory,
+    hwc: Vec<TensorHwc>,
+    patch: Vec<i32>,
+}
+
+impl BatchKernelScratch {
+    /// Allocate scratch for `batch` lanes under a configuration and the
+    /// max [`ScratchNeed`] over the kernels that will share it.
+    pub fn new(cfg: &CgraConfig, need: ScratchNeed, batch: usize) -> BatchKernelScratch {
+        assert!(batch >= 1);
+        super::common::note_arena_alloc();
+        BatchKernelScratch {
+            mem: BatchMemory::new(cfg.mem_words, cfg.n_banks, batch),
+            hwc: (0..batch)
+                .map(|_| TensorHwc { h: 0, w: 0, c: 0, data: Vec::with_capacity(need.hwc_elems) })
+                .collect(),
+            patch: Vec::with_capacity(need.patch_elems),
+        }
+    }
+
+    /// Number of lanes this scratch was allocated for.
+    pub fn batch_capacity(&self) -> usize {
+        self.mem.batch_capacity()
+    }
+
+    /// Reshape one lane's HWC staging tensor (allocation-free within
+    /// the arena capacity; growth is counted as an arena allocation).
+    fn hwc_for(&mut self, lane: usize, c: usize, h: usize, w: usize) {
+        let t = &mut self.hwc[lane];
+        let elems = c * h * w;
+        if elems > t.data.capacity() {
+            super::common::note_arena_alloc();
+        }
+        t.data.resize(elems, 0);
+        t.h = h;
+        t.w = w;
+        t.c = c;
+    }
+
+    /// Reshape the (lane-shared) patch staging buffer.
     fn patch_for(&mut self, elems: usize) {
         if elems > self.patch.capacity() {
             super::common::note_arena_alloc();
@@ -664,6 +721,236 @@ impl CompiledKernel {
         })
     }
 
+    /// Replay the convolution across `nb` independent inference lanes
+    /// in **one shared µop walk per launch**
+    /// ([`Cgra::run_decoded_batch`], DESIGN.md §9). Lane `l` reads its
+    /// input at `inputs[l * in_stride ..][.. input_elems]` and writes
+    /// its output at `outs[l * out_stride ..][.. output_elems]` —
+    /// strided lane-major views, so grouped layers can hand whole
+    /// activation buffers straight through without gather/scatter
+    /// copies.
+    ///
+    /// The returned [`ConvOutcome`] is **per-inference** and bit-exact
+    /// with a scalar [`CompiledKernel::run_into`] of any single lane:
+    /// launches, `RunStats`, the latency decomposition and the host
+    /// accounting are all lane-invariant (timing in this simulator is
+    /// data-independent, and the im2col staging counts depend only on
+    /// the shape). Like `run_into`, performs no program building, no
+    /// µop decoding and no heap allocation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_batch_into(
+        &self,
+        cgra: &Cgra,
+        nb: usize,
+        inputs: &[i32],
+        in_stride: usize,
+        scratch: &mut BatchKernelScratch,
+        outs: &mut [i32],
+        out_stride: usize,
+    ) -> Result<ConvOutcome> {
+        let in_elems = self.shape.input_elems();
+        let out_elems = self.shape.output_elems();
+        ensure!(
+            nb >= 1 && nb <= scratch.batch_capacity(),
+            "batch of {} lanes exceeds scratch capacity {}",
+            nb,
+            scratch.batch_capacity()
+        );
+        ensure!(
+            in_stride >= in_elems && inputs.len() >= (nb - 1) * in_stride + in_elems,
+            "batched input view too small: {} elements at stride {} for {} lanes of {} \
+             (shape {})",
+            inputs.len(),
+            in_stride,
+            nb,
+            in_elems,
+            self.shape
+        );
+        ensure!(
+            out_stride >= out_elems && outs.len() >= (nb - 1) * out_stride + out_elems,
+            "batched output view too small: {} elements at stride {} for {} lanes of {} \
+             (shape {})",
+            outs.len(),
+            out_stride,
+            nb,
+            out_elems,
+            self.shape
+        );
+        let shape = &self.shape;
+        let cfg = cgra.config();
+        let host = HostCostModel::default();
+
+        if let Plan::Cpu = self.plan {
+            let mut last = None;
+            for l in 0..nb {
+                last = Some(self.run_cpu(
+                    &inputs[l * in_stride..l * in_stride + in_elems],
+                    &mut outs[l * out_stride..l * out_stride + out_elems],
+                )?);
+            }
+            return Ok(last.expect("nb >= 1"));
+        }
+
+        // Weight image: poked once, broadcast to every active lane.
+        for block in &self.init {
+            scratch.mem.poke_broadcast(block.base, &block.data, nb);
+        }
+
+        let mut stats = RunStats::new();
+        stats.exited = true;
+        let mut launches = 0u64;
+        let mut latency = LatencyBreakdown::default();
+        let mut cpu_mem = MemStats::default();
+
+        match &self.plan {
+            Plan::Wp { layout } | Plan::OpDirect { layout } => {
+                for l in 0..nb {
+                    scratch.mem.poke_slice_lane(
+                        layout.input,
+                        l,
+                        &inputs[l * in_stride..l * in_stride + in_elems],
+                    );
+                }
+                for dp in &self.progs {
+                    let s = cgra.run_decoded_batch(dp, &mut scratch.mem, nb)?;
+                    stats.merge(&s);
+                    launches += 1;
+                }
+                copy_out_lanes(&scratch.mem, layout.output, nb, outs, out_stride, out_elems);
+            }
+            Plan::Dw { lay } => {
+                for l in 0..nb {
+                    scratch.mem.poke_slice_lane(
+                        lay.input,
+                        l,
+                        &inputs[l * in_stride..l * in_stride + in_elems],
+                    );
+                }
+                for dp in &self.progs {
+                    let s = cgra.run_decoded_batch(dp, &mut scratch.mem, nb)?;
+                    stats.merge(&s);
+                    launches += 1;
+                }
+                copy_out_lanes(&scratch.mem, lay.output, nb, outs, out_stride, out_elems);
+            }
+            Plan::OpIm2col { layout, pl, w_prep_elems } => {
+                for l in 0..nb {
+                    scratch.hwc_for(l, shape.c, shape.ih(), shape.iw());
+                    to_hwc_into(
+                        shape,
+                        &inputs[l * in_stride..l * in_stride + in_elems],
+                        &mut scratch.hwc[l],
+                    );
+                    scratch.mem.poke_slice_lane(layout.input, l, &scratch.hwc[l].data);
+                }
+                scratch.patch_for(*pl);
+                let prep_elems = scratch.hwc[0].data.len() as u64 + w_prep_elems;
+                let mut cpu_im2col = prep_elems * host.prep_cycles_per_elem;
+                let mut cpu_hidden = 0u64;
+                let mut cpu_copies = 0u64;
+                let k_tiles = shape.k.div_ceil(N_PES);
+                let mut idx = 0usize;
+                for _kt in 0..k_tiles {
+                    for y in 0..shape.ox {
+                        for x in 0..shape.oy {
+                            let pix = y * shape.oy + x;
+                            let slot = layout.im2col + (pix % 2) * pl;
+                            // The staged element count depends only on
+                            // the shape and pixel position — identical
+                            // across lanes, charged once per inference.
+                            let mut copied = 0u64;
+                            for l in 0..nb {
+                                copied = im2col_patch(
+                                    shape,
+                                    &scratch.hwc[l],
+                                    y,
+                                    x,
+                                    &mut scratch.patch,
+                                ) as u64;
+                                scratch.mem.poke_slice_lane(slot, l, &scratch.patch);
+                            }
+                            cpu_copies += copied;
+                            cpu_im2col += copied * host.im2col_cycles_per_elem;
+                            let s =
+                                cgra.run_decoded_batch(&self.progs[idx], &mut scratch.mem, nb)?;
+                            cpu_hidden += s.cycles.min(copied * host.im2col_cycles_per_elem);
+                            stats.merge(&s);
+                            launches += 1;
+                            idx += 1;
+                        }
+                    }
+                }
+                latency.cpu_im2col_cycles = cpu_im2col;
+                latency.cpu_hidden_cycles = cpu_hidden;
+                cpu_mem = MemStats {
+                    loads: cpu_copies + prep_elems,
+                    stores: cpu_copies + prep_elems,
+                };
+                copy_out_lanes(&scratch.mem, layout.output, nb, outs, out_stride, out_elems);
+            }
+            Plan::Ip { layout, cp, w_prep_elems } => {
+                let patch_words = cp * 9;
+                for l in 0..nb {
+                    scratch.hwc_for(l, shape.c, shape.ih(), shape.iw());
+                    to_hwc_into(
+                        shape,
+                        &inputs[l * in_stride..l * in_stride + in_elems],
+                        &mut scratch.hwc[l],
+                    );
+                    scratch.mem.poke_slice_lane(layout.input, l, &scratch.hwc[l].data);
+                }
+                scratch.patch_for(patch_words);
+                let prep_elems = scratch.hwc[0].data.len() as u64 + w_prep_elems;
+                let mut cpu_im2col = prep_elems * host.prep_cycles_per_elem;
+                let mut cpu_hidden = 0u64;
+                let mut cpu_copies = 0u64;
+                let mut idx = 0usize;
+                for y in 0..shape.ox {
+                    for x in 0..shape.oy {
+                        let pix = y * shape.oy + x;
+                        let slot = layout.im2col + (pix % 2) * patch_words;
+                        for l in 0..nb {
+                            ip::im2col_patch_cm(shape, &scratch.hwc[l], y, x, &mut scratch.patch);
+                            scratch.mem.poke_slice_lane(slot, l, &scratch.patch);
+                        }
+                        for _k in 0..shape.k {
+                            cpu_copies += patch_words as u64;
+                            cpu_im2col += patch_words as u64 * host.im2col_cycles_per_elem;
+                            let s =
+                                cgra.run_decoded_batch(&self.progs[idx], &mut scratch.mem, nb)?;
+                            cpu_hidden +=
+                                s.cycles.min(patch_words as u64 * host.im2col_cycles_per_elem);
+                            stats.merge(&s);
+                            launches += 1;
+                            idx += 1;
+                        }
+                    }
+                }
+                latency.cpu_im2col_cycles = cpu_im2col;
+                latency.cpu_hidden_cycles = cpu_hidden;
+                cpu_mem = MemStats {
+                    loads: cpu_copies + prep_elems,
+                    stores: cpu_copies + prep_elems,
+                };
+                copy_out_lanes(&scratch.mem, layout.output, nb, outs, out_stride, out_elems);
+            }
+            Plan::Cpu => unreachable!("handled above"),
+        }
+
+        latency.cgra_cycles = stats.cycles;
+        latency.launch_cycles = launches * cfg.launch_overhead + cfg.instruction_load_overhead;
+        latency.launches = launches;
+        Ok(ConvOutcome {
+            mapping: self.mapping,
+            shape: *shape,
+            output: TensorChw { c: 0, h: 0, w: 0, data: Vec::new() },
+            latency,
+            cgra_stats: stats,
+            cpu_mem,
+            footprint_bytes: self.footprint_bytes,
+        })
+    }
+
     /// The CPU-baseline arm: closed-form cycles (the same [`CpuModel`]
     /// the dispatcher uses), golden compute written straight into `out`
     /// — the identical (k, y, x, c, fy, fx) wrapping loop nest as
@@ -708,6 +995,21 @@ impl CompiledKernel {
 /// Copy a kernel's output region out of the memory image.
 fn copy_out(mem: &Memory, base: usize, out: &mut [i32]) {
     out.copy_from_slice(mem.peek_slice(base, out.len()));
+}
+
+/// Copy each lane's output region out of the batched memory image into
+/// its strided destination view.
+fn copy_out_lanes(
+    mem: &BatchMemory,
+    base: usize,
+    nb: usize,
+    outs: &mut [i32],
+    out_stride: usize,
+    out_elems: usize,
+) {
+    for l in 0..nb {
+        mem.peek_slice_lane(base, l, &mut outs[l * out_stride..l * out_stride + out_elems]);
+    }
 }
 
 /// CHW → HWC conversion into a preallocated staging tensor (the modeled
@@ -869,6 +1171,123 @@ mod tests {
         let dense = random_weights(&shape, 5, &mut rng);
         let wp = CompiledKernel::build(&cfg, &shape, Mapping::Wp, &dense).unwrap();
         assert!(wp.with_weights(&Weights::zeros(2, 2, 3, 3)).is_err());
+    }
+
+    /// The batched replay is lane-for-lane bit-exact with scalar
+    /// replays for **every** mapping: per-lane outputs, and a
+    /// per-inference outcome (latency, run stats, host accounting,
+    /// energy) identical to any single scalar run — at full capacity,
+    /// at a ragged partial lane count, and at B = 1.
+    #[test]
+    fn batched_replay_matches_scalar_for_every_mapping() {
+        let cfg = CgraConfig::default();
+        let cgra = Cgra::new(cfg).unwrap();
+        let model = EnergyModel::default();
+        let shape = ConvShape::new3x3(5, 17, 4, 3);
+        let mut rng = Rng::new(77);
+        let weights = random_weights(&shape, 11, &mut rng);
+        let inputs: Vec<TensorChw> =
+            (0..3).map(|_| random_input(&shape, 60, &mut rng)).collect();
+        for (m, shape) in Mapping::ALL
+            .into_iter()
+            .map(|m| (m, shape))
+            .chain([(Mapping::DwWp, ConvShape::new3x3(5, 5, 4, 6))])
+        {
+            let w = if m == Mapping::DwWp {
+                random_depthwise_weights(&shape, 11, &mut Rng::new(4))
+            } else {
+                weights.clone()
+            };
+            let inputs: Vec<TensorChw> = if m == Mapping::DwWp {
+                let mut r = Rng::new(8);
+                (0..3).map(|_| random_input(&shape, 60, &mut r)).collect()
+            } else {
+                inputs.clone()
+            };
+            let ck = CompiledKernel::build(cgra.config(), &shape, m, &w).unwrap();
+
+            // Scalar reference: one run per lane.
+            let mut scratch = KernelScratch::new(cgra.config(), ck.scratch_need());
+            let mut want_out = vec![vec![0i32; shape.output_elems()]; inputs.len()];
+            let mut want = None;
+            for (l, input) in inputs.iter().enumerate() {
+                let o = ck.run_into(&cgra, &input.data, &mut scratch, &mut want_out[l]).unwrap();
+                want.get_or_insert(o);
+            }
+            let want = want.unwrap();
+
+            for nb in [1usize, 2, 3] {
+                let mut bscratch =
+                    BatchKernelScratch::new(cgra.config(), ck.scratch_need(), 3);
+                let in_stride = shape.input_elems() + 5; // strided views
+                let out_stride = shape.output_elems() + 3;
+                let mut flat_in = vec![0i32; 3 * in_stride];
+                for l in 0..nb {
+                    flat_in[l * in_stride..l * in_stride + shape.input_elems()]
+                        .copy_from_slice(&inputs[l].data);
+                }
+                let mut flat_out = vec![0i32; 3 * out_stride];
+                let got = ck
+                    .run_batch_into(
+                        &cgra,
+                        nb,
+                        &flat_in,
+                        in_stride,
+                        &mut bscratch,
+                        &mut flat_out,
+                        out_stride,
+                    )
+                    .unwrap();
+                for l in 0..nb {
+                    assert_eq!(
+                        &flat_out[l * out_stride..l * out_stride + shape.output_elems()],
+                        &want_out[l][..],
+                        "{m} lane {l} of nb={nb} output"
+                    );
+                }
+                assert_eq!(got.latency, want.latency, "{m} nb={nb} latency");
+                assert_eq!(got.cgra_stats, want.cgra_stats, "{m} nb={nb} stats");
+                assert_eq!(got.cpu_mem, want.cpu_mem, "{m} nb={nb} host mem");
+                let (a, b) = (
+                    MappingReport::from_outcome(&got, &model),
+                    MappingReport::from_outcome(&want, &model),
+                );
+                assert_eq!(a.energy_uj.to_bits(), b.energy_uj.to_bits(), "{m} nb={nb} energy");
+            }
+        }
+    }
+
+    /// Batched lane/stride validation is actionable.
+    #[test]
+    fn batched_replay_validates_lanes_and_strides() {
+        let cfg = CgraConfig::default();
+        let cgra = Cgra::new(cfg).unwrap();
+        let shape = ConvShape::new3x3(2, 3, 4, 4);
+        let mut rng = Rng::new(5);
+        let w = random_weights(&shape, 9, &mut rng);
+        let ck = CompiledKernel::build(cgra.config(), &shape, Mapping::Wp, &w).unwrap();
+        let mut scratch = BatchKernelScratch::new(cgra.config(), ck.scratch_need(), 2);
+        let ie = shape.input_elems();
+        let oe = shape.output_elems();
+        let flat_in = vec![0i32; 2 * ie];
+        let mut flat_out = vec![0i32; 2 * oe];
+        // Too many lanes for the scratch.
+        let err = ck
+            .run_batch_into(&cgra, 3, &flat_in, ie, &mut scratch, &mut flat_out, oe)
+            .unwrap_err();
+        assert!(err.to_string().contains("exceeds scratch capacity"), "{err}");
+        // Input view too small for the lane count.
+        let err = ck
+            .run_batch_into(&cgra, 2, &flat_in[..ie], ie, &mut scratch, &mut flat_out, oe)
+            .unwrap_err();
+        assert!(err.to_string().contains("batched input view too small"), "{err}");
+        // Output view too small.
+        let err = ck
+            .run_batch_into(&cgra, 2, &flat_in, ie, &mut scratch, &mut flat_out[..oe], oe)
+            .unwrap_err();
+        assert!(err.to_string().contains("batched output view too small"), "{err}");
+        // The happy path on the same scratch still works.
+        ck.run_batch_into(&cgra, 2, &flat_in, ie, &mut scratch, &mut flat_out, oe).unwrap();
     }
 
     /// Build-time validation mirrors the legacy drivers' diagnostics.

@@ -8,7 +8,8 @@
 //! cgra sweep   [--full] [--out DIR]                          Fig. 5 sweep
 //! cgra net     [--preset NAME] [--plan-only]                 edge network on the CGRA (nn)
 //! cgra compile [--preset NAME]                               compile to a CompiledNet, summarize
-//! cgra serve   --iters N [--preset NAME] [--verify]          compile once, serve N inferences
+//! cgra serve   --iters N [--batch B] [--preset NAME]         compile once, serve N inferences
+//!              [--verify]                                     (B lanes per µop walk when batched)
 //! cgra verify  [--artifacts DIR]                             CGRA vs XLA artifact
 //! cgra asm     FILE.casm                                     assemble + run + dump
 //! ```
@@ -599,7 +600,9 @@ fn cmd_compile() -> Result<()> {
 /// `cgra serve` — the compile-once / run-many loop: compile the
 /// network, then serve `--iters` inferences (fresh input per
 /// iteration) over `--workers` threads sharing one `Arc<CompiledNet>`,
-/// each worker replaying against its own context. `--verify` runs the
+/// each worker replaying against its own context. `--batch B` runs B
+/// inferences per shared µop walk (DESIGN.md §9) for bulk throughput;
+/// modeled per-inference numbers are unchanged. `--verify` runs the
 /// opt-in golden debug mode and exits non-zero on any divergence.
 fn cmd_serve() -> Result<()> {
     let a = Args::from_env(
@@ -613,6 +616,11 @@ fn cmd_serve() -> Result<()> {
                        (default: a plain --depth/--c0/--k/--hw conv stack)",
             },
             OptSpec { name: "iters", value: "INT", help: "inferences to serve (default 16)" },
+            OptSpec {
+                name: "batch",
+                value: "INT",
+                help: "inference lanes per shared uop walk (default 1 = scalar)",
+            },
             OptSpec { name: "workers", value: "INT", help: "worker threads" },
             OptSpec {
                 name: "verify",
@@ -628,11 +636,13 @@ fn cmd_serve() -> Result<()> {
     )?;
     let seed = a.num_or("seed", 7u64)?;
     let iters: u64 = a.num_or("iters", 16u64)?;
+    let batch: usize = a.num_or("batch", 1usize)?;
     let workers = a.num_or("workers", default_workers())?;
     let verify = a.flag("verify");
     let net = net_from_args(&a, seed)?;
     a.reject_unknown()?;
     anyhow::ensure!(iters >= 1, "--iters must be at least 1");
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
 
     let engine = engine_with_workers(workers)?;
     let t0 = std::time::Instant::now();
@@ -640,16 +650,18 @@ fn cmd_serve() -> Result<()> {
     let compile_s = t0.elapsed().as_secs_f64();
     println!(
         "compiled '{}' in {:.1} ms ({} launches/inference, {} pre-decoded uops); \
-         serving {iters} inferences on {workers} workers{}\n",
+         serving {iters} inferences on {workers} workers{}{}\n",
         compiled.name(),
         compile_s * 1e3,
         compiled.total_launches(),
         compiled.total_uops(),
+        if batch > 1 { format!(" x {batch} batch lanes") } else { String::new() },
         if verify { " [debug-verify]" } else { "" },
     );
 
     // Contiguous iteration shards, one job per worker; each worker
-    // allocates its context once and replays its share warm.
+    // allocates its context once and replays its share warm, `batch`
+    // lanes per shared µop walk (ragged final chunk per shard).
     let shard = (iters as usize).div_ceil(workers.max(1));
     let jobs: Vec<_> = (0..iters)
         .step_by(shard.max(1))
@@ -657,23 +669,50 @@ fn cmd_serve() -> Result<()> {
             let compiled = compiled.clone();
             let hi = (lo + shard as u64).min(iters);
             move || -> Result<(u64, u64, f64)> {
-                let mut ctx = compiled.new_ctx();
                 let (mut cycles, mut energy) = (0u64, 0.0f64);
-                for i in lo..hi {
-                    let input = compiled.net().random_input(8, seed ^ 0xabcd ^ i);
-                    let run = if verify {
-                        let run = compiled.run_verified(&mut ctx, &input)?;
-                        if run.exact != Some(true) {
-                            anyhow::bail!(
-                                "inference {i} diverged from the generalized golden model"
-                            );
-                        }
-                        run
-                    } else {
-                        compiled.run(&mut ctx, &input)?
-                    };
-                    cycles = run.total_cycles;
-                    energy = run.total_energy_uj;
+                if batch > 1 {
+                    let mut ctx = compiled.new_batch_ctx(batch);
+                    let mut i = lo;
+                    while i < hi {
+                        let n = ((hi - i) as usize).min(batch);
+                        let inputs: Vec<_> = (0..n as u64)
+                            .map(|j| compiled.net().random_input(8, seed ^ 0xabcd ^ (i + j)))
+                            .collect();
+                        let run = if verify {
+                            let run = compiled.run_batch_verified(&mut ctx, &inputs)?;
+                            if run.exact != Some(true) {
+                                anyhow::bail!(
+                                    "a batched inference in {i}..{} diverged from the \
+                                     generalized golden model",
+                                    i + n as u64
+                                );
+                            }
+                            run
+                        } else {
+                            compiled.run_batch(&mut ctx, &inputs)?
+                        };
+                        cycles = run.total_cycles;
+                        energy = run.total_energy_uj;
+                        i += n as u64;
+                    }
+                } else {
+                    let mut ctx = compiled.new_ctx();
+                    for i in lo..hi {
+                        let input = compiled.net().random_input(8, seed ^ 0xabcd ^ i);
+                        let run = if verify {
+                            let run = compiled.run_verified(&mut ctx, &input)?;
+                            if run.exact != Some(true) {
+                                anyhow::bail!(
+                                    "inference {i} diverged from the generalized golden model"
+                                );
+                            }
+                            run
+                        } else {
+                            compiled.run(&mut ctx, &input)?
+                        };
+                        cycles = run.total_cycles;
+                        energy = run.total_energy_uj;
+                    }
                 }
                 Ok((hi - lo, cycles, energy))
             }

@@ -1,0 +1,186 @@
+//! Integration tests of the data-parallel batched executor
+//! (DESIGN.md §9): `CompiledNet::run_batch` must be indistinguishable
+//! from running each lane through the scalar `CompiledNet::run` —
+//! bit-identical outputs per lane, bit-identical modeled
+//! per-inference cycles and energy (down to the f64 bits), per layer —
+//! across the stride / pad / groups lowering grid and a real preset.
+//! Also pinned: the B=1 degeneracy, the ragged final chunk, the golden
+//! debug mode, and the argument validation.
+
+use openedge_cgra::conv::{GenConvShape, TensorChw};
+use openedge_cgra::engine::{CompiledNet, Engine, EngineBuilder, InferRun};
+use openedge_cgra::nn::{self, Layer, Net};
+use openedge_cgra::prop::Rng;
+
+fn engine() -> Engine {
+    EngineBuilder::new().workers(2).private_cache().build().unwrap()
+}
+
+/// A 2-layer net exercising one (stride, pad, groups) combination:
+/// a generalized conv into a depthwise layer (same grid as
+/// `tests/compiled.rs`, so the scalar reference is itself pinned
+/// against the golden model elsewhere).
+fn grid_net(stride: usize, pad: usize, groups: usize, seed: u64) -> Net {
+    let mut rng = Rng::new(seed);
+    let (c, k, hw) = (4, 8, 9);
+    let shape = GenConvShape::new(c, k, hw, hw, 3, 3, stride, pad, groups).unwrap();
+    let (oc, oh, ow) = (shape.k, shape.ox(), shape.oy());
+    let conv = Layer::conv(shape, true, 4, &mut rng).unwrap();
+    let dw = Layer::depthwise(oc, oh, ow, 1, 1, false, 4, &mut rng).unwrap();
+    Net {
+        name: format!("grid-s{stride}p{pad}g{groups}"),
+        input_dims: (c, hw, hw),
+        layers: vec![conv, dw],
+    }
+}
+
+/// Assert two per-inference results are bit-equal, layer by layer.
+fn assert_runs_equal(b: &InferRun, s: &InferRun, what: &str) {
+    assert_eq!(b.total_cycles, s.total_cycles, "{what}: total cycles");
+    assert_eq!(
+        b.total_energy_uj.to_bits(),
+        s.total_energy_uj.to_bits(),
+        "{what}: total energy bits"
+    );
+    assert_eq!(b.relu_cycles, s.relu_cycles, "{what}: relu cycles");
+    assert_eq!(b.layers.len(), s.layers.len(), "{what}: layer count");
+    for (i, (bl, sl)) in b.layers.iter().zip(s.layers.iter()).enumerate() {
+        assert_eq!(bl.cycles, sl.cycles, "{what}: layer {i} cycles");
+        assert_eq!(bl.conv_cycles, sl.conv_cycles, "{what}: layer {i} conv cycles");
+        assert_eq!(bl.host_cycles, sl.host_cycles, "{what}: layer {i} host cycles");
+        assert_eq!(
+            bl.energy_uj.to_bits(),
+            sl.energy_uj.to_bits(),
+            "{what}: layer {i} energy bits"
+        );
+        assert_eq!(bl.launches, sl.launches, "{what}: layer {i} launches");
+        assert_eq!(bl.mapping, sl.mapping, "{what}: layer {i} mapping");
+    }
+}
+
+/// Run `inputs` through `run_batch` and through B sequential scalar
+/// runs, and assert the batched path is bit-identical per lane.
+fn check_batch_vs_scalar(compiled: &CompiledNet, inputs: &[TensorChw], what: &str) {
+    let mut bctx = compiled.new_batch_ctx(inputs.len());
+    let brun = compiled.run_batch(&mut bctx, inputs).unwrap();
+    assert_eq!(bctx.outputs().len(), inputs.len(), "{what}: served lanes");
+    let mut sctx = compiled.new_ctx();
+    for (l, input) in inputs.iter().enumerate() {
+        let srun = compiled.run(&mut sctx, input).unwrap();
+        assert_eq!(
+            bctx.outputs()[l].data,
+            sctx.output().data,
+            "{what}: lane {l} output"
+        );
+        assert_runs_equal(&brun, &srun, &format!("{what} lane {l}"));
+    }
+}
+
+/// Property: across the stride × pad × groups lowering grid, a batched
+/// run over B distinct inputs is bit-identical to B sequential scalar
+/// runs — outputs, modeled cycles, modeled energy — including the B=1
+/// degenerate batch.
+#[test]
+fn prop_batched_matches_scalar_across_grid() {
+    let engine = engine();
+    let mut case = 0u64;
+    for &stride in &[1usize, 2] {
+        for &pad in &[0usize, 1] {
+            for &groups in &[1usize, 2, 4] {
+                case += 1;
+                let net = grid_net(stride, pad, groups, 31 + case);
+                let compiled = engine.compile(&net).unwrap();
+                for nb in [1usize, 3] {
+                    let inputs: Vec<_> = (0..nb as u64)
+                        .map(|l| net.random_input(10, 5 + case * 100 + l))
+                        .collect();
+                    check_batch_vs_scalar(
+                        &compiled,
+                        &inputs,
+                        &format!("{} B={nb}", net.name),
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(case, 12);
+}
+
+/// The mobilenet-mini preset (depthwise/pointwise chains, pools,
+/// strides — the serving benchmark's network) batches bit-exactly.
+#[test]
+fn preset_batches_bit_exactly() {
+    let engine = engine();
+    let net = nn::build_preset("mobilenet-mini", 7).unwrap();
+    let compiled = engine.compile(&net).unwrap();
+    let inputs: Vec<_> = (0..2u64).map(|l| net.random_input(8, 7 ^ (l << 8))).collect();
+    check_batch_vs_scalar(&compiled, &inputs, "mobilenet-mini B=2");
+}
+
+/// A ragged final chunk — fewer inputs than the context's capacity —
+/// runs through the same capacity-strided layout, serves only the
+/// presented lanes, and stays bit-exact; the context then accepts a
+/// full chunk again.
+#[test]
+fn ragged_final_chunk_is_exact() {
+    let engine = engine();
+    let net = grid_net(2, 1, 2, 9);
+    let compiled = engine.compile(&net).unwrap();
+    let mut bctx = compiled.new_batch_ctx(4);
+    let mut sctx = compiled.new_ctx();
+
+    for nb in [4usize, 3, 1, 4] {
+        let inputs: Vec<_> =
+            (0..nb as u64).map(|l| net.random_input(10, 1000 * nb as u64 + l)).collect();
+        let brun = compiled.run_batch(&mut bctx, &inputs).unwrap();
+        assert_eq!(bctx.outputs().len(), nb, "served lanes after a chunk of {nb}");
+        for (l, input) in inputs.iter().enumerate() {
+            let srun = compiled.run(&mut sctx, input).unwrap();
+            assert_eq!(bctx.outputs()[l].data, sctx.output().data, "chunk {nb} lane {l}");
+            assert_runs_equal(&brun, &srun, &format!("chunk {nb} lane {l}"));
+        }
+    }
+}
+
+/// The golden debug mode verifies every lane of every layer and
+/// reports exactness, like the scalar `run_verified`.
+#[test]
+fn batched_verified_runs_are_golden_exact() {
+    let engine = engine();
+    let net = grid_net(1, 1, 1, 17);
+    let compiled = engine.compile(&net).unwrap();
+    let mut bctx = compiled.new_batch_ctx(3);
+    let inputs: Vec<_> = (0..3u64).map(|l| net.random_input(10, 40 + l)).collect();
+    let run = compiled.run_batch_verified(&mut bctx, &inputs).unwrap();
+    assert_eq!(run.exact, Some(true), "every lane of every layer must be golden-exact");
+    for lr in &run.layers {
+        assert_eq!(lr.exact, Some(true));
+    }
+    // The unverified path reports no exactness claim.
+    let run = compiled.run_batch(&mut bctx, &inputs).unwrap();
+    assert_eq!(run.exact, None);
+}
+
+/// Argument validation: empty batches, over-capacity batches and
+/// wrong-shaped lane inputs are rejected with actionable messages.
+#[test]
+fn run_batch_validates_inputs() {
+    let engine = engine();
+    let net = grid_net(1, 0, 1, 3);
+    let compiled = engine.compile(&net).unwrap();
+    let mut bctx = compiled.new_batch_ctx(2);
+
+    let err = format!("{:#}", compiled.run_batch(&mut bctx, &[]).unwrap_err());
+    assert!(err.contains("capacity 2"), "{err}");
+    assert!(bctx.outputs().is_empty(), "a failed run serves no lanes");
+
+    let three: Vec<_> = (0..3u64).map(|l| net.random_input(10, l)).collect();
+    let err = format!("{:#}", compiled.run_batch(&mut bctx, &three).unwrap_err());
+    assert!(err.contains("3 inputs") && err.contains("capacity 2"), "{err}");
+
+    let bad = nn::build_preset("mobilenet-mini", 1).unwrap().random_input(8, 1);
+    let good = net.random_input(10, 9);
+    let err =
+        format!("{:#}", compiled.run_batch(&mut bctx, &[good, bad]).unwrap_err());
+    assert!(err.contains("batch lane 1"), "{err}");
+}

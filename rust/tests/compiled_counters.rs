@@ -75,4 +75,30 @@ fn warm_compiled_runs_do_zero_compile_side_work() {
     assert_eq!(run.total_cycles, first.total_cycles);
     let end = RunCounters::snapshot(&engine);
     assert_eq!(end, mid, "warm runs on a fresh context are also clean");
+
+    // The batched path honors the same contract (DESIGN.md §9): a
+    // batch context allocates once at creation, and warm `run_batch`
+    // calls — full and ragged — do zero builds, decodes, planner calls
+    // and arena allocations.
+    let bctx_before = RunCounters::snapshot(&engine);
+    let mut bctx = compiled.new_batch_ctx(3);
+    let bctx_after = RunCounters::snapshot(&engine);
+    assert!(
+        bctx_after.arena_allocs > bctx_before.arena_allocs,
+        "batch context creation allocates the lane-major arena"
+    );
+
+    let inputs: Vec<_> = (0..3u64).map(|l| net.random_input(8, 10 + l)).collect();
+    let warm_batch_before = RunCounters::snapshot(&engine);
+    let brun = compiled.run_batch(&mut bctx, &inputs).unwrap();
+    let ragged = compiled.run_batch(&mut bctx, &inputs[..2]).unwrap();
+    let warm_batch_after = RunCounters::snapshot(&engine);
+    assert_eq!(
+        warm_batch_after, warm_batch_before,
+        "a warm CompiledNet::run_batch must perform no program building, no µop \
+         decoding, no planner calls and no arena allocation"
+    );
+    // Per-inference modeled timing matches the scalar path exactly.
+    assert_eq!(brun.total_cycles, first.total_cycles);
+    assert_eq!(ragged.total_cycles, first.total_cycles);
 }

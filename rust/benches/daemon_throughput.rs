@@ -1,0 +1,86 @@
+//! Bench: the serving daemon's request path, in requests/inferences
+//! per second over an in-process [`Daemon`] (no sockets — this
+//! measures the subsystem, not the kernel's TCP stack).
+//!
+//! Four measurements on a small conv stack:
+//!
+//!   1. **hot scalar request** — registry hit, admission pricing from
+//!      the planner memo, one queued scalar execution: the steady
+//!      state of a single-inference tenant,
+//!   2. **hot batched request** — count=8 through a batch-8 daemon:
+//!      one request, one shared µop walk group,
+//!   3. **cold-miss request** — a fresh net fingerprint per sample, so
+//!      every request pays admission + compile + registry insert (and
+//!      eventually LRU eviction),
+//!   4. **stats snapshot** — the monitoring read path.
+//!
+//! `cargo bench --bench daemon_throughput`
+
+use openedge_cgra::benchkit::Bench;
+use openedge_cgra::server::{Daemon, InferRequest, NetSpec, Outcome};
+
+fn spec(seed: u64) -> NetSpec {
+    NetSpec::Stack { depth: 1, c0: 2, k: 4, hw: 8, seed }
+}
+
+fn main() {
+    let daemon = Daemon::builder().workers(2).batch(8).capacity(8).build();
+
+    // Warm the hot path: tenant, planner memo, compiled artifact.
+    match daemon.submit(InferRequest::new("bench", spec(7))).expect("warm request") {
+        Outcome::Served(s) => assert!(!s.cache_hit, "first request must compile"),
+        Outcome::Rejected(r) => panic!("warm request rejected: {}", r.detail),
+    }
+
+    let b = Bench::new(1, 5);
+
+    // 1. Hot scalar requests: registry hit + queue + one inference.
+    let hot = b.run("Daemon::submit (hot, count=1)", None, || {
+        daemon.submit(InferRequest::new("bench", spec(7))).expect("hot request")
+    });
+
+    // 2. Hot batched requests: count=8 riding one walk group.
+    let batched = b.run("Daemon::submit (hot, count=8)", None, || {
+        let mut req = InferRequest::new("bench", spec(7));
+        req.count = 8;
+        daemon.submit(req).expect("batched request")
+    });
+
+    // 3. Cold misses: a fresh fingerprint every sample forces
+    //    admission + compile + insert (+ LRU eviction once warm).
+    let mut seed = 1000u64;
+    let cold = b.run("Daemon::submit (cold miss)", None, || {
+        seed += 1;
+        daemon.submit(InferRequest::new("bench", spec(seed))).expect("cold request")
+    });
+
+    // 4. The stats read path.
+    let stats = b.run("Daemon::stats", None, || daemon.stats());
+
+    let hot_rps = 1.0 / hot.median();
+    let batched_ips = 8.0 / batched.median();
+    println!(
+        "\nhot: {:.1} req/s ({:.1} inf/s at count=8, {:.2}x); cold miss: {:.1} req/s \
+         ({:.2}x slower than hot); stats: {:.1} reads/s",
+        hot_rps,
+        batched_ips,
+        batched_ips / hot_rps,
+        1.0 / cold.median(),
+        cold.median() / hot.median().max(1e-12),
+        1.0 / stats.median(),
+    );
+
+    let snap = daemon.stats();
+    println!(
+        "registry after bench: {} hits / {} misses / {} evictions / {} compiles \
+         (capacity {}); {} walks over {} lanes",
+        snap.registry.hits,
+        snap.registry.misses,
+        snap.registry.evictions,
+        snap.registry.compiles,
+        snap.registry.capacity,
+        snap.walks,
+        snap.walk_lanes,
+    );
+    daemon.shutdown();
+}

@@ -204,6 +204,17 @@ impl Engine {
         &self.model
     }
 
+    /// The combined config ⊕ energy-model fingerprint identifying this
+    /// session for cache keys
+    /// ([`cache::cfg_fingerprint`] `^` [`cache::energy_fingerprint`] —
+    /// the same isolation machinery the point cache uses). Two engines
+    /// may share compiled artifacts iff their fingerprints are equal;
+    /// the serving daemon's artifact registry keys on this so tenants
+    /// with different energy models never cross-hit.
+    pub fn session_fingerprint(&self) -> u64 {
+        self.key_fp
+    }
+
     /// Worker threads used by the batched entry points.
     pub fn workers(&self) -> usize {
         self.workers
@@ -555,6 +566,21 @@ mod tests {
 
     fn quick_engine() -> Engine {
         EngineBuilder::new().workers(2).private_cache().build().unwrap()
+    }
+
+    #[test]
+    fn session_fingerprint_tracks_config_and_model() {
+        let a = EngineBuilder::new().build().unwrap();
+        let b = EngineBuilder::new().build().unwrap();
+        assert_eq!(a.session_fingerprint(), b.session_fingerprint());
+        let mut hot = EnergyModel::default();
+        hot.e_mem_access_pj *= 2.0;
+        let c = EngineBuilder::new().energy_model(hot).build().unwrap();
+        assert_ne!(a.session_fingerprint(), c.session_fingerprint());
+        let mut cfg = CgraConfig::default();
+        cfg.mem_latency += 1;
+        let d = EngineBuilder::new().config(cfg).build().unwrap();
+        assert_ne!(a.session_fingerprint(), d.session_fingerprint());
     }
 
     #[test]

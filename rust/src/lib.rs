@@ -53,6 +53,12 @@
 //!   layers, pooling, named presets, and a graph executor + planner
 //!   that lower MobileNet-style networks end to end onto the engine
 //!   (`cgra net --preset <name>`).
+//! - [`server`] — the persistent serving subsystem (`cgra daemon`): a
+//!   bounded multi-tenant artifact registry over `CompiledNet`,
+//!   planner-priced admission control with per-request deadlines and a
+//!   degradation ladder, a batching worker pool, and a stats surface —
+//!   in-process ([`server::Daemon`]) or NDJSON over TCP
+//!   ([`server::tcp`]).
 //! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and verifies the simulator element-exactly against them.
 //! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5),
@@ -79,6 +85,7 @@ pub mod planner;
 pub mod prop;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 /// Crate-wide result alias.

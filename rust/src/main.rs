@@ -10,6 +10,8 @@
 //! cgra compile [--preset NAME]                               compile to a CompiledNet, summarize
 //! cgra serve   --iters N [--batch B] [--preset NAME]         compile once, serve N inferences
 //!              [--verify]                                     (B lanes per µop walk when batched)
+//! cgra daemon  [--port P] [--workers W] [--batch B]          persistent NDJSON/TCP serving:
+//!              [--capacity N] [--admission reject|degrade]    registry + admission + stats
 //! cgra verify  [--artifacts DIR]                             CGRA vs XLA artifact
 //! cgra asm     FILE.casm                                     assemble + run + dump
 //! ```
@@ -32,8 +34,9 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: cgra <run|plan|report|sweep|net|compile|serve|verify|asm> [options]\n\
-                     see README.md for per-command options";
+const USAGE: &str =
+    "usage: cgra <run|plan|report|sweep|net|compile|serve|daemon|verify|asm> [options]\n\
+     see README.md for per-command options";
 
 fn dispatch() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_default();
@@ -45,6 +48,7 @@ fn dispatch() -> Result<()> {
         "net" => cmd_net(),
         "compile" => cmd_compile(),
         "serve" => cmd_serve(),
+        "daemon" => cmd_daemon(),
         "verify" => cmd_verify(),
         "asm" => cmd_asm(),
         "" | "help" | "--help" | "-h" => {
@@ -743,6 +747,101 @@ fn cmd_serve() -> Result<()> {
     );
     if verify {
         println!("golden debug-verify: every layer of every inference exact");
+    }
+    Ok(())
+}
+
+/// `cgra daemon` — the persistent serving subsystem: listen for NDJSON
+/// requests over TCP and serve them through a multi-tenant
+/// [`openedge_cgra::server::Daemon`] — bounded artifact registry,
+/// planner-priced admission control with deadlines, a batching worker
+/// pool, and a `stats` endpoint. One request object per line; see
+/// `openedge_cgra::server::protocol` for the wire format. Runs until a
+/// `{"op":"shutdown"}` request arrives, then drains in-flight work and
+/// prints a final stats summary.
+fn cmd_daemon() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &[],
+        vec![
+            OptSpec { name: "port", value: "INT", help: "TCP port (default 0 = OS-assigned)" },
+            OptSpec { name: "workers", value: "INT", help: "worker threads (default 2)" },
+            OptSpec {
+                name: "batch",
+                value: "INT",
+                help: "max inference lanes per shared uop walk (default 4; 1 = scalar)",
+            },
+            OptSpec {
+                name: "capacity",
+                value: "INT",
+                help: "artifact-registry capacity (default 32)",
+            },
+            OptSpec {
+                name: "admission",
+                value: "reject|degrade",
+                help: "deadline policy: reject outright, or degrade \
+                       (latency-remap, then batch-1) before rejecting (default degrade)",
+            },
+        ],
+    )?;
+    let port: u16 = a.num_or("port", 0u16)?;
+    let workers = a.num_or("workers", 2usize)?;
+    let batch = a.num_or("batch", 4usize)?;
+    let capacity = a.num_or("capacity", 32usize)?;
+    let policy =
+        openedge_cgra::server::AdmissionPolicy::parse(&a.str_or("admission", "degrade"))?;
+    a.reject_unknown()?;
+
+    let daemon = std::sync::Arc::new(
+        openedge_cgra::server::Daemon::builder()
+            .workers(workers)
+            .batch(batch)
+            .capacity(capacity)
+            .admission(policy)
+            .build(),
+    );
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))
+        .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "daemon listening on {addr} ({} workers, batch {}, registry capacity {}, \
+         admission {})",
+        daemon.workers(),
+        daemon.batch(),
+        daemon.registry().stats().capacity,
+        policy.label(),
+    );
+    // The smoke script scrapes the line above from a pipe — make sure
+    // it is visible before the first connection is accepted.
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+
+    openedge_cgra::server::tcp::serve(daemon.clone(), listener)?;
+
+    let stats = daemon.stats();
+    println!(
+        "daemon stopped after {:.1} s: served {} requests / {} inferences \
+         ({:.1} inf/s), rejected {}, degraded {}; registry {} hits / {} misses / \
+         {} evictions / {} compiles; {} walks over {} lanes",
+        stats.uptime_s,
+        stats.served_requests,
+        stats.served_inferences,
+        stats.throughput_inf_per_s(),
+        stats.rejected,
+        stats.degraded,
+        stats.registry.hits,
+        stats.registry.misses,
+        stats.registry.evictions,
+        stats.registry.compiles,
+        stats.walks,
+        stats.walk_lanes,
+    );
+    for t in &stats.tenants {
+        let c = t.counters;
+        println!(
+            "  tenant '{}' [{:#018x}]: {} req / {} inf, priced {:.2} uJ vs run {:.2} uJ",
+            t.name, t.session_fp, c.requests, c.inferences, c.priced_uj, c.run_uj
+        );
     }
     Ok(())
 }

@@ -266,6 +266,75 @@ impl Net {
         let (c, h, w) = self.input_dims;
         TensorChw::random(c, h, w, mag, &mut Rng::new(seed))
     }
+
+    /// Structural fingerprint of the network: input signature, per-layer
+    /// kind and hyper-parameters, requested mappings, fused-ReLU flags
+    /// and the full weight data, FNV-folded into one `u64`. Two nets
+    /// with equal fingerprints compile to interchangeable artifacts
+    /// (same programs, same baked weights); the cosmetic `name` is
+    /// deliberately excluded. The serving daemon keys its artifact
+    /// registry on this, combined with the session fingerprint
+    /// ([`crate::engine::Engine::session_fingerprint`]).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| h = (h ^ v).wrapping_mul(0x1000_0000_01b3);
+        let mix_shape = |mix: &mut dyn FnMut(u64), s: &GenConvShape| {
+            for v in [s.c, s.k, s.ih, s.iw, s.fx, s.fy, s.stride, s.pad, s.groups] {
+                mix(v as u64);
+            }
+        };
+        let mix_weights = |mix: &mut dyn FnMut(u64), w: &Weights| {
+            for v in [w.k, w.c, w.fy, w.fx] {
+                mix(v as u64);
+            }
+            for &x in &w.data {
+                mix(x as u32 as u64);
+            }
+        };
+        let (c, ih, iw) = self.input_dims;
+        for v in [c, ih, iw, self.layers.len()] {
+            mix(v as u64);
+        }
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv { shape, weights, mapping, relu } => {
+                    mix(1);
+                    mix_shape(&mut mix, shape);
+                    mix_weights(&mut mix, weights);
+                    for b in mapping.label().bytes() {
+                        mix(b as u64);
+                    }
+                    mix(*relu as u64);
+                }
+                Layer::Depthwise { shape, weights, relu } => {
+                    mix(2);
+                    mix_shape(&mut mix, shape);
+                    mix_weights(&mut mix, weights);
+                    mix(*relu as u64);
+                }
+                Layer::Pointwise { shape, weights, mapping, relu } => {
+                    mix(3);
+                    mix_shape(&mut mix, shape);
+                    mix_weights(&mut mix, weights);
+                    for b in mapping.label().bytes() {
+                        mix(b as u64);
+                    }
+                    mix(*relu as u64);
+                }
+                Layer::MaxPool { size, stride } => {
+                    mix(4);
+                    mix(*size as u64);
+                    mix(*stride as u64);
+                }
+                Layer::AvgPool { size, stride } => {
+                    mix(5);
+                    mix(*size as u64);
+                    mix(*stride as u64);
+                }
+            }
+        }
+        h
+    }
 }
 
 /// Apply a fused ReLU in place (shared by the golden chain and the

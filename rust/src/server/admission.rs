@@ -1,0 +1,368 @@
+//! Deadline admission control: price a request through the analytical
+//! planner *before* it executes and decide — admit, degrade, or reject
+//! — without simulating a single convolution.
+//!
+//! Soundness: the planner's per-layer predictions are CI-gated to ≤ 5 %
+//! MAE against the cycle-level simulator (DESIGN.md §7), and
+//! [`crate::nn::plan_network`] prices whole graphs with the *same*
+//! closed-form host glue the executor charges — so a modeled-latency
+//! admission decision is wrong only within that validated band.
+//! Callers with hard SLOs should pad deadlines by the bound; the
+//! daemon itself never runs work it already priced over budget.
+//!
+//! The **degradation ladder** (policy [`AdmissionPolicy::Degrade`])
+//! tries, in order, before rejecting:
+//! 1. *latency-remap* — an energy-objective request is re-priced under
+//!    the latency objective (the paper's shapes usually agree, but
+//!    off-grid the energy choice can be slower);
+//! 2. *batch-1* — a multi-inference request is cut to a single
+//!    inference.
+//!
+//! Every applied step is recorded in [`Admitted::degrade_steps`] and
+//! echoed in the response, so a degraded request is never silent.
+
+use anyhow::Result;
+
+use crate::nn::{plan_network, Net};
+use crate::planner::{PlanObjective, Planner};
+
+/// What the daemon does with a request whose modeled latency (queue
+/// wait + execution) blows its deadline.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AdmissionPolicy {
+    /// Reject with a structured error.
+    Reject,
+    /// Walk the degradation ladder first; reject only if no rung fits.
+    Degrade,
+}
+
+impl AdmissionPolicy {
+    /// Parse a user-facing name, case-insensitively.
+    pub fn parse(s: &str) -> Result<AdmissionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "reject" => Ok(AdmissionPolicy::Reject),
+            "degrade" => Ok(AdmissionPolicy::Degrade),
+            other => anyhow::bail!("unknown admission policy '{other}' (valid: reject, degrade)"),
+        }
+    }
+
+    /// Display label.
+    pub fn label(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// An admitted (possibly degraded) request, fully priced.
+#[derive(Clone, Debug)]
+pub struct Admitted {
+    /// The objective the admitted plan minimized (post-ladder).
+    pub objective: PlanObjective,
+    /// Inferences to run (post-ladder).
+    pub count: usize,
+    /// Planner-modeled cycles per inference.
+    pub cycles_per_inf: u64,
+    /// Planner-modeled energy per inference, µJ.
+    pub uj_per_inf: f64,
+    /// Modeled execution time of the whole request, µs.
+    pub modeled_us: f64,
+    /// Modeled queue wait at admission time, µs (backlog cycles over
+    /// the worker pool).
+    pub wait_us: f64,
+    /// Degradation-ladder rungs applied, in order (empty = as asked).
+    pub degrade_steps: Vec<&'static str>,
+}
+
+/// A structured rejection (a *normal* outcome, not an internal error).
+#[derive(Clone, Debug)]
+pub struct Rejection {
+    /// `"deadline"` (priced over budget) or `"infeasible"` (the net
+    /// cannot run under the memory bound at all).
+    pub kind: &'static str,
+    /// Human-readable detail.
+    pub detail: String,
+    /// Modeled execution time of the cheapest attempted variant, µs
+    /// (0 for infeasible nets).
+    pub modeled_us: f64,
+    /// Modeled queue wait at admission time, µs.
+    pub wait_us: f64,
+    /// The deadline the request carried, µs (`f64::INFINITY` if none —
+    /// only infeasible requests reject without one).
+    pub deadline_us: f64,
+}
+
+/// The admission decision.
+#[derive(Clone, Debug)]
+pub enum Decision {
+    /// Run it (terms in the payload).
+    Admitted(Admitted),
+    /// Don't (reason in the payload).
+    Rejected(Rejection),
+}
+
+/// Price `count` inferences of `net` under `objective` against
+/// `deadline_us` and decide. `backlog_cycles` is the modeled-cycle sum
+/// of already-admitted, unfinished work; `workers` divides it into an
+/// expected wait. Metrics-only: the only machinery consulted is the
+/// planner (memoized per shape × mapping), never the simulator —
+/// `tests/daemon_admission.rs` pins that with [`crate::engine::RunCounters`].
+pub fn admit(
+    planner: &Planner,
+    net: &Net,
+    objective: PlanObjective,
+    count: usize,
+    deadline_us: Option<f64>,
+    backlog_cycles: u64,
+    workers: usize,
+    policy: AdmissionPolicy,
+) -> Result<Decision> {
+    let clock_hz = planner.energy_model().clock_hz;
+    let us_per_cycle = 1e6 / clock_hz;
+    let wait_us = backlog_cycles as f64 * us_per_cycle / workers.max(1) as f64;
+    let mut steps: Vec<&'static str> = Vec::new();
+    let (mut obj, mut cnt) = (objective, count);
+    loop {
+        let plan = match plan_network(planner, net, obj) {
+            Ok(p) => p,
+            Err(e) => {
+                // Infeasible under the memory bound (or an invalid
+                // graph): no objective or batch change can fix it.
+                return Ok(Decision::Rejected(Rejection {
+                    kind: "infeasible",
+                    detail: format!("{e:#}"),
+                    modeled_us: 0.0,
+                    wait_us,
+                    deadline_us: deadline_us.unwrap_or(f64::INFINITY),
+                }));
+            }
+        };
+        let modeled_us = cnt as f64 * plan.total_cycles as f64 * us_per_cycle;
+        let fits = match deadline_us {
+            None => true,
+            Some(d) => wait_us + modeled_us <= d,
+        };
+        if fits {
+            return Ok(Decision::Admitted(Admitted {
+                objective: obj,
+                count: cnt,
+                cycles_per_inf: plan.total_cycles,
+                uj_per_inf: plan.total_energy_uj,
+                modeled_us,
+                wait_us,
+                degrade_steps: steps,
+            }));
+        }
+        if policy == AdmissionPolicy::Degrade {
+            if obj == PlanObjective::Energy {
+                obj = PlanObjective::Latency;
+                steps.push("latency-remap");
+                continue;
+            }
+            if cnt > 1 {
+                cnt = 1;
+                steps.push("batch-1");
+                continue;
+            }
+        }
+        let deadline = deadline_us.unwrap_or(f64::INFINITY);
+        return Ok(Decision::Rejected(Rejection {
+            kind: "deadline",
+            detail: format!(
+                "modeled {modeled_us:.1} us + queue wait {wait_us:.1} us exceeds the \
+                 {deadline:.1} us deadline{}",
+                if steps.is_empty() {
+                    String::new()
+                } else {
+                    format!(" (after degradation: {})", steps.join(", "))
+                }
+            ),
+            modeled_us,
+            wait_us,
+            deadline_us: deadline,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::CgraConfig;
+    use crate::energy::EnergyModel;
+
+    fn planner() -> Planner {
+        Planner::new(&CgraConfig::default(), &EnergyModel::default()).unwrap()
+    }
+
+    fn tiny() -> Net {
+        Net::plain_stack(1, 2, 2, 6, 3).unwrap()
+    }
+
+    #[test]
+    fn no_deadline_always_admits() {
+        let p = planner();
+        let d = admit(&p, &tiny(), PlanObjective::Latency, 3, None, 0, 1, AdmissionPolicy::Reject)
+            .unwrap();
+        match d {
+            Decision::Admitted(a) => {
+                assert_eq!(a.count, 3);
+                assert!(a.cycles_per_inf > 0 && a.uj_per_inf > 0.0);
+                assert!(a.degrade_steps.is_empty());
+                assert_eq!(a.wait_us, 0.0);
+            }
+            Decision::Rejected(r) => panic!("rejected: {}", r.detail),
+        }
+    }
+
+    #[test]
+    fn impossible_deadline_rejects_with_terms() {
+        let p = planner();
+        let d = admit(
+            &p,
+            &tiny(),
+            PlanObjective::Latency,
+            1,
+            Some(0.001),
+            0,
+            1,
+            AdmissionPolicy::Reject,
+        )
+        .unwrap();
+        match d {
+            Decision::Rejected(r) => {
+                assert_eq!(r.kind, "deadline");
+                assert!(r.modeled_us > r.deadline_us);
+                assert!(r.detail.contains("deadline"), "{}", r.detail);
+            }
+            Decision::Admitted(_) => panic!("admitted past an impossible deadline"),
+        }
+    }
+
+    #[test]
+    fn degrade_ladder_cuts_batch_then_rejects() {
+        let p = planner();
+        let net = tiny();
+        // Price one latency-objective inference to craft a deadline
+        // that fits exactly one.
+        let one = plan_network(&p, &net, PlanObjective::Latency).unwrap();
+        let one_us = one.total_cycles as f64 / p.energy_model().clock_hz * 1e6;
+        let d = admit(
+            &p,
+            &net,
+            PlanObjective::Energy,
+            4,
+            Some(1.5 * one_us),
+            0,
+            1,
+            AdmissionPolicy::Degrade,
+        )
+        .unwrap();
+        match d {
+            Decision::Admitted(a) => {
+                assert_eq!(a.count, 1);
+                assert!(a.degrade_steps.contains(&"batch-1"), "{:?}", a.degrade_steps);
+                assert_eq!(a.objective, PlanObjective::Latency);
+                assert!(a.modeled_us <= 1.5 * one_us);
+            }
+            Decision::Rejected(r) => panic!("ladder should have fit batch-1: {}", r.detail),
+        }
+        // The same request under Reject fails outright.
+        let d = admit(
+            &p,
+            &net,
+            PlanObjective::Energy,
+            4,
+            Some(1.5 * one_us),
+            0,
+            1,
+            AdmissionPolicy::Reject,
+        )
+        .unwrap();
+        assert!(matches!(d, Decision::Rejected(_)));
+        // A deadline under even one inference exhausts the ladder.
+        let d = admit(
+            &p,
+            &net,
+            PlanObjective::Energy,
+            4,
+            Some(0.5 * one_us),
+            0,
+            1,
+            AdmissionPolicy::Degrade,
+        )
+        .unwrap();
+        match d {
+            Decision::Rejected(r) => {
+                assert_eq!(r.kind, "deadline");
+                assert!(r.detail.contains("batch-1"), "{}", r.detail);
+            }
+            Decision::Admitted(a) => panic!("admitted {:?} past the ladder", a.degrade_steps),
+        }
+    }
+
+    #[test]
+    fn backlog_counts_against_the_deadline() {
+        let p = planner();
+        let net = tiny();
+        let one = plan_network(&p, &net, PlanObjective::Latency).unwrap();
+        let one_us = one.total_cycles as f64 / p.energy_model().clock_hz * 1e6;
+        // Fits with an empty queue...
+        let empty = admit(
+            &p,
+            &net,
+            PlanObjective::Latency,
+            1,
+            Some(1.5 * one_us),
+            0,
+            1,
+            AdmissionPolicy::Reject,
+        )
+        .unwrap();
+        assert!(matches!(empty, Decision::Admitted(_)));
+        // ...but not behind a backlog worth two inferences.
+        let backlog = 2 * one.total_cycles;
+        let busy = admit(
+            &p,
+            &net,
+            PlanObjective::Latency,
+            1,
+            Some(1.5 * one_us),
+            backlog,
+            1,
+            AdmissionPolicy::Reject,
+        )
+        .unwrap();
+        match busy {
+            Decision::Rejected(r) => assert!(r.wait_us > 0.0),
+            Decision::Admitted(_) => panic!("queue wait ignored"),
+        }
+        // More workers drain the same backlog faster: admits again.
+        let wide = admit(
+            &p,
+            &net,
+            PlanObjective::Latency,
+            1,
+            Some(1.5 * one_us),
+            backlog,
+            8,
+            AdmissionPolicy::Reject,
+        )
+        .unwrap();
+        assert!(matches!(wide, Decision::Admitted(_)));
+    }
+
+    #[test]
+    fn infeasible_net_rejects_structurally() {
+        let p = planner();
+        // 16ch 64x64 stride-1 valid conv blows the 4 KiB memory bound
+        // (the same shape engine tests use for over-bound errors).
+        let net = Net::plain_stack(1, 16, 16, 66, 1).unwrap();
+        let d = admit(&p, &net, PlanObjective::Latency, 1, None, 0, 1, AdmissionPolicy::Degrade)
+            .unwrap();
+        match d {
+            Decision::Rejected(r) => assert_eq!(r.kind, "infeasible"),
+            Decision::Admitted(_) => panic!("a memory-bound net was admitted"),
+        }
+    }
+}

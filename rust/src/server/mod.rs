@@ -1,0 +1,607 @@
+//! # The `cgra daemon` serving subsystem
+//!
+//! Everything before this module answers one question per process run:
+//! compile a net, execute it, print the numbers. This subsystem keeps
+//! the process *alive* and serves inference requests continuously —
+//! the deployment shape an edge accelerator actually runs in — while
+//! preserving the crate's two core contracts:
+//!
+//! - **compile-once / run-many** — an [`ArtifactRegistry`] (bounded,
+//!   sharded, LRU) caches `Arc<CompiledNet>` artifacts keyed by
+//!   *network fingerprint ⊕ session fingerprint*, so tenants with
+//!   different energy models never share pricing state, while repeat
+//!   traffic pays zero compile or program-build work (pinned by the
+//!   same [`crate::engine::RunCounters`] discipline as the engine
+//!   tests);
+//! - **metrics-only admission** — every request is priced through the
+//!   analytical planner *before* execution ([`admission`]); a request
+//!   whose modeled wait + execution blows its deadline is rejected or
+//!   degraded without simulating a single convolution.
+//!
+//! The daemon is usable two ways: in-process ([`Daemon::submit`],
+//! what the integration tests and benches drive) and over NDJSON/TCP
+//! ([`tcp::serve`], what `cgra daemon` runs). Both paths share one
+//! code body; the transport only parses and prints.
+//!
+//! ```text
+//!   TCP line ─▶ protocol::parse ─▶ Daemon::submit ─▶ admission (planner)
+//!                                        │                │ admit/degrade
+//!                                        ▼                ▼
+//!                                  ArtifactRegistry ─▶ queue ─▶ workers
+//!                                  (Arc<CompiledNet>)   (batched µop walks)
+//! ```
+
+pub mod admission;
+pub mod protocol;
+mod queue;
+pub mod registry;
+pub mod stats;
+pub mod tcp;
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cgra::CgraConfig;
+use crate::energy::EnergyModel;
+use crate::engine::Engine;
+use crate::nn::{build_preset, Net};
+use crate::planner::PlanObjective;
+
+pub use admission::{admit, Admitted, AdmissionPolicy, Decision, Rejection};
+pub use registry::{ArtifactKey, ArtifactRegistry, RegistryStats};
+pub use stats::{DaemonStats, TenantCounters, TenantStats};
+
+use queue::{Job, Shared};
+
+/// Input magnitude for daemon-generated request inputs (the CLI
+/// serve/net default).
+pub const DAEMON_INPUT_MAG: i32 = 8;
+
+/// Upper bound on inferences per request — keeps a single request from
+/// monopolizing the queue (admission already bounds modeled time, this
+/// bounds memory for the pre-generated inputs).
+pub const MAX_REQUEST_COUNT: usize = 1024;
+
+/// How a request names the network to run.
+#[derive(Clone, Debug)]
+pub enum NetSpec {
+    /// A named preset from [`crate::nn::presets`].
+    Preset {
+        /// Preset name (e.g. `paper-baseline`).
+        name: String,
+        /// Weight-generation seed.
+        seed: u64,
+    },
+    /// A plain conv stack ([`Net::plain_stack`]).
+    Stack {
+        /// Conv layers.
+        depth: usize,
+        /// Input channels.
+        c0: usize,
+        /// Output channels per layer.
+        k: usize,
+        /// Square input size.
+        hw: usize,
+        /// Weight-generation seed.
+        seed: u64,
+    },
+    /// An already-built graph (in-process callers only; not on the
+    /// wire).
+    Inline(Net),
+}
+
+impl NetSpec {
+    /// Materialize the graph.
+    pub fn build(&self) -> Result<Net> {
+        match self {
+            NetSpec::Preset { name, seed } => build_preset(name, *seed),
+            NetSpec::Stack { depth, c0, k, hw, seed } => {
+                Net::plain_stack(*depth, *c0, *k, *hw, *seed)
+            }
+            NetSpec::Inline(net) => Ok(net.clone()),
+        }
+    }
+}
+
+/// One inference request, transport-independent.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    /// Tenant name (auto-registered with the calibrated energy model on
+    /// first use).
+    pub tenant: String,
+    /// The network to run.
+    pub net: NetSpec,
+    /// Inferences to run (1..=[`MAX_REQUEST_COUNT`]).
+    pub count: usize,
+    /// Seed of the first input; lane `i` uses `input_seed + i`.
+    pub input_seed: u64,
+    /// Deadline over modeled queue wait + execution, µs. `None` always
+    /// admits.
+    pub deadline_us: Option<f64>,
+    /// Mapping objective for planning.
+    pub objective: PlanObjective,
+    /// Return the output tensors in the response.
+    pub collect_outputs: bool,
+    /// Per-request admission policy override (`None` = daemon default).
+    pub admission: Option<AdmissionPolicy>,
+}
+
+impl InferRequest {
+    /// A minimal request: one inference of `net` for `tenant`, no
+    /// deadline, latency objective, outputs not returned.
+    pub fn new(tenant: &str, net: NetSpec) -> InferRequest {
+        InferRequest {
+            tenant: tenant.to_string(),
+            net,
+            count: 1,
+            input_seed: 0,
+            deadline_us: None,
+            objective: PlanObjective::Latency,
+            collect_outputs: false,
+            admission: None,
+        }
+    }
+}
+
+/// A served request: admission terms, execution figures, and outputs
+/// if requested.
+#[derive(Clone, Debug)]
+pub struct Served {
+    /// Tenant that ran it.
+    pub tenant: String,
+    /// Name of the compiled network.
+    pub net: String,
+    /// Whether the artifact came from the registry (true) or was
+    /// compiled for this request (false).
+    pub cache_hit: bool,
+    /// Inferences executed (post-degradation).
+    pub count: usize,
+    /// The objective the admitted plan minimized (post-degradation).
+    pub objective: PlanObjective,
+    /// Degradation-ladder rungs applied, in order (empty = as asked).
+    pub degrade_steps: Vec<&'static str>,
+    /// Admission-planner cycles per inference.
+    pub priced_cycles_per_inf: u64,
+    /// Admission-planner energy per inference, µJ.
+    pub priced_uj_per_inf: f64,
+    /// Modeled execution time of the request, µs.
+    pub modeled_us: f64,
+    /// Modeled queue wait at admission, µs.
+    pub wait_us: f64,
+    /// Replay-modeled cycles per inference.
+    pub run_cycles_per_inf: u64,
+    /// Replay-modeled energy per inference, µJ.
+    pub run_uj_per_inf: f64,
+    /// Lanes of the µop walk group this request rode (> `count` when
+    /// co-batched with other requests).
+    pub walk_lanes: usize,
+    /// Output tensors, one per inference (empty unless
+    /// [`InferRequest::collect_outputs`]).
+    pub outputs: Vec<crate::conv::TensorChw>,
+}
+
+/// What `submit` produced: a served request or a structured rejection.
+/// Rejections are normal admission outcomes, not errors — `Err` from
+/// [`Daemon::submit`] means the request itself was malformed or the
+/// daemon is shutting down.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// Executed; figures in the payload.
+    Served(Served),
+    /// Refused by admission control; terms in the payload.
+    Rejected(Rejection),
+}
+
+/// One tenant: a name bound to an [`Engine`] (and therefore to a
+/// pricing session — config ⊕ energy model) plus its counters.
+pub struct Tenant {
+    name: String,
+    engine: Engine,
+    session_fp: u64,
+    counters: Mutex<TenantCounters>,
+}
+
+impl Tenant {
+    /// Tenant name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The tenant's session fingerprint (config ⊕ energy model) — the
+    /// registry-isolation half of its [`ArtifactKey`]s.
+    pub fn session_fp(&self) -> u64 {
+        self.session_fp
+    }
+
+    /// The tenant's engine (its planner prices this tenant's
+    /// admissions).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Counter snapshot.
+    pub fn counters_snapshot(&self) -> TenantCounters {
+        *self.counters.lock().unwrap()
+    }
+
+    pub(crate) fn counters(&self) -> &Mutex<TenantCounters> {
+        &self.counters
+    }
+}
+
+/// Builder for [`Daemon`] — every knob has a serving-sized default.
+pub struct DaemonBuilder {
+    cfg: CgraConfig,
+    workers: usize,
+    batch: usize,
+    capacity: usize,
+    shards: usize,
+    policy: AdmissionPolicy,
+}
+
+impl Default for DaemonBuilder {
+    fn default() -> DaemonBuilder {
+        DaemonBuilder::new()
+    }
+}
+
+impl DaemonBuilder {
+    /// Defaults: calibrated config, 2 workers, batch 4, a 32-artifact
+    /// registry over 4 shards, degrade-first admission.
+    pub fn new() -> DaemonBuilder {
+        DaemonBuilder {
+            cfg: CgraConfig::default(),
+            workers: 2,
+            batch: 4,
+            capacity: 32,
+            shards: 4,
+            policy: AdmissionPolicy::Degrade,
+        }
+    }
+
+    /// CGRA configuration shared by every tenant engine.
+    pub fn config(mut self, cfg: CgraConfig) -> DaemonBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Worker threads (clamped to ≥ 1).
+    pub fn workers(mut self, workers: usize) -> DaemonBuilder {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Max inference lanes per shared µop walk (clamped to ≥ 1; 1
+    /// disables batching).
+    pub fn batch(mut self, batch: usize) -> DaemonBuilder {
+        self.batch = batch.max(1);
+        self
+    }
+
+    /// Artifact-registry capacity (clamped to ≥ 1).
+    pub fn capacity(mut self, capacity: usize) -> DaemonBuilder {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    /// Registry lock shards (clamped to ≥ 1; use 1 for deterministic
+    /// global LRU order).
+    pub fn shards(mut self, shards: usize) -> DaemonBuilder {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Default admission policy (requests may override per-request).
+    pub fn admission(mut self, policy: AdmissionPolicy) -> DaemonBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Spawn the worker pool and return the daemon.
+    pub fn build(self) -> Daemon {
+        let shared = Arc::new(Shared::new());
+        let handles = (0..self.workers)
+            .map(|_| {
+                let shared = shared.clone();
+                let batch = self.batch;
+                std::thread::spawn(move || queue::worker_loop(shared, batch))
+            })
+            .collect();
+        Daemon {
+            cfg: self.cfg,
+            policy: self.policy,
+            batch: self.batch,
+            workers: self.workers,
+            registry: ArtifactRegistry::new(self.capacity, self.shards),
+            tenants: Mutex::new(HashMap::new()),
+            shared,
+            handles: Mutex::new(handles),
+            started: Instant::now(),
+        }
+    }
+}
+
+/// A persistent serving instance: tenants, artifact registry, admission
+/// control, worker pool. See the [module docs](self) for the shape.
+pub struct Daemon {
+    cfg: CgraConfig,
+    policy: AdmissionPolicy,
+    batch: usize,
+    workers: usize,
+    registry: ArtifactRegistry,
+    tenants: Mutex<HashMap<String, Arc<Tenant>>>,
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    started: Instant,
+}
+
+impl Daemon {
+    /// A builder with serving-sized defaults.
+    pub fn builder() -> DaemonBuilder {
+        DaemonBuilder::new()
+    }
+
+    /// The artifact registry (counter inspection; entries are managed
+    /// internally).
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Max inference lanes per shared µop walk.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Jobs queued and not yet picked up by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Declare `name`'s energy model. Idempotent for an identical
+    /// pricing session; changing a live tenant's model is refused (it
+    /// would silently re-key the tenant's registry entries).
+    pub fn register_tenant(&self, name: &str, model: EnergyModel) -> Result<Arc<Tenant>> {
+        ensure!(!name.is_empty(), "tenant name must not be empty");
+        let engine = Engine::builder()
+            .config(self.cfg.clone())
+            .energy_model(model)
+            .workers(1)
+            .build()
+            .with_context(|| format!("building engine for tenant '{name}'"))?;
+        let session_fp = engine.session_fingerprint();
+        let mut tenants = self.tenants.lock().unwrap();
+        if let Some(existing) = tenants.get(name) {
+            if existing.session_fp == session_fp {
+                return Ok(existing.clone());
+            }
+            bail!(
+                "tenant '{name}' is already registered with a different energy model \
+                 (session {:#018x} vs {:#018x})",
+                existing.session_fp,
+                session_fp
+            );
+        }
+        let tenant = Arc::new(Tenant {
+            name: name.to_string(),
+            engine,
+            session_fp,
+            counters: Mutex::new(TenantCounters::default()),
+        });
+        tenants.insert(name.to_string(), tenant.clone());
+        Ok(tenant)
+    }
+
+    /// Fetch `name`, auto-registering it with the calibrated
+    /// [`EnergyModel`] on first use.
+    pub fn tenant(&self, name: &str) -> Result<Arc<Tenant>> {
+        if let Some(t) = self.tenants.lock().unwrap().get(name) {
+            return Ok(t.clone());
+        }
+        self.register_tenant(name, EnergyModel::default())
+    }
+
+    /// Serve one request end to end: admission (planner pricing against
+    /// the deadline), registry fetch-or-compile, queued execution on
+    /// the worker pool. Blocks until the request is served or rejected.
+    ///
+    /// `Ok(Outcome::Rejected(..))` is a *normal* outcome; `Err` means a
+    /// malformed request, a failed compile, or a daemon shutting down.
+    pub fn submit(&self, req: InferRequest) -> Result<Outcome> {
+        ensure!(
+            !self.shared.stop.load(Ordering::Acquire),
+            "daemon is shutting down; request refused"
+        );
+        ensure!(
+            (1..=MAX_REQUEST_COUNT).contains(&req.count),
+            "count must be in 1..={MAX_REQUEST_COUNT}, got {}",
+            req.count
+        );
+        let tenant = self.tenant(&req.tenant)?;
+        let net = req.net.build()?;
+        let policy = req.admission.unwrap_or(self.policy);
+        let decision = admit(
+            tenant.engine.planner(),
+            &net,
+            req.objective,
+            req.count,
+            req.deadline_us,
+            self.shared.backlog_cycles.load(Ordering::Relaxed),
+            self.workers,
+            policy,
+        )?;
+        let admitted = match decision {
+            Decision::Admitted(a) => a,
+            Decision::Rejected(r) => {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                tenant.counters.lock().unwrap().rejected += 1;
+                return Ok(Outcome::Rejected(r));
+            }
+        };
+        if !admitted.degrade_steps.is_empty() {
+            self.shared.degraded.fetch_add(1, Ordering::Relaxed);
+            tenant.counters.lock().unwrap().degraded += 1;
+        }
+
+        let key = ArtifactKey { net_fp: net.fingerprint(), session_fp: tenant.session_fp };
+        let (artifact, cache_hit) =
+            self.registry.get_or_compile(key, || tenant.engine.compile_owned(net))?;
+
+        let inputs: Vec<_> = (0..admitted.count)
+            .map(|i| {
+                artifact
+                    .net()
+                    .random_input(DAEMON_INPUT_MAG, req.input_seed.wrapping_add(i as u64))
+            })
+            .collect();
+
+        // Charge the backlog for exactly what admission priced; the
+        // worker retires the same amount before replying.
+        self.shared
+            .backlog_cycles
+            .fetch_add(admitted.cycles_per_inf * admitted.count as u64, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Job {
+                tenant: tenant.clone(),
+                artifact: artifact.clone(),
+                key,
+                inputs,
+                priced_cycles_per_inf: admitted.cycles_per_inf,
+                priced_uj_per_inf: admitted.uj_per_inf,
+                collect_outputs: req.collect_outputs,
+                reply: tx,
+            });
+        }
+        self.shared.cv.notify_one();
+        let done = rx
+            .recv()
+            .context("worker pool dropped the request (daemon stopped?)")?
+            .map_err(|msg| anyhow::anyhow!("execution failed: {msg}"))?;
+        Ok(Outcome::Served(Served {
+            tenant: tenant.name.clone(),
+            net: artifact.name().to_string(),
+            cache_hit,
+            count: admitted.count,
+            objective: admitted.objective,
+            degrade_steps: admitted.degrade_steps,
+            priced_cycles_per_inf: admitted.cycles_per_inf,
+            priced_uj_per_inf: admitted.uj_per_inf,
+            modeled_us: admitted.modeled_us,
+            wait_us: admitted.wait_us,
+            run_cycles_per_inf: done.run_cycles_per_inf,
+            run_uj_per_inf: done.run_uj_per_inf,
+            walk_lanes: done.walk_lanes,
+            outputs: done.outputs,
+        }))
+    }
+
+    /// Point-in-time stats snapshot.
+    pub fn stats(&self) -> DaemonStats {
+        let mut tenants: Vec<TenantStats> = self
+            .tenants
+            .lock()
+            .unwrap()
+            .values()
+            .map(|t| TenantStats {
+                name: t.name.clone(),
+                session_fp: t.session_fp,
+                counters: *t.counters.lock().unwrap(),
+            })
+            .collect();
+        tenants.sort_by(|a, b| a.name.cmp(&b.name));
+        DaemonStats {
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            workers: self.workers,
+            batch: self.batch,
+            queue_depth: self.queue_depth(),
+            backlog_cycles: self.shared.backlog_cycles.load(Ordering::Relaxed),
+            served_requests: self.shared.served_requests.load(Ordering::Relaxed),
+            served_inferences: self.shared.served_inferences.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            degraded: self.shared.degraded.load(Ordering::Relaxed),
+            walks: self.shared.walks.load(Ordering::Relaxed),
+            walk_lanes: self.shared.walk_lanes.load(Ordering::Relaxed),
+            registry: self.registry.stats(),
+            tenants,
+        }
+    }
+
+    /// Stop accepting work, drain the queue, join the workers.
+    /// Idempotent; called by `Drop` as a backstop.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> NetSpec {
+        NetSpec::Stack { depth: 1, c0: 2, k: 2, hw: 6, seed: 3 }
+    }
+
+    #[test]
+    fn builder_clamps_and_defaults() {
+        let d = Daemon::builder().workers(0).batch(0).capacity(0).shards(0).build();
+        assert_eq!(d.workers(), 1);
+        assert_eq!(d.batch(), 1);
+        assert!(d.registry().stats().capacity >= 1);
+        d.shutdown();
+    }
+
+    #[test]
+    fn count_bounds_are_enforced() {
+        let d = Daemon::builder().workers(1).build();
+        let mut req = InferRequest::new("t", tiny_spec());
+        req.count = 0;
+        assert!(d.submit(req.clone()).is_err());
+        req.count = MAX_REQUEST_COUNT + 1;
+        assert!(d.submit(req).is_err());
+        d.shutdown();
+    }
+
+    #[test]
+    fn register_is_idempotent_but_model_changes_are_refused() {
+        let d = Daemon::builder().workers(1).build();
+        let a = d.register_tenant("t", EnergyModel::default()).unwrap();
+        let b = d.register_tenant("t", EnergyModel::default()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let mut hot = EnergyModel::default();
+        hot.e_mem_access_pj *= 2.0;
+        assert!(d.register_tenant("t", hot).is_err());
+        assert!(d.register_tenant("", EnergyModel::default()).is_err());
+        d.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_refused() {
+        let d = Daemon::builder().workers(1).build();
+        d.shutdown();
+        let err = d.submit(InferRequest::new("t", tiny_spec())).unwrap_err();
+        assert!(err.to_string().contains("shutting down"), "{err:#}");
+    }
+}

@@ -1,0 +1,324 @@
+//! The daemon's newline-delimited JSON wire protocol: one request
+//! object per line in, one response object per line out, parsed and
+//! rendered through [`crate::util::json`] (no `serde`).
+//!
+//! Requests (`"op"` selects):
+//!
+//! ```json
+//! {"op":"infer","tenant":"edge","preset":"paper-baseline","count":4,
+//!  "deadline_us":900.0,"objective":"latency","seed":3,
+//!  "return_output":false,"admission":"degrade"}
+//! {"op":"infer","depth":2,"c0":3,"k":8,"hw":16,"net_seed":7}
+//! {"op":"register","tenant":"edge","e_mem_access_pj":42.0}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Every response carries `"ok"`; failures are
+//! `{"ok":false,"error":{"kind":...,"detail":...}}` with admission
+//! rejections adding their priced terms. `register` starts from the
+//! calibrated [`EnergyModel`] and overrides any field named in the
+//! request, so a tenant's pricing session is declared entirely on the
+//! wire.
+
+use anyhow::{bail, Result};
+
+use crate::energy::EnergyModel;
+use crate::planner::PlanObjective;
+use crate::util::json::{self, Json};
+
+use super::admission::{AdmissionPolicy, Rejection};
+use super::{InferRequest, NetSpec, Served};
+
+/// A parsed wire request.
+#[derive(Debug)]
+pub enum Request {
+    /// Run inferences.
+    Infer(InferRequest),
+    /// Snapshot the stats surface.
+    Stats,
+    /// Declare a tenant's energy model up front.
+    Register {
+        /// Tenant name.
+        tenant: String,
+        /// The tenant's pricing model.
+        model: EnergyModel,
+    },
+    /// Drain and stop the daemon.
+    Shutdown,
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(f) => match f.as_i64() {
+            Some(n) if n >= 0 => Ok(Some(n as u64)),
+            _ => bail!("field '{key}' is not a non-negative integer"),
+        },
+    }
+}
+
+fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>> {
+    Ok(opt_u64(v, key)?.map(|n| n as usize))
+}
+
+fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(f) => match f.as_f64() {
+            Some(x) => Ok(Some(x)),
+            None => bail!("field '{key}' is not a number"),
+        },
+    }
+}
+
+fn opt_bool(v: &Json, key: &str) -> Result<Option<bool>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(f) => match f.as_bool() {
+            Some(b) => Ok(Some(b)),
+            None => bail!("field '{key}' is not a boolean"),
+        },
+    }
+}
+
+fn opt_str<'a>(v: &'a Json, key: &str) -> Result<Option<&'a str>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(f) => match f.as_str() {
+            Some(s) => Ok(Some(s)),
+            None => bail!("field '{key}' is not a string"),
+        },
+    }
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = json::parse(line)?;
+    let op = v.req_str("op")?;
+    match op {
+        "infer" => {
+            let net_seed = opt_u64(&v, "net_seed")?.unwrap_or(7);
+            let net = match opt_str(&v, "preset")? {
+                Some(name) => NetSpec::Preset { name: name.to_string(), seed: net_seed },
+                None => NetSpec::Stack {
+                    depth: opt_usize(&v, "depth")?.unwrap_or(4),
+                    c0: opt_usize(&v, "c0")?.unwrap_or(3),
+                    k: opt_usize(&v, "k")?.unwrap_or(16),
+                    hw: opt_usize(&v, "hw")?.unwrap_or(32),
+                    seed: net_seed,
+                },
+            };
+            Ok(Request::Infer(InferRequest {
+                tenant: opt_str(&v, "tenant")?.unwrap_or("default").to_string(),
+                net,
+                count: opt_usize(&v, "count")?.unwrap_or(1),
+                input_seed: opt_u64(&v, "seed")?.unwrap_or(0),
+                deadline_us: opt_f64(&v, "deadline_us")?,
+                objective: match opt_str(&v, "objective")? {
+                    Some(s) => PlanObjective::parse(s)?,
+                    None => PlanObjective::Latency,
+                },
+                collect_outputs: opt_bool(&v, "return_output")?.unwrap_or(false),
+                admission: match opt_str(&v, "admission")? {
+                    Some(s) => Some(AdmissionPolicy::parse(s)?),
+                    None => None,
+                },
+            }))
+        }
+        "stats" => Ok(Request::Stats),
+        "register" => {
+            let tenant = v.req_str("tenant")?.to_string();
+            let mut model = EnergyModel::default();
+            for (field, slot) in [
+                ("clock_hz", &mut model.clock_hz as &mut f64),
+                ("p_cgra_leak_mw", &mut model.p_cgra_leak_mw),
+                ("p_pe_active_mw", &mut model.p_pe_active_mw),
+                ("p_cpu_active_mw", &mut model.p_cpu_active_mw),
+                ("p_cpu_idle_mw", &mut model.p_cpu_idle_mw),
+                ("p_mem_static_mw", &mut model.p_mem_static_mw),
+                ("e_mem_access_pj", &mut model.e_mem_access_pj),
+            ] {
+                if let Some(x) = opt_f64(&v, field)? {
+                    *slot = x;
+                }
+            }
+            Ok(Request::Register { tenant, model })
+        }
+        "shutdown" => Ok(Request::Shutdown),
+        other => bail!("unknown op '{other}' (valid: infer, stats, register, shutdown)"),
+    }
+}
+
+/// Render a served inference response.
+pub fn served_json(s: &Served) -> Json {
+    let mut fields = vec![
+        ("ok", true.into()),
+        ("op", "infer".into()),
+        ("tenant", s.tenant.as_str().into()),
+        ("net", s.net.as_str().into()),
+        ("cache", if s.cache_hit { "hit" } else { "miss" }.into()),
+        ("count", s.count.into()),
+        ("objective", s.objective.label().into()),
+        (
+            "degraded",
+            Json::Arr(s.degrade_steps.iter().map(|&st| Json::Str(st.to_string())).collect()),
+        ),
+        (
+            "priced",
+            Json::obj(vec![
+                ("cycles_per_inf", s.priced_cycles_per_inf.into()),
+                ("uj_per_inf", s.priced_uj_per_inf.into()),
+                ("modeled_us", s.modeled_us.into()),
+                ("wait_us", s.wait_us.into()),
+            ]),
+        ),
+        (
+            "run",
+            Json::obj(vec![
+                ("cycles_per_inf", s.run_cycles_per_inf.into()),
+                ("uj_per_inf", s.run_uj_per_inf.into()),
+            ]),
+        ),
+        ("walk_lanes", s.walk_lanes.into()),
+    ];
+    if !s.outputs.is_empty() {
+        let outs: Vec<Json> = s
+            .outputs
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("c", t.c.into()),
+                    ("h", t.h.into()),
+                    ("w", t.w.into()),
+                    ("checksum", checksum_hex(t).into()),
+                    ("data", Json::Arr(t.data.iter().map(|&x| Json::Num(x as f64)).collect())),
+                ])
+            })
+            .collect();
+        fields.push(("outputs", Json::Arr(outs)));
+    }
+    Json::obj(fields)
+}
+
+/// FNV checksum of an output tensor, rendered as hex (u64-safe in
+/// JSON's f64 number space only up to 2^53, so a string it is).
+pub fn checksum_hex(t: &crate::conv::TensorChw) -> String {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| h = (h ^ v).wrapping_mul(0x1000_0000_01b3);
+    for v in [t.c, t.h, t.w] {
+        mix(v as u64);
+    }
+    for &x in &t.data {
+        mix(x as u32 as u64);
+    }
+    format!("{h:#018x}")
+}
+
+/// Render an admission rejection.
+pub fn rejection_json(r: &Rejection) -> Json {
+    Json::obj(vec![
+        ("ok", false.into()),
+        (
+            "error",
+            Json::obj(vec![
+                ("kind", r.kind.into()),
+                ("detail", r.detail.as_str().into()),
+                ("modeled_us", r.modeled_us.into()),
+                ("wait_us", r.wait_us.into()),
+                (
+                    "deadline_us",
+                    if r.deadline_us.is_finite() { r.deadline_us.into() } else { Json::Null },
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Render a generic failure (`bad-request`, `internal`, ...).
+pub fn error_json(kind: &str, detail: &str) -> Json {
+    Json::obj(vec![
+        ("ok", false.into()),
+        ("error", Json::obj(vec![("kind", kind.into()), ("detail", detail.into())])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_defaults_and_overrides() {
+        let r = parse_request(r#"{"op":"infer"}"#).unwrap();
+        match r {
+            Request::Infer(req) => {
+                assert_eq!(req.tenant, "default");
+                assert_eq!(req.count, 1);
+                assert!(matches!(req.net, NetSpec::Stack { depth: 4, c0: 3, k: 16, hw: 32, .. }));
+                assert_eq!(req.objective, PlanObjective::Latency);
+                assert!(req.deadline_us.is_none() && req.admission.is_none());
+                assert!(!req.collect_outputs);
+            }
+            other => panic!("{other:?}"),
+        }
+        let r = parse_request(
+            r#"{"op":"infer","tenant":"t","preset":"paper-baseline","net_seed":9,
+                "count":3,"seed":5,"deadline_us":12.5,"objective":"energy",
+                "return_output":true,"admission":"reject"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Infer(req) => {
+                assert_eq!(req.tenant, "t");
+                assert!(
+                    matches!(req.net, NetSpec::Preset { ref name, seed: 9 } if name == "paper-baseline")
+                );
+                assert_eq!((req.count, req.input_seed), (3, 5));
+                assert_eq!(req.deadline_us, Some(12.5));
+                assert_eq!(req.objective, PlanObjective::Energy);
+                assert!(req.collect_outputs);
+                assert_eq!(req.admission, Some(AdmissionPolicy::Reject));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn register_overrides_model_fields() {
+        let r = parse_request(r#"{"op":"register","tenant":"hot","e_mem_access_pj":99.0}"#)
+            .unwrap();
+        match r {
+            Request::Register { tenant, model } => {
+                assert_eq!(tenant, "hot");
+                assert_eq!(model.e_mem_access_pj, 99.0);
+                assert_eq!(model.clock_hz, EnergyModel::default().clock_hz);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_error_cleanly() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request(r#"{"tenant":"x"}"#).is_err()); // no op
+        assert!(parse_request(r#"{"op":"infer","count":-1}"#).is_err());
+        assert!(parse_request(r#"{"op":"infer","deadline_us":"soon"}"#).is_err());
+        assert!(parse_request(r#"{"op":"register"}"#).is_err()); // tenant required
+        // Error responses render with kind + detail.
+        let e = error_json("bad-request", "oops");
+        assert_eq!(e.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(e.get("error").unwrap().req_str("kind").unwrap(), "bad-request");
+    }
+
+    #[test]
+    fn checksum_is_content_sensitive() {
+        use crate::conv::TensorChw;
+        let a = TensorChw::from_vec(1, 1, 2, vec![1, 2]);
+        let b = TensorChw::from_vec(1, 1, 2, vec![2, 1]);
+        let c = TensorChw::from_vec(1, 2, 1, vec![1, 2]);
+        assert_ne!(checksum_hex(&a), checksum_hex(&b));
+        assert_ne!(checksum_hex(&a), checksum_hex(&c));
+        assert_eq!(checksum_hex(&a), checksum_hex(&a.clone()));
+    }
+}

@@ -1,0 +1,257 @@
+//! The daemon's request queue and worker loop.
+//!
+//! A single `Mutex<VecDeque<Job>>` + condvar feeds `--workers` plain
+//! `std::thread` workers (the same no-dependency threading style as
+//! [`crate::coordinator::pool`], but long-lived). Each worker:
+//!
+//! - pops the front job, then **opportunistically gathers** queued jobs
+//!   for the *same artifact key* until the walk holds up to `batch`
+//!   lanes — so bursts of same-net traffic ride one shared µop walk
+//!   (DESIGN.md §9) without any client-side coordination;
+//! - reuses per-artifact contexts from a small per-worker cache (a
+//!   [`NetCtx`] for scalar walks, a [`BatchCtx`] for batched ones) —
+//!   warm replays allocate nothing, preserving the compile-once
+//!   counter contract end to end;
+//! - updates tenant/global counters and retires the admission backlog
+//!   **before** replying, so the moment a `submit` returns, the
+//!   daemon's stats are quiescent for that request.
+//!
+//! Context reuse across recompiles is sound: an evicted-and-recompiled
+//! key denotes a bit-identical artifact (the key covers weights,
+//! config and energy model), so arena sizes match and a cached context
+//! replays the new `Arc` exactly as it did the old one.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::conv::TensorChw;
+use crate::engine::{BatchCtx, CompiledNet, NetCtx};
+
+use super::registry::ArtifactKey;
+use super::Tenant;
+
+/// Per-worker cached contexts one artifact key (bounded per worker by
+/// [`WORKER_CTX_CAP`]).
+#[derive(Default)]
+struct WorkerCtx {
+    scalar: Option<NetCtx>,
+    batched: Option<BatchCtx>,
+}
+
+/// Distinct artifacts a worker keeps warm contexts for before it
+/// resets the cache (arena reuse vs unbounded growth under many
+/// tenants/nets).
+const WORKER_CTX_CAP: usize = 8;
+
+/// One admitted request, ready to execute.
+pub(super) struct Job {
+    pub tenant: Arc<Tenant>,
+    pub artifact: Arc<CompiledNet>,
+    pub key: ArtifactKey,
+    /// Pre-generated inputs, one per inference lane.
+    pub inputs: Vec<TensorChw>,
+    /// Admission-planner cycles per inference (backlog retirement +
+    /// priced stats).
+    pub priced_cycles_per_inf: u64,
+    /// Admission-planner energy per inference, µJ.
+    pub priced_uj_per_inf: f64,
+    /// Clone the output tensors into the reply.
+    pub collect_outputs: bool,
+    pub reply: Sender<std::result::Result<JobDone, String>>,
+}
+
+/// What the worker hands back per job.
+pub(super) struct JobDone {
+    /// Output tensors in input order (empty unless requested).
+    pub outputs: Vec<TensorChw>,
+    /// Replay-modeled cycles per inference.
+    pub run_cycles_per_inf: u64,
+    /// Replay-modeled energy per inference, µJ.
+    pub run_uj_per_inf: f64,
+    /// Total lanes of the walk group this job rode (its own plus
+    /// co-batched jobs') — the observable batching factor.
+    pub walk_lanes: usize,
+}
+
+/// State shared between the daemon front end and its workers.
+pub(super) struct Shared {
+    pub queue: Mutex<VecDeque<Job>>,
+    pub cv: Condvar,
+    pub stop: AtomicBool,
+    /// Modeled cycles admitted but not yet executed.
+    pub backlog_cycles: AtomicU64,
+    pub served_requests: AtomicU64,
+    pub served_inferences: AtomicU64,
+    pub rejected: AtomicU64,
+    pub degraded: AtomicU64,
+    /// µop walks executed (scalar runs count as 1-lane walks).
+    pub walks: AtomicU64,
+    /// Lanes summed over walks.
+    pub walk_lanes: AtomicU64,
+}
+
+impl Shared {
+    pub fn new() -> Shared {
+        Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            backlog_cycles: AtomicU64::new(0),
+            served_requests: AtomicU64::new(0),
+            served_inferences: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            walks: AtomicU64::new(0),
+            walk_lanes: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The worker thread body: drain jobs until stopped *and* the queue is
+/// empty (shutdown completes in-flight work rather than dropping it).
+pub(super) fn worker_loop(shared: Arc<Shared>, batch: usize) {
+    let mut ctxs: HashMap<ArtifactKey, WorkerCtx> = HashMap::new();
+    loop {
+        let group = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(first) = q.pop_front() {
+                    break gather(first, &mut q, batch);
+                }
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        execute(&shared, &mut ctxs, group, batch);
+    }
+}
+
+/// Pull queued same-key jobs behind `first` until the walk group holds
+/// up to `batch` lanes. Other keys are left in place, order preserved.
+fn gather(first: Job, q: &mut VecDeque<Job>, batch: usize) -> Vec<Job> {
+    let mut lanes = first.inputs.len();
+    let mut group = vec![first];
+    let mut i = 0;
+    while i < q.len() && lanes < batch {
+        let fits = q[i].key == group[0].key && lanes + q[i].inputs.len() <= batch;
+        if fits {
+            let job = q.remove(i).expect("index checked");
+            lanes += job.inputs.len();
+            group.push(job);
+        } else {
+            i += 1;
+        }
+    }
+    group
+}
+
+/// Run one walk group: all jobs share one artifact; lanes are chunked
+/// by the batch limit through one reused context.
+fn execute(
+    shared: &Shared,
+    ctxs: &mut HashMap<ArtifactKey, WorkerCtx>,
+    mut group: Vec<Job>,
+    batch: usize,
+) {
+    let artifact = group[0].artifact.clone();
+    let key = group[0].key;
+    let collect = group.iter().any(|j| j.collect_outputs);
+    let mut inputs: Vec<TensorChw> = Vec::new();
+    let mut lane_counts = Vec::with_capacity(group.len());
+    for job in &mut group {
+        lane_counts.push(job.inputs.len());
+        inputs.append(&mut job.inputs);
+    }
+    let total = inputs.len();
+
+    if ctxs.len() >= WORKER_CTX_CAP && !ctxs.contains_key(&key) {
+        ctxs.clear();
+    }
+    let ctx = ctxs.entry(key).or_default();
+
+    let mut outputs: Vec<TensorChw> = Vec::new();
+    let mut run_cycles = 0u64;
+    let mut run_uj = 0.0f64;
+    let mut failure: Option<String> = None;
+    if batch > 1 && total > 1 {
+        let bctx = ctx.batched.get_or_insert_with(|| artifact.new_batch_ctx(batch));
+        for chunk in inputs.chunks(batch) {
+            match artifact.run_batch(bctx, chunk) {
+                Ok(run) => {
+                    // Per-inference figures are chunk-invariant by
+                    // construction (DESIGN.md §9).
+                    run_cycles = run.total_cycles;
+                    run_uj = run.total_energy_uj;
+                    shared.walks.fetch_add(1, Ordering::Relaxed);
+                    shared.walk_lanes.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                    if collect {
+                        outputs.extend(bctx.outputs().iter().cloned());
+                    }
+                }
+                Err(e) => {
+                    failure = Some(format!("{e:#}"));
+                    break;
+                }
+            }
+        }
+    } else {
+        let sctx = ctx.scalar.get_or_insert_with(|| artifact.new_ctx());
+        for input in &inputs {
+            match artifact.run(sctx, input) {
+                Ok(run) => {
+                    run_cycles = run.total_cycles;
+                    run_uj = run.total_energy_uj;
+                    shared.walks.fetch_add(1, Ordering::Relaxed);
+                    shared.walk_lanes.fetch_add(1, Ordering::Relaxed);
+                    if collect {
+                        outputs.push(sctx.output().clone());
+                    }
+                }
+                Err(e) => {
+                    failure = Some(format!("{e:#}"));
+                    break;
+                }
+            }
+        }
+    }
+
+    // Distribute results, settle counters *before* each reply.
+    let mut offset = 0usize;
+    for (job, lanes) in group.into_iter().zip(lane_counts) {
+        let result = match &failure {
+            Some(msg) => Err(msg.clone()),
+            None => Ok(JobDone {
+                outputs: if job.collect_outputs {
+                    outputs[offset..offset + lanes].to_vec()
+                } else {
+                    Vec::new()
+                },
+                run_cycles_per_inf: run_cycles,
+                run_uj_per_inf: run_uj,
+                walk_lanes: total,
+            }),
+        };
+        offset += lanes;
+        // Retire exactly what admission charged for these lanes.
+        let priced_total = job.priced_cycles_per_inf * lanes as u64;
+        shared.backlog_cycles.fetch_sub(priced_total, Ordering::Relaxed);
+        if failure.is_none() {
+            shared.served_requests.fetch_add(1, Ordering::Relaxed);
+            shared.served_inferences.fetch_add(lanes as u64, Ordering::Relaxed);
+            let mut stats = job.tenant.counters().lock().unwrap();
+            stats.requests += 1;
+            stats.inferences += lanes as u64;
+            stats.priced_cycles += priced_total;
+            stats.priced_uj += job.priced_uj_per_inf * lanes as f64;
+            stats.run_cycles += run_cycles * lanes as u64;
+            stats.run_uj += run_uj * lanes as f64;
+        }
+        // A dropped receiver (client gone) is fine; the work is done
+        // and accounted either way.
+        let _ = job.reply.send(result);
+    }
+}

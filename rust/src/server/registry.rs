@@ -1,0 +1,188 @@
+//! The artifact registry: a bounded, sharded, LRU cache of compiled
+//! inference artifacts shared by every tenant of a [`super::Daemon`].
+//!
+//! Keys combine the *network* fingerprint ([`crate::nn::Net::fingerprint`])
+//! with the *session* fingerprint
+//! ([`crate::engine::Engine::session_fingerprint`], the PR-2 config ⊕
+//! energy-model machinery), so two tenants share one `Arc<CompiledNet>`
+//! iff both the graph (weights included) and the pricing session are
+//! identical — tenants with different energy models never cross-hit,
+//! which `tests/registry.rs` and the end-to-end daemon test pin.
+//!
+//! Concurrency: each shard is a `Mutex<HashMap>` whose values hold an
+//! `Arc<OnceLock<..>>` cell. `get_or_compile` finds-or-inserts the cell
+//! *under* the shard lock (constant-time bookkeeping only), then runs
+//! the compile through [`OnceLock::get_or_init`] *outside* it — so one
+//! thread compiles while concurrent requesters for the same key block
+//! on the cell rather than thundering-herd compiling, and requests for
+//! other keys proceed untouched. Deterministic compile failures
+//! (memory-bound nets) are cached as errors like the point cache's
+//! skip entries, so a doomed net is priced exactly once.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::CompiledNet;
+
+/// Identity of one registry entry: network ⊕ session fingerprints.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ArtifactKey {
+    /// [`crate::nn::Net::fingerprint`] of the compiled graph.
+    pub net_fp: u64,
+    /// [`crate::engine::Engine::session_fingerprint`] of the compiling
+    /// tenant's engine (config ⊕ energy model).
+    pub session_fp: u64,
+}
+
+/// The compile-once cell: ready artifact, or the cached deterministic
+/// failure.
+type Cell = Arc<OnceLock<std::result::Result<Arc<CompiledNet>, String>>>;
+
+struct Entry {
+    cell: Cell,
+    /// Global LRU tick of the last touch (insert or hit).
+    last_used: u64,
+}
+
+/// Counter snapshot of a registry (all counters monotonic since
+/// construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Lookups that found an existing cell (in-flight compiles count:
+    /// the requester joins the compile instead of duplicating it).
+    pub hits: u64,
+    /// Lookups that created a new cell.
+    pub misses: u64,
+    /// Entries evicted to make room.
+    pub evictions: u64,
+    /// Compiles actually executed (≤ misses: evicted-and-refetched
+    /// keys recompile, concurrent same-key requests do not).
+    pub compiles: u64,
+    /// Live entries right now.
+    pub entries: usize,
+    /// Total capacity (shards × per-shard cap).
+    pub capacity: usize,
+}
+
+/// Bounded, sharded LRU cache of `Arc<CompiledNet>` artifacts.
+pub struct ArtifactRegistry {
+    shards: Vec<Mutex<HashMap<ArtifactKey, Entry>>>,
+    shard_cap: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    compiles: AtomicU64,
+}
+
+impl ArtifactRegistry {
+    /// A registry holding at most `capacity` artifacts across `shards`
+    /// lock shards (both clamped to ≥ 1). Per-shard capacity is
+    /// `ceil(capacity / shards)`; eviction is true LRU within a shard.
+    /// Tests that need deterministic global LRU order use one shard.
+    pub fn new(capacity: usize, shards: usize) -> ArtifactRegistry {
+        let shards = shards.max(1);
+        let shard_cap = capacity.max(1).div_ceil(shards);
+        ArtifactRegistry {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_cap,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            compiles: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &ArtifactKey) -> &Mutex<HashMap<ArtifactKey, Entry>> {
+        // Fold both fingerprints; the FNV step decorrelates the low
+        // bits the modulo consumes.
+        let h = (key.net_fp ^ key.session_fp.rotate_left(17)).wrapping_mul(0x1000_0000_01b3);
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    /// Fetch the artifact for `key`, compiling it via `compile` on a
+    /// miss. Returns the shared artifact and whether the lookup was a
+    /// registry hit (an in-flight compile by another thread counts as
+    /// a hit — the work is shared, not repeated). Deterministic compile
+    /// failures are cached and replayed as errors.
+    pub fn get_or_compile(
+        &self,
+        key: ArtifactKey,
+        compile: impl FnOnce() -> Result<CompiledNet>,
+    ) -> Result<(Arc<CompiledNet>, bool)> {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let (cell, hit) = {
+            let mut shard = self.shard(&key).lock().unwrap();
+            if let Some(entry) = shard.get_mut(&key) {
+                entry.last_used = tick;
+                (entry.cell.clone(), true)
+            } else {
+                if shard.len() >= self.shard_cap {
+                    // True LRU within the shard: evict the least
+                    // recently touched entry.
+                    let victim =
+                        shard.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+                    if let Some(victim) = victim {
+                        shard.remove(&victim);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let cell: Cell = Arc::new(OnceLock::new());
+                shard.insert(key, Entry { cell: cell.clone(), last_used: tick });
+                (cell, false)
+            }
+        };
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // Single-flight compile outside the shard lock: the first
+        // caller initializes, concurrent same-key callers block here,
+        // different keys never contend.
+        let outcome = cell.get_or_init(|| {
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            compile().map(Arc::new).map_err(|e| format!("{e:#}"))
+        });
+        match outcome {
+            Ok(artifact) => Ok((artifact.clone(), hit)),
+            Err(msg) => Err(anyhow!("{msg}")),
+        }
+    }
+
+    /// Whether `key` is currently resident (no counter movement, no
+    /// LRU touch) — a test/introspection peek.
+    pub fn contains(&self, key: &ArtifactKey) -> bool {
+        self.shard(key).lock().unwrap().contains_key(key)
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            compiles: self.compiles.load(Ordering::Relaxed),
+            entries: self.len(),
+            capacity: self.shard_cap * self.shards.len(),
+        }
+    }
+}
+
+// Behavioral tests (isolation, LRU, single-flight) live in
+// `tests/registry.rs`: they exercise real compiles through an Engine,
+// which is integration-level machinery.

@@ -1,0 +1,190 @@
+//! The daemon's stats surface: per-tenant and global counters, plus
+//! their JSON rendering through the crate's hand-rolled
+//! [`crate::util::json`] (no `serde`, per the repo's ADR stance).
+//!
+//! Two families of figures coexist deliberately:
+//! - **priced** — what the admission planner modeled when it admitted
+//!   the request (cycles/µJ per inference × inferences);
+//! - **run** — what the compiled artifact's replay actually modeled.
+//!
+//! The two agree within the planner's validated ≤ 5 % band; reporting
+//! both makes the admission error observable in production instead of
+//! assumed. Counters accumulate under a per-tenant mutex, updated by
+//! the worker *before* the reply is sent, so once a `submit` returns,
+//! a `stats` read is quiescent with respect to that request.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::registry::RegistryStats;
+
+/// Monotonic per-tenant counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantCounters {
+    /// Requests served to completion.
+    pub requests: u64,
+    /// Inferences executed (post-degradation counts).
+    pub inferences: u64,
+    /// Requests rejected by admission control.
+    pub rejected: u64,
+    /// Requests served after walking the degradation ladder.
+    pub degraded: u64,
+    /// Admission-planner cycles, summed over served inferences.
+    pub priced_cycles: u64,
+    /// Admission-planner energy, µJ, summed over served inferences.
+    pub priced_uj: f64,
+    /// Replay-modeled cycles, summed over served inferences.
+    pub run_cycles: u64,
+    /// Replay-modeled energy, µJ, summed over served inferences.
+    pub run_uj: f64,
+}
+
+/// One tenant's row of a [`DaemonStats`] snapshot.
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    /// Tenant name.
+    pub name: String,
+    /// The tenant's session fingerprint (config ⊕ energy model).
+    pub session_fp: u64,
+    /// Counter values.
+    pub counters: TenantCounters,
+}
+
+/// A full point-in-time snapshot of a daemon.
+#[derive(Clone, Debug)]
+pub struct DaemonStats {
+    /// Seconds since the daemon started.
+    pub uptime_s: f64,
+    /// Worker threads.
+    pub workers: usize,
+    /// Max inference lanes per shared µop walk.
+    pub batch: usize,
+    /// Jobs queued and not yet picked up.
+    pub queue_depth: usize,
+    /// Modeled cycles admitted but not yet executed (the admission
+    /// backlog term). Cycles, not time: tenants may model different
+    /// clocks, so the time conversion happens per request.
+    pub backlog_cycles: u64,
+    /// Requests served to completion, all tenants.
+    pub served_requests: u64,
+    /// Inferences executed, all tenants.
+    pub served_inferences: u64,
+    /// Requests rejected by admission control.
+    pub rejected: u64,
+    /// Requests served degraded.
+    pub degraded: u64,
+    /// µop program walks executed (a batched walk carries many lanes).
+    pub walks: u64,
+    /// Inference lanes summed over walks (`walk_lanes / walks` = the
+    /// achieved batching factor).
+    pub walk_lanes: u64,
+    /// Artifact-registry counters.
+    pub registry: RegistryStats,
+    /// Per-tenant rows, name-sorted.
+    pub tenants: Vec<TenantStats>,
+}
+
+impl DaemonStats {
+    /// Throughput over the daemon's lifetime, inferences per second of
+    /// wall clock.
+    pub fn throughput_inf_per_s(&self) -> f64 {
+        self.served_inferences as f64 / self.uptime_s.max(1e-9)
+    }
+
+    /// Render the snapshot as the `stats` response body (`ok: true`
+    /// included, so the wire shape is uniform with other responses).
+    pub fn to_json(&self) -> Json {
+        let reg = Json::obj(vec![
+            ("hits", self.registry.hits.into()),
+            ("misses", self.registry.misses.into()),
+            ("evictions", self.registry.evictions.into()),
+            ("compiles", self.registry.compiles.into()),
+            ("entries", self.registry.entries.into()),
+            ("capacity", self.registry.capacity.into()),
+        ]);
+        let mut tenants = BTreeMap::new();
+        for t in &self.tenants {
+            let c = t.counters;
+            tenants.insert(
+                t.name.clone(),
+                Json::obj(vec![
+                    ("session_fp", format!("{:#018x}", t.session_fp).into()),
+                    ("requests", c.requests.into()),
+                    ("inferences", c.inferences.into()),
+                    ("rejected", c.rejected.into()),
+                    ("degraded", c.degraded.into()),
+                    ("priced_cycles", c.priced_cycles.into()),
+                    ("priced_uj", c.priced_uj.into()),
+                    ("run_cycles", c.run_cycles.into()),
+                    ("run_uj", c.run_uj.into()),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("ok", true.into()),
+            ("op", "stats".into()),
+            ("uptime_s", self.uptime_s.into()),
+            ("workers", self.workers.into()),
+            ("batch", self.batch.into()),
+            ("queue_depth", self.queue_depth.into()),
+            ("backlog_cycles", self.backlog_cycles.into()),
+            ("served_requests", self.served_requests.into()),
+            ("served_inferences", self.served_inferences.into()),
+            ("rejected", self.rejected.into()),
+            ("degraded", self.degraded.into()),
+            ("throughput_inf_per_s", self.throughput_inf_per_s().into()),
+            ("walks", self.walks.into()),
+            ("walk_lanes", self.walk_lanes.into()),
+            ("registry", reg),
+            ("tenants", Json::Obj(tenants)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_render_includes_every_surface() {
+        let s = DaemonStats {
+            uptime_s: 2.0,
+            workers: 2,
+            batch: 4,
+            queue_depth: 1,
+            backlog_cycles: 500,
+            served_requests: 3,
+            served_inferences: 6,
+            rejected: 1,
+            degraded: 1,
+            walks: 2,
+            walk_lanes: 6,
+            registry: RegistryStats { hits: 2, misses: 1, compiles: 1, entries: 1, capacity: 8, ..Default::default() },
+            tenants: vec![TenantStats {
+                name: "edge\"box".into(), // hostile name: escaping matters
+                session_fp: 0xdead_beef,
+                counters: TenantCounters {
+                    requests: 3,
+                    inferences: 6,
+                    priced_uj: 1.25,
+                    run_uj: 1.3,
+                    ..Default::default()
+                },
+            }],
+        };
+        assert_eq!(s.throughput_inf_per_s(), 3.0);
+        let j = s.to_json();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.req_i64("served_inferences").unwrap(), 6);
+        assert_eq!(j.get("registry").unwrap().req_i64("hits").unwrap(), 2);
+        let t = j.get("tenants").unwrap().get("edge\"box").unwrap();
+        assert_eq!(t.req_str("session_fp").unwrap(), "0x00000000deadbeef");
+        assert_eq!(t.get("priced_uj").unwrap().as_f64().unwrap(), 1.25);
+        // The rendered document survives a parse round-trip despite
+        // the quote in the tenant name.
+        let text = j.to_string_compact();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back, j);
+    }
+}

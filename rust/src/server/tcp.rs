@@ -1,0 +1,115 @@
+//! NDJSON-over-TCP transport for the daemon.
+//!
+//! One `std::net::TcpListener`, one detached handler thread per
+//! connection, one JSON request object per line in, one JSON response
+//! object per line out. The transport is a thin shell: every request is
+//! parsed by [`super::protocol`] and dispatched through [`handle_line`],
+//! which is a plain function over an in-process [`Daemon`] — the
+//! protocol tests drive it without opening a socket, and the CI smoke
+//! script drives the same code over bash's `/dev/tcp`.
+//!
+//! Shutdown: a `{"op":"shutdown"}` request is answered first, then the
+//! accept loop is released by a self-connection and [`Daemon::shutdown`]
+//! drains the worker pool — in-flight requests finish, new ones are
+//! refused.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::protocol::{self, Request};
+use super::{Daemon, Outcome};
+
+/// Dispatch one request line against `daemon`. Returns the response
+/// document and whether the caller should begin daemon shutdown.
+///
+/// Never panics on hostile input: parse and execution failures render
+/// as `{"ok":false,"error":{...}}` responses.
+pub fn handle_line(daemon: &Daemon, line: &str) -> (Json, bool) {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => return (protocol::error_json("bad-request", &format!("{e:#}")), false),
+    };
+    match req {
+        Request::Infer(req) => match daemon.submit(req) {
+            Ok(Outcome::Served(s)) => (protocol::served_json(&s), false),
+            Ok(Outcome::Rejected(r)) => (protocol::rejection_json(&r), false),
+            Err(e) => (protocol::error_json("internal", &format!("{e:#}")), false),
+        },
+        Request::Stats => (daemon.stats().to_json(), false),
+        Request::Register { tenant, model } => match daemon.register_tenant(&tenant, model) {
+            Ok(t) => (
+                Json::obj(vec![
+                    ("ok", true.into()),
+                    ("op", "register".into()),
+                    ("tenant", t.name().into()),
+                    ("session_fp", format!("{:#018x}", t.session_fp()).into()),
+                ]),
+                false,
+            ),
+            Err(e) => (protocol::error_json("bad-request", &format!("{e:#}")), false),
+        },
+        Request::Shutdown => {
+            (Json::obj(vec![("ok", true.into()), ("op", "shutdown".into())]), true)
+        }
+    }
+}
+
+/// Serve NDJSON requests on `listener` until a shutdown request
+/// arrives, then drain the daemon's workers and return. Blocks the
+/// calling thread for the daemon's lifetime; per-connection handlers
+/// run on detached threads.
+pub fn serve(daemon: Arc<Daemon>, listener: TcpListener) -> Result<()> {
+    let addr = listener.local_addr().context("listener has no local address")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            // Transient accept errors (EMFILE, aborted handshakes)
+            // shouldn't kill the daemon.
+            Err(_) => continue,
+        };
+        let daemon = daemon.clone();
+        let stop = stop.clone();
+        thread::spawn(move || {
+            let _ = handle_conn(&daemon, stream, &stop, addr);
+        });
+    }
+    daemon.shutdown();
+    Ok(())
+}
+
+fn handle_conn(
+    daemon: &Daemon,
+    stream: TcpStream,
+    stop: &AtomicBool,
+    addr: std::net::SocketAddr,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = handle_line(daemon, &line);
+        writeln!(writer, "{}", resp.to_string_compact())?;
+        writer.flush()?;
+        if shutdown {
+            stop.store(true, Ordering::Release);
+            // Unblock the accept loop so `serve` can observe the flag.
+            let _ = TcpStream::connect(addr);
+            break;
+        }
+    }
+    Ok(())
+}

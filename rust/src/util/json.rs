@@ -67,6 +67,14 @@ impl Json {
         }
     }
 
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// As i64 (must be integral).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
@@ -457,6 +465,68 @@ mod tests {
         // BTreeMap ordering: keys sorted.
         assert_eq!(v.to_string_compact(), r#"{"a":2,"b":1}"#);
         assert!(v.to_string_pretty().contains("\n  \"a\": 2,"));
+    }
+
+    /// Serialize → parse must be the identity for any string content —
+    /// the daemon emits tenant and preset names verbatim inside JSON
+    /// responses, so a hostile name must never produce malformed
+    /// output. Covers every escape class the writer handles: the short
+    /// escapes, raw control characters (`\u` form), and multi-byte
+    /// UTF-8 up to astral-plane codepoints.
+    #[test]
+    fn string_escaping_round_trips() {
+        let cases: Vec<String> = vec![
+            String::new(),
+            "plain ascii".into(),
+            "quote \" inside".into(),
+            "back\\slash and \\\" both".into(),
+            "newline\nand\rreturn\tand tab".into(),
+            "\u{0}\u{1}\u{8}\u{b}\u{c}\u{1f}".into(), // raw control chars
+            "mixed \u{7} bell in text".into(),
+            "non-ascii: é ß Ω 日本語".into(),
+            "astral: \u{1F600} \u{10348}".into(),
+            "json-ish: {\"k\": [1, 2]}".into(),
+            "trailing backslash \\".into(),
+            (0u32..0x20).filter_map(char::from_u32).collect(), // every control char
+        ];
+        for s in &cases {
+            let compact = Json::Str(s.clone()).to_string_compact();
+            let back = parse(&compact).unwrap();
+            assert_eq!(back.as_str().unwrap(), s, "round-trip of {s:?} via {compact}");
+            // Escaped output must itself be pure ASCII-safe JSON: no
+            // raw control bytes survive the writer.
+            assert!(
+                compact.bytes().all(|b| b >= 0x20),
+                "raw control byte leaked into {compact:?}"
+            );
+        }
+    }
+
+    /// Escaping applies to object *keys* too (tenant names key the
+    /// daemon's per-tenant stats map), and survives pretty-printing.
+    #[test]
+    fn weird_object_keys_round_trip() {
+        let keys = ["a\"b", "tab\tkey", "uni é", "ctl\u{1}", "\\esc\\"];
+        let mut obj = std::collections::BTreeMap::new();
+        for (i, k) in keys.iter().enumerate() {
+            obj.insert(k.to_string(), Json::Num(i as f64));
+        }
+        let v = Json::Obj(obj);
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let back = parse(&text).unwrap();
+            assert_eq!(back, v, "via {text}");
+            for (i, k) in keys.iter().enumerate() {
+                assert_eq!(back.get(k).unwrap().as_i64().unwrap(), i as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn as_bool_accessor() {
+        assert_eq!(parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(parse("false").unwrap().as_bool(), Some(false));
+        assert_eq!(parse("1").unwrap().as_bool(), None);
+        assert_eq!(parse("\"true\"").unwrap().as_bool(), None);
     }
 
     #[test]

@@ -1,0 +1,57 @@
+//! CLI argument-validation behavior, driven against the real `cgra`
+//! binary (`CARGO_BIN_EXE_cgra`): bad invocations must exit non-zero
+//! with an actionable message instead of panicking or dividing by
+//! zero downstream.
+
+use std::process::Command;
+
+fn cgra(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_cgra"))
+        .args(args)
+        .output()
+        .expect("spawning the cgra binary")
+}
+
+/// `cgra serve --iters 0` used to reach the amortization divide; it
+/// must be rejected up front with a usage error naming the option.
+#[test]
+fn serve_rejects_zero_iters() {
+    let out = cgra(&["serve", "--iters", "0"]);
+    assert!(!out.status.success(), "--iters 0 must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--iters"), "the error must name the option: {stderr}");
+}
+
+#[test]
+fn serve_rejects_zero_batch() {
+    let out = cgra(&["serve", "--iters", "1", "--batch", "0"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--batch"), "{stderr}");
+}
+
+/// The help text advertises every subcommand, including the daemon.
+#[test]
+fn help_lists_daemon() {
+    let out = cgra(&["help"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("daemon"), "{stdout}");
+}
+
+/// Unknown daemon options and bad policy values fail during argument
+/// parsing — before any socket is bound.
+#[test]
+fn daemon_validates_arguments() {
+    let out = cgra(&["daemon", "--admission", "bogus"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("admission"), "{stderr}");
+
+    let out = cgra(&["daemon", "--no-such-flag", "1"]);
+    assert!(!out.status.success());
+
+    let out = cgra(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}

@@ -1,0 +1,285 @@
+//! End-to-end daemon behavior: multi-tenant serving with registry
+//! isolation, the degradation ladder, opportunistic batching, the wire
+//! protocol (with and without a real socket), and stats accounting
+//! against independent planner figures.
+
+use std::sync::Arc;
+
+use openedge_cgra::energy::EnergyModel;
+use openedge_cgra::engine::EngineBuilder;
+use openedge_cgra::nn::{plan_network, Net};
+use openedge_cgra::planner::PlanObjective;
+use openedge_cgra::server::{
+    tcp, AdmissionPolicy, Daemon, InferRequest, NetSpec, Outcome, DAEMON_INPUT_MAG,
+};
+
+fn tiny_spec(seed: u64) -> NetSpec {
+    NetSpec::Stack { depth: 1, c0: 2, k: 4, hw: 8, seed }
+}
+
+fn tiny_net(seed: u64) -> Net {
+    Net::plain_stack(1, 2, 4, 8, seed).unwrap()
+}
+
+fn hot_model() -> EnergyModel {
+    let mut m = EnergyModel::default();
+    m.e_mem_access_pj *= 2.0;
+    m.p_pe_active_mw *= 1.5;
+    m
+}
+
+fn served(outcome: Outcome) -> openedge_cgra::server::Served {
+    match outcome {
+        Outcome::Served(s) => s,
+        Outcome::Rejected(r) => panic!("unexpected rejection: {}", r.detail),
+    }
+}
+
+/// Two tenants with different energy models, interleaved traffic:
+/// outputs bit-identical to direct `CompiledNet::run`, energies
+/// diverge, the registry never cross-hits, and per-tenant priced µJ
+/// matches an independent `plan_network` twin.
+#[test]
+fn two_tenants_interleaved_with_isolated_pricing() {
+    let daemon = Daemon::builder().workers(2).batch(4).build();
+    daemon.register_tenant("cold", EnergyModel::default()).unwrap();
+    daemon.register_tenant("hot", hot_model()).unwrap();
+
+    let net_seed = 11;
+    let mut outs = Vec::new();
+    for round in 0..2u64 {
+        for tenant in ["cold", "hot"] {
+            let mut req = InferRequest::new(tenant, tiny_spec(net_seed));
+            req.input_seed = round;
+            req.collect_outputs = true;
+            let s = served(daemon.submit(req).unwrap());
+            assert_eq!(s.count, 1);
+            assert_eq!(s.cache_hit, round > 0, "round 0 compiles, round 1 hits");
+            assert!(s.degrade_steps.is_empty());
+            outs.push((tenant, round, s));
+        }
+    }
+
+    // Outputs must be bit-identical to a direct compile-and-run with
+    // the same input recipe — per tenant model (functionally identical
+    // across models too).
+    let net = tiny_net(net_seed);
+    let direct_engine = EngineBuilder::new().workers(1).build().unwrap();
+    let direct = direct_engine.compile(&net).unwrap();
+    let mut ctx = direct.new_ctx();
+    for (tenant, round, s) in &outs {
+        let input = net.random_input(DAEMON_INPUT_MAG, *round);
+        direct.run(&mut ctx, &input).unwrap();
+        assert_eq!(
+            s.outputs[0].data,
+            ctx.output().data,
+            "daemon output for tenant {tenant} round {round} must match a direct run"
+        );
+    }
+
+    // Same cycles, different energy across the two pricing sessions.
+    let cold_run = &outs[0].2;
+    let hot_run = &outs[1].2;
+    assert_eq!(cold_run.run_cycles_per_inf, hot_run.run_cycles_per_inf);
+    assert!(
+        hot_run.run_uj_per_inf > cold_run.run_uj_per_inf,
+        "the hot model must price the same run higher"
+    );
+
+    // Registry: one entry + one compile per tenant, each tenant's
+    // second request hits its own entry — no cross-tenant traffic is
+    // arithmetically possible with these counters.
+    let reg = daemon.registry().stats();
+    assert_eq!((reg.misses, reg.hits, reg.compiles, reg.entries), (2, 2, 2, 2));
+    assert_eq!(reg.evictions, 0);
+
+    // Per-tenant priced energy must match an independent planner twin.
+    let stats = daemon.stats();
+    assert_eq!(stats.served_requests, 4);
+    assert_eq!(stats.served_inferences, 4);
+    for (name, model) in [("cold", EnergyModel::default()), ("hot", hot_model())] {
+        let twin = EngineBuilder::new().energy_model(model).workers(1).build().unwrap();
+        let plan = plan_network(twin.planner(), &net, PlanObjective::Latency).unwrap();
+        let row = stats.tenants.iter().find(|t| t.name == name).unwrap();
+        assert_eq!(row.counters.requests, 2);
+        assert_eq!(row.counters.inferences, 2);
+        assert_eq!(row.counters.priced_cycles, 2 * plan.total_cycles);
+        let expect_uj = 2.0 * plan.total_energy_uj;
+        assert!(
+            (row.counters.priced_uj - expect_uj).abs() <= 1e-9 * expect_uj.abs(),
+            "tenant {name}: priced {} uJ, planner twin says {}",
+            row.counters.priced_uj,
+            expect_uj
+        );
+    }
+    daemon.shutdown();
+}
+
+/// The degradation ladder over a live daemon: a deadline that fits one
+/// inference but not four serves batch-1 under `Degrade`, rejects
+/// under a per-request `Reject` override, and the stats record both.
+#[test]
+fn deadline_degrades_or_rejects_per_policy() {
+    let daemon = Daemon::builder().workers(1).batch(1).build();
+    let tenant = daemon.tenant("t").unwrap();
+    let net = tiny_net(5);
+    let plan = plan_network(tenant.engine().planner(), &net, PlanObjective::Latency).unwrap();
+    let one_us = plan.total_cycles as f64 / tenant.engine().energy_model().clock_hz * 1e6;
+
+    let mut req = InferRequest::new("t", tiny_spec(5));
+    req.count = 4;
+    req.objective = PlanObjective::Energy;
+    req.deadline_us = Some(1.5 * one_us);
+    let s = served(daemon.submit(req.clone()).unwrap());
+    assert_eq!(s.count, 1, "the ladder must cut the batch to fit");
+    assert!(s.degrade_steps.contains(&"batch-1"), "{:?}", s.degrade_steps);
+    assert_eq!(s.objective, PlanObjective::Latency, "energy remaps to latency first");
+
+    req.admission = Some(AdmissionPolicy::Reject);
+    match daemon.submit(req).unwrap() {
+        Outcome::Rejected(r) => {
+            assert_eq!(r.kind, "deadline");
+            assert!(r.modeled_us + r.wait_us > r.deadline_us);
+        }
+        Outcome::Served(s) => panic!("Reject policy must not degrade (got count {})", s.count),
+    }
+
+    let stats = daemon.stats();
+    assert_eq!(stats.degraded, 1);
+    assert_eq!(stats.rejected, 1);
+    let row = &stats.tenants[0];
+    assert_eq!((row.counters.degraded, row.counters.rejected), (1, 1));
+    daemon.shutdown();
+}
+
+/// A count-8 request on a batch-4 daemon rides two 4-lane walks: the
+/// walk counters prove the batching, and every lane's output still
+/// matches the scalar recipe.
+#[test]
+fn multi_inference_requests_batch_lanes() {
+    let daemon = Daemon::builder().workers(1).batch(4).build();
+    let mut req = InferRequest::new("t", tiny_spec(21));
+    req.count = 8;
+    req.input_seed = 100;
+    req.collect_outputs = true;
+    let s = served(daemon.submit(req).unwrap());
+    assert_eq!(s.count, 8);
+    assert_eq!(s.walk_lanes, 8, "all lanes of the request share the walk group");
+    assert_eq!(s.outputs.len(), 8);
+
+    let stats = daemon.stats();
+    assert_eq!(stats.walks, 2, "8 lanes through batch-4 = two walks");
+    assert_eq!(stats.walk_lanes, 8);
+    assert_eq!(stats.served_inferences, 8);
+
+    // Lane i corresponds to input_seed + i, bit-exactly.
+    let net = tiny_net(21);
+    let engine = EngineBuilder::new().workers(1).build().unwrap();
+    let direct = engine.compile(&net).unwrap();
+    let mut ctx = direct.new_ctx();
+    for (i, out) in s.outputs.iter().enumerate() {
+        let input = net.random_input(DAEMON_INPUT_MAG, 100 + i as u64);
+        direct.run(&mut ctx, &input).unwrap();
+        assert_eq!(out.data, ctx.output().data, "lane {i}");
+    }
+    daemon.shutdown();
+}
+
+/// The wire protocol driven in-process through `tcp::handle_line` —
+/// no socket required: miss then hit, structured rejections, bad
+/// requests, register and stats shapes.
+#[test]
+fn protocol_handle_line_round_trip() {
+    let daemon = Daemon::builder().workers(1).batch(2).build();
+    let infer = r#"{"op":"infer","tenant":"t","depth":1,"c0":2,"k":2,"hw":6,"net_seed":3}"#;
+
+    let (resp, shutdown) = tcp::handle_line(&daemon, infer);
+    assert!(!shutdown);
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+    assert_eq!(resp.req_str("cache").unwrap(), "miss");
+    assert_eq!(resp.req_i64("count").unwrap(), 1);
+
+    let (resp, _) = tcp::handle_line(&daemon, infer);
+    assert_eq!(resp.req_str("cache").unwrap(), "hit");
+
+    // An impossible deadline with reject policy: a structured error,
+    // not a panic and not a served response.
+    let reject = r#"{"op":"infer","tenant":"t","depth":1,"c0":2,"k":2,"hw":6,"net_seed":3,
+                     "deadline_us":0.001,"admission":"reject"}"#;
+    let (resp, _) = tcp::handle_line(&daemon, &reject.replace('\n', " "));
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+    let err = resp.get("error").unwrap();
+    assert_eq!(err.req_str("kind").unwrap(), "deadline");
+    assert!(err.get("modeled_us").unwrap().as_f64().unwrap() > 0.001);
+
+    // Malformed and unknown requests degrade to bad-request errors.
+    for bad in ["not json at all", r#"{"op":"zap"}"#, r#"{"op":"infer","count":0}"#] {
+        let (resp, shutdown) = tcp::handle_line(&daemon, bad);
+        assert!(!shutdown);
+        let ok = resp.get("ok").and_then(|v| v.as_bool());
+        assert_eq!(ok, Some(false), "input {bad:?} must fail cleanly: {resp:?}");
+    }
+
+    // Register echoes the session fingerprint; stats carries both the
+    // registry block and the per-tenant rows.
+    let (resp, _) =
+        tcp::handle_line(&daemon, r#"{"op":"register","tenant":"hot","e_mem_access_pj":99.0}"#);
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(resp.req_str("session_fp").unwrap().starts_with("0x"));
+
+    let (resp, _) = tcp::handle_line(&daemon, r#"{"op":"stats"}"#);
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(resp.get("registry").unwrap().req_i64("misses").unwrap() >= 1);
+    assert!(resp.get("tenants").unwrap().get("t").is_some());
+    assert!(resp.get("tenants").unwrap().get("hot").is_some());
+
+    let (resp, shutdown) = tcp::handle_line(&daemon, r#"{"op":"shutdown"}"#);
+    assert!(shutdown);
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    daemon.shutdown();
+}
+
+/// The real TCP transport: serve on an OS-assigned port, drive a
+/// miss/hit pair and a stats query from a client socket, then shut the
+/// daemon down over the wire and join the serve thread.
+#[test]
+fn tcp_serve_round_trip() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let daemon = Arc::new(Daemon::builder().workers(1).batch(2).build());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = {
+        let daemon = daemon.clone();
+        std::thread::spawn(move || tcp::serve(daemon, listener))
+    };
+
+    let mut request = |line: &str| -> openedge_cgra::util::json::Json {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(writer, "{line}").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        openedge_cgra::util::json::parse(resp.trim()).unwrap()
+    };
+
+    let infer = r#"{"op":"infer","tenant":"t","depth":1,"c0":2,"k":2,"hw":6,"net_seed":3}"#;
+    let resp = request(infer);
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+    assert_eq!(resp.req_str("cache").unwrap(), "miss");
+    let resp = request(infer);
+    assert_eq!(resp.req_str("cache").unwrap(), "hit");
+
+    let resp = request(r#"{"op":"stats"}"#);
+    assert_eq!(resp.req_i64("served_requests").unwrap(), 2);
+
+    let resp = request(r#"{"op":"shutdown"}"#);
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    server.join().unwrap().unwrap();
+
+    // The daemon refuses work after the wire shutdown.
+    assert!(daemon.submit(InferRequest::new("t", tiny_spec(3))).is_err());
+}

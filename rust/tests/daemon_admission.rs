@@ -1,0 +1,63 @@
+//! The admission-control **metrics-only contract**: rejecting an
+//! over-deadline request consults the analytical planner and nothing
+//! else — zero program builds, zero µop decodes, zero arena
+//! allocations — asserted against the process-wide
+//! [`RunCounters`], not assumed.
+//!
+//! This file deliberately holds a single `#[test]`: the counters are
+//! process-wide, so any concurrently running test in the same binary
+//! would move them. Other integration binaries are separate processes
+//! and cannot interfere.
+
+use openedge_cgra::engine::RunCounters;
+use openedge_cgra::planner::PlanObjective;
+use openedge_cgra::server::{AdmissionPolicy, Daemon, InferRequest, NetSpec, Outcome};
+
+#[test]
+fn rejection_never_simulates() {
+    let daemon = Daemon::builder().workers(1).batch(1).build();
+    let spec = NetSpec::Stack { depth: 1, c0: 2, k: 2, hw: 6, seed: 3 };
+
+    // Warm everything once: tenant creation, planner memo for this
+    // (net, objective), artifact compile, one real execution.
+    let warm = daemon.submit(InferRequest::new("t", spec.clone())).unwrap();
+    assert!(matches!(warm, Outcome::Served(_)));
+    assert_eq!(daemon.registry().stats().compiles, 1);
+
+    // From here on, an impossible-deadline rejection must be pure
+    // arithmetic over already-memoized planner figures.
+    let engine = daemon.tenant("t").unwrap();
+    let before = RunCounters::snapshot(engine.engine());
+
+    let mut req = InferRequest::new("t", spec);
+    req.count = 4;
+    req.objective = PlanObjective::Latency;
+    req.deadline_us = Some(0.001);
+    req.admission = Some(AdmissionPolicy::Reject);
+    match daemon.submit(req).unwrap() {
+        Outcome::Rejected(r) => {
+            assert_eq!(r.kind, "deadline");
+            assert!(r.modeled_us > r.deadline_us);
+        }
+        Outcome::Served(s) => panic!("an impossible deadline was admitted (count {})", s.count),
+    }
+
+    let after = RunCounters::snapshot(engine.engine());
+    assert_eq!(
+        after.program_builds, before.program_builds,
+        "rejection must not build kernel programs"
+    );
+    assert_eq!(after.uop_decodes, before.uop_decodes, "rejection must not decode µops");
+    assert_eq!(after.arena_allocs, before.arena_allocs, "rejection must not allocate arenas");
+    // (planner_estimates is deliberately unasserted: the memoized
+    // planner may count a memo lookup as an estimate.)
+
+    // Nothing was compiled, cached, or executed for the rejected
+    // request.
+    let reg = daemon.registry().stats();
+    assert_eq!(reg.compiles, 1, "no new compile for a rejected request");
+    let stats = daemon.stats();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.served_requests, 1, "only the warm request executed");
+    daemon.shutdown();
+}

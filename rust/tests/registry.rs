@@ -1,0 +1,183 @@
+//! Artifact-registry behavior: tenant isolation by fingerprint, true
+//! LRU eviction, single-flight compiles, and cached failures — the
+//! serving subsystem's cache contract, exercised with real compiles
+//! through real engines.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use openedge_cgra::energy::EnergyModel;
+use openedge_cgra::engine::{Engine, EngineBuilder};
+use openedge_cgra::nn::Net;
+use openedge_cgra::server::{ArtifactKey, ArtifactRegistry};
+
+fn tiny_net(seed: u64) -> Net {
+    Net::plain_stack(1, 2, 2, 6, seed).unwrap()
+}
+
+fn engine_with(model: EnergyModel) -> Engine {
+    EngineBuilder::new().energy_model(model).workers(1).build().unwrap()
+}
+
+fn key_for(engine: &Engine, net: &Net) -> ArtifactKey {
+    ArtifactKey { net_fp: net.fingerprint(), session_fp: engine.session_fingerprint() }
+}
+
+/// Two tenants running the *same* net under *different* energy models
+/// must never share an artifact: same outputs (functional behavior is
+/// model-independent), different modeled energy, zero cross-hits.
+#[test]
+fn energy_model_fingerprints_isolate_tenants() {
+    let cold = engine_with(EnergyModel::default());
+    let mut hot_model = EnergyModel::default();
+    hot_model.e_mem_access_pj *= 2.0;
+    hot_model.p_pe_active_mw *= 1.5;
+    let hot = engine_with(hot_model);
+
+    let net = tiny_net(3);
+    let k_cold = key_for(&cold, &net);
+    let k_hot = key_for(&hot, &net);
+    assert_eq!(k_cold.net_fp, k_hot.net_fp, "same graph, same net fingerprint");
+    assert_ne!(k_cold.session_fp, k_hot.session_fp, "different pricing sessions");
+
+    let reg = ArtifactRegistry::new(8, 2);
+    let (a_cold, hit) = reg.get_or_compile(k_cold, || cold.compile(&net)).unwrap();
+    assert!(!hit);
+    let (a_hot, hit) = reg.get_or_compile(k_hot, || hot.compile(&net)).unwrap();
+    assert!(!hit, "a different session fingerprint must not cross-hit");
+    assert!(!Arc::ptr_eq(&a_cold, &a_hot));
+
+    // Re-fetching each tenant's key hits its own entry.
+    let (again, hit) = reg.get_or_compile(k_cold, || unreachable!("must hit")).unwrap();
+    assert!(hit);
+    assert!(Arc::ptr_eq(&a_cold, &again));
+
+    let s = reg.stats();
+    assert_eq!((s.hits, s.misses, s.compiles, s.entries), (1, 2, 2, 2));
+
+    // Functional isolation check: identical outputs, divergent energy.
+    let input = net.random_input(8, 5);
+    let mut ctx_cold = a_cold.new_ctx();
+    let mut ctx_hot = a_hot.new_ctx();
+    let run_cold = a_cold.run(&mut ctx_cold, &input).unwrap();
+    let run_hot = a_hot.run(&mut ctx_hot, &input).unwrap();
+    assert_eq!(ctx_cold.output().data, ctx_hot.output().data, "outputs are model-independent");
+    assert_eq!(run_cold.total_cycles, run_hot.total_cycles, "timing is model-independent");
+    assert!(
+        run_hot.total_energy_uj > run_cold.total_energy_uj,
+        "the hot model must price the same run higher ({} vs {})",
+        run_hot.total_energy_uj,
+        run_cold.total_energy_uj
+    );
+}
+
+/// Capacity-2, single shard: true LRU order. Touching A makes B the
+/// eviction victim when C arrives.
+#[test]
+fn lru_evicts_least_recently_touched() {
+    let engine = engine_with(EnergyModel::default());
+    let nets: Vec<Net> = (0..3).map(|i| tiny_net(10 + i)).collect();
+    let keys: Vec<ArtifactKey> = nets.iter().map(|n| key_for(&engine, n)).collect();
+    assert_ne!(keys[0].net_fp, keys[1].net_fp, "distinct weight seeds, distinct fingerprints");
+
+    let reg = ArtifactRegistry::new(2, 1);
+    reg.get_or_compile(keys[0], || engine.compile(&nets[0])).unwrap(); // A
+    reg.get_or_compile(keys[1], || engine.compile(&nets[1])).unwrap(); // B
+    reg.get_or_compile(keys[0], || unreachable!("A is resident")).unwrap(); // touch A
+    reg.get_or_compile(keys[2], || engine.compile(&nets[2])).unwrap(); // C evicts B
+
+    assert!(reg.contains(&keys[0]), "A was touched most recently before C");
+    assert!(!reg.contains(&keys[1]), "B was the least recently used entry");
+    assert!(reg.contains(&keys[2]));
+    let s = reg.stats();
+    assert_eq!((s.evictions, s.entries, s.capacity), (1, 2, 2));
+
+    // An evicted key recompiles on return (a miss, not a hit) —
+    // compile-count grows, correctness doesn't change.
+    let (_, hit) = reg.get_or_compile(keys[1], || engine.compile(&nets[1])).unwrap();
+    assert!(!hit);
+    assert_eq!(reg.stats().compiles, 4);
+}
+
+/// Eight threads racing the same cold key: exactly one compile runs;
+/// everyone gets the same `Arc`.
+#[test]
+fn concurrent_get_or_compile_is_single_flight() {
+    let engine = engine_with(EnergyModel::default());
+    let net = tiny_net(42);
+    let key = key_for(&engine, &net);
+    let reg = ArtifactRegistry::new(4, 2);
+    let compiles = AtomicUsize::new(0);
+
+    let artifacts: Vec<Arc<_>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                s.spawn(|| {
+                    let (artifact, _) = reg
+                        .get_or_compile(key, || {
+                            compiles.fetch_add(1, Ordering::SeqCst);
+                            engine.compile(&net)
+                        })
+                        .unwrap();
+                    artifact
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(compiles.load(Ordering::SeqCst), 1, "the compile must run exactly once");
+    for a in &artifacts[1..] {
+        assert!(Arc::ptr_eq(&artifacts[0], a), "every thread shares one artifact");
+    }
+    let s = reg.stats();
+    assert_eq!(s.compiles, 1);
+    assert_eq!(s.hits + s.misses, 8);
+    assert_eq!(s.misses, 1, "one thread created the cell; the rest joined it");
+}
+
+/// Deterministic compile failures are cached: a memory-bound net fails
+/// once and replays the error without recompiling.
+#[test]
+fn compile_failures_are_cached() {
+    let engine = engine_with(EnergyModel::default());
+    // 16ch 64x64 stride-1 valid conv blows the 4 KiB memory bound.
+    let doomed = Net::plain_stack(1, 16, 16, 66, 1).unwrap();
+    let key = key_for(&engine, &doomed);
+    let reg = ArtifactRegistry::new(4, 1);
+
+    let attempts = AtomicUsize::new(0);
+    let mut try_once = || {
+        reg.get_or_compile(key, || {
+            attempts.fetch_add(1, Ordering::SeqCst);
+            engine.compile(&doomed)
+        })
+    };
+    assert!(try_once().is_err());
+    assert!(try_once().is_err(), "the cached failure must replay as an error");
+    assert_eq!(attempts.load(Ordering::SeqCst), 1, "a doomed net compiles exactly once");
+}
+
+/// The net fingerprint's semantics: weights matter, cosmetic names
+/// don't, and regeneration with the same seed is stable.
+#[test]
+fn net_fingerprint_semantics() {
+    let a = tiny_net(3);
+    let b = tiny_net(3);
+    assert_eq!(a.fingerprint(), b.fingerprint(), "same seed, same graph, same fingerprint");
+
+    let mut renamed = tiny_net(3);
+    renamed.name = "some other label".to_string();
+    assert_eq!(
+        a.fingerprint(),
+        renamed.fingerprint(),
+        "the display name is cosmetic, not identity"
+    );
+
+    let other_weights = tiny_net(4);
+    assert_ne!(
+        a.fingerprint(),
+        other_weights.fingerprint(),
+        "different weights are a different artifact"
+    );
+}

@@ -1,0 +1,86 @@
+#!/usr/bin/env bash
+# Smoke-test the `cgra daemon` serving subsystem over its real NDJSON/TCP
+# transport using nothing but bash's /dev/tcp: compile-miss, cache-hit,
+# over-deadline rejection, stats shape, clean shutdown (exit 0).
+#
+# Usage: scripts/daemon_smoke.sh [path-to-cgra-binary]
+set -euo pipefail
+
+BIN="${1:-target/release/cgra}"
+[ -x "$BIN" ] || { echo "FAIL: binary '$BIN' not found or not executable" >&2; exit 1; }
+
+LOG="$(mktemp)"
+trap 'kill "$DAEMON_PID" 2>/dev/null || true; rm -f "$LOG"' EXIT
+
+"$BIN" daemon --port 0 --workers 2 --batch 4 >"$LOG" 2>&1 &
+DAEMON_PID=$!
+
+# Wait for the OS-assigned port to be announced.
+PORT=""
+for _ in $(seq 1 100); do
+    PORT="$(sed -n 's/.*listening on [0-9.]*:\([0-9]*\).*/\1/p' "$LOG")"
+    [ -n "$PORT" ] && break
+    kill -0 "$DAEMON_PID" 2>/dev/null || { echo "FAIL: daemon died during startup" >&2; cat "$LOG" >&2; exit 1; }
+    sleep 0.1
+done
+[ -n "$PORT" ] || { echo "FAIL: daemon never announced its port" >&2; cat "$LOG" >&2; exit 1; }
+echo "daemon up on port $PORT"
+
+# One request per connection: send a line, read a line.
+req() {
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf '%s\n' "$1" >&3
+    IFS= read -r RESPONSE <&3
+    exec 3<&- 3>&-
+    echo "  -> $RESPONSE"
+}
+
+expect() { # expect <needle> <label>
+    case "$RESPONSE" in
+        *"$1"*) echo "  OK: $2" ;;
+        *) echo "FAIL: $2 — expected '$1' in: $RESPONSE" >&2; exit 1 ;;
+    esac
+}
+
+INFER='{"op":"infer","tenant":"smoke","depth":1,"c0":2,"k":2,"hw":6,"net_seed":3}'
+
+echo "1. first inference compiles (registry miss)"
+req "$INFER"
+expect '"ok":true' "request served"
+expect '"cache":"miss"' "artifact compiled on first use"
+
+echo "2. repeat inference hits the registry"
+req "$INFER"
+expect '"cache":"hit"' "artifact served from the registry"
+
+echo "3. impossible deadline is rejected, not executed"
+req '{"op":"infer","tenant":"smoke","depth":1,"c0":2,"k":2,"hw":6,"net_seed":3,"deadline_us":0.001,"admission":"reject"}'
+expect '"ok":false' "rejection is a structured error"
+expect '"kind":"deadline"' "rejection names the deadline"
+
+echo "4. stats surface has the registry and tenant blocks"
+req '{"op":"stats"}'
+expect '"ok":true' "stats served"
+expect '"served_requests":2' "two requests executed"
+expect '"rejected":1' "one request rejected"
+expect '"registry"' "registry counters present"
+expect '"smoke"' "per-tenant row present"
+
+echo "5. malformed input fails cleanly"
+req 'this is not json'
+expect '"ok":false' "bad request is an error response"
+expect '"bad-request"' "error kind is bad-request"
+
+echo "6. shutdown over the wire"
+req '{"op":"shutdown"}'
+expect '"ok":true' "shutdown acknowledged"
+
+if ! wait "$DAEMON_PID"; then
+    echo "FAIL: daemon exited non-zero after shutdown" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+trap 'rm -f "$LOG"' EXIT
+echo "daemon exited cleanly; final summary:"
+tail -n +2 "$LOG" | sed 's/^/  /'
+echo "PASS: daemon smoke"

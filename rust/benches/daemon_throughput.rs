@@ -16,7 +16,7 @@
 //!
 //! `cargo bench --bench daemon_throughput`
 
-use openedge_cgra::benchkit::Bench;
+use openedge_cgra::benchkit::{Bench, ResultsWriter};
 use openedge_cgra::server::{Daemon, InferRequest, NetSpec, Outcome};
 
 fn spec(seed: u64) -> NetSpec {
@@ -59,6 +59,12 @@ fn main() {
 
     let hot_rps = 1.0 / hot.median();
     let batched_ips = 8.0 / batched.median();
+    let mut results = ResultsWriter::new("daemon_throughput");
+    results.row("hot_req_per_s", hot_rps);
+    results.row("batched_inf_per_s", batched_ips);
+    results.row("cold_req_per_s", 1.0 / cold.median());
+    results.row("stats_reads_per_s", 1.0 / stats.median());
+    results.flush();
     println!(
         "\nhot: {:.1} req/s ({:.1} inf/s at count=8, {:.2}x); cold miss: {:.1} req/s \
          ({:.2}x slower than hot); stats: {:.1} reads/s",

@@ -26,7 +26,7 @@
 //!
 //! `cargo bench --bench serving_throughput`
 
-use openedge_cgra::benchkit::Bench;
+use openedge_cgra::benchkit::{Bench, ResultsWriter};
 use openedge_cgra::engine::EngineBuilder;
 use openedge_cgra::nn;
 
@@ -60,6 +60,10 @@ fn main() {
         nn::run_network(&engine, &net, &input).expect("run")
     });
 
+    let mut results = ResultsWriter::new("serving_throughput");
+    results.row("cold_compile_s", cold.median());
+    results.row("warm_inf_per_s", 1.0 / warm.median());
+    results.row("legacy_inf_per_s", 1.0 / legacy.median());
     let warm_ips = 1.0 / warm.median();
     println!(
         "\nwarm serving: {:.1} inf/s; legacy per-call path: {:.1} inf/s ({:.2}x); \
@@ -103,10 +107,12 @@ fn main() {
         if bsz == 1 {
             b1_ips = ips;
         }
+        results.row(&format!("batched_b{bsz}_inf_per_s"), ips);
         println!(
             "  B={bsz:<2}: {ips:.1} inf/s ({:.2}x over B=1 batched, {:.2}x over scalar warm)",
             ips / b1_ips,
             ips / warm_ips,
         );
     }
+    results.flush();
 }

@@ -12,7 +12,7 @@
 //!
 //! `cargo bench --bench sim_throughput`
 
-use openedge_cgra::benchkit::Bench;
+use openedge_cgra::benchkit::{Bench, ResultsWriter};
 use openedge_cgra::cgra::{decode, decode_cached, BatchMemory, Cgra, CgraConfig, Memory};
 use openedge_cgra::conv::{random_input, random_weights, ConvShape};
 use openedge_cgra::isa::N_PES;
@@ -74,6 +74,10 @@ fn main() {
         slots / before.median() / 1e6,
         slots / after.median() / 1e6,
     );
+    let mut results = ResultsWriter::new("sim_throughput");
+    results.row("reference_slots_per_s", slots / before.median());
+    results.row("decoded_slots_per_s", slots / after.median());
+    results.row("decoded_speedup", speedup);
 
     // Batched replay: one shared µop walk across B lane images
     // (DESIGN.md §9) — the walk simulates B lanes' worth of PE slots,
@@ -104,6 +108,7 @@ fn main() {
         if bsz == 1 {
             b1_rate = rate;
         }
+        results.row(&format!("batched_b{bsz}_slots_per_s"), rate);
         println!(
             "  B={bsz:<2}: {:.1}M PE-slots/s ({:.2}x over B=1 batched, {:.2}x over scalar)",
             rate / 1e6,
@@ -123,9 +128,11 @@ fn main() {
 
     // Full convolution including all 256 launches (decoded engine +
     // decode cache end to end).
-    b.run(
+    let conv = b.run(
         "end-to-end: WP baseline conv (256 launches)",
         Some(shape.macs() as f64),
         || wp::run(&cgra, &shape, &input, &weights).expect("conv"),
     );
+    results.row("wp_conv_macs_per_s", shape.macs() as f64 / conv.median());
+    results.flush();
 }

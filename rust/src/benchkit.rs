@@ -2,9 +2,14 @@
 //!
 //! Warmup + fixed-sample measurement with median / MAD / min reporting,
 //! plus optional throughput units. Used by the `rust/benches/*.rs`
-//! targets (built with `harness = false`).
+//! targets (built with `harness = false`). Benches additionally append
+//! machine-readable `{bench, metric, value}` rows to
+//! `BENCH_RESULTS.json` via [`ResultsWriter`], so CI and scripts can
+//! diff numbers across runs without scraping report lines.
 
 use std::time::Instant;
+
+use crate::util::json::{self, Json};
 
 /// One measured series.
 #[derive(Clone, Debug)]
@@ -128,6 +133,73 @@ impl Bench {
     }
 }
 
+/// Default file machine-readable bench rows append to (repo root when
+/// benches run via `cargo bench` from `rust/`, overridable with the
+/// `BENCH_RESULTS` env var).
+pub const RESULTS_PATH: &str = "../BENCH_RESULTS.json";
+
+/// Accumulates `{bench, metric, value}` rows and appends them to the
+/// results file on [`ResultsWriter::flush`]. The file holds one JSON
+/// array; flushing parses the existing document and extends it, so
+/// successive bench binaries in one `cargo bench` run all land in the
+/// same file. IO or parse trouble never fails a bench — the writer
+/// warns on stderr and starts a fresh array instead.
+#[derive(Debug, Default)]
+pub struct ResultsWriter {
+    bench: String,
+    rows: Vec<(String, f64)>,
+}
+
+impl ResultsWriter {
+    /// A writer for one bench binary (`bench` names the source, e.g.
+    /// `sim_throughput`).
+    pub fn new(bench: &str) -> ResultsWriter {
+        ResultsWriter { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Queue one metric row.
+    pub fn row(&mut self, metric: &str, value: f64) {
+        self.rows.push((metric.to_string(), value));
+    }
+
+    /// Append the queued rows to the results file (path from the
+    /// `BENCH_RESULTS` env var, default [`RESULTS_PATH`]). Returns the
+    /// rows written; never panics.
+    pub fn flush(&mut self) -> usize {
+        let path = std::env::var("BENCH_RESULTS").unwrap_or_else(|_| RESULTS_PATH.to_string());
+        self.flush_to(&path)
+    }
+
+    /// [`ResultsWriter::flush`] to an explicit path.
+    pub fn flush_to(&mut self, path: &str) -> usize {
+        let mut all: Vec<Json> = match std::fs::read_to_string(path) {
+            Ok(text) => match json::parse(&text) {
+                Ok(Json::Arr(rows)) => rows,
+                Ok(_) | Err(_) => {
+                    eprintln!("benchkit: {path} is not a JSON array; starting fresh");
+                    Vec::new()
+                }
+            },
+            Err(_) => Vec::new(), // first run: no file yet
+        };
+        let n = self.rows.len();
+        for (metric, value) in self.rows.drain(..) {
+            all.push(Json::obj(vec![
+                ("bench", self.bench.as_str().into()),
+                ("metric", metric.as_str().into()),
+                ("value", value.into()),
+            ]));
+        }
+        let doc = Json::Arr(all).to_string_pretty();
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("benchkit: cannot write {path}: {e}");
+            return 0;
+        }
+        println!("wrote {n} result rows to {path}");
+        n
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +234,40 @@ mod tests {
         assert!(fmt_time(2e-3).contains("ms"));
         assert!(fmt_time(2e-6).contains("µs"));
         assert!(fmt_time(2e-9).contains("ns"));
+    }
+
+    #[test]
+    fn results_writer_appends_and_survives_garbage() {
+        let path =
+            std::env::temp_dir().join(format!("cgra_bench_rows_{}.json", std::process::id()));
+        let path = path.to_string_lossy().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut w = ResultsWriter::new("unit");
+        w.row("inf_per_s", 123.5);
+        assert_eq!(w.flush_to(&path), 1);
+        // A second flush appends rather than truncating.
+        let mut w2 = ResultsWriter::new("unit2");
+        w2.row("slots_per_s", 9.0);
+        assert_eq!(w2.flush_to(&path), 1);
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        match &doc {
+            Json::Arr(rows) => {
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0].req_str("bench").unwrap(), "unit");
+                assert_eq!(rows[0].req_str("metric").unwrap(), "inf_per_s");
+                assert_eq!(rows[0].get("value").unwrap().as_f64(), Some(123.5));
+                assert_eq!(rows[1].req_str("bench").unwrap(), "unit2");
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        // A corrupted file is replaced, not fatal.
+        std::fs::write(&path, "not json").unwrap();
+        let mut w3 = ResultsWriter::new("unit");
+        w3.row("x", 1.0);
+        assert_eq!(w3.flush_to(&path), 1);
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(matches!(doc, Json::Arr(rows) if rows.len() == 1));
+        let _ = std::fs::remove_file(&path);
     }
 }

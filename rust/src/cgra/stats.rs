@@ -128,6 +128,34 @@ impl RunStats {
         out
     }
 
+    /// Attribute the run's cycles to op classes, proportional to each
+    /// class's share of issue slots (largest-remainder rounding so the
+    /// attribution sums to `cycles` exactly). This is what per-launch
+    /// trace spans report (DESIGN.md §11): "where did this launch's
+    /// cycles go", in the same classes as the paper's Figure 3.
+    pub fn class_cycles(&self) -> [u64; OpClass::COUNT] {
+        let total = self.total_slots();
+        let mut out = [0u64; OpClass::COUNT];
+        if total == 0 || self.cycles == 0 {
+            return out;
+        }
+        let mut assigned = 0u64;
+        let mut rem: Vec<(u64, usize)> = Vec::with_capacity(OpClass::COUNT);
+        for c in OpClass::ALL {
+            let slots = self.class_total(c);
+            let exact = self.cycles as u128 * slots as u128;
+            out[c.idx()] = (exact / total as u128) as u64;
+            assigned += out[c.idx()];
+            rem.push(((exact % total as u128) as u64, c.idx()));
+        }
+        // Hand the rounding shortfall to the largest remainders.
+        rem.sort_by(|a, b| b.0.cmp(&a.0));
+        for (_, idx) in rem.into_iter().take((self.cycles - assigned) as usize) {
+            out[idx] += 1;
+        }
+        out
+    }
+
     /// Merge another run into this one (host drivers aggregate the
     /// per-launch stats of a full convolution).
     pub fn merge(&mut self, other: &RunStats) {
@@ -197,5 +225,20 @@ mod tests {
     #[test]
     fn empty_stats_have_zero_utilization() {
         assert_eq!(RunStats::new().utilization(), 0.0);
+    }
+
+    #[test]
+    fn class_cycles_sum_exactly() {
+        let mut s = RunStats::new();
+        s.cycles = 100;
+        s.op_mix[0][OpClass::Load.idx()] = 1;
+        s.op_mix[0][OpClass::Mul.idx()] = 1;
+        s.op_mix[0][OpClass::Sum.idx()] = 1;
+        let cc = s.class_cycles();
+        assert_eq!(cc.iter().sum::<u64>(), 100, "attribution must sum to cycles");
+        // Three equal classes: 33/33/33 plus one largest-remainder cycle.
+        assert!(cc[OpClass::Load.idx()] >= 33 && cc[OpClass::Load.idx()] <= 34);
+        assert_eq!(cc[OpClass::Nop.idx()], 0);
+        assert_eq!(RunStats::new().class_cycles(), [0; OpClass::COUNT]);
     }
 }

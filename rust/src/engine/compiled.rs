@@ -55,6 +55,7 @@ use crate::nn::graph::{golden_layer, Layer, Net};
 use crate::nn::lower::{
     cpu_baseline_cycles, decimate_into, glue_spec, host_energy_uj, pad_into, pool_into, HostOp,
 };
+use crate::obs::trace;
 
 use super::auto::{self, AutoDecision};
 use super::{relu_cost, Engine};
@@ -279,6 +280,31 @@ fn ensure_len(v: &mut Vec<i32>, len: usize) {
         kernels::common::note_arena_alloc();
     }
     v.resize(len, 0);
+}
+
+/// Attach the per-layer span arguments (modeled cycle split, launch
+/// count, resolved mapping) once the layer's accounting is final. A
+/// no-op — including the `desc` clone — when tracing is off.
+fn annotate_layer(
+    sp: &mut trace::Span,
+    cl: &CompiledLayer,
+    cycles: u64,
+    conv_cycles: u64,
+    relu_cycles: u64,
+    launches: u64,
+) {
+    if !sp.is_recording() {
+        return;
+    }
+    sp.arg("desc", cl.desc.as_str());
+    sp.arg("cycles", cycles);
+    sp.arg("conv_cycles", conv_cycles);
+    sp.arg("host_cycles", cl.host.cycles + relu_cycles);
+    sp.arg("relu_cycles", relu_cycles);
+    sp.arg("launches", launches);
+    if let Some(m) = cl.mapping {
+        sp.arg("mapping", m.label());
+    }
 }
 
 impl Engine {
@@ -582,10 +608,12 @@ impl CompiledNet {
         let mut total_energy = 0.0f64;
         let mut relu_total = 0u64;
         let mut all_exact = true;
+        let mut rsp = trace::span_dyn("engine", || format!("infer:{}", self.net.name));
 
         for (index, cl) in self.layers.iter().enumerate() {
             let lctx =
                 || format!("layer {index} ({}) of '{}'", cl.kind, self.net.name);
+            let mut lsp = trace::span_dyn("layer", || format!("L{index}:{}", cl.kind));
             let out_elems = cl.out_dims.0 * cl.out_dims.1 * cl.out_dims.2;
             let mut conv_cycles = 0u64;
             let mut conv_energy = 0.0f64;
@@ -687,6 +715,7 @@ impl CompiledNet {
             total_cycles += cycles;
             total_energy += energy_uj;
             relu_total += relu_cycles;
+            annotate_layer(&mut lsp, cl, cycles, conv_cycles, relu_cycles, launches);
             layers.push(LayerRun {
                 cycles,
                 conv_cycles,
@@ -700,6 +729,8 @@ impl CompiledNet {
             });
             std::mem::swap(&mut cur, &mut nxt);
         }
+        rsp.arg("modeled_cycles", total_cycles);
+        rsp.arg("layers", self.layers.len());
 
         let (oc, oh, ow) = self.layers.last().map(|l| l.out_dims).unwrap_or((c, h, w));
         ensure_len(&mut out.data, oc * oh * ow);
@@ -835,10 +866,13 @@ impl CompiledNet {
         let mut total_energy = 0.0f64;
         let mut relu_total = 0u64;
         let mut all_exact = true;
+        let mut rsp = trace::span_dyn("engine", || format!("infer_batch:{}", self.net.name));
+        rsp.arg("lanes", nb);
 
         for (index, cl) in self.layers.iter().enumerate() {
             let lctx =
                 || format!("layer {index} ({}) of '{}'", cl.kind, self.net.name);
+            let mut lsp = trace::span_dyn("layer", || format!("L{index}:{}", cl.kind));
             let out_elems = cl.out_dims.0 * cl.out_dims.1 * cl.out_dims.2;
             let in_elems = cl.in_dims.0 * cl.in_dims.1 * cl.in_dims.2;
             let mut conv_cycles = 0u64;
@@ -994,6 +1028,7 @@ impl CompiledNet {
             total_cycles += cycles;
             total_energy += energy_uj;
             relu_total += relu_cycles;
+            annotate_layer(&mut lsp, cl, cycles, conv_cycles, relu_cycles, launches);
             layers.push(LayerRun {
                 cycles,
                 conv_cycles,
@@ -1007,6 +1042,8 @@ impl CompiledNet {
             });
             std::mem::swap(&mut cur, &mut nxt);
         }
+        rsp.arg("modeled_cycles", total_cycles);
+        rsp.arg("layers", self.layers.len());
 
         let (oc, oh, ow) = self.layers.last().map(|l| l.out_dims).unwrap_or((c, h, w));
         let out_elems = oc * oh * ow;

@@ -42,11 +42,12 @@ use anyhow::{ensure, Result};
 
 use crate::cgra::{
     decode, decode_cached, BatchMemory, Cgra, CgraConfig, DecodedProgram, Memory, MemStats,
-    RunStats, DECODE_CACHE_CAPACITY,
+    OpClass, RunStats, DECODE_CACHE_CAPACITY,
 };
 use crate::conv::{im2col_patch, patch_len, ConvShape, TensorChw, TensorHwc, Weights};
 use crate::cpu_ref::CpuModel;
 use crate::isa::N_PES;
+use crate::obs::trace;
 
 use super::common::{ConvOutcome, HostCostModel, LatencyBreakdown, Mapping, MemLayout};
 use super::{dw, ip, op_direct, op_im2col, wp};
@@ -583,6 +584,7 @@ impl CompiledKernel {
         let shape = &self.shape;
         let cfg = cgra.config();
         let host = HostCostModel::default();
+        let mut ksp = trace::span_dyn("kernel", || format!("kernel:{}", self.mapping.label()));
 
         if let Plan::Cpu = self.plan {
             return self.run_cpu(input, out);
@@ -605,7 +607,7 @@ impl CompiledKernel {
             Plan::Wp { layout } => {
                 scratch.mem.poke_slice(layout.input, input);
                 for dp in &self.progs {
-                    let s = cgra.run_decoded(dp, &mut scratch.mem)?;
+                    let s = walk_decoded(cgra, self.mapping, launches, dp, &mut scratch.mem)?;
                     stats.merge(&s);
                     launches += 1;
                 }
@@ -614,7 +616,7 @@ impl CompiledKernel {
             Plan::Dw { lay } => {
                 scratch.mem.poke_slice(lay.input, input);
                 for dp in &self.progs {
-                    let s = cgra.run_decoded(dp, &mut scratch.mem)?;
+                    let s = walk_decoded(cgra, self.mapping, launches, dp, &mut scratch.mem)?;
                     stats.merge(&s);
                     launches += 1;
                 }
@@ -623,7 +625,7 @@ impl CompiledKernel {
             Plan::OpDirect { layout } => {
                 scratch.mem.poke_slice(layout.input, input);
                 for dp in &self.progs {
-                    let s = cgra.run_decoded(dp, &mut scratch.mem)?;
+                    let s = walk_decoded(cgra, self.mapping, launches, dp, &mut scratch.mem)?;
                     stats.merge(&s);
                     launches += 1;
                 }
@@ -651,7 +653,13 @@ impl CompiledKernel {
                             scratch.mem.poke_slice(slot, &scratch.patch);
                             cpu_copies += copied;
                             cpu_im2col += copied * host.im2col_cycles_per_elem;
-                            let s = cgra.run_decoded(&self.progs[idx], &mut scratch.mem)?;
+                            let s = walk_decoded(
+                                cgra,
+                                self.mapping,
+                                launches,
+                                &self.progs[idx],
+                                &mut scratch.mem,
+                            )?;
                             cpu_hidden += s.cycles.min(copied * host.im2col_cycles_per_elem);
                             stats.merge(&s);
                             launches += 1;
@@ -687,7 +695,13 @@ impl CompiledKernel {
                         for _k in 0..shape.k {
                             cpu_copies += patch_words as u64;
                             cpu_im2col += patch_words as u64 * host.im2col_cycles_per_elem;
-                            let s = cgra.run_decoded(&self.progs[idx], &mut scratch.mem)?;
+                            let s = walk_decoded(
+                                cgra,
+                                self.mapping,
+                                launches,
+                                &self.progs[idx],
+                                &mut scratch.mem,
+                            )?;
                             cpu_hidden +=
                                 s.cycles.min(patch_words as u64 * host.im2col_cycles_per_elem);
                             stats.merge(&s);
@@ -710,6 +724,8 @@ impl CompiledKernel {
         latency.cgra_cycles = stats.cycles;
         latency.launch_cycles = launches * cfg.launch_overhead + cfg.instruction_load_overhead;
         latency.launches = launches;
+        ksp.arg("launches", launches);
+        ksp.arg("cgra_cycles", stats.cycles);
         Ok(ConvOutcome {
             mapping: self.mapping,
             shape: *shape,
@@ -779,6 +795,8 @@ impl CompiledKernel {
         let shape = &self.shape;
         let cfg = cgra.config();
         let host = HostCostModel::default();
+        let mut ksp = trace::span_dyn("kernel", || format!("kernel:{}", self.mapping.label()));
+        ksp.arg("lanes", nb);
 
         if let Plan::Cpu = self.plan {
             let mut last = None;
@@ -812,7 +830,8 @@ impl CompiledKernel {
                     );
                 }
                 for dp in &self.progs {
-                    let s = cgra.run_decoded_batch(dp, &mut scratch.mem, nb)?;
+                    let s =
+                        walk_decoded_batch(cgra, self.mapping, launches, dp, &mut scratch.mem, nb)?;
                     stats.merge(&s);
                     launches += 1;
                 }
@@ -827,7 +846,8 @@ impl CompiledKernel {
                     );
                 }
                 for dp in &self.progs {
-                    let s = cgra.run_decoded_batch(dp, &mut scratch.mem, nb)?;
+                    let s =
+                        walk_decoded_batch(cgra, self.mapping, launches, dp, &mut scratch.mem, nb)?;
                     stats.merge(&s);
                     launches += 1;
                 }
@@ -871,8 +891,14 @@ impl CompiledKernel {
                             }
                             cpu_copies += copied;
                             cpu_im2col += copied * host.im2col_cycles_per_elem;
-                            let s =
-                                cgra.run_decoded_batch(&self.progs[idx], &mut scratch.mem, nb)?;
+                            let s = walk_decoded_batch(
+                                cgra,
+                                self.mapping,
+                                launches,
+                                &self.progs[idx],
+                                &mut scratch.mem,
+                                nb,
+                            )?;
                             cpu_hidden += s.cycles.min(copied * host.im2col_cycles_per_elem);
                             stats.merge(&s);
                             launches += 1;
@@ -916,8 +942,14 @@ impl CompiledKernel {
                         for _k in 0..shape.k {
                             cpu_copies += patch_words as u64;
                             cpu_im2col += patch_words as u64 * host.im2col_cycles_per_elem;
-                            let s =
-                                cgra.run_decoded_batch(&self.progs[idx], &mut scratch.mem, nb)?;
+                            let s = walk_decoded_batch(
+                                cgra,
+                                self.mapping,
+                                launches,
+                                &self.progs[idx],
+                                &mut scratch.mem,
+                                nb,
+                            )?;
                             cpu_hidden +=
                                 s.cycles.min(patch_words as u64 * host.im2col_cycles_per_elem);
                             stats.merge(&s);
@@ -940,6 +972,8 @@ impl CompiledKernel {
         latency.cgra_cycles = stats.cycles;
         latency.launch_cycles = launches * cfg.launch_overhead + cfg.instruction_load_overhead;
         latency.launches = launches;
+        ksp.arg("launches", launches);
+        ksp.arg("cgra_cycles", stats.cycles);
         Ok(ConvOutcome {
             mapping: self.mapping,
             shape: *shape,
@@ -990,6 +1024,55 @@ impl CompiledKernel {
             footprint_bytes: self.footprint_bytes,
         })
     }
+}
+
+/// Attach the standard walk-span arguments: launch index, lane count,
+/// walk cycles, and the op-class cycle attribution (DESIGN.md §11) —
+/// "where did this launch's cycles go", in the paper's Fig. 3 classes.
+fn annotate_walk(sp: &mut trace::Span, launch: u64, lanes: usize, s: &RunStats) {
+    sp.arg("launch", launch);
+    sp.arg("lanes", lanes);
+    sp.arg("cycles", s.cycles);
+    sp.arg("steps", s.steps);
+    sp.arg("contention_cycles", s.contention_cycles);
+    let cc = s.class_cycles();
+    for c in OpClass::ALL {
+        sp.arg(c.label(), cc[c.idx()]);
+    }
+}
+
+/// One traced scalar simulator walk. When tracing is off this is
+/// exactly `cgra.run_decoded` plus one relaxed atomic load.
+fn walk_decoded(
+    cgra: &Cgra,
+    mapping: Mapping,
+    launch: u64,
+    dp: &DecodedProgram,
+    mem: &mut Memory,
+) -> Result<RunStats> {
+    let mut sp = trace::span_dyn("walk", || format!("walk:{}", mapping.label()));
+    let s = cgra.run_decoded(dp, mem)?;
+    if sp.is_recording() {
+        annotate_walk(&mut sp, launch, 1, &s);
+    }
+    Ok(s)
+}
+
+/// One traced batched simulator walk (`nb` lanes per shared µop walk).
+fn walk_decoded_batch(
+    cgra: &Cgra,
+    mapping: Mapping,
+    launch: u64,
+    dp: &DecodedProgram,
+    mem: &mut BatchMemory,
+    nb: usize,
+) -> Result<RunStats> {
+    let mut sp = trace::span_dyn("walk", || format!("walk:{}", mapping.label()));
+    let s = cgra.run_decoded_batch(dp, mem, nb)?;
+    if sp.is_recording() {
+        annotate_walk(&mut sp, launch, nb, &s);
+    }
+    Ok(s)
 }
 
 /// Copy a kernel's output region out of the memory image.

@@ -59,6 +59,11 @@
 //!   degradation ladder, a batching worker pool, and a stats surface —
 //!   in-process ([`server::Daemon`]) or NDJSON over TCP
 //!   ([`server::tcp`]).
+//! - [`obs`] — observability: a free-when-off span tracer covering the
+//!   whole request path (daemon accept → admission → queue → layers →
+//!   µop walks) with Chrome trace-event export (`cgra trace`), plus
+//!   always-on counters/gauges/log2 histograms behind the daemon's
+//!   p50/p95/p99 stats fields.
 //! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and verifies the simulator element-exactly against them.
 //! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5),
@@ -81,6 +86,7 @@ pub mod isa;
 pub mod kernels;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod planner;
 pub mod prop;
 pub mod report;

@@ -12,6 +12,8 @@
 //!              [--verify]                                     (B lanes per µop walk when batched)
 //! cgra daemon  [--port P] [--workers W] [--batch B]          persistent NDJSON/TCP serving:
 //!              [--capacity N] [--admission reject|degrade]    registry + admission + stats
+//! cgra trace   [--preset NAME] [--iters N] [--out FILE]      run compiled inferences under the
+//!                                                             span tracer, write Chrome JSON
 //! cgra verify  [--artifacts DIR]                             CGRA vs XLA artifact
 //! cgra asm     FILE.casm                                     assemble + run + dump
 //! ```
@@ -35,7 +37,7 @@ fn main() {
 }
 
 const USAGE: &str =
-    "usage: cgra <run|plan|report|sweep|net|compile|serve|daemon|verify|asm> [options]\n\
+    "usage: cgra <run|plan|report|sweep|net|compile|serve|daemon|trace|verify|asm> [options]\n\
      see README.md for per-command options";
 
 fn dispatch() -> Result<()> {
@@ -49,6 +51,7 @@ fn dispatch() -> Result<()> {
         "compile" => cmd_compile(),
         "serve" => cmd_serve(),
         "daemon" => cmd_daemon(),
+        "trace" => cmd_trace(),
         "verify" => cmd_verify(),
         "asm" => cmd_asm(),
         "" | "help" | "--help" | "-h" => {
@@ -666,11 +669,15 @@ fn cmd_serve() -> Result<()> {
     // Contiguous iteration shards, one job per worker; each worker
     // allocates its context once and replays its share warm, `batch`
     // lanes per shared µop walk (ragged final chunk per shard).
+    // `wall_us` collects the *observed* per-inference wall time — the
+    // modeled cycle figures below are simulator arithmetic, not clock.
+    let wall_us = std::sync::Arc::new(openedge_cgra::obs::metrics::Histogram::new());
     let shard = (iters as usize).div_ceil(workers.max(1));
     let jobs: Vec<_> = (0..iters)
         .step_by(shard.max(1))
         .map(|lo| {
             let compiled = compiled.clone();
+            let wall_us = wall_us.clone();
             let hi = (lo + shard as u64).min(iters);
             move || -> Result<(u64, u64, f64)> {
                 let (mut cycles, mut energy) = (0u64, 0.0f64);
@@ -682,6 +689,7 @@ fn cmd_serve() -> Result<()> {
                         let inputs: Vec<_> = (0..n as u64)
                             .map(|j| compiled.net().random_input(8, seed ^ 0xabcd ^ (i + j)))
                             .collect();
+                        let t = std::time::Instant::now();
                         let run = if verify {
                             let run = compiled.run_batch_verified(&mut ctx, &inputs)?;
                             if run.exact != Some(true) {
@@ -695,6 +703,10 @@ fn cmd_serve() -> Result<()> {
                         } else {
                             compiled.run_batch(&mut ctx, &inputs)?
                         };
+                        let per_inf_us = t.elapsed().as_micros() as u64 / n as u64;
+                        for _ in 0..n {
+                            wall_us.record(per_inf_us);
+                        }
                         cycles = run.total_cycles;
                         energy = run.total_energy_uj;
                         i += n as u64;
@@ -703,6 +715,7 @@ fn cmd_serve() -> Result<()> {
                     let mut ctx = compiled.new_ctx();
                     for i in lo..hi {
                         let input = compiled.net().random_input(8, seed ^ 0xabcd ^ i);
+                        let t = std::time::Instant::now();
                         let run = if verify {
                             let run = compiled.run_verified(&mut ctx, &input)?;
                             if run.exact != Some(true) {
@@ -714,6 +727,7 @@ fn cmd_serve() -> Result<()> {
                         } else {
                             compiled.run(&mut ctx, &input)?
                         };
+                        wall_us.record(t.elapsed().as_micros() as u64);
                         cycles = run.total_cycles;
                         energy = run.total_energy_uj;
                     }
@@ -741,6 +755,7 @@ fn cmd_serve() -> Result<()> {
         served as f64 / serve_s.max(1e-9),
         compile_s * 1e3 / served as f64,
     );
+    println!("observed wall/inference: {}", wall_us.summary().human("us"));
     println!(
         "modeled per-inference: {cycles} cycles, {energy:.2} uJ \
          (identical to the interpreted path by construction)"
@@ -836,6 +851,10 @@ fn cmd_daemon() -> Result<()> {
         stats.walks,
         stats.walk_lanes,
     );
+    if stats.e2e_us.count > 0 {
+        println!("  observed e2e latency/request: {}", stats.e2e_us.human("us"));
+        println!("  observed queue wait/job:      {}", stats.queue_wait_us.human("us"));
+    }
     for t in &stats.tenants {
         let c = t.counters;
         println!(
@@ -843,6 +862,94 @@ fn cmd_daemon() -> Result<()> {
             t.name, t.session_fp, c.requests, c.inferences, c.priced_uj, c.run_uj
         );
     }
+    Ok(())
+}
+
+/// `cgra trace` — run compiled inferences under the span tracer and
+/// export a Chrome trace-event file (`chrome://tracing` / Perfetto).
+/// The trace nests one span per inference, per layer, per kernel and
+/// per µop-walk launch, with per-launch cycles attributed to the
+/// paper's Figure-3 op classes. A per-layer modeled-cycle breakdown
+/// table is printed alongside.
+fn cmd_trace() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &[],
+        vec![
+            OptSpec {
+                name: "preset",
+                value: "NAME",
+                help: "named network: mobilenet-mini | paper-baseline | vgg-mini \
+                       (default: a plain --depth/--c0/--k/--hw conv stack)",
+            },
+            OptSpec { name: "iters", value: "INT", help: "traced inferences (default 3)" },
+            OptSpec {
+                name: "out",
+                value: "FILE",
+                help: "Chrome trace-event output path (default trace.json)",
+            },
+            OptSpec { name: "depth", value: "INT", help: "plain stack: conv layers" },
+            OptSpec { name: "c0", value: "INT", help: "plain stack: input channels" },
+            OptSpec { name: "k", value: "INT", help: "plain stack: channels per layer" },
+            OptSpec { name: "hw", value: "INT", help: "plain stack: input height=width" },
+            OptSpec { name: "seed", value: "INT", help: "weight/data seed" },
+        ],
+    )?;
+    let seed = a.num_or("seed", 7u64)?;
+    let iters: u64 = a.num_or("iters", 3u64)?;
+    let out = a.str_or("out", "trace.json");
+    let net = net_from_args(&a, seed)?;
+    a.reject_unknown()?;
+    anyhow::ensure!(iters >= 1, "--iters must be at least 1");
+
+    let engine = EngineBuilder::new().build()?;
+    let compiled = engine.compile_owned(net)?;
+    let mut ctx = compiled.new_ctx();
+    // One warm-up run outside the session: the trace shows the serving
+    // steady state, not first-touch effects.
+    let input = compiled.net().random_input(8, seed ^ 0xabcd);
+    compiled.run(&mut ctx, &input)?;
+
+    let session = openedge_cgra::obs::trace::session();
+    let mut last = None;
+    for i in 0..iters {
+        let input = compiled.net().random_input(8, seed ^ 0xabcd ^ i);
+        last = Some(compiled.run(&mut ctx, &input)?);
+    }
+    let trace = session.finish();
+    let run = last.expect("at least one traced inference");
+
+    let mut table = openedge_cgra::util::fmt::Table::new(&[
+        "layer", "kind", "mapping", "cycles", "conv", "host", "relu", "launches",
+    ]);
+    for (i, l) in run.layers.iter().enumerate() {
+        let info = compiled.layer_info(i);
+        table.row(vec![
+            i.to_string(),
+            info.kind.into(),
+            l.mapping.map(|m| m.label().to_string()).unwrap_or_else(|| "host".into()),
+            l.cycles.to_string(),
+            l.conv_cycles.to_string(),
+            l.host_cycles.to_string(),
+            l.relu_cycles.to_string(),
+            l.launches.to_string(),
+        ]);
+    }
+    println!(
+        "traced {iters} inferences of '{}' ({} layers, {} modeled cycles/inference)\n",
+        compiled.name(),
+        compiled.layer_count(),
+        run.total_cycles
+    );
+    print!("{}", table.render());
+
+    std::fs::write(&out, trace.to_chrome_json().to_string_pretty())
+        .with_context(|| format!("writing {out}"))?;
+    println!(
+        "\nwrote {} spans to {out} ({} dropped); open in chrome://tracing or Perfetto",
+        trace.events.len(),
+        trace.dropped
+    );
     Ok(())
 }
 

@@ -1,0 +1,363 @@
+//! Counters, gauges and log2-bucket histograms with a named registry.
+//!
+//! Everything here is lock-free on the record path (relaxed atomics)
+//! and cheap enough to stay enabled unconditionally — unlike spans,
+//! metrics have no off switch. Histograms bucket by `log2(value)`
+//! (65 buckets covering the full `u64` range) and additionally keep
+//! exact min/max/sum, so summaries report exact extremes and mean with
+//! bucket-resolution percentiles (p50/p95/p99) — the shape the daemon
+//! stats verb exposes (DESIGN.md §11).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets: one for zero plus one per power of two.
+pub const N_BUCKETS: usize = 65;
+
+/// Bucket index for a value: 0 holds exactly zero, bucket `i ≥ 1`
+/// holds `[2^(i-1), 2^i)`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of a bucket (the value percentiles report).
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// New counter at zero.
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// New gauge at zero.
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Set the current value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log2-bucket histogram over `u64` samples (latencies in µs, cycle
+/// counts, ...): 65 buckets plus exact count/sum/min/max.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// New empty histogram.
+    pub const fn new() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: [Z; N_BUCKETS],
+        }
+    }
+
+    /// Record one sample. Five relaxed atomic ops; safe on hot paths.
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Bucket-resolution percentile: the inclusive upper bound of the
+    /// bucket holding the sample of rank `ceil(q·count)` (`q` in
+    /// `[0, 1]`). Returns 0 for an empty histogram. The reported value
+    /// is an upper bound on the true percentile, at most 2× above it.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_upper(i);
+            }
+        }
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Consistent point-in-time summary for reporting. Percentiles are
+    /// clamped to the exact observed max so `min ≤ p50 ≤ p95 ≤ p99 ≤
+    /// max` always holds in rendered output.
+    pub fn summary(&self) -> HistogramSummary {
+        let count = self.count();
+        let max = self.max.load(Ordering::Relaxed);
+        HistogramSummary {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max,
+            p50: self.percentile(0.50).min(max),
+            p95: self.percentile(0.95).min(max),
+            p99: self.percentile(0.99).min(max),
+        }
+    }
+}
+
+/// Snapshot of a [`Histogram`] — plain data, serializable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSummary {
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact sum of all samples.
+    pub sum: u64,
+    /// Exact smallest sample (0 when empty).
+    pub min: u64,
+    /// Exact largest sample.
+    pub max: u64,
+    /// Median (bucket upper bound, clamped to `max`).
+    pub p50: u64,
+    /// 95th percentile (bucket upper bound, clamped to `max`).
+    pub p95: u64,
+    /// 99th percentile (bucket upper bound, clamped to `max`).
+    pub p99: u64,
+}
+
+impl HistogramSummary {
+    /// Exact arithmetic mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Render as `{count, min, mean, p50, p95, p99, max}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", self.count.into()),
+            ("min", self.min.into()),
+            ("mean", self.mean().into()),
+            ("p50", self.p50.into()),
+            ("p95", self.p95.into()),
+            ("p99", self.p99.into()),
+            ("max", self.max.into()),
+        ])
+    }
+
+    /// One-line human rendering in a given unit, e.g.
+    /// `min 12 µs, mean 31.5 µs, p99 64 µs (n=100)`.
+    pub fn human(&self, unit: &str) -> String {
+        format!(
+            "min {} {unit}, mean {:.1} {unit}, p99 {} {unit} (n={})",
+            self.min,
+            self.mean(),
+            self.p99,
+            self.count
+        )
+    }
+}
+
+/// Named metrics registry: get-or-create handles by name, render all
+/// at once. Handles are `Arc`s, so hot paths cache them and never take
+/// the registry lock again.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// New empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Render every metric:
+    /// `{counters: {..}, gauges: {..}, histograms: {name: summary}}`.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = {
+            let m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), v.get().into())).collect()
+        };
+        let gauges: BTreeMap<String, Json> = {
+            let m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), v.get().into())).collect()
+        };
+        let histograms: BTreeMap<String, Json> = {
+            let m = self.histograms.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), v.summary().to_json())).collect()
+        };
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(64), u64::MAX);
+        // Every boundary value lands in a bucket whose bounds admit it.
+        for i in 1..64usize {
+            let lo = 1u64 << (i - 1);
+            assert_eq!(bucket_index(lo), i);
+            assert_eq!(bucket_index(bucket_upper(i)), i);
+        }
+    }
+
+    #[test]
+    fn histogram_summary_math() {
+        let h = Histogram::new();
+        assert_eq!(h.summary(), HistogramSummary::default());
+        for v in [0u64, 1, 2, 3, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 1106);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 1000);
+        assert!((s.mean() - 1106.0 / 6.0).abs() < 1e-9);
+        // rank(0.5·6)=3 → third sample (2) → bucket [2,3] upper bound.
+        assert_eq!(s.p50, 3);
+        // p99 clamps to the exact max (bucket bound would be 1023).
+        assert_eq!(h.percentile(0.99), 1023);
+        assert_eq!(s.p99, 1000);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn registry_handles_and_render() {
+        let r = Registry::new();
+        let c = r.counter("served");
+        c.inc();
+        r.counter("served").add(2);
+        assert_eq!(c.get(), 3, "same name must alias the same counter");
+        r.gauge("depth").set(7);
+        r.histogram("wait_us").record(5);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("served").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("gauges").unwrap().get("depth").unwrap().as_i64(), Some(7));
+        let h = j.get("histograms").unwrap().get("wait_us").unwrap();
+        assert_eq!(h.req_i64("count").unwrap(), 1);
+        assert_eq!(h.req_i64("p99").unwrap(), 5);
+        // Round-trips through the crate's own parser.
+        let text = j.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn counter_gauge_basics() {
+        let c = Counter::new();
+        assert_eq!(c.get(), 0);
+        c.inc();
+        assert_eq!(c.get(), 1);
+        let g = Gauge::new();
+        g.set(9);
+        assert_eq!(g.get(), 9);
+        let s = Histogram::new();
+        s.record(42);
+        assert!(s.summary().human("µs").contains("n=1"));
+    }
+}

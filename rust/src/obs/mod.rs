@@ -1,0 +1,28 @@
+//! Observability: end-to-end tracing and metrics (DESIGN.md §11).
+//!
+//! Two halves, both zero-dependency and rendered through the crate's
+//! hand-rolled [`crate::util::json`]:
+//!
+//! - [`trace`] — a span/event tracer with RAII guards and Chrome
+//!   trace-event export. Instrumentation covers the full request path:
+//!   TCP accept → admission pricing → queue wait → registry
+//!   hit/miss/compile → batch gather → per-layer host glue →
+//!   per-kernel launch → per-launch simulator walk with op-class cycle
+//!   attribution. **Free when off**: the disabled fast path is one
+//!   relaxed atomic load, pinned by the `RunCounters` assertions in
+//!   `tests/compiled_counters.rs`.
+//! - [`metrics`] — always-on counters/gauges/log2-bucket histograms
+//!   plus a named [`metrics::Registry`]; the serving daemon's
+//!   queue-wait/exec/end-to-end latency distributions and the
+//!   p50/p95/p99 fields of the stats verb come from here.
+//!
+//! Entry points: `cgra trace` (CLI) records one session around a
+//! compiled-path run and writes the Chrome JSON; servers record into
+//! histograms unconditionally and surface summaries via
+//! `server::DaemonStats`.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, HistogramSummary, Registry};
+pub use trace::{span, span_dyn, Span, Trace, TraceEvent, TraceSession};

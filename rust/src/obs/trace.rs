@@ -1,0 +1,333 @@
+//! Span tracer with Chrome trace-event export.
+//!
+//! A process-global recorder collects **complete spans** (`ph: "X"`
+//! events) from any thread. Instrumentation sites call [`span`] (static
+//! name) or [`span_dyn`] (lazily built name) and hold the returned RAII
+//! [`Span`] for the duration of the work; dropping it records the
+//! event. The recorder is off by default and the disabled fast path is
+//! a single relaxed atomic load returning an empty guard — no clock
+//! read, no allocation, no lock (the overhead argument in DESIGN.md
+//! §11, pinned by `tests/compiled_counters.rs`).
+//!
+//! Recording is enabled for the lifetime of a [`TraceSession`]
+//! (see [`session`]); sessions serialize on a process-wide lock so
+//! concurrent tests cannot interleave events. [`TraceSession::finish`]
+//! returns the collected [`Trace`], exportable as Chrome trace-event
+//! JSON ([`Trace::to_chrome_json`]) loadable in Perfetto or
+//! `chrome://tracing`.
+
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Hard cap on buffered events per session; further spans are counted
+/// in [`Trace::dropped`] instead of growing memory without bound.
+pub const MAX_EVENTS: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SESSION_LOCK: Mutex<()> = Mutex::new(());
+static RECORDER: Mutex<Recorder> =
+    Mutex::new(Recorder { epoch: None, events: Vec::new(), dropped: 0 });
+
+// Stable small thread ids for the `tid` field: std's ThreadId has no
+// stable integer accessor, so threads draw sequential ids on first use.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+struct Recorder {
+    /// Session time origin; `None` while no session is active.
+    epoch: Option<Instant>,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+fn lock_recorder() -> MutexGuard<'static, Recorder> {
+    RECORDER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Whether a trace session is currently recording. Instrumentation
+/// sites use this to skip building span *arguments* (the guard itself
+/// is already free when disabled).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// One recorded complete span.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Span name (Perfetto slice title).
+    pub name: String,
+    /// Category — the instrumentation layer ("daemon", "queue",
+    /// "layer", "walk", ...).
+    pub cat: &'static str,
+    /// Start, nanoseconds since the session epoch.
+    pub ts_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Recording thread (sequential per-process id).
+    pub tid: u64,
+    /// Span arguments, shown in the Perfetto detail pane.
+    pub args: Vec<(&'static str, Json)>,
+}
+
+struct SpanInner {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    start: Instant,
+    args: Vec<(&'static str, Json)>,
+}
+
+/// RAII span guard: the span covers the guard's lifetime. When tracing
+/// is disabled the guard is inert (`inner: None`) and costs nothing.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+impl Span {
+    /// Attach a key/value argument (no-op when tracing is disabled).
+    pub fn arg(&mut self, key: &'static str, value: impl Into<Json>) {
+        if let Some(inner) = &mut self.inner {
+            inner.args.push((key, value.into()));
+        }
+    }
+
+    /// Whether this particular guard is recording (tracing was enabled
+    /// when it was opened).
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            record(inner);
+        }
+    }
+}
+
+/// Open a span with a static name. The disabled path is one relaxed
+/// atomic load.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !enabled() {
+        return Span { inner: None };
+    }
+    Span {
+        inner: Some(SpanInner {
+            name: Cow::Borrowed(name),
+            cat,
+            start: Instant::now(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+/// Open a span with a lazily built name; the closure only runs when
+/// tracing is enabled, so dynamic names cost nothing when off.
+#[inline]
+pub fn span_dyn(cat: &'static str, name: impl FnOnce() -> String) -> Span {
+    if !enabled() {
+        return Span { inner: None };
+    }
+    Span {
+        inner: Some(SpanInner {
+            name: Cow::Owned(name()),
+            cat,
+            start: Instant::now(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+fn record(inner: SpanInner) {
+    let end = Instant::now();
+    let mut r = lock_recorder();
+    // A span may outlive the session that opened it; without an epoch
+    // there is nowhere consistent to anchor it, so drop it.
+    let Some(epoch) = r.epoch else { return };
+    if r.events.len() >= MAX_EVENTS {
+        r.dropped += 1;
+        return;
+    }
+    // Anchor both endpoints to the epoch *before* truncating to ns, so
+    // "child ends no later than parent" survives integer conversion
+    // exactly — the nesting invariant tested in tests/obs_trace.rs.
+    let ts_ns = inner.start.saturating_duration_since(epoch).as_nanos() as u64;
+    let end_ns = end.saturating_duration_since(epoch).as_nanos() as u64;
+    let tid = TID.with(|t| *t);
+    r.events.push(TraceEvent {
+        name: inner.name.into_owned(),
+        cat: inner.cat,
+        ts_ns,
+        dur_ns: end_ns.saturating_sub(ts_ns),
+        tid,
+        args: inner.args,
+    });
+}
+
+/// A completed trace: every span recorded during one session.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// Recorded spans in completion order.
+    pub events: Vec<TraceEvent>,
+    /// Spans discarded after the [`MAX_EVENTS`] cap was hit.
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Render as a Chrome trace-event JSON document (the "JSON object
+    /// format": `{"traceEvents": [...]}`), loadable in Perfetto.
+    /// Timestamps and durations are microseconds with nanosecond
+    /// fractions, per the format spec.
+    pub fn to_chrome_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let args: std::collections::BTreeMap<String, Json> =
+                    e.args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+                Json::obj(vec![
+                    ("name", e.name.as_str().into()),
+                    ("cat", e.cat.into()),
+                    ("ph", "X".into()),
+                    ("ts", Json::Num(e.ts_ns as f64 / 1000.0)),
+                    ("dur", Json::Num(e.dur_ns as f64 / 1000.0)),
+                    ("pid", 1u64.into()),
+                    ("tid", e.tid.into()),
+                    ("args", Json::Obj(args)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", "ms".into()),
+            ("otherData", Json::obj(vec![("dropped_events", self.dropped.into())])),
+        ])
+    }
+}
+
+/// RAII guard for one recording session. Created by [`session`];
+/// holding it keeps the global recorder enabled. Sessions serialize on
+/// a process-wide lock, so a second caller blocks until the first
+/// session ends — concurrent tests cannot interleave events.
+pub struct TraceSession {
+    _lock: MutexGuard<'static, ()>,
+}
+
+/// Start a recording session: resets the recorder, sets the epoch and
+/// enables span capture until the returned guard is finished/dropped.
+pub fn session() -> TraceSession {
+    let lock = SESSION_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    {
+        let mut r = lock_recorder();
+        r.epoch = Some(Instant::now());
+        r.events.clear();
+        r.dropped = 0;
+    }
+    ENABLED.store(true, Ordering::SeqCst);
+    TraceSession { _lock: lock }
+}
+
+impl TraceSession {
+    /// Stop recording and take the collected [`Trace`]. Spans still
+    /// open on other threads when this is called are discarded (they
+    /// have no session to anchor to).
+    pub fn finish(self) -> Trace {
+        ENABLED.store(false, Ordering::SeqCst);
+        let (events, dropped) = {
+            let mut r = lock_recorder();
+            r.epoch = None;
+            (std::mem::take(&mut r.events), r.dropped)
+        };
+        Trace { events, dropped }
+    }
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        let mut r = lock_recorder();
+        r.epoch = None;
+        r.events.clear();
+        r.dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        // No session: guards are empty and dynamic names never build.
+        let mut sp = span("t", "noop");
+        assert!(!sp.is_recording());
+        sp.arg("k", 1u64);
+        drop(sp);
+        let called = std::cell::Cell::new(false);
+        let sp = span_dyn("t", || {
+            called.set(true);
+            "x".to_string()
+        });
+        drop(sp);
+        assert!(!called.get(), "span_dyn must not build the name when disabled");
+    }
+
+    #[test]
+    fn session_records_nested_spans() {
+        let s = session();
+        {
+            let mut parent = span("t", "parent");
+            parent.arg("n", 2u64);
+            {
+                let _child = span_dyn("t", || "child".to_string());
+            }
+        }
+        let trace = s.finish();
+        assert_eq!(trace.dropped, 0);
+        assert_eq!(trace.events.len(), 2);
+        // Completion order: child first.
+        let child = &trace.events[0];
+        let parent = &trace.events[1];
+        assert_eq!(child.name, "child");
+        assert_eq!(parent.name, "parent");
+        assert_eq!(child.tid, parent.tid);
+        assert!(child.ts_ns >= parent.ts_ns);
+        assert!(child.ts_ns + child.dur_ns <= parent.ts_ns + parent.dur_ns);
+        assert_eq!(parent.args.len(), 1);
+        // A second session starts clean.
+        let s2 = session();
+        assert!(enabled());
+        let t2 = s2.finish();
+        assert!(t2.events.is_empty());
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let s = session();
+        {
+            let mut sp = span("cat", "work");
+            sp.arg("cycles", 42u64);
+        }
+        let doc = s.finish().to_chrome_json();
+        let text = doc.to_string_compact();
+        let back = crate::util::json::parse(&text).expect("chrome JSON parses");
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.req_str("name").unwrap(), "work");
+        assert_eq!(e.req_str("ph").unwrap(), "X");
+        assert_eq!(e.req_str("cat").unwrap(), "cat");
+        assert_eq!(e.req_i64("pid").unwrap(), 1);
+        assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(e.get("args").unwrap().get("cycles").unwrap().as_i64(), Some(42));
+    }
+}

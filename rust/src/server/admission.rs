@@ -24,6 +24,7 @@
 use anyhow::Result;
 
 use crate::nn::{plan_network, Net};
+use crate::obs::trace;
 use crate::planner::{PlanObjective, Planner};
 
 /// What the daemon does with a request whose modeled latency (queue
@@ -118,6 +119,7 @@ pub fn admit(
     workers: usize,
     policy: AdmissionPolicy,
 ) -> Result<Decision> {
+    let mut asp = trace::span("admission", "admit");
     let clock_hz = planner.energy_model().clock_hz;
     let us_per_cycle = 1e6 / clock_hz;
     let wait_us = backlog_cycles as f64 * us_per_cycle / workers.max(1) as f64;
@@ -129,6 +131,7 @@ pub fn admit(
             Err(e) => {
                 // Infeasible under the memory bound (or an invalid
                 // graph): no objective or batch change can fix it.
+                asp.arg("outcome", "infeasible");
                 return Ok(Decision::Rejected(Rejection {
                     kind: "infeasible",
                     detail: format!("{e:#}"),
@@ -144,6 +147,8 @@ pub fn admit(
             Some(d) => wait_us + modeled_us <= d,
         };
         if fits {
+            asp.arg("outcome", "admitted");
+            asp.arg("degrade_steps", steps.len());
             return Ok(Decision::Admitted(Admitted {
                 objective: obj,
                 count: cnt,
@@ -167,6 +172,7 @@ pub fn admit(
             }
         }
         let deadline = deadline_us.unwrap_or(f64::INFINITY);
+        asp.arg("outcome", "rejected");
         return Ok(Decision::Rejected(Rejection {
             kind: "deadline",
             detail: format!(

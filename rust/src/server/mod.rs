@@ -51,6 +51,7 @@ use crate::cgra::CgraConfig;
 use crate::energy::EnergyModel;
 use crate::engine::Engine;
 use crate::nn::{build_preset, Net};
+use crate::obs::trace;
 use crate::planner::PlanObjective;
 
 pub use admission::{admit, Admitted, AdmissionPolicy, Decision, Rejection};
@@ -418,6 +419,8 @@ impl Daemon {
     /// `Ok(Outcome::Rejected(..))` is a *normal* outcome; `Err` means a
     /// malformed request, a failed compile, or a daemon shutting down.
     pub fn submit(&self, req: InferRequest) -> Result<Outcome> {
+        let t_submit = Instant::now();
+        let mut rsp = trace::span_dyn("daemon", || format!("submit:{}", req.tenant));
         ensure!(
             !self.shared.stop.load(Ordering::Acquire),
             "daemon is shutting down; request refused"
@@ -445,6 +448,7 @@ impl Daemon {
             Decision::Rejected(r) => {
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
                 tenant.counters.lock().unwrap().rejected += 1;
+                rsp.arg("outcome", "rejected");
                 return Ok(Outcome::Rejected(r));
             }
         };
@@ -454,8 +458,11 @@ impl Daemon {
         }
 
         let key = ArtifactKey { net_fp: net.fingerprint(), session_fp: tenant.session_fp };
+        let mut gsp = trace::span("registry", "get_or_compile");
         let (artifact, cache_hit) =
             self.registry.get_or_compile(key, || tenant.engine.compile_owned(net))?;
+        gsp.arg("hit", cache_hit);
+        drop(gsp);
 
         let inputs: Vec<_> = (0..admitted.count)
             .map(|i| {
@@ -481,6 +488,7 @@ impl Daemon {
                 priced_cycles_per_inf: admitted.cycles_per_inf,
                 priced_uj_per_inf: admitted.uj_per_inf,
                 collect_outputs: req.collect_outputs,
+                enqueued: Instant::now(),
                 reply: tx,
             });
         }
@@ -489,6 +497,9 @@ impl Daemon {
             .recv()
             .context("worker pool dropped the request (daemon stopped?)")?
             .map_err(|msg| anyhow::anyhow!("execution failed: {msg}"))?;
+        self.shared.e2e_us.record(t_submit.elapsed().as_micros() as u64);
+        rsp.arg("outcome", "served");
+        rsp.arg("lanes", admitted.count);
         Ok(Outcome::Served(Served {
             tenant: tenant.name.clone(),
             net: artifact.name().to_string(),
@@ -522,6 +533,7 @@ impl Daemon {
             .collect();
         tenants.sort_by(|a, b| a.name.cmp(&b.name));
         DaemonStats {
+            version: env!("CARGO_PKG_VERSION").to_string(),
             uptime_s: self.started.elapsed().as_secs_f64(),
             workers: self.workers,
             batch: self.batch,
@@ -534,6 +546,9 @@ impl Daemon {
             walks: self.shared.walks.load(Ordering::Relaxed),
             walk_lanes: self.shared.walk_lanes.load(Ordering::Relaxed),
             registry: self.registry.stats(),
+            queue_wait_us: self.shared.queue_wait_us.summary(),
+            exec_us: self.shared.exec_us.summary(),
+            e2e_us: self.shared.e2e_us.summary(),
             tenants,
         }
     }

@@ -48,6 +48,18 @@ pub enum Request {
     Shutdown,
 }
 
+impl Request {
+    /// The wire `op` this request arrived under (trace-span label).
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Infer(_) => "infer",
+            Request::Stats => "stats",
+            Request::Register { .. } => "register",
+            Request::Shutdown => "shutdown",
+        }
+    }
+}
+
 fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>> {
     match v.get(key) {
         None => Ok(None),

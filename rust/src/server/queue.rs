@@ -25,9 +25,12 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::conv::TensorChw;
 use crate::engine::{BatchCtx, CompiledNet, NetCtx};
+use crate::obs::metrics::{Histogram, Registry};
+use crate::obs::trace;
 
 use super::registry::ArtifactKey;
 use super::Tenant;
@@ -59,6 +62,8 @@ pub(super) struct Job {
     pub priced_uj_per_inf: f64,
     /// Clone the output tensors into the reply.
     pub collect_outputs: bool,
+    /// When the job entered the queue (feeds the queue-wait histogram).
+    pub enqueued: Instant,
     pub reply: Sender<std::result::Result<JobDone, String>>,
 }
 
@@ -90,10 +95,23 @@ pub(super) struct Shared {
     pub walks: AtomicU64,
     /// Lanes summed over walks.
     pub walk_lanes: AtomicU64,
+    /// The daemon's metrics registry (DESIGN.md §11); the histograms
+    /// below are cached handles into it.
+    pub metrics: Registry,
+    /// Per-job time from enqueue to worker pickup, µs.
+    pub queue_wait_us: Arc<Histogram>,
+    /// Per-walk-group execution wall time, µs.
+    pub exec_us: Arc<Histogram>,
+    /// Per-request end-to-end latency (submit to reply), µs.
+    pub e2e_us: Arc<Histogram>,
 }
 
 impl Shared {
     pub fn new() -> Shared {
+        let metrics = Registry::new();
+        let queue_wait_us = metrics.histogram("queue_wait_us");
+        let exec_us = metrics.histogram("exec_us");
+        let e2e_us = metrics.histogram("e2e_us");
         Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -105,6 +123,10 @@ impl Shared {
             degraded: AtomicU64::new(0),
             walks: AtomicU64::new(0),
             walk_lanes: AtomicU64::new(0),
+            metrics,
+            queue_wait_us,
+            exec_us,
+            e2e_us,
         }
     }
 }
@@ -133,6 +155,7 @@ pub(super) fn worker_loop(shared: Arc<Shared>, batch: usize) {
 /// Pull queued same-key jobs behind `first` until the walk group holds
 /// up to `batch` lanes. Other keys are left in place, order preserved.
 fn gather(first: Job, q: &mut VecDeque<Job>, batch: usize) -> Vec<Job> {
+    let mut gsp = trace::span("queue", "gather");
     let mut lanes = first.inputs.len();
     let mut group = vec![first];
     let mut i = 0;
@@ -146,6 +169,8 @@ fn gather(first: Job, q: &mut VecDeque<Job>, batch: usize) -> Vec<Job> {
             i += 1;
         }
     }
+    gsp.arg("jobs", group.len());
+    gsp.arg("lanes", lanes);
     group
 }
 
@@ -163,10 +188,15 @@ fn execute(
     let mut inputs: Vec<TensorChw> = Vec::new();
     let mut lane_counts = Vec::with_capacity(group.len());
     for job in &mut group {
+        shared.queue_wait_us.record(job.enqueued.elapsed().as_micros() as u64);
         lane_counts.push(job.inputs.len());
         inputs.append(&mut job.inputs);
     }
     let total = inputs.len();
+    let mut xsp = trace::span("queue", "exec");
+    xsp.arg("jobs", group.len());
+    xsp.arg("lanes", total);
+    let exec_start = Instant::now();
 
     if ctxs.len() >= WORKER_CTX_CAP && !ctxs.contains_key(&key) {
         ctxs.clear();
@@ -218,6 +248,8 @@ fn execute(
             }
         }
     }
+    shared.exec_us.record(exec_start.elapsed().as_micros() as u64);
+    drop(xsp);
 
     // Distribute results, settle counters *before* each reply.
     let mut offset = 0usize;

@@ -26,6 +26,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::{anyhow, Result};
 
 use crate::engine::CompiledNet;
+use crate::obs::trace;
 
 /// Identity of one registry entry: network ⊕ session fingerprints.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
@@ -146,6 +147,8 @@ impl ArtifactRegistry {
         // different keys never contend.
         let outcome = cell.get_or_init(|| {
             self.compiles.fetch_add(1, Ordering::Relaxed);
+            let mut csp = trace::span("registry", "compile");
+            csp.arg("net_fp", format!("{:#018x}", key.net_fp));
             compile().map(Arc::new).map_err(|e| format!("{e:#}"))
         });
         match outcome {

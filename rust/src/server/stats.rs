@@ -15,6 +15,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::obs::metrics::HistogramSummary;
 use crate::util::json::Json;
 
 use super::registry::RegistryStats;
@@ -54,6 +55,8 @@ pub struct TenantStats {
 /// A full point-in-time snapshot of a daemon.
 #[derive(Clone, Debug)]
 pub struct DaemonStats {
+    /// Crate version serving this snapshot (`CARGO_PKG_VERSION`).
+    pub version: String,
     /// Seconds since the daemon started.
     pub uptime_s: f64,
     /// Worker threads.
@@ -81,6 +84,13 @@ pub struct DaemonStats {
     pub walk_lanes: u64,
     /// Artifact-registry counters.
     pub registry: RegistryStats,
+    /// Observed enqueue-to-pickup wait per job, µs.
+    pub queue_wait_us: HistogramSummary,
+    /// Observed walk-group execution wall time, µs.
+    pub exec_us: HistogramSummary,
+    /// Observed end-to-end latency per served request (submit entry to
+    /// reply), µs.
+    pub e2e_us: HistogramSummary,
     /// Per-tenant rows, name-sorted.
     pub tenants: Vec<TenantStats>,
 }
@@ -124,6 +134,7 @@ impl DaemonStats {
         Json::obj(vec![
             ("ok", true.into()),
             ("op", "stats".into()),
+            ("version", self.version.as_str().into()),
             ("uptime_s", self.uptime_s.into()),
             ("workers", self.workers.into()),
             ("batch", self.batch.into()),
@@ -137,6 +148,9 @@ impl DaemonStats {
             ("walks", self.walks.into()),
             ("walk_lanes", self.walk_lanes.into()),
             ("registry", reg),
+            ("queue_wait_us", self.queue_wait_us.to_json()),
+            ("exec_us", self.exec_us.to_json()),
+            ("e2e_us", self.e2e_us.to_json()),
             ("tenants", Json::Obj(tenants)),
         ])
     }
@@ -148,7 +162,14 @@ mod tests {
 
     #[test]
     fn stats_render_includes_every_surface() {
+        let lat = {
+            let h = crate::obs::metrics::Histogram::new();
+            h.record(40);
+            h.record(90);
+            h.summary()
+        };
         let s = DaemonStats {
+            version: env!("CARGO_PKG_VERSION").to_string(),
             uptime_s: 2.0,
             workers: 2,
             batch: 4,
@@ -161,6 +182,9 @@ mod tests {
             walks: 2,
             walk_lanes: 6,
             registry: RegistryStats { hits: 2, misses: 1, compiles: 1, entries: 1, capacity: 8, ..Default::default() },
+            queue_wait_us: HistogramSummary::default(),
+            exec_us: lat,
+            e2e_us: lat,
             tenants: vec![TenantStats {
                 name: "edge\"box".into(), // hostile name: escaping matters
                 session_fp: 0xdead_beef,
@@ -176,8 +200,14 @@ mod tests {
         assert_eq!(s.throughput_inf_per_s(), 3.0);
         let j = s.to_json();
         assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
         assert_eq!(j.req_i64("served_inferences").unwrap(), 6);
         assert_eq!(j.get("registry").unwrap().req_i64("hits").unwrap(), 2);
+        let e2e = j.get("e2e_us").unwrap();
+        assert_eq!(e2e.req_i64("count").unwrap(), 2);
+        assert_eq!(e2e.req_i64("min").unwrap(), 40);
+        assert_eq!(e2e.req_i64("p99").unwrap(), 90);
+        assert_eq!(j.get("queue_wait_us").unwrap().req_i64("count").unwrap(), 0);
         let t = j.get("tenants").unwrap().get("edge\"box").unwrap();
         assert_eq!(t.req_str("session_fp").unwrap(), "0x00000000deadbeef");
         assert_eq!(t.get("priced_uj").unwrap().as_f64().unwrap(), 1.25);

@@ -21,6 +21,7 @@ use std::thread;
 
 use anyhow::{Context, Result};
 
+use crate::obs::trace;
 use crate::util::json::Json;
 
 use super::protocol::{self, Request};
@@ -36,6 +37,8 @@ pub fn handle_line(daemon: &Daemon, line: &str) -> (Json, bool) {
         Ok(r) => r,
         Err(e) => return (protocol::error_json("bad-request", &format!("{e:#}")), false),
     };
+    let mut rsp = trace::span("rpc", "handle_line");
+    rsp.arg("op", req.op());
     match req {
         Request::Infer(req) => match daemon.submit(req) {
             Ok(Outcome::Served(s)) => (protocol::served_json(&s), false),

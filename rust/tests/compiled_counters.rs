@@ -10,6 +10,7 @@
 
 use openedge_cgra::engine::{EngineBuilder, RunCounters};
 use openedge_cgra::nn;
+use openedge_cgra::obs;
 
 #[test]
 fn warm_compiled_runs_do_zero_compile_side_work() {
@@ -101,4 +102,33 @@ fn warm_compiled_runs_do_zero_compile_side_work() {
     // Per-inference modeled timing matches the scalar path exactly.
     assert_eq!(brun.total_cycles, first.total_cycles);
     assert_eq!(ragged.total_cycles, first.total_cycles);
+
+    // Tracing gates (DESIGN.md §11). Everything above ran with tracing
+    // *disabled* — pin that, so the zero-work assertions double as the
+    // free-when-off contract for the span tracer.
+    assert!(
+        !obs::trace::enabled(),
+        "the counter contract above must be measured with tracing disabled"
+    );
+
+    // With tracing *enabled*, a warm run emits spans but still performs
+    // zero builds, decodes, planner calls and arena allocations —
+    // instrumentation observes the run, it never adds compile-side work.
+    let traced_before = RunCounters::snapshot(&engine);
+    let session = obs::trace::session();
+    let traced_run = compiled.run(&mut ctx, &warmup).unwrap();
+    let trace = session.finish();
+    let traced_after = RunCounters::snapshot(&engine);
+    assert_eq!(
+        traced_after, traced_before,
+        "a traced warm run must still do zero compile-side work"
+    );
+    assert_eq!(traced_run.total_cycles, first.total_cycles);
+    for cat in ["engine", "layer", "kernel", "walk"] {
+        assert!(
+            trace.events.iter().any(|e| e.cat == cat),
+            "traced warm run must emit at least one '{cat}' span"
+        );
+    }
+    assert!(!obs::trace::enabled(), "finishing the session must disable tracing");
 }

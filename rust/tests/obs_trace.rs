@@ -1,0 +1,172 @@
+//! Integration tests for the tracing subsystem (DESIGN.md §11): a
+//! compiled inference traced end to end produces Chrome trace-event
+//! JSON whose spans nest correctly — every layer span inside the
+//! inference span, every µop-walk span inside a kernel span — and the
+//! recorder holds up under concurrent recording from many threads.
+//!
+//! Sessions serialize on a process-wide lock, so the `#[test]`s here
+//! may run in parallel without interleaving each other's events.
+
+use openedge_cgra::engine::EngineBuilder;
+use openedge_cgra::nn::Net;
+use openedge_cgra::obs::trace::{self, TraceEvent};
+
+/// `child` lies within `parent` on the same thread timeline.
+fn contained(child: &TraceEvent, parent: &TraceEvent) -> bool {
+    child.tid == parent.tid
+        && child.ts_ns >= parent.ts_ns
+        && child.ts_ns + child.dur_ns <= parent.ts_ns + parent.dur_ns
+}
+
+#[test]
+fn compiled_run_trace_nests_and_exports() {
+    let engine = EngineBuilder::new().private_cache().build().unwrap();
+    let net = Net::plain_stack(2, 2, 4, 8, 11).unwrap();
+    let compiled = engine.compile_owned(net).unwrap();
+    let mut ctx = compiled.new_ctx();
+    let input = compiled.net().random_input(8, 3);
+    // Warm up outside the session so the trace is the steady state.
+    compiled.run(&mut ctx, &input).unwrap();
+
+    let session = trace::session();
+    compiled.run(&mut ctx, &input).unwrap();
+    let t = session.finish();
+    assert_eq!(t.dropped, 0);
+
+    // Exactly one inference span; every compiled layer has a span
+    // nested inside it.
+    let infers: Vec<_> = t.events.iter().filter(|e| e.cat == "engine").collect();
+    assert_eq!(infers.len(), 1, "one traced run, one inference span");
+    let infer = infers[0];
+    assert!(infer.name.starts_with("infer:"), "{}", infer.name);
+    let layers: Vec<_> = t.events.iter().filter(|e| e.cat == "layer").collect();
+    assert_eq!(layers.len(), compiled.layer_count(), "one span per compiled layer");
+    for (i, l) in layers.iter().enumerate() {
+        assert!(
+            l.name.starts_with(&format!("L{i}:")),
+            "layer spans complete in execution order, got '{}' at {i}",
+            l.name
+        );
+        assert!(contained(l, infer), "layer span '{}' must nest in the inference span", l.name);
+    }
+
+    // Kernel spans nest in layer spans; walk spans nest in kernel
+    // spans and carry the op-class cycle attribution.
+    let kernels: Vec<_> = t.events.iter().filter(|e| e.cat == "kernel").collect();
+    let walks: Vec<_> = t.events.iter().filter(|e| e.cat == "walk").collect();
+    assert!(!kernels.is_empty() && !walks.is_empty());
+    for k in &kernels {
+        assert!(
+            layers.iter().any(|l| contained(k, l)),
+            "kernel span '{}' must nest in a layer span",
+            k.name
+        );
+    }
+    for w in &walks {
+        assert!(w.name.starts_with("walk:"), "{}", w.name);
+        assert!(
+            kernels.iter().any(|k| contained(w, k)),
+            "walk span '{}' must nest in a kernel span",
+            w.name
+        );
+        let cycles = w
+            .args
+            .iter()
+            .find(|(k, _)| *k == "cycles")
+            .and_then(|(_, v)| v.as_i64())
+            .expect("walk spans carry modeled cycles");
+        assert!(cycles > 0);
+        // The Figure-3 class attribution sums to the walk's cycles.
+        let class_sum: i64 = ["load", "mul", "sum", "store", "other", "nop"]
+            .iter()
+            .map(|c| {
+                w.args
+                    .iter()
+                    .find(|(k, _)| k == c)
+                    .and_then(|(_, v)| v.as_i64())
+                    .expect("walk spans carry every op class")
+            })
+            .sum();
+        assert_eq!(class_sum, cycles, "op-class attribution must sum to walk cycles");
+    }
+
+    // The Chrome export round-trips through the crate's own JSON
+    // parser and keeps the complete-event shape.
+    let doc = t.to_chrome_json();
+    let back = openedge_cgra::util::json::parse(&doc.to_string_compact()).unwrap();
+    let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), t.events.len());
+    for e in events {
+        assert_eq!(e.req_str("ph").unwrap(), "X");
+        assert_eq!(e.req_i64("pid").unwrap(), 1);
+        assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+    }
+    assert_eq!(
+        back.get("otherData").unwrap().req_i64("dropped_events").unwrap(),
+        0
+    );
+}
+
+#[test]
+fn concurrent_recording_keeps_per_thread_nesting() {
+    const THREADS: usize = 8;
+    let session = trace::session();
+    let handles: Vec<_> = (0..THREADS)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut parent = trace::span_dyn("test", || format!("parent{i}"));
+                parent.arg("thread", i);
+                for _ in 0..3 {
+                    let _child = trace::span("test", "child");
+                    std::hint::black_box(0u64);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let t = session.finish();
+    assert_eq!(t.dropped, 0);
+    assert_eq!(t.events.len(), THREADS * 4);
+
+    let parents: Vec<_> = t.events.iter().filter(|e| e.name.starts_with("parent")).collect();
+    assert_eq!(parents.len(), THREADS);
+    let tids: std::collections::BTreeSet<u64> = parents.iter().map(|p| p.tid).collect();
+    assert_eq!(tids.len(), THREADS, "each thread draws a distinct tid");
+    for child in t.events.iter().filter(|e| e.name == "child") {
+        let parent = parents
+            .iter()
+            .find(|p| p.tid == child.tid)
+            .expect("every child's thread has a parent span");
+        assert!(contained(child, parent), "child must nest in its own thread's parent");
+    }
+}
+
+#[test]
+fn histograms_record_concurrently_without_loss() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 1000;
+    let h = std::sync::Arc::new(openedge_cgra::obs::metrics::Histogram::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|i| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for v in 0..PER_THREAD {
+                    h.record(i * PER_THREAD + v);
+                }
+            })
+        })
+        .collect();
+    for t in handles {
+        t.join().unwrap();
+    }
+    let s = h.summary();
+    assert_eq!(s.count, THREADS * PER_THREAD, "no sample lost under contention");
+    let n = THREADS * PER_THREAD;
+    assert_eq!(s.sum, n * (n - 1) / 2, "exact sum survives concurrent recording");
+    assert_eq!(s.min, 0);
+    assert_eq!(s.max, n - 1);
+    assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+}

@@ -58,13 +58,22 @@ req '{"op":"infer","tenant":"smoke","depth":1,"c0":2,"k":2,"hw":6,"net_seed":3,"
 expect '"ok":false' "rejection is a structured error"
 expect '"kind":"deadline"' "rejection names the deadline"
 
-echo "4. stats surface has the registry and tenant blocks"
+echo "4. stats surface has the registry, tenant and latency blocks"
 req '{"op":"stats"}'
 expect '"ok":true' "stats served"
 expect '"served_requests":2' "two requests executed"
 expect '"rejected":1' "one request rejected"
 expect '"registry"' "registry counters present"
 expect '"smoke"' "per-tenant row present"
+expect '"version"' "daemon reports its crate version"
+expect '"e2e_us"' "end-to-end latency histogram present"
+expect '"p99"' "latency percentiles present"
+case "$RESPONSE" in
+    *'"e2e_us":{"count":0'*)
+        echo "FAIL: e2e latency histogram is empty after two served requests" >&2
+        exit 1 ;;
+    *) echo "  OK: e2e latency histogram recorded the served requests" ;;
+esac
 
 echo "5. malformed input fails cleanly"
 req 'this is not json'

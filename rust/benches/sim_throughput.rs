@@ -118,6 +118,29 @@ fn main() {
     }
     println!();
 
+    // Profiler cost-when-on (DESIGN.md §12): the same decoded launch
+    // with a cycle-attribution session active. The delta over
+    // executor[decoded] is the per-step observation cost; modeled
+    // stats are asserted unchanged (observe, don't perturb).
+    {
+        let session = openedge_cgra::obs::profile::session();
+        let mut m = Memory::new(cfg.mem_words, cfg.n_banks);
+        m.poke_slice(layout.input, &input.data);
+        m.poke_slice(layout.weights, &weights.data);
+        assert_eq!(
+            cgra.run_decoded(&dp, &mut m).expect("profiled run"),
+            s_scalar,
+            "profiling perturbed the modeled stats"
+        );
+        let r = b.run(
+            &format!("executor[profiled]:  WP launch ({steps} steps x {N_PES} PEs)"),
+            Some(slots),
+            || cgra.run_decoded(&dp, &mut mem).expect("run"),
+        );
+        drop(session.finish());
+        results.row("profiled_slots_per_s", slots / r.median());
+    }
+
     // Decode cost in isolation (paid once per distinct program).
     b.run("decode: WP launch program (uncached)", Some(1.0), || decode(&prog));
 

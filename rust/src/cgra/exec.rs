@@ -46,11 +46,68 @@
 use anyhow::{bail, Context, Result};
 
 use crate::isa::{Dst, Instr, Op, PeId, Program, Src, COLS, N_PES, N_REGS, ROWS};
+use crate::obs::profile;
 
 use super::config::CgraConfig;
 use super::decoded::{self, AluFn, BrFn, DecodedProgram, UKind, USrc, NO_REG};
 use super::memory::{BatchMemory, Memory};
 use super::stats::{OpClass, RunStats};
+
+/// The step-cost decomposition of one array step — the paper's §3.1
+/// collision model. Shared by all three executors (scalar decoded,
+/// batched, reference interpreter) so they charge identically by
+/// construction and the profiler ([`crate::obs::profile`]) observes
+/// the parts at a single site instead of three.
+pub(crate) struct StepCost {
+    /// ALU critical path: `mul_latency` if any PE multiplied this
+    /// step, else `alu_latency` (never below `alu_latency`).
+    pub alu_part: u64,
+    /// DMA-port serialization: the busiest column's memory ops, one
+    /// `mem_latency` each (one port per column).
+    pub port_part: u64,
+    /// Bank conflicts: the worst bank's `mem_latency + (hits-1) ·
+    /// bank_penalty` (0 when the step issued no memory op).
+    pub bank_part: u64,
+    /// The contention-free cost this step would have had.
+    pub ideal: u64,
+    /// The charged cost: `max(alu, port, bank, 1)`.
+    pub cycles: u64,
+}
+
+/// Compute one step's cost from the step metadata. `bank_hits` must be
+/// the per-bank access counts of this step **when `any_mem`**; when no
+/// memory op issued the slice may hold stale values (the executors
+/// skip clearing it) — the bank term is gated off in that case.
+#[inline(always)]
+pub(crate) fn step_cost(
+    cfg: &CgraConfig,
+    any_mul: bool,
+    any_mem: bool,
+    max_port_ops: u32,
+    bank_hits: &[u32],
+) -> StepCost {
+    let alu_part =
+        if any_mul { cfg.mul_latency } else { cfg.alu_latency }.max(cfg.alu_latency);
+    let port_part = max_port_ops as u64 * cfg.mem_latency;
+    let bank_part = if any_mem {
+        bank_hits
+            .iter()
+            .map(|&n| {
+                if n == 0 {
+                    0
+                } else {
+                    cfg.mem_latency + (n as u64 - 1) * cfg.bank_penalty
+                }
+            })
+            .max()
+            .unwrap_or(0)
+    } else {
+        0
+    };
+    let ideal = alu_part.max(if any_mem { cfg.mem_latency } else { 0 });
+    let cycles = alu_part.max(port_part).max(bank_part).max(1);
+    StepCost { alu_part, port_part, bank_part, ideal, cycles }
+}
 
 /// Torus neighbour lookup table: `NEIGH[pe][dir]` = neighbour PE index
 /// (dir order: N, S, E, W). Precomputed so neither interpreter pays the
@@ -176,6 +233,13 @@ impl Cgra {
         let mut pcs = [0usize; COLS];
         let mut stats = RunStats::new();
         let mem0 = mem.stats();
+        // Latched once per run: with profiling off the whole subsystem
+        // costs this single relaxed load (free-when-off contract).
+        let prof = profile::enabled();
+        if prof {
+            profile::begin_walk();
+            mem.reset_high_water();
+        }
 
         // Per-(column, slot) visit counters: the op class of every slot
         // is static, so the per-step histogram update of the reference
@@ -370,29 +434,27 @@ impl Cgra {
                 })?;
             }
 
-            // ---- cycle cost ----
-            let alu_part = if any_mul { self.cfg.mul_latency } else { self.cfg.alu_latency }
-                .max(self.cfg.alu_latency);
-            let port_part = max_port_ops as u64 * self.cfg.mem_latency;
-            let bank_part = if any_mem {
-                bank_hits
-                    .iter()
-                    .map(|&n| {
-                        if n == 0 {
-                            0
-                        } else {
-                            self.cfg.mem_latency + (n as u64 - 1) * self.cfg.bank_penalty
-                        }
-                    })
-                    .max()
-                    .unwrap_or(0)
-            } else {
-                0
-            };
-            let ideal = alu_part.max(if any_mem { self.cfg.mem_latency } else { 0 });
-            let step_cycles = alu_part.max(port_part).max(bank_part).max(1);
+            // ---- cycle cost (shared helper — see step_cost) ----
+            let sc = step_cost(&self.cfg, any_mul, any_mem, max_port_ops, &bank_hits);
+            let step_cycles = sc.cycles;
             stats.cycles += step_cycles;
-            stats.contention_cycles += step_cycles - ideal.min(step_cycles);
+            stats.contention_cycles += step_cycles - sc.ideal.min(step_cycles);
+            if prof {
+                let mut pe_cls = [0usize; N_PES];
+                for (i, cls) in pe_cls.iter_mut().enumerate() {
+                    let c = i % COLS;
+                    *cls = dp.class_at(i, pcs[c].min(dp.col_meta(c).len() - 1));
+                }
+                profile::observe_step(
+                    sc.alu_part,
+                    sc.port_part,
+                    sc.bank_part,
+                    step_cycles,
+                    any_mem,
+                    &bank_hits,
+                    &pe_cls,
+                );
+            }
 
             // ---- trace hook ----
             if TRACE {
@@ -443,6 +505,9 @@ impl Cgra {
         let m1 = mem.stats();
         stats.mem.loads = m1.loads - mem0.loads;
         stats.mem.stores = m1.stores - mem0.stores;
+        if prof {
+            profile::end_walk(mem.high_water());
+        }
         Ok(stats)
     }
 
@@ -491,6 +556,15 @@ impl Cgra {
         let mut pcs = [0usize; COLS];
         let mut stats = RunStats::new();
         let mem0 = mem.stats();
+        // Latched once per run (free-when-off contract). The walk is
+        // shared by every lane and its costs are per-inference, so the
+        // profile delta of a batch walk is lane-for-lane identical to
+        // a scalar run's.
+        let prof = profile::enabled();
+        if prof {
+            profile::begin_walk();
+            mem.reset_high_water();
+        }
 
         let mut visits: [Vec<u64>; COLS] =
             std::array::from_fn(|c| vec![0u64; dp.col_meta(c).len()]);
@@ -762,28 +836,26 @@ impl Cgra {
 
             // ---- cycle cost (identical to the scalar engine: the batch
             // models B copies of the same hardware run) ----
-            let alu_part = if any_mul { self.cfg.mul_latency } else { self.cfg.alu_latency }
-                .max(self.cfg.alu_latency);
-            let port_part = max_port_ops as u64 * self.cfg.mem_latency;
-            let bank_part = if any_mem {
-                bank_hits
-                    .iter()
-                    .map(|&n| {
-                        if n == 0 {
-                            0
-                        } else {
-                            self.cfg.mem_latency + (n as u64 - 1) * self.cfg.bank_penalty
-                        }
-                    })
-                    .max()
-                    .unwrap_or(0)
-            } else {
-                0
-            };
-            let ideal = alu_part.max(if any_mem { self.cfg.mem_latency } else { 0 });
-            let step_cycles = alu_part.max(port_part).max(bank_part).max(1);
+            let sc = step_cost(&self.cfg, any_mul, any_mem, max_port_ops, &bank_hits);
+            let step_cycles = sc.cycles;
             stats.cycles += step_cycles;
-            stats.contention_cycles += step_cycles - ideal.min(step_cycles);
+            stats.contention_cycles += step_cycles - sc.ideal.min(step_cycles);
+            if prof {
+                let mut pe_cls = [0usize; N_PES];
+                for (i, cls) in pe_cls.iter_mut().enumerate() {
+                    let c = i % COLS;
+                    *cls = dp.class_at(i, pcs[c].min(dp.col_meta(c).len() - 1));
+                }
+                profile::observe_step(
+                    sc.alu_part,
+                    sc.port_part,
+                    sc.bank_part,
+                    step_cycles,
+                    any_mem,
+                    &bank_hits,
+                    &pe_cls,
+                );
+            }
 
             // ---- writeback (latches, then addresses — scalar order) ----
             for k in 0..n_latch {
@@ -833,6 +905,9 @@ impl Cgra {
         let m1 = mem.stats();
         stats.mem.loads = m1.loads - mem0.loads;
         stats.mem.stores = m1.stores - mem0.stores;
+        if prof {
+            profile::end_walk(mem.high_water());
+        }
         Ok(stats)
     }
 
@@ -846,6 +921,14 @@ impl Cgra {
         let mut pcs = [0usize; COLS];
         let mut stats = RunStats::new();
         let mem_loads0 = mem.stats();
+        // Latched once per run (free-when-off contract); the reference
+        // interpreter profiles too so differential tests can pin the
+        // decoded engine's attribution against it.
+        let prof = profile::enabled();
+        if prof {
+            profile::begin_walk();
+            mem.reset_high_water();
+        }
         // Hot-loop locals: pre-resolved per-PE code and a fixed-size
         // op-mix accumulator (folded into `stats` at the end).
         let code: [&[Instr]; N_PES] =
@@ -1047,29 +1130,31 @@ impl Cgra {
                 })?;
             }
 
-            // ---- cycle cost ----
-            let alu_part = if any_mul { self.cfg.mul_latency } else { self.cfg.alu_latency }
-                .max(self.cfg.alu_latency);
-            let port_part = mem_ops_per_col
-                .iter()
-                .map(|&n| n as u64 * self.cfg.mem_latency)
-                .max()
-                .unwrap_or(0);
-            let bank_part = bank_hits
-                .iter()
-                .map(|&n| {
-                    if n == 0 {
-                        0
-                    } else {
-                        self.cfg.mem_latency + (n as u64 - 1) * self.cfg.bank_penalty
-                    }
-                })
-                .max()
-                .unwrap_or(0);
-            let ideal = alu_part.max(if any_mem { self.cfg.mem_latency } else { 0 });
-            let step_cycles = alu_part.max(port_part).max(bank_part).max(1);
+            // ---- cycle cost (shared helper — see step_cost). The
+            // port term folds max-over-columns of n·latency into
+            // max(n)·latency, and the bank term's any_mem gate is
+            // equivalent here because bank_hits is cleared every step:
+            // both identities are bit-exact. ----
+            let max_port_ops = mem_ops_per_col.iter().copied().max().unwrap_or(0);
+            let sc = step_cost(&self.cfg, any_mul, any_mem, max_port_ops, &bank_hits);
+            let step_cycles = sc.cycles;
             stats.cycles += step_cycles;
-            stats.contention_cycles += step_cycles - ideal.min(step_cycles);
+            stats.contention_cycles += step_cycles - sc.ideal.min(step_cycles);
+            if prof {
+                let mut pe_cls = [0usize; N_PES];
+                for (i, cls) in pe_cls.iter_mut().enumerate() {
+                    *cls = OpClass::classify(instrs[i].op).idx();
+                }
+                profile::observe_step(
+                    sc.alu_part,
+                    sc.port_part,
+                    sc.bank_part,
+                    step_cycles,
+                    any_mem,
+                    &bank_hits,
+                    &pe_cls,
+                );
+            }
 
             // ---- writeback ----
             for i in 0..N_PES {
@@ -1105,6 +1190,9 @@ impl Cgra {
         let m1 = mem.stats();
         stats.mem.loads = m1.loads - mem_loads0.loads;
         stats.mem.stores = m1.stores - mem_loads0.stores;
+        if prof {
+            profile::end_walk(mem.high_water());
+        }
         Ok(stats)
     }
 }

@@ -30,6 +30,7 @@ pub struct Memory {
     words: Vec<i32>,
     n_banks: usize,
     stats: MemStats,
+    hi_water: usize,
 }
 
 impl Memory {
@@ -37,7 +38,7 @@ impl Memory {
     /// word-interleaved banks.
     pub fn new(words: usize, n_banks: usize) -> Self {
         assert!(n_banks >= 1);
-        Memory { words: vec![0; words], n_banks, stats: MemStats::default() }
+        Memory { words: vec![0; words], n_banks, stats: MemStats::default(), hi_water: 0 }
     }
 
     /// Size in words.
@@ -59,6 +60,7 @@ impl Memory {
     pub fn load(&mut self, addr: i32) -> Result<i32> {
         let a = self.check(addr, "load")?;
         self.stats.loads += 1;
+        self.hi_water = self.hi_water.max(a + 1);
         Ok(self.words[a])
     }
 
@@ -66,6 +68,7 @@ impl Memory {
     pub fn store(&mut self, addr: i32, value: i32) -> Result<()> {
         let a = self.check(addr, "store")?;
         self.stats.stores += 1;
+        self.hi_water = self.hi_water.max(a + 1);
         self.words[a] = value;
         Ok(())
     }
@@ -103,6 +106,18 @@ impl Memory {
         self.stats = MemStats::default();
     }
 
+    /// Footprint watermark: highest word address the **array** touched
+    /// (counted accesses only) + 1. Host pokes/peeks don't move it —
+    /// the profiler reports what the launched programs reached.
+    pub fn high_water(&self) -> usize {
+        self.hi_water
+    }
+
+    /// Reset the footprint watermark (e.g. at walk boundaries).
+    pub fn reset_high_water(&mut self) {
+        self.hi_water = 0;
+    }
+
     fn check(&self, addr: i32, what: &str) -> Result<usize> {
         if addr < 0 || addr as usize >= self.words.len() {
             bail!(
@@ -134,6 +149,7 @@ pub struct BatchMemory {
     batch_cap: usize,
     n_banks: usize,
     stats: MemStats,
+    hi_water: usize,
 }
 
 impl BatchMemory {
@@ -148,6 +164,7 @@ impl BatchMemory {
             batch_cap,
             n_banks,
             stats: MemStats::default(),
+            hi_water: 0,
         }
     }
 
@@ -180,6 +197,7 @@ impl BatchMemory {
         let a = self.check(addr, "load")?;
         debug_assert!(out.len() <= self.batch_cap);
         self.stats.loads += 1;
+        self.hi_water = self.hi_water.max(a + 1);
         out.copy_from_slice(&self.backing[a * self.batch_cap..a * self.batch_cap + out.len()]);
         Ok(())
     }
@@ -190,6 +208,7 @@ impl BatchMemory {
         let a = self.check(addr, "store")?;
         debug_assert!(values.len() <= self.batch_cap);
         self.stats.stores += 1;
+        self.hi_water = self.hi_water.max(a + 1);
         self.backing[a * self.batch_cap..a * self.batch_cap + values.len()]
             .copy_from_slice(values);
         Ok(())
@@ -240,6 +259,17 @@ impl BatchMemory {
     /// Reset the access counters (e.g. between launches of one batch).
     pub fn reset_stats(&mut self) {
         self.stats = MemStats::default();
+    }
+
+    /// Footprint watermark: highest word address the array touched
+    /// (counted accesses only) + 1 — per lane image, like [`Memory`].
+    pub fn high_water(&self) -> usize {
+        self.hi_water
+    }
+
+    /// Reset the footprint watermark (e.g. at walk boundaries).
+    pub fn reset_high_water(&mut self) {
+        self.hi_water = 0;
     }
 
     fn check(&self, addr: i32, what: &str) -> Result<usize> {
@@ -298,6 +328,30 @@ mod tests {
         m.store(0, 1).unwrap();
         m.reset_stats();
         assert_eq!(m.stats().total(), 0);
+    }
+
+    #[test]
+    fn high_water_tracks_counted_accesses_only() {
+        let mut m = Memory::new(32, 4);
+        assert_eq!(m.high_water(), 0);
+        m.poke(30, 1); // host init doesn't move the watermark
+        assert_eq!(m.high_water(), 0);
+        m.load(5).unwrap();
+        assert_eq!(m.high_water(), 6);
+        m.store(17, 9).unwrap();
+        assert_eq!(m.high_water(), 18);
+        m.load(2).unwrap();
+        assert_eq!(m.high_water(), 18, "watermark is a max");
+        m.reset_high_water();
+        assert_eq!(m.high_water(), 0);
+
+        let mut b = BatchMemory::new(32, 4, 2);
+        b.store_lanes(9, &[1, 2]).unwrap();
+        let mut out = [0i32; 2];
+        b.load_lanes(4, &mut out).unwrap();
+        assert_eq!(b.high_water(), 10);
+        b.reset_high_water();
+        assert_eq!(b.high_water(), 0);
     }
 
     #[test]

@@ -241,4 +241,68 @@ mod tests {
         assert_eq!(cc[OpClass::Nop.idx()], 0);
         assert_eq!(RunStats::new().class_cycles(), [0; OpClass::COUNT]);
     }
+
+    #[test]
+    fn class_cycles_largest_remainder_adversarial() {
+        // Prime cycle count over a skewed mix: floor division drops
+        // cycles on every class; largest-remainder must restore them.
+        let mut s = RunStats::new();
+        s.cycles = 97;
+        s.op_mix[0][OpClass::Load.idx()] = 7;
+        s.op_mix[1][OpClass::Mul.idx()] = 11;
+        s.op_mix[2][OpClass::Sum.idx()] = 13;
+        s.op_mix[3][OpClass::Store.idx()] = 1;
+        s.op_mix[4][OpClass::Other.idx()] = 1;
+        s.op_mix[5][OpClass::Nop.idx()] = 1;
+        let cc = s.class_cycles();
+        assert_eq!(cc.iter().sum::<u64>(), 97);
+        // Every class has slots, so every class gets at least its floor;
+        // nobody receives more than floor + 1.
+        let total = s.total_slots();
+        for c in OpClass::ALL {
+            let slots = s.class_total(c);
+            let floor = (97u128 * slots as u128 / total as u128) as u64;
+            assert!(cc[c.idx()] == floor || cc[c.idx()] == floor + 1, "{c:?}: {}", cc[c.idx()]);
+        }
+
+        // Fewer cycles than classes: only the largest remainders get a
+        // cycle at all, and the sum is still exact.
+        let mut s = RunStats::new();
+        s.cycles = 2;
+        for c in OpClass::ALL {
+            s.op_mix[c.idx()][c.idx()] = 1;
+        }
+        let cc = s.class_cycles();
+        assert_eq!(cc.iter().sum::<u64>(), 2);
+        assert_eq!(cc.iter().filter(|&&v| v == 1).count(), 2);
+
+        // u64-scale products: cycles * slots overflows u64 but the u128
+        // intermediate keeps the attribution exact.
+        let mut s = RunStats::new();
+        s.cycles = u64::MAX / 2;
+        s.op_mix[0][OpClass::Load.idx()] = u64::MAX / 3;
+        s.op_mix[1][OpClass::Mul.idx()] = u64::MAX / 5;
+        let cc = s.class_cycles();
+        assert_eq!(cc.iter().sum::<u64>(), u64::MAX / 2);
+        assert!(cc[OpClass::Load.idx()] > cc[OpClass::Mul.idx()]);
+
+        // Exhaustive small sweep: all 3-class slot mixes up to 4 slots,
+        // cycles 1..=13 — the invariant holds everywhere.
+        for a in 0..=4u64 {
+            for b in 0..=4u64 {
+                for c in 0..=4u64 {
+                    for cycles in 1..=13u64 {
+                        let mut s = RunStats::new();
+                        s.cycles = cycles;
+                        s.op_mix[0][OpClass::Load.idx()] = a;
+                        s.op_mix[0][OpClass::Mul.idx()] = b;
+                        s.op_mix[0][OpClass::Nop.idx()] = c;
+                        let cc = s.class_cycles();
+                        let expect = if a + b + c == 0 { 0 } else { cycles };
+                        assert_eq!(cc.iter().sum::<u64>(), expect, "a={a} b={b} c={c} cy={cycles}");
+                    }
+                }
+            }
+        }
+    }
 }

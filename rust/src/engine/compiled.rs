@@ -55,7 +55,7 @@ use crate::nn::graph::{golden_layer, Layer, Net};
 use crate::nn::lower::{
     cpu_baseline_cycles, decimate_into, glue_spec, host_energy_uj, pad_into, pool_into, HostOp,
 };
-use crate::obs::trace;
+use crate::obs::{profile, trace};
 
 use super::auto::{self, AutoDecision};
 use super::{relu_cost, Engine};
@@ -169,6 +169,12 @@ pub struct InferRun {
     /// Whether every layer matched the golden model (`Some` only in
     /// verified runs).
     pub exact: Option<bool>,
+    /// Bottleneck attribution of the inference's CGRA walks (`Some`
+    /// only while a profiling session is active, DESIGN.md §12). Walk
+    /// cycles only: the modeled launch overhead and host glue are not
+    /// step-attributable. For batched runs this is the shared µop
+    /// walk's attribution — identical for every lane by construction.
+    pub profile: Option<profile::ProfileDelta>,
 }
 
 /// Static summary of one compiled layer (CLI `cgra compile` table).
@@ -609,11 +615,13 @@ impl CompiledNet {
         let mut relu_total = 0u64;
         let mut all_exact = true;
         let mut rsp = trace::span_dyn("engine", || format!("infer:{}", self.net.name));
+        let pf = profile::frame();
 
         for (index, cl) in self.layers.iter().enumerate() {
             let lctx =
                 || format!("layer {index} ({}) of '{}'", cl.kind, self.net.name);
             let mut lsp = trace::span_dyn("layer", || format!("L{index}:{}", cl.kind));
+            let lf = profile::frame();
             let out_elems = cl.out_dims.0 * cl.out_dims.1 * cl.out_dims.2;
             let mut conv_cycles = 0u64;
             let mut conv_energy = 0.0f64;
@@ -716,6 +724,9 @@ impl CompiledNet {
             total_energy += energy_uj;
             relu_total += relu_cycles;
             annotate_layer(&mut lsp, cl, cycles, conv_cycles, relu_cycles, launches);
+            if let Some(d) = lf.finish() {
+                profile::record_layer(format!("L{index:02}:{}", cl.kind), &d);
+            }
             layers.push(LayerRun {
                 cycles,
                 conv_cycles,
@@ -745,6 +756,7 @@ impl CompiledNet {
             total_energy_uj: total_energy,
             relu_cycles: relu_total,
             exact: verify.then_some(all_exact),
+            profile: pf.finish(),
         })
     }
 
@@ -868,11 +880,13 @@ impl CompiledNet {
         let mut all_exact = true;
         let mut rsp = trace::span_dyn("engine", || format!("infer_batch:{}", self.net.name));
         rsp.arg("lanes", nb);
+        let pf = profile::frame();
 
         for (index, cl) in self.layers.iter().enumerate() {
             let lctx =
                 || format!("layer {index} ({}) of '{}'", cl.kind, self.net.name);
             let mut lsp = trace::span_dyn("layer", || format!("L{index}:{}", cl.kind));
+            let lf = profile::frame();
             let out_elems = cl.out_dims.0 * cl.out_dims.1 * cl.out_dims.2;
             let in_elems = cl.in_dims.0 * cl.in_dims.1 * cl.in_dims.2;
             let mut conv_cycles = 0u64;
@@ -1029,6 +1043,9 @@ impl CompiledNet {
             total_energy += energy_uj;
             relu_total += relu_cycles;
             annotate_layer(&mut lsp, cl, cycles, conv_cycles, relu_cycles, launches);
+            if let Some(d) = lf.finish() {
+                profile::record_layer(format!("L{index:02}:{}", cl.kind), &d);
+            }
             layers.push(LayerRun {
                 cycles,
                 conv_cycles,
@@ -1062,6 +1079,7 @@ impl CompiledNet {
             total_energy_uj: total_energy,
             relu_cycles: relu_total,
             exact: verify.then_some(all_exact),
+            profile: pf.finish(),
         })
     }
 }

@@ -40,11 +40,17 @@ pub(crate) fn dispatch(
     input: &TensorChw,
     weights: &Weights,
 ) -> Result<ConvOutcome> {
-    match mapping {
-        Mapping::Auto => {
-            let (concrete, _reason) = Mapping::Auto.resolve(shape, cgra.config())?;
-            dispatch(cgra, concrete, shape, input, weights)
-        }
+    if mapping.is_auto() {
+        let (concrete, _reason) = Mapping::Auto.resolve(shape, cgra.config())?;
+        return dispatch(cgra, concrete, shape, input, weights);
+    }
+    // Aggregate the conv's walks under its mapping label when a
+    // profiling session is active (DESIGN.md §12). The frame folds
+    // into any enclosing frame, so callers that scope their own
+    // (e.g. `planner::bottleneck_check`) still see the full delta.
+    let fr = crate::obs::profile::frame();
+    let out = match mapping {
+        Mapping::Auto => unreachable!("resolved above"),
         Mapping::Wp => wp::run(cgra, shape, input, weights),
         Mapping::Ip => ip::run(cgra, shape, input, weights),
         Mapping::OpIm2col => op_im2col::run(cgra, shape, input, weights),
@@ -59,7 +65,14 @@ pub(crate) fn dispatch(
             MemLayout::new(shape, 0, cgra.config())?;
             crate::cpu_ref::run(&CpuModel::default(), shape, input, weights)
         }
+    }?;
+    if let Some(d) = fr.finish() {
+        // The CPU baseline performs no CGRA walks; nothing to file.
+        if d.walks > 0 {
+            crate::obs::profile::record_walk(mapping.label(), &d);
+        }
     }
+    Ok(out)
 }
 
 #[cfg(test)]

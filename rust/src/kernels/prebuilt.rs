@@ -47,7 +47,7 @@ use crate::cgra::{
 use crate::conv::{im2col_patch, patch_len, ConvShape, TensorChw, TensorHwc, Weights};
 use crate::cpu_ref::CpuModel;
 use crate::isa::N_PES;
-use crate::obs::trace;
+use crate::obs::{profile, trace};
 
 use super::common::{ConvOutcome, HostCostModel, LatencyBreakdown, Mapping, MemLayout};
 use super::{dw, ip, op_direct, op_im2col, wp};
@@ -1055,7 +1055,27 @@ fn walk_decoded(
     if sp.is_recording() {
         annotate_walk(&mut sp, launch, 1, &s);
     }
+    annotate_profile(&mut sp, mapping);
     Ok(s)
+}
+
+/// Pick up the walk's bottleneck attribution left by the executor and
+/// (a) attach it to the walk span, (b) fold it into the per-mapping
+/// session aggregate (DESIGN.md §12). One relaxed atomic load when the
+/// profiler is off.
+fn annotate_profile(sp: &mut trace::Span, mapping: Mapping) {
+    if !profile::enabled() {
+        return;
+    }
+    if let Some(wp) = profile::take_last_walk() {
+        if sp.is_recording() {
+            for c in profile::BnClass::ALL {
+                sp.arg(c.key(), wp.class_cycles[c.idx()]);
+            }
+            sp.arg("hi_water_words", wp.hi_water_words);
+        }
+        profile::record_walk(mapping.label(), &wp);
+    }
 }
 
 /// One traced batched simulator walk (`nb` lanes per shared µop walk).
@@ -1072,6 +1092,7 @@ fn walk_decoded_batch(
     if sp.is_recording() {
         annotate_walk(&mut sp, launch, nb, &s);
     }
+    annotate_profile(&mut sp, mapping);
     Ok(s)
 }
 

@@ -61,9 +61,12 @@
 //!   ([`server::tcp`]).
 //! - [`obs`] — observability: a free-when-off span tracer covering the
 //!   whole request path (daemon accept → admission → queue → layers →
-//!   µop walks) with Chrome trace-event export (`cgra trace`), plus
+//!   µop walks) with Chrome trace-event export (`cgra trace`),
 //!   always-on counters/gauges/log2 histograms behind the daemon's
-//!   p50/p95/p99 stats fields.
+//!   p50/p95/p99 stats fields, and a cycle-attribution profiler that
+//!   accounts every modeled cycle to a bottleneck class — ALU,
+//!   DMA port, bank conflict, control, watchdog floor — per PE and
+//!   per bank (`cgra profile`, DESIGN.md §12).
 //! - [`runtime`] — the PJRT bridge: loads AOT-compiled JAX/Pallas HLO
 //!   artifacts and verifies the simulator element-exactly against them.
 //! - [`report`] — figure/table regeneration (Fig. 3, Fig. 4, Fig. 5),

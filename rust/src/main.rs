@@ -14,6 +14,8 @@
 //!              [--capacity N] [--admission reject|degrade]    registry + admission + stats
 //! cgra trace   [--preset NAME] [--iters N] [--out FILE]      run compiled inferences under the
 //!                                                             span tracer, write Chrome JSON
+//! cgra profile [--preset NAME | --mapping M --shape CxKxOXxOY] cycle-attribution profiler:
+//!              [--iters N] [--out FILE.json]                  per-PE / per-bank bottleneck report
 //! cgra verify  [--artifacts DIR]                             CGRA vs XLA artifact
 //! cgra asm     FILE.casm                                     assemble + run + dump
 //! ```
@@ -37,7 +39,8 @@ fn main() {
 }
 
 const USAGE: &str =
-    "usage: cgra <run|plan|report|sweep|net|compile|serve|daemon|trace|verify|asm> [options]\n\
+    "usage: cgra <run|plan|report|sweep|net|compile|serve|daemon|trace|profile|verify|asm> \
+     [options]\n\
      see README.md for per-command options";
 
 fn dispatch() -> Result<()> {
@@ -52,6 +55,7 @@ fn dispatch() -> Result<()> {
         "serve" => cmd_serve(),
         "daemon" => cmd_daemon(),
         "trace" => cmd_trace(),
+        "profile" => cmd_profile(),
         "verify" => cmd_verify(),
         "asm" => cmd_asm(),
         "" | "help" | "--help" | "-h" => {
@@ -270,6 +274,21 @@ fn cmd_plan() -> Result<()> {
         println!(
             "planner accuracy OK: mean |latency err| {:.3}% <= {max_mae}%",
             report.mean_abs_latency_err_pct
+        );
+        // Composition cross-check: does the launch-class decomposition
+        // predict *where* the cycles go (DESIGN.md §12)? The latency
+        // gate above only bounds how many there are.
+        let bc = openedge_cgra::planner::bottleneck_check(
+            &engine,
+            &ConvShape::checked(4, 4, 8, 8)?,
+            Mapping::Wp,
+            11,
+        )?;
+        println!("\n{}", bc.render());
+        anyhow::ensure!(
+            bc.max_share_err_pp <= 5.0,
+            "predicted bottleneck composition off by {:.3} pp (> 5 pp bound)",
+            bc.max_share_err_pp
         );
         return Ok(());
     }
@@ -777,7 +796,7 @@ fn cmd_serve() -> Result<()> {
 fn cmd_daemon() -> Result<()> {
     let a = Args::from_env(
         2,
-        &[],
+        &["profile"],
         vec![
             OptSpec { name: "port", value: "INT", help: "TCP port (default 0 = OS-assigned)" },
             OptSpec { name: "workers", value: "INT", help: "worker threads (default 2)" },
@@ -797,6 +816,12 @@ fn cmd_daemon() -> Result<()> {
                 help: "deadline policy: reject outright, or degrade \
                        (latency-remap, then batch-1) before rejecting (default degrade)",
             },
+            OptSpec {
+                name: "profile",
+                value: "",
+                help: "attribute walk cycles to bottleneck classes; per-tenant aggregates \
+                       appear under 'bottleneck' in stats (off = zero overhead)",
+            },
         ],
     )?;
     let port: u16 = a.num_or("port", 0u16)?;
@@ -805,7 +830,11 @@ fn cmd_daemon() -> Result<()> {
     let capacity = a.num_or("capacity", 32usize)?;
     let policy =
         openedge_cgra::server::AdmissionPolicy::parse(&a.str_or("admission", "degrade"))?;
+    let profiling = a.flag("profile");
     a.reject_unknown()?;
+    // Held for the daemon's lifetime: flips the profiler on so worker
+    // runs carry per-inference bottleneck deltas into tenant counters.
+    let _psession = profiling.then(openedge_cgra::obs::profile::session);
 
     let daemon = std::sync::Arc::new(
         openedge_cgra::server::Daemon::builder()
@@ -826,6 +855,9 @@ fn cmd_daemon() -> Result<()> {
         daemon.registry().stats().capacity,
         policy.label(),
     );
+    if profiling {
+        println!("bottleneck profiler: on (per-tenant 'bottleneck' aggregates in stats)");
+    }
     // The smoke script scrapes the line above from a pipe — make sure
     // it is visible before the first connection is accepted.
     use std::io::Write as _;
@@ -945,11 +977,299 @@ fn cmd_trace() -> Result<()> {
 
     std::fs::write(&out, trace.to_chrome_json().to_string_pretty())
         .with_context(|| format!("writing {out}"))?;
+    if trace.dropped > 0 {
+        eprintln!(
+            "warning: trace buffer full — {} event(s) dropped and missing from {out}; \
+             lower --iters or trace a smaller network (the export carries a \
+             'trace_buffer_dropped' metadata event with the count)",
+            trace.dropped
+        );
+    }
     println!(
         "\nwrote {} spans to {out} ({} dropped); open in chrome://tracing or Perfetto",
         trace.events.len(),
         trace.dropped
     );
+    Ok(())
+}
+
+/// `cgra profile` — run inferences under the cycle-attribution profiler
+/// (DESIGN.md §12) and print a roofline-style bottleneck report: every
+/// simulated step's cycles attributed to alu / dma-port / bank-conflict
+/// / control / watchdog-floor, per-PE busy occupancy on the 4x4 grid,
+/// per-bank conflict histograms, and the memory high-water mark.
+/// Profiling is observe-only: modeled cycles and energy are
+/// bit-identical to an unprofiled run.
+///
+/// Two modes: a compiled network (`--preset` / plain-stack options,
+/// aggregates walk → layer → network), or a single convolution layer
+/// (`--mapping` + `--shape`). `--out FILE.json` writes the full JSON
+/// aggregate plus `<stem>.pe_ops.csv` (per-PE × op-class heatmap) and
+/// `<stem>.banks.csv` (per-bank conflict-degree heatmap).
+fn cmd_profile() -> Result<()> {
+    let a = Args::from_env(
+        2,
+        &[],
+        vec![
+            OptSpec {
+                name: "preset",
+                value: "NAME",
+                help: "named network: mobilenet-mini | paper-baseline | vgg-mini \
+                       (default: a plain --depth/--c0/--k/--hw conv stack)",
+            },
+            OptSpec {
+                name: "mapping",
+                value: "wp|ip|im2col-op|conv-op|dw",
+                help: "single-layer mode: profile one convolution with this strategy \
+                       instead of a compiled network",
+            },
+            OptSpec {
+                name: "shape",
+                value: "CxKxOXxOY",
+                help: "single-layer mode: conv shape (default 16x16x16x16)",
+            },
+            OptSpec { name: "iters", value: "INT", help: "profiled inferences (default 3)" },
+            OptSpec {
+                name: "out",
+                value: "FILE",
+                help: "JSON output path; also writes <stem>.pe_ops.csv and <stem>.banks.csv",
+            },
+            OptSpec { name: "depth", value: "INT", help: "plain stack: conv layers" },
+            OptSpec { name: "c0", value: "INT", help: "plain stack: input channels" },
+            OptSpec { name: "k", value: "INT", help: "plain stack: channels per layer" },
+            OptSpec { name: "hw", value: "INT", help: "plain stack: input height=width" },
+            OptSpec { name: "seed", value: "INT", help: "weight/data seed" },
+        ],
+    )?;
+    let seed = a.num_or("seed", 7u64)?;
+    let iters: u64 = a.num_or("iters", 3u64)?;
+    let out = a.opt_str("out").map(str::to_string);
+    let single = a.opt_str("mapping").map(str::to_string);
+    let shape_s = a.str_or("shape", "16x16x16x16");
+    anyhow::ensure!(iters >= 1, "--iters must be at least 1");
+
+    if let Some(m) = single {
+        // Single-layer mode: profile one convolution. Explicit tensors
+        // keep the engine's result cache out of the loop, so every
+        // iteration is a real simulation.
+        let mapping = Mapping::parse(&m)?;
+        let dims: Vec<usize> = shape_s.split('x').filter_map(|t| t.parse().ok()).collect();
+        anyhow::ensure!(
+            dims.len() == 4 && shape_s.split('x').count() == 4,
+            "--shape must be CxKxOXxOY, got '{shape_s}'"
+        );
+        let shape = ConvShape::checked(dims[0], dims[1], dims[2], dims[3])?;
+        a.reject_unknown()?;
+        let engine = EngineBuilder::new().build()?;
+        let mut rng = Rng::new(seed);
+        let input = random_input(&shape, 30, &mut rng);
+        let weights = if mapping == Mapping::DwWp {
+            anyhow::ensure!(
+                shape.k == shape.c,
+                "depthwise convention: K must equal C, got K={} C={}",
+                shape.k,
+                shape.c
+            );
+            openedge_cgra::conv::random_depthwise_weights(&shape, 9, &mut rng)
+        } else {
+            random_weights(&shape, 9, &mut rng)
+        };
+        let session = openedge_cgra::obs::profile::session();
+        let mut cycles = 0u64;
+        for _ in 0..iters {
+            let res = engine.submit(&ConvRequest::with_data(
+                shape,
+                mapping,
+                input.clone(),
+                weights.clone(),
+            ))?;
+            cycles = res.report.latency_cycles;
+        }
+        let prof = session.finish();
+        println!(
+            "profiled {iters} runs of {} on layer {shape} ({cycles} modeled cycles/run)\n",
+            mapping.label()
+        );
+        render_profile(&prof, out.as_deref())?;
+        return Ok(());
+    }
+
+    // Network mode: compile and warm up OUTSIDE the session — auto
+    // decisions simulate planner probe launches at compile time, and
+    // those must not pollute the serving-steady-state attribution.
+    let net = net_from_args(&a, seed)?;
+    a.reject_unknown()?;
+    let engine = EngineBuilder::new().build()?;
+    let compiled = engine.compile_owned(net)?;
+    let mut ctx = compiled.new_ctx();
+    let input = compiled.net().random_input(8, seed ^ 0xabcd);
+    compiled.run(&mut ctx, &input)?;
+
+    let session = openedge_cgra::obs::profile::session();
+    let mut last = None;
+    for i in 0..iters {
+        let input = compiled.net().random_input(8, seed ^ 0xabcd ^ i);
+        last = Some(compiled.run(&mut ctx, &input)?);
+    }
+    let prof = session.finish();
+    let run = last.expect("at least one profiled inference");
+    println!(
+        "profiled {iters} inferences of '{}' ({} layers, {} modeled cycles/inference)\n",
+        compiled.name(),
+        compiled.layer_count(),
+        run.total_cycles
+    );
+    if let Some(d) = &run.profile {
+        let attributed: u64 = d.class_cycles.iter().sum();
+        println!(
+            "per-inference walk attribution: {} cycles over {} walks \
+             (sums exactly: {})\n",
+            d.cycles,
+            d.walks,
+            if attributed == d.cycles { "yes" } else { "NO" },
+        );
+    }
+    render_profile(&prof, out.as_deref())?;
+    Ok(())
+}
+
+/// Print the roofline-style text report for a finished profile and
+/// write the JSON + CSV artifacts when an output path was given.
+fn render_profile(prof: &openedge_cgra::obs::Profile, out: Option<&str>) -> Result<()> {
+    use openedge_cgra::isa::{COLS, N_PES, ROWS};
+    use openedge_cgra::obs::BnClass;
+
+    let t = &prof.total;
+    println!(
+        "bottleneck attribution ({} walk cycles, {} walks, {} steps):",
+        t.cycles, t.walks, t.steps
+    );
+    let shares = t.class_shares();
+    for b in BnClass::ALL {
+        let pct = shares[b.idx()] * 100.0;
+        let bar = "#".repeat((pct * 0.28).round() as usize);
+        println!(
+            "  {:<14} {:<28} {:5.1}%  ({} cycles)",
+            b.label(),
+            bar,
+            pct,
+            t.class_cycles[b.idx()]
+        );
+    }
+
+    println!("\nper-PE busy occupancy ({ROWS}x{COLS} grid, % of walk cycles):");
+    for r in 0..ROWS {
+        let row: Vec<String> = (0..COLS)
+            .map(|c| {
+                let i = r * COLS + c;
+                let total = t.busy[i] + t.idle[i];
+                if total == 0 {
+                    "    -".into()
+                } else {
+                    format!("{:5.1}", 100.0 * t.busy[i] as f64 / total as f64)
+                }
+            })
+            .collect();
+        println!("  {}", row.join(" "));
+    }
+
+    let conflicted: Vec<(usize, u64)> = (0..t.bank_conflicts.len())
+        .map(|b| (b, t.bank_conflict_steps(b)))
+        .filter(|&(_, n)| n > 0)
+        .collect();
+    if conflicted.is_empty() {
+        println!("\nbank conflicts: none");
+    } else {
+        println!("\nbank conflicts (steps with >= 2 same-bank accesses):");
+        for (b, n) in &conflicted {
+            let max_d = (2..=openedge_cgra::obs::profile::MAX_CONFLICT_DEGREE)
+                .filter(|&d| t.bank_conflicts[*b][d] > 0)
+                .max()
+                .unwrap_or(0);
+            println!("  bank {b:2}: {n} conflicted steps (max degree {max_d})");
+        }
+    }
+    println!(
+        "memory high water: {} words ({})",
+        t.hi_water_words,
+        openedge_cgra::util::fmt::kib(4 * t.hi_water_words)
+    );
+
+    let top = |d: &openedge_cgra::obs::ProfileDelta| -> String {
+        let shares = d.class_shares();
+        BnClass::ALL
+            .iter()
+            .max_by(|a, b| shares[a.idx()].total_cmp(&shares[b.idx()]))
+            .map(|b| format!("{} {:.0}%", b.label(), shares[b.idx()] * 100.0))
+            .unwrap_or_default()
+    };
+    if !prof.by_mapping.is_empty() {
+        println!("\nby mapping:");
+        for (label, d) in &prof.by_mapping {
+            println!(
+                "  {label:<10} {:>10} cycles over {:>5} walks — top bottleneck: {}",
+                d.cycles,
+                d.walks,
+                top(d)
+            );
+        }
+    }
+    if !prof.by_layer.is_empty() {
+        println!("\nby layer:");
+        for (key, d) in &prof.by_layer {
+            println!(
+                "  {key:<14} {:>10} cycles over {:>5} walks — top bottleneck: {}",
+                d.cycles,
+                d.walks,
+                top(d)
+            );
+        }
+    }
+
+    if let Some(out) = out {
+        std::fs::write(out, prof.to_json().to_string_pretty())
+            .with_context(|| format!("writing {out}"))?;
+        let stem = out.strip_suffix(".json").unwrap_or(out);
+
+        let mut pe_csv = String::from("pe,row,col,busy_cycles,idle_cycles");
+        for c in openedge_cgra::cgra::OpClass::ALL {
+            pe_csv.push(',');
+            pe_csv.push_str(c.label());
+        }
+        pe_csv.push('\n');
+        for i in 0..N_PES {
+            pe_csv.push_str(&format!(
+                "{i},{},{},{},{}",
+                i / COLS,
+                i % COLS,
+                t.busy[i],
+                t.idle[i]
+            ));
+            for c in openedge_cgra::cgra::OpClass::ALL {
+                pe_csv.push_str(&format!(",{}", t.pe_ops[i][c.idx()]));
+            }
+            pe_csv.push('\n');
+        }
+        let pe_path = format!("{stem}.pe_ops.csv");
+        std::fs::write(&pe_path, pe_csv).with_context(|| format!("writing {pe_path}"))?;
+
+        let mut bank_csv = String::from("bank,conflicted_steps");
+        for d in 1..=openedge_cgra::obs::profile::MAX_CONFLICT_DEGREE {
+            bank_csv.push_str(&format!(",d{d}"));
+        }
+        bank_csv.push('\n');
+        for (b, h) in t.bank_conflicts.iter().enumerate() {
+            bank_csv.push_str(&format!("{b},{}", t.bank_conflict_steps(b)));
+            for d in 1..=openedge_cgra::obs::profile::MAX_CONFLICT_DEGREE {
+                bank_csv.push_str(&format!(",{}", h[d]));
+            }
+            bank_csv.push('\n');
+        }
+        let bank_path = format!("{stem}.banks.csv");
+        std::fs::write(&bank_path, bank_csv).with_context(|| format!("writing {bank_path}"))?;
+
+        println!("\nwrote {out}, {pe_path}, {bank_path}");
+    }
     Ok(())
 }
 

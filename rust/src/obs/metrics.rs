@@ -348,6 +348,61 @@ mod tests {
     }
 
     #[test]
+    fn percentile_edges() {
+        // Empty: every quantile is 0 and the summary is all-zero.
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), 0);
+        }
+        assert_eq!(h.summary(), HistogramSummary::default());
+
+        // Single sample: every quantile reports that sample's bucket,
+        // clamped to the exact value in the summary — including q=0,
+        // whose rank clamps up to 1.
+        let h = Histogram::new();
+        h.record(5);
+        for q in [0.0, 0.25, 0.5, 1.0] {
+            assert_eq!(h.percentile(q), 7, "bucket [4,7] upper bound");
+        }
+        let s = h.summary();
+        assert_eq!((s.min, s.p50, s.p99, s.max), (5, 5, 5, 5));
+
+        // All samples in one bucket: quantiles can't split the bucket,
+        // so p50 == p99 == the bucket bound.
+        let h = Histogram::new();
+        for v in [8u64, 9, 12, 15] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.5), 15);
+        assert_eq!(h.percentile(0.99), 15);
+        let s = h.summary();
+        assert_eq!((s.min, s.p50, s.p99, s.max), (8, 15, 15, 15));
+
+        // Saturating max: u64::MAX lands in the last bucket and the
+        // upper bound saturates instead of overflowing.
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(0);
+        assert_eq!(h.percentile(1.0), u64::MAX);
+        assert_eq!(h.percentile(0.5), 0, "rank 1 is the zero bucket");
+        let s = h.summary();
+        assert_eq!(s.max, u64::MAX);
+        assert_eq!(s.p99, u64::MAX);
+        assert_eq!(s.min, 0);
+        // The sum wraps silently only via the atomic add — document
+        // the observed value: MAX + 0 = MAX.
+        assert_eq!(s.sum, u64::MAX);
+
+        // Out-of-range q is clamped by the rank computation, never a
+        // panic or an out-of-range rank.
+        let h = Histogram::new();
+        h.record(3);
+        h.record(4);
+        assert_eq!(h.percentile(-1.0), 3, "rank clamps up to 1");
+        assert_eq!(h.percentile(2.0), 7, "rank clamps down to count");
+    }
+
+    #[test]
     fn counter_gauge_basics() {
         let c = Counter::new();
         assert_eq!(c.get(), 0);

@@ -15,14 +15,22 @@
 //!   plus a named [`metrics::Registry`]; the serving daemon's
 //!   queue-wait/exec/end-to-end latency distributions and the
 //!   p50/p95/p99 fields of the stats verb come from here.
+//! - [`profile`] — the cycle-attribution profiler (DESIGN.md §12):
+//!   attributes every simulated step's cycles to a bottleneck class
+//!   (alu / dma-port / bank-conflict / control / floor) with per-PE
+//!   occupancy, per-bank conflict histograms and memory watermarks,
+//!   aggregated walk → layer → network → per-tenant daemon stats.
+//!   Same free-when-off contract as [`trace`].
 //!
-//! Entry points: `cgra trace` (CLI) records one session around a
-//! compiled-path run and writes the Chrome JSON; servers record into
-//! histograms unconditionally and surface summaries via
-//! `server::DaemonStats`.
+//! Entry points: `cgra trace` / `cgra profile` (CLI) record one
+//! session around a compiled-path run and write Chrome JSON resp. the
+//! roofline-style report; servers record into histograms
+//! unconditionally and surface summaries via `server::DaemonStats`.
 
 pub mod metrics;
+pub mod profile;
 pub mod trace;
 
 pub use metrics::{Counter, Gauge, Histogram, HistogramSummary, Registry};
+pub use profile::{BnClass, Profile, ProfileDelta, ProfileSession};
 pub use trace::{span, span_dyn, Span, Trace, TraceEvent, TraceSession};

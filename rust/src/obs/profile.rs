@@ -1,0 +1,684 @@
+//! Cycle-attribution profiler: per-PE / per-bank bottleneck accounting.
+//!
+//! The executor computes a step-cost decomposition every step —
+//! `alu_part` / `port_part` / `bank_part` in `cgra::exec::step_cost` —
+//! and keeps only the max. This module, when a [`session`] is active,
+//! attributes every `step_cycles` to a winning **bottleneck class**
+//! ([`BnClass`]): the ALU critical path, DMA-port serialization,
+//! memory-bank conflicts, control/bubble steps (the issue floor on
+//! steps doing no data work), or the watchdog floor (the `.max(1)`
+//! charge when every part is zero). Ties are split largest-remainder
+//! style: the tied classes share the step's cycles equally and the
+//! integer shortfall goes to the earlier classes in the fixed order
+//! alu → dma-port → bank-conflict — deterministic, so the scalar and
+//! batched executors (which share one walk) attribute identically.
+//!
+//! Alongside the class split the profiler accumulates per-PE busy/idle
+//! occupancy (cycle-weighted, a PE is busy on a step when its issued
+//! op is not a `nop`), per-PE × op-class issue counts, per-bank
+//! conflict-degree histograms (how many same-bank accesses collided
+//! per step), and the memory footprint watermark of each walk.
+//!
+//! # Free when off, observe-don't-perturb
+//!
+//! Same contract as [`super::trace`]: with no session active the entire
+//! subsystem costs **one relaxed atomic load per simulator run** (not
+//! per step — the executors latch [`enabled`] once at entry). The
+//! profiler only ever *reads* executor state; it never feeds back into
+//! timing, energy or architectural state, so a profiled run reports
+//! bit-identical modeled numbers (pinned by `tests/profile.rs` and
+//! `tests/compiled_counters.rs`).
+//!
+//! # Aggregation
+//!
+//! Walk deltas accumulate three ways at once:
+//! - **per walk**: the executor finishes a walk → [`take_last_walk`]
+//!   hands the delta to `kernels::prebuilt`, which attaches it to the
+//!   PR-8 `walk:` span and files it under its mapping label;
+//! - **per frame**: `engine::compiled` brackets layers and whole
+//!   inferences in RAII [`Frame`]s; child frames fold into their parent
+//!   on finish, so an `InferRun` carries its exact per-inference delta
+//!   (batch walks are shared and counted once — lane-for-lane equal to
+//!   a scalar run by construction);
+//! - **globally**: every walk also folds into the session totals,
+//!   grouped by mapping label and by layer, returned by
+//!   [`ProfileSession::finish`] as a [`Profile`].
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::cgra::OpClass;
+use crate::isa::N_PES;
+use crate::util::json::Json;
+
+/// Conflict-degree histogram cap: per-step same-bank access counts of
+/// `MAX_CONFLICT_DEGREE` or more share the last bucket (16 PEs means
+/// degrees above 16 are impossible on the paper's array anyway).
+pub const MAX_CONFLICT_DEGREE: usize = 16;
+
+/// The bottleneck classes a step's cycles are attributed to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BnClass {
+    /// ALU critical path won: the step was compute-limited.
+    Alu,
+    /// Per-column DMA-port serialization won.
+    DmaPort,
+    /// Memory-bank conflicts won.
+    BankConflict,
+    /// The ALU term won but no PE issued a load/mul/sum/store — the
+    /// cycles are control flow, address setup or bubbles.
+    Control,
+    /// Every part was zero; the cycle is the executor's `.max(1)`
+    /// issue floor.
+    Floor,
+}
+
+impl BnClass {
+    /// Number of classes (array sizing).
+    pub const COUNT: usize = 5;
+
+    /// All classes in report order.
+    pub const ALL: [BnClass; 5] =
+        [BnClass::Alu, BnClass::DmaPort, BnClass::BankConflict, BnClass::Control, BnClass::Floor];
+
+    /// Index into `[u64; COUNT]` accumulators.
+    pub fn idx(self) -> usize {
+        match self {
+            BnClass::Alu => 0,
+            BnClass::DmaPort => 1,
+            BnClass::BankConflict => 2,
+            BnClass::Control => 3,
+            BnClass::Floor => 4,
+        }
+    }
+
+    /// Human-readable report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            BnClass::Alu => "alu",
+            BnClass::DmaPort => "dma-port",
+            BnClass::BankConflict => "bank-conflict",
+            BnClass::Control => "control/bubble",
+            BnClass::Floor => "watchdog-floor",
+        }
+    }
+
+    /// Identifier-safe key for JSON objects and span args.
+    pub fn key(self) -> &'static str {
+        match self {
+            BnClass::Alu => "alu",
+            BnClass::DmaPort => "dma_port",
+            BnClass::BankConflict => "bank_conflict",
+            BnClass::Control => "control",
+            BnClass::Floor => "floor",
+        }
+    }
+}
+
+/// One profiling accumulation — a single walk, a layer, an inference
+/// or a whole session, depending on where it was collected.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProfileDelta {
+    /// Simulator walks folded into this delta.
+    pub walks: u64,
+    /// Issue steps observed.
+    pub steps: u64,
+    /// Modeled cycles observed (identical to the sum of the walks'
+    /// `RunStats::cycles` — the profiler never re-models anything).
+    pub cycles: u64,
+    /// Bottleneck attribution, indexed by [`BnClass::idx`]. Sums to
+    /// `cycles` exactly (the invariant `tests/profile.rs` enforces).
+    pub class_cycles: [u64; BnClass::COUNT],
+    /// Cycle-weighted busy occupancy per PE (issued op ≠ nop).
+    pub busy: [u64; N_PES],
+    /// Cycle-weighted idle occupancy per PE (`busy[i] + idle[i] ==
+    /// cycles` for every PE).
+    pub idle: [u64; N_PES],
+    /// Issue-slot counts per PE × op class (`[pe][OpClass::idx()]`).
+    pub pe_ops: [[u64; OpClass::COUNT]; N_PES],
+    /// Per-bank conflict-degree histogram: `bank_conflicts[b][d]` =
+    /// steps on which bank `b` took exactly `d` accesses (degree
+    /// clamped to [`MAX_CONFLICT_DEGREE`]; degree ≥ 2 is a conflict).
+    pub bank_conflicts: Vec<[u64; MAX_CONFLICT_DEGREE + 1]>,
+    /// Highest memory word touched + 1 (footprint watermark; the max
+    /// over folded walks).
+    pub hi_water_words: usize,
+}
+
+impl ProfileDelta {
+    /// Fold `other` into `self` (sums everywhere; watermark is a max).
+    pub fn merge(&mut self, other: &ProfileDelta) {
+        self.walks += other.walks;
+        self.steps += other.steps;
+        self.cycles += other.cycles;
+        for k in 0..BnClass::COUNT {
+            self.class_cycles[k] += other.class_cycles[k];
+        }
+        for i in 0..N_PES {
+            self.busy[i] += other.busy[i];
+            self.idle[i] += other.idle[i];
+            for k in 0..OpClass::COUNT {
+                self.pe_ops[i][k] += other.pe_ops[i][k];
+            }
+        }
+        if self.bank_conflicts.len() < other.bank_conflicts.len() {
+            self.bank_conflicts
+                .resize(other.bank_conflicts.len(), [0; MAX_CONFLICT_DEGREE + 1]);
+        }
+        for (a, b) in self.bank_conflicts.iter_mut().zip(other.bank_conflicts.iter()) {
+            for d in 0..=MAX_CONFLICT_DEGREE {
+                a[d] += b[d];
+            }
+        }
+        self.hi_water_words = self.hi_water_words.max(other.hi_water_words);
+    }
+
+    /// Scale every additive counter by `n` (a launch class observed via
+    /// one probe stands for `n` structurally identical launches). The
+    /// watermark is left alone — it is a max, not a sum.
+    pub fn scale(&mut self, n: u64) {
+        self.walks *= n;
+        self.steps *= n;
+        self.cycles *= n;
+        for k in 0..BnClass::COUNT {
+            self.class_cycles[k] *= n;
+        }
+        for i in 0..N_PES {
+            self.busy[i] *= n;
+            self.idle[i] *= n;
+            for k in 0..OpClass::COUNT {
+                self.pe_ops[i][k] *= n;
+            }
+        }
+        for h in self.bank_conflicts.iter_mut() {
+            for d in 0..=MAX_CONFLICT_DEGREE {
+                h[d] *= n;
+            }
+        }
+    }
+
+    /// Bottleneck shares as fractions of `cycles` (zeros when empty).
+    pub fn class_shares(&self) -> [f64; BnClass::COUNT] {
+        let mut out = [0.0; BnClass::COUNT];
+        if self.cycles == 0 {
+            return out;
+        }
+        for k in 0..BnClass::COUNT {
+            out[k] = self.class_cycles[k] as f64 / self.cycles as f64;
+        }
+        out
+    }
+
+    /// Cycles a bank spent conflicted (degree ≥ 2), summed over steps
+    /// — a per-bank severity scalar for reports.
+    pub fn bank_conflict_steps(&self, bank: usize) -> u64 {
+        self.bank_conflicts
+            .get(bank)
+            .map(|h| h[2..].iter().sum())
+            .unwrap_or(0)
+    }
+
+    /// JSON rendering (hand-rolled `util::json`, no serde — per ADR).
+    pub fn to_json(&self) -> Json {
+        let classes = Json::obj(
+            BnClass::ALL
+                .iter()
+                .map(|c| (c.key(), Json::from(self.class_cycles[c.idx()])))
+                .collect(),
+        );
+        let pes = Json::Arr(
+            (0..N_PES)
+                .map(|i| {
+                    Json::obj(vec![
+                        ("busy", self.busy[i].into()),
+                        ("idle", self.idle[i].into()),
+                        (
+                            "ops",
+                            Json::obj(
+                                OpClass::ALL
+                                    .iter()
+                                    .map(|c| (c.label(), Json::from(self.pe_ops[i][c.idx()])))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let banks = Json::Arr(
+            self.bank_conflicts
+                .iter()
+                .map(|h| Json::Arr(h.iter().map(|&n| n.into()).collect()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("walks", self.walks.into()),
+            ("steps", self.steps.into()),
+            ("cycles", self.cycles.into()),
+            ("bottleneck_cycles", classes),
+            ("pes", pes),
+            ("bank_conflict_hist", banks),
+            ("hi_water_words", (self.hi_water_words as u64).into()),
+        ])
+    }
+}
+
+/// A finished profiling session: totals plus per-mapping and per-layer
+/// breakdowns (BTreeMaps — deterministic iteration order for reports).
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    /// Everything observed during the session.
+    pub total: ProfileDelta,
+    /// Walk deltas grouped by mapping label (`walk:<label>` spans).
+    pub by_mapping: BTreeMap<String, ProfileDelta>,
+    /// Frame deltas grouped by compiled-layer key (`L<idx>:<kind>`).
+    pub by_layer: BTreeMap<String, ProfileDelta>,
+}
+
+impl Profile {
+    /// JSON rendering of the whole session.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total", self.total.to_json()),
+            (
+                "by_mapping",
+                Json::Obj(
+                    self.by_mapping
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "by_layer",
+                Json::Obj(
+                    self.by_layer
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-wide state
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is a profiling session active? One relaxed load — the executors
+/// call this once per run and skip every hook when it is false.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+#[derive(Default)]
+struct GlobalAgg {
+    total: ProfileDelta,
+    by_mapping: BTreeMap<String, ProfileDelta>,
+    by_layer: BTreeMap<String, ProfileDelta>,
+}
+
+fn global() -> &'static Mutex<GlobalAgg> {
+    static G: OnceLock<Mutex<GlobalAgg>> = OnceLock::new();
+    G.get_or_init(|| Mutex::new(GlobalAgg::default()))
+}
+
+fn session_lock() -> &'static Mutex<()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+}
+
+struct Tls {
+    walk: ProfileDelta,
+    last_walk: Option<ProfileDelta>,
+    frames: Vec<ProfileDelta>,
+}
+
+thread_local! {
+    static TLS: RefCell<Tls> = const {
+        RefCell::new(Tls { walk: new_delta(), last_walk: None, frames: Vec::new() })
+    };
+}
+
+/// `ProfileDelta::default()` is not const-evaluable (Vec); spell out
+/// the zero value for the thread-local initializer.
+const fn new_delta() -> ProfileDelta {
+    ProfileDelta {
+        walks: 0,
+        steps: 0,
+        cycles: 0,
+        class_cycles: [0; BnClass::COUNT],
+        busy: [0; N_PES],
+        idle: [0; N_PES],
+        pe_ops: [[0; OpClass::COUNT]; N_PES],
+        bank_conflicts: Vec::new(),
+        hi_water_words: 0,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Executor hooks (crate-internal)
+// ---------------------------------------------------------------------
+
+/// Start accumulating a walk on this thread. Called by the executors
+/// only when [`enabled`] was true at run entry.
+pub(crate) fn begin_walk() {
+    TLS.with(|t| t.borrow_mut().walk = new_delta());
+}
+
+/// Attribute one executed step. `pe_class` is the [`OpClass::idx`] of
+/// the op each PE issued this step; `bank_hits` is only meaningful
+/// when `any_mem` (the executors skip clearing it otherwise).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn observe_step(
+    alu_part: u64,
+    port_part: u64,
+    bank_part: u64,
+    step_cycles: u64,
+    any_mem: bool,
+    bank_hits: &[u32],
+    pe_class: &[usize; N_PES],
+) {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let d = &mut t.walk;
+        d.steps += 1;
+        d.cycles += step_cycles;
+        let any_data_op = pe_class.iter().any(|&c| c <= OpClass::Store.idx());
+        attribute(&mut d.class_cycles, alu_part, port_part, bank_part, step_cycles, any_data_op);
+        for (i, &c) in pe_class.iter().enumerate() {
+            if c == OpClass::Nop.idx() {
+                d.idle[i] += step_cycles;
+            } else {
+                d.busy[i] += step_cycles;
+            }
+            d.pe_ops[i][c] += 1;
+        }
+        if any_mem {
+            if d.bank_conflicts.len() < bank_hits.len() {
+                d.bank_conflicts.resize(bank_hits.len(), [0; MAX_CONFLICT_DEGREE + 1]);
+            }
+            for (b, &n) in bank_hits.iter().enumerate() {
+                if n > 0 {
+                    d.bank_conflicts[b][(n as usize).min(MAX_CONFLICT_DEGREE)] += 1;
+                }
+            }
+        }
+    });
+}
+
+/// Split one step's cycles over the winning bottleneck classes.
+///
+/// The winner set is every part equal to the max; each gets an equal
+/// `cycles / k` share and the integer shortfall goes one cycle apiece
+/// to the earliest winners in fixed alu → dma-port → bank-conflict
+/// order (the degenerate largest-remainder rule: equal shares mean
+/// equal remainders, broken by class order — deterministic, so scalar
+/// and batch attribution agree by construction). An alu-limited step
+/// with no data op anywhere is `Control`; a step where every part is
+/// zero is the executor's `.max(1)` `Floor`.
+fn attribute(
+    cc: &mut [u64; BnClass::COUNT],
+    alu_part: u64,
+    port_part: u64,
+    bank_part: u64,
+    cycles: u64,
+    any_data_op: bool,
+) {
+    let m = alu_part.max(port_part).max(bank_part);
+    if m == 0 {
+        cc[BnClass::Floor.idx()] += cycles;
+        return;
+    }
+    let alu_class = if any_data_op { BnClass::Alu } else { BnClass::Control };
+    let mut winners = [BnClass::Alu; 3];
+    let mut k = 0usize;
+    if alu_part == m {
+        winners[k] = alu_class;
+        k += 1;
+    }
+    if port_part == m {
+        winners[k] = BnClass::DmaPort;
+        k += 1;
+    }
+    if bank_part == m {
+        winners[k] = BnClass::BankConflict;
+        k += 1;
+    }
+    let share = cycles / k as u64;
+    let rem = (cycles % k as u64) as usize;
+    for (j, w) in winners[..k].iter().enumerate() {
+        cc[w.idx()] += share + u64::from(j < rem);
+    }
+}
+
+/// Finish the walk started by [`begin_walk`]: stamp the memory
+/// watermark, fold into the enclosing [`Frame`] (if any) and the
+/// session totals, and stash the delta for [`take_last_walk`].
+pub(crate) fn end_walk(hi_water_words: usize) {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let mut d = std::mem::replace(&mut t.walk, new_delta());
+        d.walks = 1;
+        d.hi_water_words = hi_water_words;
+        if let Some(top) = t.frames.last_mut() {
+            top.merge(&d);
+        }
+        global().lock().unwrap_or_else(|e| e.into_inner()).total.merge(&d);
+        t.last_walk = Some(d);
+    });
+}
+
+/// Take the delta of the most recent finished walk on this thread
+/// (None when no profiled walk has finished since the last take).
+pub fn take_last_walk() -> Option<ProfileDelta> {
+    TLS.with(|t| t.borrow_mut().last_walk.take())
+}
+
+/// File a walk delta under its mapping label in the session aggregate.
+pub(crate) fn record_walk(label: &str, d: &ProfileDelta) {
+    let mut g = global().lock().unwrap_or_else(|e| e.into_inner());
+    g.by_mapping.entry(label.to_string()).or_default().merge(d);
+}
+
+/// File a frame delta under a compiled-layer key in the session
+/// aggregate.
+pub(crate) fn record_layer(key: String, d: &ProfileDelta) {
+    let mut g = global().lock().unwrap_or_else(|e| e.into_inner());
+    g.by_layer.entry(key).or_default().merge(d);
+}
+
+// ---------------------------------------------------------------------
+// Frames (layer / inference aggregation)
+// ---------------------------------------------------------------------
+
+/// RAII aggregation scope: walks finishing on this thread fold into
+/// the innermost open frame; a finished child folds into its parent.
+/// Free when off — an inactive frame pushes nothing and returns None.
+#[must_use]
+pub struct Frame {
+    pushed: bool,
+}
+
+/// Open a frame on this thread (no-op unless a session is active).
+pub fn frame() -> Frame {
+    let pushed = enabled();
+    if pushed {
+        TLS.with(|t| t.borrow_mut().frames.push(new_delta()));
+    }
+    Frame { pushed }
+}
+
+impl Frame {
+    /// Close the frame and return everything it accumulated (also
+    /// folded into the parent frame, if one is open).
+    pub fn finish(mut self) -> Option<ProfileDelta> {
+        self.pop()
+    }
+
+    fn pop(&mut self) -> Option<ProfileDelta> {
+        if !self.pushed {
+            return None;
+        }
+        self.pushed = false;
+        TLS.with(|t| {
+            let mut t = t.borrow_mut();
+            let d = t.frames.pop()?;
+            if let Some(parent) = t.frames.last_mut() {
+                parent.merge(&d);
+            }
+            Some(d)
+        })
+    }
+}
+
+impl Drop for Frame {
+    fn drop(&mut self) {
+        // Keep the frame stack balanced even if a run errors out and
+        // the frame is dropped without finish().
+        let _ = self.pop();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sessions
+// ---------------------------------------------------------------------
+
+/// An active profiling session. Exactly one exists at a time
+/// (process-global, serialized by a lock like trace sessions);
+/// dropping it disables profiling.
+pub struct ProfileSession {
+    _guard: MutexGuard<'static, ()>,
+    finished: bool,
+}
+
+/// Start a profiling session: resets the session aggregate and flips
+/// [`enabled`] on. Blocks until any other session has finished.
+pub fn session() -> ProfileSession {
+    let guard = session_lock().lock().unwrap_or_else(|e| e.into_inner());
+    *global().lock().unwrap_or_else(|e| e.into_inner()) = GlobalAgg::default();
+    ENABLED.store(true, Ordering::SeqCst);
+    ProfileSession { _guard: guard, finished: false }
+}
+
+impl ProfileSession {
+    /// Stop profiling and return everything the session observed.
+    pub fn finish(mut self) -> Profile {
+        self.finished = true;
+        ENABLED.store(false, Ordering::SeqCst);
+        let g = std::mem::take(&mut *global().lock().unwrap_or_else(|e| e.into_inner()));
+        Profile { total: g.total, by_mapping: g.by_mapping, by_layer: g.by_layer }
+    }
+}
+
+impl Drop for ProfileSession {
+    fn drop(&mut self) {
+        if !self.finished {
+            ENABLED.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cc(
+        alu: u64,
+        port: u64,
+        bank: u64,
+        cycles: u64,
+        any_data: bool,
+    ) -> [u64; BnClass::COUNT] {
+        let mut out = [0; BnClass::COUNT];
+        attribute(&mut out, alu, port, bank, cycles, any_data);
+        out
+    }
+
+    #[test]
+    fn attribution_sums_and_single_winners() {
+        // Clear single winners take everything.
+        assert_eq!(cc(5, 3, 2, 5, true)[BnClass::Alu.idx()], 5);
+        assert_eq!(cc(1, 8, 4, 8, true)[BnClass::DmaPort.idx()], 8);
+        assert_eq!(cc(1, 4, 9, 9, true)[BnClass::BankConflict.idx()], 9);
+        // Control: alu-limited step with no data op anywhere.
+        assert_eq!(cc(1, 0, 0, 1, false)[BnClass::Control.idx()], 1);
+        // Floor: every part zero, the .max(1) charge.
+        assert_eq!(cc(0, 0, 0, 1, true)[BnClass::Floor.idx()], 1);
+    }
+
+    #[test]
+    fn tie_splitting_is_largest_remainder() {
+        // Two-way tie over 9 cycles: 5/4, shortfall to the earlier
+        // class (alu before dma-port).
+        let out = cc(9, 9, 0, 9, true);
+        assert_eq!(out[BnClass::Alu.idx()], 5);
+        assert_eq!(out[BnClass::DmaPort.idx()], 4);
+        // Three-way tie over 10: 4/3/3 in class order.
+        let out = cc(10, 10, 10, 10, true);
+        assert_eq!(out[BnClass::Alu.idx()], 4);
+        assert_eq!(out[BnClass::DmaPort.idx()], 3);
+        assert_eq!(out[BnClass::BankConflict.idx()], 3);
+        // Adversarial sweep: the split always sums exactly.
+        for a in 0..4u64 {
+            for p in 0..4u64 {
+                for b in 0..4u64 {
+                    for cyc in 1..7u64 {
+                        let out = cc(a, p, b, cyc, true);
+                        assert_eq!(out.iter().sum::<u64>(), cyc, "a={a} p={p} b={b} c={cyc}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_merge_and_scale() {
+        let mut a = new_delta();
+        a.walks = 1;
+        a.cycles = 10;
+        a.class_cycles[0] = 10;
+        a.busy[3] = 10;
+        a.hi_water_words = 100;
+        a.bank_conflicts = vec![[0; MAX_CONFLICT_DEGREE + 1]; 2];
+        a.bank_conflicts[1][2] = 4;
+        let mut b = new_delta();
+        b.walks = 2;
+        b.cycles = 5;
+        b.class_cycles[1] = 5;
+        b.hi_water_words = 60;
+        b.bank_conflicts = vec![[0; MAX_CONFLICT_DEGREE + 1]; 4];
+        b.bank_conflicts[3][16] = 1;
+        a.merge(&b);
+        assert_eq!(a.walks, 3);
+        assert_eq!(a.cycles, 15);
+        assert_eq!(a.class_cycles[0] + a.class_cycles[1], 15);
+        assert_eq!(a.hi_water_words, 100, "watermark is a max, not a sum");
+        assert_eq!(a.bank_conflicts.len(), 4);
+        assert_eq!(a.bank_conflict_steps(1), 4);
+        a.scale(3);
+        assert_eq!(a.walks, 9);
+        assert_eq!(a.cycles, 45);
+        assert_eq!(a.bank_conflicts[1][2], 12);
+        assert_eq!(a.hi_water_words, 100, "scale leaves the watermark alone");
+    }
+
+    #[test]
+    fn delta_json_shape() {
+        let mut d = new_delta();
+        d.walks = 1;
+        d.cycles = 7;
+        d.class_cycles[BnClass::Alu.idx()] = 7;
+        let s = d.to_json().to_string_compact();
+        assert!(s.contains("\"bottleneck_cycles\""));
+        assert!(s.contains("\"alu\":7"));
+        assert!(s.contains("\"hi_water_words\":0"));
+        assert!(s.contains("\"pes\""));
+    }
+}

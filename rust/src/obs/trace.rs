@@ -187,7 +187,7 @@ impl Trace {
     /// Timestamps and durations are microseconds with nanosecond
     /// fractions, per the format spec.
     pub fn to_chrome_json(&self) -> Json {
-        let events: Vec<Json> = self
+        let mut events: Vec<Json> = self
             .events
             .iter()
             .map(|e| {
@@ -205,6 +205,20 @@ impl Trace {
                 ])
             })
             .collect();
+        // Truncation must be visible *inside* the viewer, not only in
+        // `otherData` (which Perfetto hides): emit a metadata event
+        // naming the drop count so a capped trace is never mistaken
+        // for a complete one.
+        if self.dropped > 0 {
+            events.push(Json::obj(vec![
+                ("name", "trace_buffer_dropped".into()),
+                ("cat", "__metadata".into()),
+                ("ph", "M".into()),
+                ("pid", 1u64.into()),
+                ("tid", 0u64.into()),
+                ("args", Json::obj(vec![("dropped_events", self.dropped.into())])),
+            ]));
+        }
         Json::obj(vec![
             ("traceEvents", Json::Arr(events)),
             ("displayTimeUnit", "ms".into()),
@@ -329,5 +343,23 @@ mod tests {
         assert_eq!(e.req_i64("pid").unwrap(), 1);
         assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(e.get("args").unwrap().get("cycles").unwrap().as_i64(), Some(42));
+    }
+
+    #[test]
+    fn dropped_events_surface_as_metadata() {
+        // A clean trace carries no metadata event.
+        let clean = Trace { events: Vec::new(), dropped: 0 }.to_chrome_json();
+        assert!(clean.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+
+        // A truncated trace announces the drop count inside
+        // traceEvents (ph:"M"), not only in otherData.
+        let doc = Trace { events: Vec::new(), dropped: 7 }.to_chrome_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let m = &events[0];
+        assert_eq!(m.req_str("name").unwrap(), "trace_buffer_dropped");
+        assert_eq!(m.req_str("ph").unwrap(), "M");
+        assert_eq!(m.get("args").unwrap().req_i64("dropped_events").unwrap(), 7);
+        assert_eq!(doc.get("otherData").unwrap().req_i64("dropped_events").unwrap(), 7);
     }
 }

@@ -43,7 +43,10 @@ mod probe;
 mod validate;
 
 pub use network::{plan_network, LayerPlan, NetworkPlan, PlanObjective};
-pub use validate::{validate, validate_extended, ValidationReport, ValidationRow};
+pub use validate::{
+    bottleneck_check, validate, validate_extended, BottleneckCheck, ValidationReport,
+    ValidationRow,
+};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -8,14 +8,18 @@
 //! mean absolute latency error exceeds the checked-in bound (the
 //! tentpole's ≤ 5 % acceptance criterion).
 
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
 
+use crate::cgra::Memory;
 use crate::conv::ConvShape;
 use crate::coordinator::sweep::SweepSpec;
 use crate::engine::Engine;
 use crate::kernels::Mapping;
+use crate::obs::profile::{self, BnClass};
 use crate::util::fmt::Table;
 use crate::util::Json;
+
+use super::model::KernelModel;
 
 /// One validated point.
 #[derive(Clone, Debug)]
@@ -244,6 +248,149 @@ pub fn validate_extended(engine: &Engine, spec: &SweepSpec) -> Result<Validation
     Ok(report)
 }
 
+/// Result of one [`bottleneck_check`]: predicted vs attributed
+/// bottleneck composition of a kernel execution.
+#[derive(Clone, Debug)]
+pub struct BottleneckCheck {
+    /// The concrete strategy checked.
+    pub mapping: Mapping,
+    /// The layer shape.
+    pub shape: ConvShape,
+    /// Predicted walk cycles (probe attribution scaled by class
+    /// counts; fractional because classes average over their probes).
+    pub predicted_cycles: f64,
+    /// Attributed walk cycles from profiling the real kernel run.
+    pub attributed_cycles: u64,
+    /// Predicted bottleneck shares, indexed by [`BnClass::idx`].
+    pub predicted_shares: [f64; BnClass::COUNT],
+    /// Attributed bottleneck shares.
+    pub attributed_shares: [f64; BnClass::COUNT],
+    /// Worst per-class share disagreement, percentage points.
+    pub max_share_err_pp: f64,
+}
+
+/// Cross-check the planner's launch-class decomposition against the
+/// profiler (DESIGN.md §12): does the cost model predict *where* the
+/// cycles go, not just how many there are?
+///
+/// The launch classes' representative probe programs are replayed under
+/// a profiling session and their attribution scaled by the class counts
+/// — exactly the calibration protocol of `planner::probe`, keeping the
+/// bottleneck split instead of just the cycle total. The full kernel is
+/// then dispatched under a second session and the attributed shares
+/// compared class by class. Where the probes cover the whole launch set
+/// (small shapes) the two sides agree to rounding; elsewhere the
+/// residual is the same bank-alignment jitter the latency validation
+/// bounds.
+pub fn bottleneck_check(
+    engine: &Engine,
+    shape: &ConvShape,
+    mapping: Mapping,
+    seed: u64,
+) -> Result<BottleneckCheck> {
+    let model = KernelModel::for_mapping(mapping, shape, engine.config())?;
+    ensure!(
+        model.launches > 0,
+        "bottleneck check needs a CGRA mapping with launches, {mapping} has none"
+    );
+
+    // Predicted side: replay each class's probes, average, scale.
+    let mut predicted = [0.0f64; BnClass::COUNT];
+    let mut predicted_cycles = 0.0f64;
+    {
+        let session = profile::session();
+        for class in &model.classes {
+            let mut sum = [0u64; BnClass::COUNT];
+            let mut cycles = 0u64;
+            for prog in &class.probes {
+                let cfg = engine.config();
+                let mut mem = Memory::new(cfg.mem_words, cfg.n_banks);
+                engine.cgra().run(prog, &mut mem)?;
+                let d = profile::take_last_walk()
+                    .context("probe walk left no profile delta — profiler hook missing?")?;
+                for k in 0..BnClass::COUNT {
+                    sum[k] += d.class_cycles[k];
+                }
+                cycles += d.cycles;
+            }
+            let n = class.probes.len().max(1) as f64;
+            for k in 0..BnClass::COUNT {
+                predicted[k] += class.count as f64 * sum[k] as f64 / n;
+            }
+            predicted_cycles += class.count as f64 * cycles as f64 / n;
+        }
+        drop(session.finish());
+    }
+
+    // Attributed side: profile the real kernel dispatch.
+    let mut rng = crate::prop::Rng::new(seed);
+    let input = crate::conv::random_input(shape, 6, &mut rng);
+    let weights = if mapping == Mapping::DwWp {
+        ensure!(shape.k == shape.c, "depthwise needs K == C");
+        crate::conv::random_depthwise_weights(shape, 6, &mut rng)
+    } else {
+        crate::conv::random_weights(shape, 6, &mut rng)
+    };
+    // A thread-local Frame (not the session totals) collects the
+    // attribution: dispatch runs on this thread, so walks from any
+    // concurrent simulations elsewhere in the process cannot leak in.
+    let session = profile::session();
+    let fr = profile::frame();
+    crate::kernels::dispatch(engine.cgra(), mapping, shape, &input, &weights)?;
+    let attributed =
+        fr.finish().context("kernel dispatch recorded no profiled walks")?;
+    drop(session.finish());
+    let attributed_cycles = attributed.cycles;
+    let attributed_shares = attributed.class_shares();
+
+    let mut predicted_shares = [0.0f64; BnClass::COUNT];
+    if predicted_cycles > 0.0 {
+        for k in 0..BnClass::COUNT {
+            predicted_shares[k] = predicted[k] / predicted_cycles;
+        }
+    }
+    let max_share_err_pp = (0..BnClass::COUNT)
+        .map(|k| (predicted_shares[k] - attributed_shares[k]).abs() * 100.0)
+        .fold(0.0f64, f64::max);
+    Ok(BottleneckCheck {
+        mapping,
+        shape: *shape,
+        predicted_cycles,
+        attributed_cycles,
+        predicted_shares,
+        attributed_shares,
+        max_share_err_pp,
+    })
+}
+
+impl BottleneckCheck {
+    /// Human-readable comparison table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["class", "predicted%", "attributed%", "delta_pp"]);
+        for b in BnClass::ALL {
+            t.row(vec![
+                b.label().into(),
+                format!("{:.3}", self.predicted_shares[b.idx()] * 100.0),
+                format!("{:.3}", self.attributed_shares[b.idx()] * 100.0),
+                format!(
+                    "{:+.3}",
+                    (self.predicted_shares[b.idx()] - self.attributed_shares[b.idx()]) * 100.0
+                ),
+            ]);
+        }
+        format!(
+            "Bottleneck cross-check — {} on {} \
+             (predicted {:.0} vs attributed {} walk cycles)\n{}max share error: {:.3} pp\n",
+            self.mapping.label(),
+            self.shape,
+            self.predicted_cycles,
+            self.attributed_cycles,
+            t.render(),
+            self.max_share_err_pp,
+        )
+    }
+}
+
 impl ValidationReport {
     /// The per-point comparison as a table.
     pub fn table(&self) -> Table {
@@ -403,6 +550,43 @@ mod tests {
             / report.rows.len() as f64;
         assert!((report.mean_abs_latency_err_pct - mean).abs() < 1e-12);
         assert!(report.simulated_launches > 0);
+    }
+
+    /// With K ≤ 2 and C ≤ 2 the WP probes ARE the full launch set, so
+    /// the predicted bottleneck composition matches the attributed one
+    /// exactly (up to f64 share rounding) — the composition analogue of
+    /// `wp_prediction_exact_when_probes_cover_all_launches`.
+    #[test]
+    fn bottleneck_check_exact_when_probes_cover_all_launches() {
+        let engine = EngineBuilder::new().workers(1).private_cache().build().unwrap();
+        let shape = ConvShape::new3x3(2, 2, 5, 4);
+        let bc = bottleneck_check(&engine, &shape, Mapping::Wp, 7).unwrap();
+        assert!(bc.attributed_cycles > 0);
+        assert!(
+            (bc.predicted_cycles - bc.attributed_cycles as f64).abs() < 1e-6,
+            "predicted {} vs attributed {}",
+            bc.predicted_cycles,
+            bc.attributed_cycles
+        );
+        assert!(bc.max_share_err_pp < 1e-6, "max share err {} pp", bc.max_share_err_pp);
+        let sum: f64 = bc.attributed_shares.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "shares sum to 1, got {sum}");
+        let text = bc.render();
+        assert!(text.contains("max share error"));
+        assert!(text.contains("dma-port"));
+    }
+
+    /// On a bigger shape the probes sample the classes instead of
+    /// covering them; composition must still agree within a few
+    /// percentage points (the same jitter the latency MAE bounds).
+    #[test]
+    fn bottleneck_check_close_on_sampled_classes() {
+        let engine = EngineBuilder::new().workers(1).private_cache().build().unwrap();
+        let shape = ConvShape::new3x3(4, 4, 6, 6);
+        let bc = bottleneck_check(&engine, &shape, Mapping::Wp, 11).unwrap();
+        assert!(bc.max_share_err_pp <= 5.0, "max share err {} pp", bc.max_share_err_pp);
+        // CPU has no launches to attribute; the check refuses it.
+        assert!(bottleneck_check(&engine, &shape, Mapping::Cpu, 11).is_err());
     }
 
     /// Memory-bound points must be refused by both sides.

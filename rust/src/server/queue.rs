@@ -30,6 +30,7 @@ use std::time::Instant;
 use crate::conv::TensorChw;
 use crate::engine::{BatchCtx, CompiledNet, NetCtx};
 use crate::obs::metrics::{Histogram, Registry};
+use crate::obs::profile::BnClass;
 use crate::obs::trace;
 
 use super::registry::ArtifactKey;
@@ -206,6 +207,7 @@ fn execute(
     let mut outputs: Vec<TensorChw> = Vec::new();
     let mut run_cycles = 0u64;
     let mut run_uj = 0.0f64;
+    let mut run_bn = [0u64; BnClass::COUNT];
     let mut failure: Option<String> = None;
     if batch > 1 && total > 1 {
         let bctx = ctx.batched.get_or_insert_with(|| artifact.new_batch_ctx(batch));
@@ -216,6 +218,9 @@ fn execute(
                     // construction (DESIGN.md §9).
                     run_cycles = run.total_cycles;
                     run_uj = run.total_energy_uj;
+                    if let Some(p) = &run.profile {
+                        run_bn = p.class_cycles;
+                    }
                     shared.walks.fetch_add(1, Ordering::Relaxed);
                     shared.walk_lanes.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                     if collect {
@@ -235,6 +240,9 @@ fn execute(
                 Ok(run) => {
                     run_cycles = run.total_cycles;
                     run_uj = run.total_energy_uj;
+                    if let Some(p) = &run.profile {
+                        run_bn = p.class_cycles;
+                    }
                     shared.walks.fetch_add(1, Ordering::Relaxed);
                     shared.walk_lanes.fetch_add(1, Ordering::Relaxed);
                     if collect {
@@ -281,6 +289,11 @@ fn execute(
             stats.priced_uj += job.priced_uj_per_inf * lanes as f64;
             stats.run_cycles += run_cycles * lanes as u64;
             stats.run_uj += run_uj * lanes as f64;
+            // Walk-cycle bottleneck attribution is per-inference like
+            // run_cycles; all-zero when the daemon isn't profiling.
+            for (acc, v) in stats.bottleneck_cycles.iter_mut().zip(run_bn) {
+                *acc += v * lanes as u64;
+            }
         }
         // A dropped receiver (client gone) is fine; the work is done
         // and accounted either way.

@@ -16,6 +16,7 @@
 use std::collections::BTreeMap;
 
 use crate::obs::metrics::HistogramSummary;
+use crate::obs::profile::BnClass;
 use crate::util::json::Json;
 
 use super::registry::RegistryStats;
@@ -39,6 +40,12 @@ pub struct TenantCounters {
     pub run_cycles: u64,
     /// Replay-modeled energy, µJ, summed over served inferences.
     pub run_uj: f64,
+    /// Bottleneck-class walk-cycle attribution (DESIGN.md §12), summed
+    /// over served inferences, indexed by [`BnClass::idx`]. All-zero
+    /// unless the daemon runs with `--profile` — the profiler is
+    /// free-when-off, so the daemon only pays for attribution when
+    /// asked to.
+    pub bottleneck_cycles: [u64; BnClass::COUNT],
 }
 
 /// One tenant's row of a [`DaemonStats`] snapshot.
@@ -116,6 +123,12 @@ impl DaemonStats {
         let mut tenants = BTreeMap::new();
         for t in &self.tenants {
             let c = t.counters;
+            let bottleneck = Json::obj(
+                BnClass::ALL
+                    .iter()
+                    .map(|b| (b.key(), c.bottleneck_cycles[b.idx()].into()))
+                    .collect(),
+            );
             tenants.insert(
                 t.name.clone(),
                 Json::obj(vec![
@@ -128,6 +141,7 @@ impl DaemonStats {
                     ("priced_uj", c.priced_uj.into()),
                     ("run_cycles", c.run_cycles.into()),
                     ("run_uj", c.run_uj.into()),
+                    ("bottleneck", bottleneck),
                 ]),
             );
         }
@@ -193,6 +207,7 @@ mod tests {
                     inferences: 6,
                     priced_uj: 1.25,
                     run_uj: 1.3,
+                    bottleneck_cycles: [10, 4, 3, 2, 1],
                     ..Default::default()
                 },
             }],
@@ -211,6 +226,12 @@ mod tests {
         let t = j.get("tenants").unwrap().get("edge\"box").unwrap();
         assert_eq!(t.req_str("session_fp").unwrap(), "0x00000000deadbeef");
         assert_eq!(t.get("priced_uj").unwrap().as_f64().unwrap(), 1.25);
+        let bn = t.get("bottleneck").unwrap();
+        assert_eq!(bn.req_i64("alu").unwrap(), 10);
+        assert_eq!(bn.req_i64("dma_port").unwrap(), 4);
+        assert_eq!(bn.req_i64("bank_conflict").unwrap(), 3);
+        assert_eq!(bn.req_i64("control").unwrap(), 2);
+        assert_eq!(bn.req_i64("floor").unwrap(), 1);
         // The rendered document survives a parse round-trip despite
         // the quote in the tenant name.
         let text = j.to_string_compact();

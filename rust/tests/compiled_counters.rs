@@ -131,4 +131,42 @@ fn warm_compiled_runs_do_zero_compile_side_work() {
         );
     }
     assert!(!obs::trace::enabled(), "finishing the session must disable tracing");
+
+    // Profiling gates (DESIGN.md §12): the cycle-attribution profiler
+    // honors the same contract as the tracer. Everything above ran
+    // unprofiled (no attribution attached), and a profiled warm run
+    // does zero compile-side work while reproducing the modeled
+    // numbers bit for bit — the profiler observes, it never perturbs.
+    assert!(!obs::profile::enabled());
+    assert!(
+        first.profile.is_none() && traced_run.profile.is_none(),
+        "without a profiling session, runs must not attach attribution"
+    );
+    let prof_before = RunCounters::snapshot(&engine);
+    let psession = obs::profile::session();
+    let profiled_run = compiled.run(&mut ctx, &warmup).unwrap();
+    let profile = psession.finish();
+    let prof_after = RunCounters::snapshot(&engine);
+    assert_eq!(
+        prof_after, prof_before,
+        "a profiled warm run must still do zero compile-side work"
+    );
+    assert_eq!(
+        profiled_run.total_cycles, first.total_cycles,
+        "attribution must not change the modeled cycle count"
+    );
+    assert_eq!(
+        profiled_run.total_energy_uj.to_bits(),
+        first.total_energy_uj.to_bits(),
+        "attribution must not change the modeled energy, bit for bit"
+    );
+    let d = profiled_run.profile.expect("a profiled run attaches its walk attribution");
+    assert!(d.walks > 0 && d.cycles > 0);
+    assert_eq!(
+        d.class_cycles.iter().sum::<u64>(),
+        d.cycles,
+        "bottleneck classes must account for every walk cycle exactly"
+    );
+    assert_eq!(profile.total.cycles, d.cycles, "the session aggregate saw the same walks");
+    assert!(!obs::profile::enabled(), "finishing the session must disable profiling");
 }

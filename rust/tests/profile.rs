@@ -1,0 +1,167 @@
+//! End-to-end invariants of the cycle-attribution profiler
+//! (DESIGN.md §12), asserted across every execution tier: raw
+//! [`Cgra::run`] walks, the reference interpreter, one-shot kernel
+//! drivers, and warm scalar/batched `CompiledNet` inference.
+//!
+//! This file deliberately holds a single `#[test]`: the profiler's
+//! enabled flag and session aggregates are process-wide, so any
+//! concurrently running test in the same binary would race the
+//! free-when-off assertions. Other integration binaries are separate
+//! processes and cannot interfere.
+
+use openedge_cgra::cgra::{Cgra, CgraConfig, Memory};
+use openedge_cgra::conv::{self, ConvShape};
+use openedge_cgra::engine::EngineBuilder;
+use openedge_cgra::isa::N_PES;
+use openedge_cgra::kernels::wp::{self, WpLaunch};
+use openedge_cgra::kernels::MemLayout;
+use openedge_cgra::nn;
+use openedge_cgra::obs::profile;
+use openedge_cgra::prop::Rng;
+
+#[test]
+fn attribution_invariants_across_all_execution_tiers() {
+    let shape = ConvShape::new3x3(3, 4, 6, 6);
+    let mut rng = Rng::new(0x51ce);
+    let input = conv::random_input(&shape, 64, &mut rng);
+    let weights = conv::random_weights(&shape, 64, &mut rng);
+
+    // Compile-once artifact prepared *before* any profiling session so
+    // the profiled runs below are pure warm replays.
+    let engine = EngineBuilder::new().workers(1).private_cache().build().unwrap();
+    let net = nn::build_preset("mobilenet-mini", 7).unwrap();
+    let compiled = engine.compile(&net).unwrap();
+    let mut ctx = compiled.new_ctx();
+    let net_input = net.random_input(8, 3);
+    let unprofiled = compiled.run(&mut ctx, &net_input).unwrap();
+
+    // -- Free-when-off ------------------------------------------------
+    // Without a session nothing is recorded anywhere: no last-walk
+    // snapshot, no attribution on inference results.
+    assert!(!profile::enabled());
+    let base = wp::run(engine.cgra(), &shape, &input, &weights).unwrap();
+    assert!(profile::take_last_walk().is_none(), "no session ⇒ no walk snapshots");
+    assert!(unprofiled.profile.is_none(), "no session ⇒ no attribution on InferRun");
+
+    let session = profile::session();
+
+    // -- Attribution sums, per-PE occupancy, per-bank histograms ------
+    // One frame around the full WP conv: the delta must account for
+    // every simulator cycle exactly — same totals as RunStats, class
+    // cycles summing with no remainder, busy+idle covering each PE.
+    let fr = profile::frame();
+    let profiled = wp::run(engine.cgra(), &shape, &input, &weights).unwrap();
+    let d = fr.finish().expect("profiled conv must produce a frame delta");
+    assert_eq!(
+        profiled.output.data, base.output.data,
+        "profiling must not change functional results"
+    );
+    assert_eq!(
+        (profiled.cgra_stats.cycles, profiled.cgra_stats.steps),
+        (base.cgra_stats.cycles, base.cgra_stats.steps),
+        "profiling must not change modeled timing"
+    );
+    assert_eq!(d.walks, (shape.k * shape.c) as u64, "WP runs one walk per (k, ci) launch");
+    assert_eq!(d.cycles, base.cgra_stats.cycles, "frame cycles must equal RunStats cycles");
+    assert_eq!(d.steps, base.cgra_stats.steps, "frame steps must equal RunStats steps");
+    assert_eq!(
+        d.class_cycles.iter().sum::<u64>(),
+        d.cycles,
+        "bottleneck classes must partition the walk cycles exactly"
+    );
+    for pe in 0..N_PES {
+        assert_eq!(
+            d.busy[pe] + d.idle[pe],
+            d.cycles,
+            "busy + idle must cover every cycle for PE {pe}"
+        );
+    }
+    let cfg = CgraConfig::default();
+    assert_eq!(d.bank_conflicts.len(), cfg.n_banks, "one conflict histogram per bank");
+    assert!(d.hi_water_words > 0 && d.hi_water_words <= cfg.mem_words);
+
+    // -- Reference interpreter ≡ decoded executor ---------------------
+    // The differential baseline attributes the exact same delta as the
+    // decode/execute engine for the same launch.
+    let layout = MemLayout::new(&shape, 0, &cfg).unwrap();
+    let prog = wp::build_program(&shape, &layout, WpLaunch { k: 0, ci: 0, acc: false });
+    let cgra = Cgra::new(cfg.clone()).unwrap();
+    let seed_mem = |mem: &mut Memory| {
+        mem.poke_slice(layout.input, &input.data);
+        mem.poke_slice(layout.weights, &weights.data);
+    };
+    let mut mem_dec = Memory::new(cfg.mem_words, cfg.n_banks);
+    seed_mem(&mut mem_dec);
+    let s_dec = cgra.run(&prog, &mut mem_dec).unwrap();
+    let d_dec = profile::take_last_walk().expect("decoded walk snapshot");
+    let mut mem_ref = Memory::new(cfg.mem_words, cfg.n_banks);
+    seed_mem(&mut mem_ref);
+    let s_ref = cgra.run_reference(&prog, &mut mem_ref).unwrap();
+    let d_ref = profile::take_last_walk().expect("reference walk snapshot");
+    assert_eq!(s_dec.cycles, s_ref.cycles);
+    assert_eq!(d_dec, d_ref, "reference and decoded walks must attribute identically");
+
+    // -- Scalar ≡ batch, lane for lane --------------------------------
+    // A batched walk is attributed once and reported per inference:
+    // the delta on a batched InferRun is bit-identical to the scalar
+    // one, full and ragged alike, over *different* lane inputs.
+    let srun = compiled.run(&mut ctx, &net_input).unwrap();
+    let sd = srun.profile.clone().expect("profiled scalar run attaches attribution");
+    assert_eq!(
+        srun.total_cycles, unprofiled.total_cycles,
+        "profiling must not change compiled-run modeled cycles"
+    );
+    assert_eq!(
+        srun.total_energy_uj.to_bits(),
+        unprofiled.total_energy_uj.to_bits(),
+        "profiling must not change compiled-run modeled energy, bit for bit"
+    );
+    assert_eq!(
+        sd.class_cycles.iter().sum::<u64>(),
+        sd.cycles,
+        "inference attribution must partition walk cycles exactly"
+    );
+    let lanes: Vec<_> = (0..3u64).map(|l| net.random_input(8, 20 + l)).collect();
+    let mut bctx = compiled.new_batch_ctx(3);
+    let brun = compiled.run_batch(&mut bctx, &lanes).unwrap();
+    assert_eq!(
+        brun.profile.as_ref(),
+        Some(&sd),
+        "batched attribution must equal scalar attribution lane for lane"
+    );
+    let ragged = compiled.run_batch(&mut bctx, &lanes[..2]).unwrap();
+    assert_eq!(ragged.profile.as_ref(), Some(&sd), "ragged batches attribute identically");
+
+    // -- Session aggregates -------------------------------------------
+    let prof = session.finish();
+    assert!(!profile::enabled(), "finishing the session must disable profiling");
+    assert!(profile::take_last_walk().is_none(), "finish clears walk snapshots");
+    assert_eq!(
+        prof.total.class_cycles.iter().sum::<u64>(),
+        prof.total.cycles,
+        "the session-wide total obeys the partition invariant too"
+    );
+    assert!(
+        !prof.by_mapping.is_empty(),
+        "compiled walks must aggregate under their mapping labels"
+    );
+    for (label, delta) in prof.by_mapping.iter().chain(prof.by_layer.iter()) {
+        assert_eq!(
+            delta.class_cycles.iter().sum::<u64>(),
+            delta.cycles,
+            "aggregate '{label}' must partition its cycles exactly"
+        );
+    }
+    assert!(
+        prof.by_layer.keys().all(|k| k.starts_with('L')),
+        "layer aggregates are keyed by position"
+    );
+    assert!(!prof.by_layer.is_empty(), "compiled inference must aggregate per layer");
+
+    // A fresh session starts from zero — aggregates do not leak across
+    // sessions.
+    let s2 = profile::session();
+    let p2 = s2.finish();
+    assert_eq!(p2.total.walks, 0);
+    assert!(p2.by_mapping.is_empty() && p2.by_layer.is_empty());
+}

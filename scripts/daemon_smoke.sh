@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Smoke-test the `cgra daemon` serving subsystem over its real NDJSON/TCP
 # transport using nothing but bash's /dev/tcp: compile-miss, cache-hit,
-# over-deadline rejection, stats shape, clean shutdown (exit 0).
+# over-deadline rejection, stats shape (registry hit/miss/eviction
+# counters + per-tenant bottleneck attribution under --profile), clean
+# shutdown (exit 0).
 #
 # Usage: scripts/daemon_smoke.sh [path-to-cgra-binary]
 set -euo pipefail
@@ -12,7 +14,7 @@ BIN="${1:-target/release/cgra}"
 LOG="$(mktemp)"
 trap 'kill "$DAEMON_PID" 2>/dev/null || true; rm -f "$LOG"' EXIT
 
-"$BIN" daemon --port 0 --workers 2 --batch 4 >"$LOG" 2>&1 &
+"$BIN" daemon --port 0 --workers 2 --batch 4 --profile >"$LOG" 2>&1 &
 DAEMON_PID=$!
 
 # Wait for the OS-assigned port to be announced.
@@ -64,7 +66,11 @@ expect '"ok":true' "stats served"
 expect '"served_requests":2' "two requests executed"
 expect '"rejected":1' "one request rejected"
 expect '"registry"' "registry counters present"
+expect '"hits":1' "registry hit counter counted the repeat"
+expect '"misses"' "registry miss counter present"
+expect '"evictions"' "registry eviction counter present"
 expect '"smoke"' "per-tenant row present"
+expect '"bottleneck"' "per-tenant bottleneck attribution present (--profile)"
 expect '"version"' "daemon reports its crate version"
 expect '"e2e_us"' "end-to-end latency histogram present"
 expect '"p99"' "latency percentiles present"

@@ -1,0 +1,71 @@
+//! Bench: cold-start latency — compile-from-source vs load-from-disk
+//! (DESIGN.md §13, EXPERIMENTS.md E17).
+//!
+//! For each preset the serving fleet actually deploys
+//! (`mobilenet-mini`, `vgg-mini`, `paper-baseline`):
+//!
+//!   1. **compile** — `Engine::compile` per sample: planner
+//!      resolution, program building, µop decoding, weight baking,
+//!   2. **load** — `CompiledNet::load` of the serialized artifact per
+//!      sample: header + manifest validation, checksum, payload decode
+//!      — zero builds, zero decodes, zero planner calls by
+//!      construction (pinned by `tests/compiled_counters.rs`).
+//!
+//! Before timing, the loaded artifact is gated on producing the same
+//! modeled cycles as the compiled one. The printed ratio is the
+//! first-inference win an AOT artifact buys a restarting process.
+//!
+//! `cargo bench --bench cold_start`
+
+use openedge_cgra::benchkit::{Bench, ResultsWriter};
+use openedge_cgra::engine::{CompiledNet, EngineBuilder};
+use openedge_cgra::nn;
+
+fn main() {
+    let engine = EngineBuilder::new().private_cache().build().expect("engine");
+    let dir = std::env::temp_dir().join(format!("cgra-cold-start-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+
+    let b = Bench::new(1, 5);
+    let mut results = ResultsWriter::new("cold_start");
+
+    for preset in ["mobilenet-mini", "vgg-mini", "paper-baseline"] {
+        let net = nn::build_preset(preset, 7).expect("preset");
+        let path = dir.join(format!("{preset}.cgrart"));
+
+        let compiled = engine.compile(&net).expect("compile");
+        let info = compiled.save(&path).expect("save");
+
+        // Gate: the artifact replays identically before we time it.
+        let input = net.random_input(8, 11);
+        let (loaded, _) = CompiledNet::load(&engine, &path).expect("load");
+        let (mut ca, mut cb) = (compiled.new_ctx(), loaded.new_ctx());
+        let ra = compiled.run(&mut ca, &input).expect("run compiled");
+        let rb = loaded.run(&mut cb, &input).expect("run loaded");
+        assert_eq!(ra.total_cycles, rb.total_cycles, "{preset}: loaded artifact diverged");
+        assert_eq!(ca.output().data, cb.output().data, "{preset}: outputs diverged");
+
+        let compile = b.run(&format!("{preset}: Engine::compile (cold)"), None, || {
+            engine.compile(&net).expect("compile")
+        });
+        let load = b.run(&format!("{preset}: CompiledNet::load (disk)"), None, || {
+            CompiledNet::load(&engine, &path).expect("load")
+        });
+
+        let speedup = compile.median() / load.median().max(1e-12);
+        results.row(&format!("{preset}_compile_ms"), compile.median() * 1e3);
+        results.row(&format!("{preset}_load_ms"), load.median() * 1e3);
+        results.row(&format!("{preset}_load_speedup"), speedup);
+        println!(
+            "{preset}: compile {:.2} ms vs load {:.2} ms -> {speedup:.1}x faster cold start \
+             ({} bytes on disk, checksum {:016x})\n",
+            compile.median() * 1e3,
+            load.median() * 1e3,
+            info.file_bytes,
+            info.checksum,
+        );
+    }
+
+    results.flush();
+    std::fs::remove_dir_all(&dir).ok();
+}

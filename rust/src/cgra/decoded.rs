@@ -36,7 +36,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::isa::{Dst, Instr, Op, PeId, Program, Src, COLS, N_PES, ROWS};
+use anyhow::{bail, ensure, Result};
+
+use crate::isa::{Dst, Instr, Op, PeId, Program, Src, COLS, N_PES, N_REGS, ROWS};
+use crate::util::wire::{Reader, Writer};
 
 use super::exec::{dir_idx, NEIGH};
 use super::stats::OpClass;
@@ -425,6 +428,255 @@ pub fn decode_cache_stats() -> DecodeCacheStats {
 pub fn clear_decode_cache() {
     for s in shards() {
         s.lock().unwrap().clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire codec (AOT artifacts, DESIGN.md §13)
+// ---------------------------------------------------------------------------
+//
+// The artifact load path must reconstruct a `DecodedProgram` *without*
+// calling [`decode`] — zero µop decodes on load is the contract
+// `tests/compiled_counters.rs` pins — so the codec round-trips every
+// field of the decoded form verbatim (sentinels included) and builds
+// the struct directly. `DECODES` is untouched by [`DecodedProgram::wire_decode`].
+
+/// Dedup table mapping shared `Arc<DecodedProgram>`s to artifact
+/// program-table indices. Kernels that share programs (grouped layers
+/// via `with_weights`) serialize the program once and reference it by
+/// index, and the load path restores the sharing by cloning out of one
+/// `Vec<Arc<DecodedProgram>>`.
+#[derive(Debug, Default)]
+pub(crate) struct ProgTable {
+    by_ptr: HashMap<usize, u32>,
+    progs: Vec<Arc<DecodedProgram>>,
+}
+
+impl ProgTable {
+    /// An empty table.
+    pub(crate) fn new() -> ProgTable {
+        ProgTable::default()
+    }
+
+    /// The table index of `p`, interning it on first sight. Identity is
+    /// by `Arc` pointer: two kernels holding the same `Arc` map to one
+    /// table entry.
+    pub(crate) fn index_of(&mut self, p: &Arc<DecodedProgram>) -> u32 {
+        let key = Arc::as_ptr(p) as usize;
+        *self.by_ptr.entry(key).or_insert_with(|| {
+            self.progs.push(p.clone());
+            (self.progs.len() - 1) as u32
+        })
+    }
+
+    /// The interned programs, in index order.
+    pub(crate) fn progs(&self) -> &[Arc<DecodedProgram>] {
+        &self.progs
+    }
+}
+
+fn encode_usrc(w: &mut Writer, s: USrc) {
+    match s {
+        USrc::Zero => w.u8(0),
+        USrc::Imm(v) => {
+            w.u8(1);
+            w.i32(v);
+        }
+        USrc::Reg(r) => {
+            w.u8(2);
+            w.u8(r);
+        }
+        USrc::Own => w.u8(3),
+        USrc::Neigh(p) => {
+            w.u8(4);
+            w.u8(p);
+        }
+        USrc::Addr => w.u8(5),
+    }
+}
+
+fn decode_usrc(r: &mut Reader) -> Result<USrc> {
+    let at = r.pos();
+    Ok(match r.u8()? {
+        0 => USrc::Zero,
+        1 => USrc::Imm(r.i32()?),
+        2 => {
+            let reg = r.u8()?;
+            ensure!((reg as usize) < N_REGS, "register index {reg} out of range at offset {at}");
+            USrc::Reg(reg)
+        }
+        3 => USrc::Own,
+        4 => {
+            let pe = r.u8()?;
+            ensure!((pe as usize) < N_PES, "neighbour PE index {pe} out of range at offset {at}");
+            USrc::Neigh(pe)
+        }
+        5 => USrc::Addr,
+        t => bail!("unknown operand-source tag {t} at offset {at}"),
+    })
+}
+
+const ALU_FNS: [AluFn; 11] = [
+    AluFn::Mov,
+    AluFn::Add,
+    AluFn::Sub,
+    AluFn::Mul,
+    AluFn::Shl,
+    AluFn::Shr,
+    AluFn::And,
+    AluFn::Or,
+    AluFn::Xor,
+    AluFn::Min,
+    AluFn::Max,
+];
+
+const BR_FNS: [BrFn; 5] = [BrFn::Eq, BrFn::Ne, BrFn::Lt, BrFn::Ge, BrFn::Always];
+
+fn encode_uinstr(w: &mut Writer, u: &UInstr) {
+    match u.kind {
+        UKind::Nop => w.u8(0),
+        UKind::Exit => w.u8(1),
+        UKind::Alu(f) => {
+            w.u8(2);
+            w.u8(ALU_FNS.iter().position(|&x| x == f).unwrap_or(0) as u8);
+        }
+        UKind::SetAddr => w.u8(3),
+        UKind::Lw => w.u8(4),
+        UKind::LwInc => w.u8(5),
+        UKind::SwInc => w.u8(6),
+        UKind::SwAt => w.u8(7),
+        UKind::Br(f) => {
+            w.u8(8);
+            w.u8(BR_FNS.iter().position(|&x| x == f).unwrap_or(0) as u8);
+        }
+    }
+    encode_usrc(w, u.a);
+    encode_usrc(w, u.b);
+    w.bool(u.wout);
+    w.u8(u.wreg);
+    w.u16(u.target);
+}
+
+fn decode_uinstr(r: &mut Reader) -> Result<UInstr> {
+    let at = r.pos();
+    let kind = match r.u8()? {
+        0 => UKind::Nop,
+        1 => UKind::Exit,
+        2 => {
+            let f = r.u8()? as usize;
+            ensure!(f < ALU_FNS.len(), "unknown ALU function {f} at offset {at}");
+            UKind::Alu(ALU_FNS[f])
+        }
+        3 => UKind::SetAddr,
+        4 => UKind::Lw,
+        5 => UKind::LwInc,
+        6 => UKind::SwInc,
+        7 => UKind::SwAt,
+        8 => {
+            let f = r.u8()? as usize;
+            ensure!(f < BR_FNS.len(), "unknown branch condition {f} at offset {at}");
+            UKind::Br(BR_FNS[f])
+        }
+        t => bail!("unknown µop tag {t} at offset {at}"),
+    };
+    let a = decode_usrc(r)?;
+    let b = decode_usrc(r)?;
+    let wout = r.bool()?;
+    let wreg = r.u8()?;
+    ensure!(
+        wreg == NO_REG || (wreg as usize) < N_REGS,
+        "write-register index {wreg} out of range at offset {at}"
+    );
+    let target = r.u16()?;
+    Ok(UInstr { kind, a, b, wout, wreg, target })
+}
+
+impl DecodedProgram {
+    /// Serialize the decoded form verbatim (DESIGN.md §13): name, the
+    /// per-PE µop streams with their sentinels, the per-column step
+    /// metadata, and the per-slot op classes.
+    pub(crate) fn wire_encode(&self, w: &mut Writer) {
+        w.str(&self.name);
+        for pe in &self.code {
+            w.u32(pe.len() as u32);
+            for u in pe {
+                encode_uinstr(w, u);
+            }
+        }
+        for col in &self.col_meta {
+            w.u32(col.len() as u32);
+            for m in col {
+                w.u32(m.mem_ops);
+                w.bool(m.any_mul);
+            }
+        }
+        for pe in &self.classes {
+            w.u32(pe.len() as u32);
+            for &c in pe {
+                w.u8(c);
+            }
+        }
+    }
+
+    /// Reconstruct a decoded program from its wire form **without
+    /// re-decoding anything** — [`decode_count`] is untouched. The
+    /// executor's indexing invariants (non-empty sentinel-terminated
+    /// streams, per-column class tables matching the column metadata
+    /// length) are re-validated so a corrupted payload fails here with
+    /// an actionable error instead of panicking in the hot loop.
+    pub(crate) fn wire_decode(r: &mut Reader) -> Result<DecodedProgram> {
+        let name = r.str()?;
+        let mut code: Vec<Vec<UInstr>> = Vec::with_capacity(N_PES);
+        for pe in 0..N_PES {
+            let n = r.u32()? as usize;
+            ensure!(n >= 1, "PE {pe} µop stream of '{name}' lost its sentinel");
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(decode_uinstr(r)?);
+            }
+            code.push(v);
+        }
+        let mut col_meta: Vec<Vec<ColMeta>> = Vec::with_capacity(COLS);
+        for c in 0..COLS {
+            let n = r.u32()? as usize;
+            ensure!(n >= 1, "column {c} step metadata of '{name}' is empty");
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mem_ops = r.u32()?;
+                let any_mul = r.bool()?;
+                v.push(ColMeta { mem_ops, any_mul });
+            }
+            col_meta.push(v);
+        }
+        let mut classes: Vec<Vec<u8>> = Vec::with_capacity(N_PES);
+        for pe in 0..N_PES {
+            let n = r.u32()? as usize;
+            let expect = col_meta[pe % COLS].len();
+            ensure!(
+                n == expect,
+                "PE {pe} class table of '{name}' has {n} slots, column metadata has {expect}"
+            );
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(r.u8()?);
+            }
+            classes.push(v);
+        }
+        for (pe, v) in code.iter().enumerate() {
+            let cols = col_meta[pe % COLS].len();
+            ensure!(
+                v.len() <= cols,
+                "PE {pe} µop stream of '{name}' has {} slots, column metadata covers {cols}",
+                v.len()
+            );
+        }
+        let into_arr = "element count checked by the loops above";
+        Ok(DecodedProgram {
+            name,
+            code: code.try_into().expect(into_arr),
+            col_meta: col_meta.try_into().expect(into_arr),
+            classes: classes.try_into().expect(into_arr),
+        })
     }
 }
 

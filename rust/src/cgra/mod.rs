@@ -24,6 +24,7 @@ pub use decoded::{
     clear_decode_cache, decode, decode_cache_stats, decode_cached, decode_count,
     DecodeCacheStats, DecodedProgram, DECODE_CACHE_CAPACITY,
 };
+pub(crate) use decoded::ProgTable;
 pub use exec::{column_pes, Cgra, StepTrace};
 pub use memory::{BatchMemory, MemStats, Memory};
 pub use stats::{OpClass, RunStats};

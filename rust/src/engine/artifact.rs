@@ -1,0 +1,386 @@
+//! **The AOT artifact file format** — `CompiledNet` on disk
+//! (DESIGN.md §13).
+//!
+//! A compiled network is expensive to produce (planner resolution,
+//! program building, µop decoding, weight baking) and cheap to replay;
+//! this module makes the expensive half a *build step*. The file is:
+//!
+//! ```text
+//! [ magic "CGRART01" | u32 manifest_len | JSON manifest | binary payload ]
+//! ```
+//!
+//! The manifest is human-readable JSON (rendered by [`crate::util::json`]
+//! — the crate vendors no serde) carrying the format version, the crate
+//! version, the net and session fingerprints, the payload length, and an
+//! FNV-1a checksum of the payload. The payload is the compact
+//! little-endian encoding of everything [`CompiledNet`] froze at compile
+//! time: the deduplicated decoded-program table, the source graph
+//! (weights included), per-layer plans with kernels referencing programs
+//! by table index, and the arena sizing
+//! ([`CompiledNet::wire_encode_body`]).
+//!
+//! **Invalidation** is the ⊕ of four identities, each checked on load
+//! with its own actionable error: the *format version* (this module's
+//! constant), the *crate version* (`CARGO_PKG_VERSION` — layouts and
+//! charge formulas may change between releases, so artifacts never
+//! cross builds), the *net fingerprint* ([`Net::fingerprint`]) and the
+//! *session fingerprint* (config ⊕ energy model,
+//! [`super::Engine::session_fingerprint`]). The checksum rejects
+//! corruption before any payload byte is trusted, and the payload
+//! reader ([`crate::util::wire::Reader`]) is bounds-checked throughout,
+//! so a hostile file fails with a message, never a panic or a
+//! silently-wrong artifact (`tests/artifact.rs`).
+//!
+//! **Why load is rebuild-free:** the payload stores the *decoded* µop
+//! form, the frozen layouts and the baked weight blocks — exactly the
+//! structures the warm path replays — so loading is a validated copy,
+//! not a compilation. The load path performs zero program builds, zero
+//! µop decodes and zero planner calls, pinned by `RunCounters` in
+//! `tests/compiled_counters.rs`.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::conv::{GenConvShape, Weights};
+use crate::kernels::Mapping;
+use crate::nn::graph::{Layer, Net};
+use crate::util::json::{self, Json};
+use crate::util::wire::{fnv1a, Reader, Writer};
+
+use super::{CompiledNet, Engine};
+
+/// Version of the on-disk encoding. Bump on any layout change to the
+/// manifest or payload; loaders reject other versions outright.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// File magic: identifies the container before anything is parsed.
+const MAGIC: &[u8; 8] = b"CGRART01";
+
+/// Fixed header size: magic + little-endian `u32` manifest length.
+const HEADER_LEN: usize = MAGIC.len() + 4;
+
+/// Identity and size of a serialized artifact — what `cgra compile
+/// --out` summarizes and `cgra serve --artifact` prints for operators.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    /// Network name recorded in the artifact.
+    pub net: String,
+    /// [`Net::fingerprint`] of the compiled graph.
+    pub net_fp: u64,
+    /// Config ⊕ energy-model fingerprint the artifact was compiled
+    /// under.
+    pub session_fp: u64,
+    /// FNV-1a checksum of the binary payload.
+    pub checksum: u64,
+    /// Binary payload size in bytes.
+    pub payload_bytes: usize,
+    /// Whole-file size in bytes (header + manifest + payload).
+    pub file_bytes: usize,
+    /// Crate version that wrote the artifact.
+    pub crate_version: String,
+}
+
+/// Serialize an artifact into the full file image (header + manifest +
+/// payload).
+pub(crate) fn serialize(cn: &CompiledNet) -> Vec<u8> {
+    parts(cn).0
+}
+
+/// Serialize to `path`, returning the written artifact's identity.
+pub(crate) fn save(cn: &CompiledNet, path: &Path) -> Result<ArtifactInfo> {
+    let (bytes, info) = parts(cn);
+    fs::write(path, &bytes)
+        .with_context(|| format!("writing artifact to {}", path.display()))?;
+    Ok(info)
+}
+
+/// Build the file image and its identity in one pass.
+fn parts(cn: &CompiledNet) -> (Vec<u8>, ArtifactInfo) {
+    let mut w = Writer::new();
+    cn.wire_encode_body(&mut w);
+    let payload = w.into_bytes();
+    let manifest = manifest_json(cn, &payload).to_string_compact();
+    let mut bytes = Vec::with_capacity(HEADER_LEN + manifest.len() + payload.len());
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&(manifest.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(manifest.as_bytes());
+    bytes.extend_from_slice(&payload);
+    let info = ArtifactInfo {
+        net: cn.name().to_string(),
+        net_fp: cn.net().fingerprint(),
+        session_fp: cn.session_fp(),
+        checksum: fnv1a(&payload),
+        payload_bytes: payload.len(),
+        file_bytes: bytes.len(),
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+    };
+    (bytes, info)
+}
+
+/// Load an artifact from `path`, fully validated against `engine`'s
+/// session. See the module docs for the validation ladder; every rung
+/// has a distinct, actionable error.
+pub(crate) fn load(engine: &Engine, path: &Path) -> Result<(CompiledNet, ArtifactInfo)> {
+    let bytes = fs::read(path)
+        .with_context(|| format!("reading artifact {}", path.display()))?;
+    load_bytes(engine, &bytes)
+        .with_context(|| format!("loading artifact {}", path.display()))
+}
+
+/// [`load`] over an in-memory image.
+fn load_bytes(engine: &Engine, bytes: &[u8]) -> Result<(CompiledNet, ArtifactInfo)> {
+    // 1. Container shape: magic + manifest length.
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "artifact file is {} bytes — too short for the {HEADER_LEN}-byte header",
+        bytes.len()
+    );
+    ensure!(
+        &bytes[..MAGIC.len()] == MAGIC,
+        "not a CGRA artifact: bad magic {:02x?} (want {:?})",
+        &bytes[..MAGIC.len()],
+        std::str::from_utf8(MAGIC).unwrap()
+    );
+    let mlen =
+        u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+    ensure!(
+        HEADER_LEN + mlen <= bytes.len(),
+        "artifact manifest truncated: header promises {mlen} manifest bytes, file holds {}",
+        bytes.len() - HEADER_LEN
+    );
+
+    // 2. Manifest: parse, then check the version gates before trusting
+    //    anything else.
+    let mtext = std::str::from_utf8(&bytes[HEADER_LEN..HEADER_LEN + mlen])
+        .map_err(|_| anyhow::anyhow!("artifact manifest is not valid UTF-8"))?;
+    let m = json::parse(mtext).context("parsing artifact manifest")?;
+    let fv = m.req_i64("format_version")?;
+    ensure!(
+        fv == FORMAT_VERSION as i64,
+        "artifact format version {fv}; this build reads version {FORMAT_VERSION} — \
+         recompile the artifact with `cgra compile --out`"
+    );
+    let cv = m.req_str("crate_version")?;
+    ensure!(
+        cv == env!("CARGO_PKG_VERSION"),
+        "artifact written by crate version {cv}; this build is {} — frozen layouts and \
+         charges may differ across versions, recompile the artifact",
+        env!("CARGO_PKG_VERSION")
+    );
+    let net_name = m.req_str("net")?.to_string();
+    let net_fp = req_hex(&m, "net_fp")?;
+    let session_fp = req_hex(&m, "session_fp")?;
+    let checksum = req_hex(&m, "checksum")?;
+    let payload_len = m.req_i64("payload_len")?;
+
+    // 3. Payload integrity: promised length, then checksum.
+    let payload = &bytes[HEADER_LEN + mlen..];
+    ensure!(
+        payload.len() as i64 == payload_len,
+        "artifact payload is {} bytes but the manifest promises {payload_len} — the file \
+         is truncated or carries trailing garbage",
+        payload.len()
+    );
+    let computed = fnv1a(payload);
+    ensure!(
+        computed == checksum,
+        "artifact checksum mismatch: manifest says {checksum:016x}, payload hashes to \
+         {computed:016x} — the file is corrupted"
+    );
+
+    // 4. Session identity: the frozen layouts and charges are only
+    //    valid under the config ⊕ energy model they were compiled for.
+    let engine_fp = engine.session_fingerprint();
+    ensure!(
+        session_fp == engine_fp,
+        "artifact '{net_name}' was compiled for session fingerprint {session_fp:016x} but \
+         this engine's is {engine_fp:016x} — the CGRA config or energy model differs; \
+         recompile the artifact for this session"
+    );
+
+    // 5. Decode the payload (bounds-checked throughout; zero builds,
+    //    zero decodes) and cross-check the graph identity.
+    let mut r = Reader::new(payload);
+    let cn = CompiledNet::wire_decode_body(&mut r, engine)
+        .context("decoding artifact payload")?;
+    r.finish()?;
+    let got_fp = cn.net().fingerprint();
+    ensure!(
+        got_fp == net_fp,
+        "artifact manifest names net fingerprint {net_fp:016x} but the payload decodes \
+         to {got_fp:016x} — manifest and payload disagree"
+    );
+
+    let info = ArtifactInfo {
+        net: net_name,
+        net_fp,
+        session_fp,
+        checksum,
+        payload_bytes: payload.len(),
+        file_bytes: bytes.len(),
+        crate_version: cv.to_string(),
+    };
+    Ok((cn, info))
+}
+
+/// Render the manifest for a payload.
+fn manifest_json(cn: &CompiledNet, payload: &[u8]) -> Json {
+    Json::obj(vec![
+        ("format_version", (FORMAT_VERSION as i64).into()),
+        ("crate_version", env!("CARGO_PKG_VERSION").into()),
+        ("net", cn.name().into()),
+        // u64 fingerprints travel as 16-hex-digit strings: the JSON
+        // number model is f64, which cannot hold them losslessly.
+        ("net_fp", hex16(cn.net().fingerprint()).into()),
+        ("session_fp", hex16(cn.session_fp()).into()),
+        ("checksum", hex16(fnv1a(payload)).into()),
+        ("payload_len", payload.len().into()),
+    ])
+}
+
+/// Format a fingerprint the way the manifest stores it.
+fn hex16(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Read a required 16-hex-digit fingerprint field.
+fn req_hex(m: &Json, key: &str) -> Result<u64> {
+    let s = m.req_str(key)?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| anyhow::anyhow!("manifest field '{key}' is not a hex fingerprint: {s:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Net / Layer codec (the payload's source-graph section)
+// ---------------------------------------------------------------------------
+
+/// Serialize the source graph (weights included — they are the baked
+/// images' ground truth and what golden verification replays).
+pub(crate) fn encode_net(w: &mut Writer, net: &Net) {
+    w.str(&net.name);
+    w.usize(net.input_dims.0);
+    w.usize(net.input_dims.1);
+    w.usize(net.input_dims.2);
+    w.u32(net.layers.len() as u32);
+    for layer in &net.layers {
+        match layer {
+            Layer::Conv { shape, weights, mapping, relu } => {
+                w.u8(1);
+                encode_gen_shape(w, shape);
+                encode_weights(w, weights);
+                w.str(mapping.label());
+                w.bool(*relu);
+            }
+            Layer::Depthwise { shape, weights, relu } => {
+                w.u8(2);
+                encode_gen_shape(w, shape);
+                encode_weights(w, weights);
+                w.bool(*relu);
+            }
+            Layer::Pointwise { shape, weights, mapping, relu } => {
+                w.u8(3);
+                encode_gen_shape(w, shape);
+                encode_weights(w, weights);
+                w.str(mapping.label());
+                w.bool(*relu);
+            }
+            Layer::MaxPool { size, stride } => {
+                w.u8(4);
+                w.usize(*size);
+                w.usize(*stride);
+            }
+            Layer::AvgPool { size, stride } => {
+                w.u8(5);
+                w.usize(*size);
+                w.usize(*stride);
+            }
+        }
+    }
+}
+
+/// Deserialize the source graph (validated layer by layer; the caller
+/// additionally runs [`Net::validate`] over the whole graph).
+pub(crate) fn decode_net(r: &mut Reader) -> Result<Net> {
+    let name = r.str()?;
+    let input_dims = (r.usize()?, r.usize()?, r.usize()?);
+    let n = r.u32()? as usize;
+    let mut layers = Vec::with_capacity(n.min(4096));
+    for i in 0..n {
+        let layer = match r.u8()? {
+            1 => {
+                let shape = decode_gen_shape(r)?;
+                let weights = decode_weights(r)?;
+                let mapping = Mapping::parse(&r.str()?)?;
+                Layer::Conv { shape, weights, mapping, relu: r.bool()? }
+            }
+            2 => {
+                let shape = decode_gen_shape(r)?;
+                let weights = decode_weights(r)?;
+                Layer::Depthwise { shape, weights, relu: r.bool()? }
+            }
+            3 => {
+                let shape = decode_gen_shape(r)?;
+                let weights = decode_weights(r)?;
+                let mapping = Mapping::parse(&r.str()?)?;
+                Layer::Pointwise { shape, weights, mapping, relu: r.bool()? }
+            }
+            4 => Layer::MaxPool { size: r.usize()?, stride: r.usize()? },
+            5 => Layer::AvgPool { size: r.usize()?, stride: r.usize()? },
+            t => bail!("unknown layer tag {t} for layer {i} of '{name}'"),
+        };
+        layers.push(layer);
+    }
+    Ok(Net { name, input_dims, layers })
+}
+
+/// Serialize a [`GenConvShape`] (9 dims).
+fn encode_gen_shape(w: &mut Writer, s: &GenConvShape) {
+    for v in [s.c, s.k, s.ih, s.iw, s.fx, s.fy, s.stride, s.pad, s.groups] {
+        w.usize(v);
+    }
+}
+
+/// Deserialize and re-validate a [`GenConvShape`].
+fn decode_gen_shape(r: &mut Reader) -> Result<GenConvShape> {
+    let s = GenConvShape {
+        c: r.usize()?,
+        k: r.usize()?,
+        ih: r.usize()?,
+        iw: r.usize()?,
+        fx: r.usize()?,
+        fy: r.usize()?,
+        stride: r.usize()?,
+        pad: r.usize()?,
+        groups: r.usize()?,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+/// Serialize a weight tensor (dims + raw bank).
+fn encode_weights(w: &mut Writer, ws: &Weights) {
+    w.usize(ws.k);
+    w.usize(ws.c);
+    w.usize(ws.fy);
+    w.usize(ws.fx);
+    w.vec_i32(&ws.data);
+}
+
+/// Deserialize a weight tensor, checking the dims against the bank
+/// length (the constructor asserts; a corrupted file must error).
+fn decode_weights(r: &mut Reader) -> Result<Weights> {
+    let (k, c, fy, fx) = (r.usize()?, r.usize()?, r.usize()?, r.usize()?);
+    let data = r.vec_i32()?;
+    let want = k
+        .checked_mul(c)
+        .and_then(|v| v.checked_mul(fy))
+        .and_then(|v| v.checked_mul(fx));
+    ensure!(
+        want == Some(data.len()),
+        "weight bank of {} elements does not match dims ({k}, {c}, {fy}, {fx})",
+        data.len()
+    );
+    Ok(Weights { k, c, fy, fx, data })
+}

@@ -47,8 +47,10 @@ pub fn choose(shape: &ConvShape, cfg: &CgraConfig) -> Result<AutoDecision> {
     Ok(AutoDecision { mapping, reason })
 }
 
-/// Why the cost model picked its mapping (see [`choose_planned`]).
-const AUTO_REASON_COST: &str =
+/// Why the cost model picked its mapping (see [`choose_planned`];
+/// `pub(crate)` so the artifact codec can round-trip the `&'static str`
+/// by tag).
+pub(crate) const AUTO_REASON_COST: &str =
     "cost model predicts the lowest latency among mappings that fit the memory bound";
 
 /// Cost-model-backed strategy choice — the upgraded `Mapping::Auto`

@@ -41,10 +41,14 @@
 // (`RUSTDOCFLAGS: -D warnings`) turns a missing doc into a failure.
 #![warn(missing_docs)]
 
-use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
 
-use crate::cgra::{self, Cgra};
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cgra::{self, Cgra, DecodedProgram, ProgTable};
 use crate::conv::{GenConvShape, TensorChw, Weights};
+use crate::coordinator::cache;
 use crate::coordinator::network::ConvNet;
 use crate::energy::EnergyModel;
 use crate::kernels::{
@@ -56,7 +60,9 @@ use crate::nn::lower::{
     cpu_baseline_cycles, decimate_into, glue_spec, host_energy_uj, pad_into, pool_into, HostOp,
 };
 use crate::obs::{profile, trace};
+use crate::util::wire::{Reader, Writer};
 
+use super::artifact::{self, ArtifactInfo};
 use super::auto::{self, AutoDecision};
 use super::{relu_cost, Engine};
 
@@ -1080,6 +1086,259 @@ impl CompiledNet {
             relu_cycles: relu_total,
             exact: verify.then_some(all_exact),
             profile: pf.finish(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AOT artifact codec (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// The `AutoDecision` reason for concrete mappings
+/// (`Mapping::resolve`'s literal, re-stated here for the wire codec).
+const REASON_EXPLICIT: &str = "requested explicitly";
+
+/// Fallback reason for artifacts written by a build whose reason tag
+/// this build does not know (forward-compatibility inside one format
+/// version).
+const REASON_FROM_ARTIFACT: &str = "auto decision recorded in a compiled artifact";
+
+/// Map an `AutoDecision` reason to its stable wire tag. The reasons are
+/// `&'static str`s, so they travel by tag, not by copying the text.
+fn encode_reason(reason: &str) -> u8 {
+    if reason == REASON_EXPLICIT {
+        0
+    } else if reason == kernels::common::AUTO_REASON_WP {
+        1
+    } else if reason == kernels::common::AUTO_REASON_OP_IM2COL {
+        2
+    } else if reason == auto::AUTO_REASON_COST {
+        3
+    } else {
+        4
+    }
+}
+
+/// Inverse of [`encode_reason`]; unknown tags degrade to a generic
+/// reason instead of failing the load.
+fn decode_reason(tag: u8) -> &'static str {
+    match tag {
+        0 => REASON_EXPLICIT,
+        1 => kernels::common::AUTO_REASON_WP,
+        2 => kernels::common::AUTO_REASON_OP_IM2COL,
+        3 => auto::AUTO_REASON_COST,
+        _ => REASON_FROM_ARTIFACT,
+    }
+}
+
+fn encode_dims(w: &mut Writer, d: (usize, usize, usize)) {
+    w.usize(d.0);
+    w.usize(d.1);
+    w.usize(d.2);
+}
+
+fn decode_dims(r: &mut Reader) -> Result<(usize, usize, usize)> {
+    Ok((r.usize()?, r.usize()?, r.usize()?))
+}
+
+impl CompiledNet {
+    /// Serialize the whole artifact (manifest + payload) into the
+    /// versioned on-disk format (DESIGN.md §13). [`CompiledNet::save`]
+    /// writes these bytes to a file.
+    pub fn serialize(&self) -> Vec<u8> {
+        artifact::serialize(self)
+    }
+
+    /// Serialize to `path`, returning the written artifact's identity
+    /// (fingerprints, checksum, size).
+    pub fn save(&self, path: &Path) -> Result<ArtifactInfo> {
+        artifact::save(self, path)
+    }
+
+    /// Load an artifact from `path` into `engine`'s session. The file's
+    /// format version, crate version, checksum and session fingerprint
+    /// are all validated before any payload is trusted, and the load
+    /// path performs **zero program builds, zero µop decodes and zero
+    /// planner calls** — `tests/compiled_counters.rs` pins this with
+    /// [`RunCounters`].
+    pub fn load(engine: &Engine, path: &Path) -> Result<(CompiledNet, ArtifactInfo)> {
+        artifact::load(engine, path)
+    }
+
+    /// The config ⊕ energy-model fingerprint this artifact was compiled
+    /// under — must equal the loading engine's
+    /// [`Engine::session_fingerprint`].
+    pub(crate) fn session_fp(&self) -> u64 {
+        cache::cfg_fingerprint(self.cgra.config()) ^ cache::energy_fingerprint(&self.model)
+    }
+
+    /// Encode the binary payload: the deduplicated program table first,
+    /// then the source graph, the compiled layers (kernels referencing
+    /// programs by table index), and the arena sizing.
+    pub(crate) fn wire_encode_body(&self, w: &mut Writer) {
+        // Intern every kernel's programs up front so the table is
+        // complete before it is written; kernel encoding below then
+        // resolves to the same indices (shared `Arc`s dedupe).
+        let mut table = ProgTable::new();
+        for cl in &self.layers {
+            if let LayerExec::Conv { kernels, .. } = &cl.exec {
+                for k in kernels {
+                    k.collect_progs(&mut table);
+                }
+            }
+        }
+        let progs: Vec<Arc<DecodedProgram>> = table.progs().to_vec();
+        w.u32(progs.len() as u32);
+        for p in &progs {
+            p.wire_encode(w);
+        }
+        artifact::encode_net(w, &self.net);
+        w.u32(self.layers.len() as u32);
+        for cl in &self.layers {
+            match cl.mapping {
+                None => w.bool(false),
+                Some(m) => {
+                    w.bool(true);
+                    w.str(m.label());
+                }
+            }
+            match cl.auto {
+                None => w.bool(false),
+                Some(d) => {
+                    w.bool(true);
+                    w.str(d.mapping.label());
+                    w.u8(encode_reason(d.reason));
+                }
+            }
+            w.u64(cl.macs);
+            w.u64(cl.cpu_cycles);
+            w.u64(cl.host.cycles);
+            w.u64(cl.host.accesses);
+            w.bool(cl.relu);
+            w.usize(cl.relu_elems);
+            encode_dims(w, cl.in_dims);
+            encode_dims(w, cl.out_dims);
+            match &cl.exec {
+                LayerExec::Conv { pad, padded_dims, full_dims, stride, kernels } => {
+                    w.u8(0);
+                    w.usize(*pad);
+                    encode_dims(w, *padded_dims);
+                    encode_dims(w, *full_dims);
+                    w.usize(*stride);
+                    w.u32(kernels.len() as u32);
+                    for k in kernels {
+                        k.wire_encode(w, &mut table);
+                    }
+                }
+                LayerExec::MaxPool { size, stride } => {
+                    w.u8(1);
+                    w.usize(*size);
+                    w.usize(*stride);
+                }
+                LayerExec::AvgPool { size, stride } => {
+                    w.u8(2);
+                    w.usize(*size);
+                    w.usize(*stride);
+                }
+            }
+        }
+        w.usize(self.arena.act_elems);
+        w.usize(self.arena.stage_elems);
+        w.usize(self.arena.full_elems);
+        w.usize(self.arena.group_elems);
+        w.usize(self.arena.scratch.hwc_elems);
+        w.usize(self.arena.scratch.patch_elems);
+    }
+
+    /// Decode the binary payload into a runnable artifact bound to
+    /// `engine`'s session (the caller has already verified the session
+    /// fingerprint matches). Reconstructs decoded programs, kernels,
+    /// layer plans and the arena **without building or decoding
+    /// anything** — `kind`/`desc` metadata is re-derived from the
+    /// deserialized graph, which is free.
+    pub(crate) fn wire_decode_body(r: &mut Reader, engine: &Engine) -> Result<CompiledNet> {
+        let n_progs = r.u32()? as usize;
+        let mut progs: Vec<Arc<DecodedProgram>> = Vec::with_capacity(n_progs.min(1 << 16));
+        for _ in 0..n_progs {
+            progs.push(Arc::new(DecodedProgram::wire_decode(r)?));
+        }
+        let net = artifact::decode_net(r)?;
+        net.validate()?;
+        let n_layers = r.u32()? as usize;
+        ensure!(
+            n_layers == net.layers.len(),
+            "artifact carries {n_layers} compiled layers for a {}-layer graph",
+            net.layers.len()
+        );
+        let mem_words = engine.config().mem_words;
+        let mut layers = Vec::with_capacity(n_layers);
+        for (index, src) in net.layers.iter().enumerate() {
+            let lctx = || format!("compiled layer {index} ({})", src.kind());
+            let mapping =
+                if r.bool()? { Some(Mapping::parse(&r.str()?).with_context(lctx)?) } else { None };
+            let auto = if r.bool()? {
+                let m = Mapping::parse(&r.str()?).with_context(lctx)?;
+                Some(AutoDecision { mapping: m, reason: decode_reason(r.u8()?) })
+            } else {
+                None
+            };
+            let macs = r.u64()?;
+            let cpu_cycles = r.u64()?;
+            let host = HostOp { cycles: r.u64()?, accesses: r.u64()? };
+            let relu = r.bool()?;
+            let relu_elems = r.usize()?;
+            let in_dims = decode_dims(r)?;
+            let out_dims = decode_dims(r)?;
+            let exec = match r.u8()? {
+                0 => {
+                    let pad = r.usize()?;
+                    let padded_dims = decode_dims(r)?;
+                    let full_dims = decode_dims(r)?;
+                    let stride = r.usize()?;
+                    ensure!(stride >= 1, "compiled layer {index} has stride 0");
+                    let nk = r.u32()? as usize;
+                    ensure!(nk >= 1, "compiled conv layer {index} has no kernels");
+                    let mut ks = Vec::with_capacity(nk);
+                    for _ in 0..nk {
+                        ks.push(
+                            CompiledKernel::wire_decode(r, &progs, mem_words)
+                                .with_context(lctx)?,
+                        );
+                    }
+                    LayerExec::Conv { pad, padded_dims, full_dims, stride, kernels: ks }
+                }
+                1 => LayerExec::MaxPool { size: r.usize()?, stride: r.usize()? },
+                2 => LayerExec::AvgPool { size: r.usize()?, stride: r.usize()? },
+                t => bail!("unknown layer-exec tag {t} in compiled layer {index}"),
+            };
+            layers.push(CompiledLayer {
+                kind: src.kind(),
+                desc: src.describe(),
+                mapping,
+                auto,
+                macs,
+                cpu_cycles,
+                host,
+                relu,
+                relu_elems,
+                in_dims,
+                out_dims,
+                exec,
+            });
+        }
+        let arena = ArenaSpec {
+            act_elems: r.usize()?,
+            stage_elems: r.usize()?,
+            full_elems: r.usize()?,
+            group_elems: r.usize()?,
+            scratch: ScratchNeed { hwc_elems: r.usize()?, patch_elems: r.usize()? },
+        };
+        Ok(CompiledNet {
+            net,
+            layers,
+            cgra: Cgra::new(engine.config().clone())?,
+            model: *engine.energy_model(),
+            arena,
         })
     }
 }

@@ -47,10 +47,12 @@
 //! [`BatchCtx`] (DESIGN.md §9) — same modeled numbers per inference,
 //! a fraction of the host replay cost.
 
+pub mod artifact;
 pub mod auto;
 pub mod compiled;
 mod request;
 
+pub use artifact::ArtifactInfo;
 pub use auto::{choose, choose_planned, AutoDecision};
 pub use compiled::{
     BatchCtx, CompiledNet, InferRun, LayerInfo, LayerRun, NetCtx, RunCounters,

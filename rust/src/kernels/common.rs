@@ -144,13 +144,15 @@ pub enum Mapping {
     Auto,
 }
 
-/// Why `Auto` picked WP (see [`Mapping::resolve`]).
-const AUTO_REASON_WP: &str = "direct working set fits the memory bound; the paper finds \
-     Conv-WP best for any hyperparameter combination";
+/// Why `Auto` picked WP (see [`Mapping::resolve`]; `pub(crate)` so the
+/// artifact codec can round-trip the `&'static str` by tag).
+pub(crate) const AUTO_REASON_WP: &str = "direct working set fits the memory bound; the paper \
+     finds Conv-WP best for any hyperparameter combination";
 
 /// Why `Auto` fell back to OP-im2col (see [`Mapping::resolve`]).
-const AUTO_REASON_OP_IM2COL: &str = "direct convolution is unavailable for this shape but the \
-     im2col buffer fits the memory bound; Im2col-OP is the best remaining mapping (Fig. 4)";
+pub(crate) const AUTO_REASON_OP_IM2COL: &str = "direct convolution is unavailable for this \
+     shape but the im2col buffer fits the memory bound; Im2col-OP is the best remaining \
+     mapping (Fig. 4)";
 
 impl Mapping {
     /// All CGRA mappings (excludes the CPU baseline and `Auto`).

@@ -38,16 +38,17 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::cgra::{
     decode, decode_cached, BatchMemory, Cgra, CgraConfig, DecodedProgram, Memory, MemStats,
-    OpClass, RunStats, DECODE_CACHE_CAPACITY,
+    OpClass, ProgTable, RunStats, DECODE_CACHE_CAPACITY,
 };
 use crate::conv::{im2col_patch, patch_len, ConvShape, TensorChw, TensorHwc, Weights};
 use crate::cpu_ref::CpuModel;
 use crate::isa::N_PES;
 use crate::obs::{profile, trace};
+use crate::util::wire::{Reader, Writer};
 
 use super::common::{ConvOutcome, HostCostModel, LatencyBreakdown, Mapping, MemLayout};
 use super::{dw, ip, op_direct, op_im2col, wp};
@@ -533,6 +534,136 @@ impl CompiledKernel {
     /// legacy driver).
     pub fn footprint_bytes(&self) -> usize {
         self.footprint_bytes
+    }
+
+    /// Intern this kernel's decoded programs into the artifact's shared
+    /// program table (grouped layers holding the same `Arc`s intern to
+    /// the same indices, so the on-disk form deduplicates exactly as
+    /// the in-memory form shares).
+    pub(crate) fn collect_progs(&self, table: &mut ProgTable) {
+        for p in &self.progs {
+            table.index_of(p);
+        }
+    }
+
+    /// Serialize the kernel for the AOT artifact (DESIGN.md §13):
+    /// mapping, frozen shape and plan, program-table indices in launch
+    /// order, and the baked weight blocks.
+    pub(crate) fn wire_encode(&self, w: &mut Writer, table: &mut ProgTable) {
+        w.str(self.mapping.label());
+        encode_shape(w, &self.shape);
+        match &self.plan {
+            Plan::Wp { layout } => {
+                w.u8(0);
+                encode_layout(w, layout);
+            }
+            Plan::Dw { lay } => {
+                w.u8(1);
+                w.usize(lay.input);
+                w.usize(lay.weights);
+                w.usize(lay.output);
+                w.usize(lay.total_words);
+            }
+            Plan::OpDirect { layout } => {
+                w.u8(2);
+                encode_layout(w, layout);
+            }
+            Plan::OpIm2col { layout, pl, w_prep_elems } => {
+                w.u8(3);
+                encode_layout(w, layout);
+                w.usize(*pl);
+                w.u64(*w_prep_elems);
+            }
+            Plan::Ip { layout, cp, w_prep_elems } => {
+                w.u8(4);
+                encode_layout(w, layout);
+                w.usize(*cp);
+                w.u64(*w_prep_elems);
+            }
+            Plan::Cpu => w.u8(5),
+        }
+        w.u32(self.progs.len() as u32);
+        for p in &self.progs {
+            w.u32(table.index_of(p));
+        }
+        w.u32(self.init.len() as u32);
+        for b in &self.init {
+            w.usize(b.base);
+            w.vec_i32(&b.data);
+        }
+        w.usize(self.footprint_bytes);
+    }
+
+    /// Reconstruct a kernel from its wire form, resolving launch
+    /// programs by index into the artifact's shared table — **no
+    /// program building, no µop decoding**. `mem_words` is the loading
+    /// session's CGRA memory size; every frozen layout and baked block
+    /// is re-validated against it so a corrupted-but-plausible artifact
+    /// fails here instead of panicking inside a replay.
+    pub(crate) fn wire_decode(
+        r: &mut Reader,
+        table: &[Arc<DecodedProgram>],
+        mem_words: usize,
+    ) -> Result<CompiledKernel> {
+        let mapping = Mapping::parse(&r.str()?)?;
+        let shape = decode_shape(r)?;
+        let plan_tag = r.u8()?;
+        let plan = match plan_tag {
+            0 => Plan::Wp { layout: decode_layout(r, mem_words)? },
+            1 => {
+                let lay = dw::DwLayout {
+                    input: r.usize()?,
+                    weights: r.usize()?,
+                    output: r.usize()?,
+                    total_words: r.usize()?,
+                };
+                ensure!(
+                    lay.total_words <= mem_words,
+                    "artifact depthwise layout needs {} words but this session's memory \
+                     holds {mem_words}",
+                    lay.total_words
+                );
+                Plan::Dw { lay }
+            }
+            2 => Plan::OpDirect { layout: decode_layout(r, mem_words)? },
+            3 => Plan::OpIm2col {
+                layout: decode_layout(r, mem_words)?,
+                pl: r.usize()?,
+                w_prep_elems: r.u64()?,
+            },
+            4 => Plan::Ip {
+                layout: decode_layout(r, mem_words)?,
+                cp: r.usize()?,
+                w_prep_elems: r.u64()?,
+            },
+            5 => Plan::Cpu,
+            t => bail!("unknown kernel plan tag {t}"),
+        };
+        let n_progs = r.u32()? as usize;
+        let mut progs = Vec::with_capacity(n_progs.min(table.len().max(1) * 64));
+        for _ in 0..n_progs {
+            let i = r.u32()? as usize;
+            ensure!(
+                i < table.len(),
+                "kernel references program {i} but the artifact table holds {}",
+                table.len()
+            );
+            progs.push(table[i].clone());
+        }
+        let n_init = r.u32()? as usize;
+        let mut init = Vec::with_capacity(n_init);
+        for _ in 0..n_init {
+            let base = r.usize()?;
+            let data = r.vec_i32()?;
+            ensure!(
+                plan_tag == 5 || base.saturating_add(data.len()) <= mem_words,
+                "baked weight block [{base}..{}) overruns the {mem_words}-word memory",
+                base.saturating_add(data.len())
+            );
+            init.push(InitBlock { base, data });
+        }
+        let footprint_bytes = r.usize()?;
+        Ok(CompiledKernel { mapping, shape, plan, progs, init, footprint_bytes })
     }
 
     /// Scratch this kernel needs from a shared [`KernelScratch`].
@@ -1116,6 +1247,63 @@ fn copy_out_lanes(
     }
 }
 
+/// Serialize a frozen [`ConvShape`] (6 dims, DESIGN.md §13).
+fn encode_shape(w: &mut Writer, s: &ConvShape) {
+    w.usize(s.c);
+    w.usize(s.k);
+    w.usize(s.ox);
+    w.usize(s.oy);
+    w.usize(s.fx);
+    w.usize(s.fy);
+}
+
+/// Deserialize and re-validate a frozen [`ConvShape`].
+fn decode_shape(r: &mut Reader) -> Result<ConvShape> {
+    let s = ConvShape {
+        c: r.usize()?,
+        k: r.usize()?,
+        ox: r.usize()?,
+        oy: r.usize()?,
+        fx: r.usize()?,
+        fy: r.usize()?,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+/// Serialize a frozen [`MemLayout`] (7 word offsets/sizes).
+fn encode_layout(w: &mut Writer, l: &MemLayout) {
+    w.usize(l.input);
+    w.usize(l.weights);
+    w.usize(l.output);
+    w.usize(l.im2col);
+    w.usize(l.im2col_words);
+    w.usize(l.scratch);
+    w.usize(l.total_words);
+}
+
+/// Deserialize a frozen [`MemLayout`], re-checking the loading
+/// session's memory bound (the layout was validated against the
+/// *compiling* session's config; fingerprint matching makes them equal,
+/// but the check keeps a hand-edited artifact from panicking a replay).
+fn decode_layout(r: &mut Reader, mem_words: usize) -> Result<MemLayout> {
+    let l = MemLayout {
+        input: r.usize()?,
+        weights: r.usize()?,
+        output: r.usize()?,
+        im2col: r.usize()?,
+        im2col_words: r.usize()?,
+        scratch: r.usize()?,
+        total_words: r.usize()?,
+    };
+    ensure!(
+        l.total_words <= mem_words,
+        "artifact layout needs {} words but this session's memory holds {mem_words}",
+        l.total_words
+    );
+    Ok(l)
+}
+
 /// CHW → HWC conversion into a preallocated staging tensor (the modeled
 /// MCU does this per inference; the simulator just avoids allocating
 /// for it).
@@ -1392,6 +1580,62 @@ mod tests {
         assert!(err.to_string().contains("batched output view too small"), "{err}");
         // The happy path on the same scratch still works.
         ck.run_batch_into(&cgra, 2, &flat_in, ie, &mut scratch, &mut flat_out, oe).unwrap();
+    }
+
+    /// The wire codec round-trips every mapping's kernel bit-exactly —
+    /// identical replay output and accounting — resolving shared
+    /// programs through the artifact table **without a single µop
+    /// decode**, and rejects dangling program references.
+    #[test]
+    fn wire_round_trip_replays_identically_without_decodes() {
+        use crate::cgra::decode_count;
+        use crate::util::wire::{Reader, Writer};
+        let cfg = CgraConfig::default();
+        let cgra = Cgra::new(cfg).unwrap();
+        let shape = ConvShape::new3x3(3, 5, 4, 4);
+        let mut rng = Rng::new(21);
+        let input = random_input(&shape, 40, &mut rng);
+        let weights = random_weights(&shape, 9, &mut rng);
+        for m in Mapping::ALL {
+            let ck = CompiledKernel::build(cgra.config(), &shape, m, &weights).unwrap();
+            let mut table = ProgTable::new();
+            ck.collect_progs(&mut table);
+            let mut w = Writer::new();
+            ck.wire_encode(&mut w, &mut table);
+            let bytes = w.into_bytes();
+
+            let before = decode_count();
+            let mut r = Reader::new(&bytes);
+            let loaded =
+                CompiledKernel::wire_decode(&mut r, table.progs(), cgra.config().mem_words)
+                    .unwrap();
+            r.finish().unwrap();
+            assert_eq!(decode_count(), before, "{m}: loading must not decode");
+            assert_eq!(loaded.mapping(), ck.mapping(), "{m}");
+            assert_eq!(loaded.launches(), ck.launches(), "{m}");
+            assert_eq!(loaded.footprint_bytes(), ck.footprint_bytes(), "{m}");
+
+            let mut scratch = KernelScratch::new(cgra.config(), ck.scratch_need());
+            let mut out_a = vec![0i32; shape.output_elems()];
+            let mut out_b = vec![0i32; shape.output_elems()];
+            let a = ck.run_into(&cgra, &input.data, &mut scratch, &mut out_a).unwrap();
+            let b = loaded.run_into(&cgra, &input.data, &mut scratch, &mut out_b).unwrap();
+            assert_eq!(out_a, out_b, "{m} output");
+            assert_eq!(a.latency, b.latency, "{m} latency");
+            assert_eq!(a.cgra_stats, b.cgra_stats, "{m} stats");
+            assert_eq!(a.cpu_mem, b.cpu_mem, "{m} host mem");
+
+            // A dangling program reference is rejected, not indexed.
+            if ck.launches() > 0 {
+                let err = CompiledKernel::wire_decode(
+                    &mut Reader::new(&bytes),
+                    &table.progs()[..table.progs().len() - 1],
+                    cgra.config().mem_words,
+                )
+                .unwrap_err();
+                assert!(err.to_string().contains("artifact table"), "{m}: {err}");
+            }
+        }
     }
 
     /// Build-time validation mirrors the legacy drivers' diagnostics.

@@ -7,11 +7,14 @@
 //! cgra report  fig3|fig4|fig5|all [--out DIR] [--full]      regenerate figures
 //! cgra sweep   [--full] [--out DIR]                          Fig. 5 sweep
 //! cgra net     [--preset NAME] [--plan-only]                 edge network on the CGRA (nn)
-//! cgra compile [--preset NAME]                               compile to a CompiledNet, summarize
+//! cgra compile [--preset NAME] [--out FILE]                  compile to a CompiledNet, summarize;
+//!                                                             --out serializes the AOT artifact
 //! cgra serve   --iters N [--batch B] [--preset NAME]         compile once, serve N inferences
-//!              [--verify]                                     (B lanes per µop walk when batched)
+//!              [--verify] [--artifact FILE]                   (B lanes per µop walk when batched;
+//!                                                             --artifact loads, zero rebuilds)
 //! cgra daemon  [--port P] [--workers W] [--batch B]          persistent NDJSON/TCP serving:
 //!              [--capacity N] [--admission reject|degrade]    registry + admission + stats
+//!              [--artifact-dir DIR]                           (disk-backed registry tier)
 //! cgra trace   [--preset NAME] [--iters N] [--out FILE]      run compiled inferences under the
 //!                                                             span tracer, write Chrome JSON
 //! cgra profile [--preset NAME | --mapping M --shape CxKxOXxOY] cycle-attribution profiler:
@@ -553,7 +556,10 @@ fn net_from_args(a: &Args, seed: u64) -> Result<openedge_cgra::nn::Net> {
 /// `cgra compile` — ahead-of-time compile a network into a
 /// [`openedge_cgra::engine::CompiledNet`] and print the artifact
 /// summary: per-layer frozen mapping, launch count and pre-decoded
-/// µops, plus the arena sizing and the compile wall time.
+/// µops, plus the arena sizing and the compile wall time. With
+/// `--out FILE` the compiled network is serialized to disk
+/// (DESIGN.md §13) for later zero-rebuild loading via
+/// `cgra serve --artifact` or the daemon's `--artifact-dir` tier.
 fn cmd_compile() -> Result<()> {
     let a = Args::from_env(
         2,
@@ -565,6 +571,11 @@ fn cmd_compile() -> Result<()> {
                 help: "named network: mobilenet-mini | paper-baseline | vgg-mini \
                        (default: a plain --depth/--c0/--k/--hw conv stack)",
             },
+            OptSpec {
+                name: "out",
+                value: "FILE",
+                help: "serialize the compiled network to this artifact file",
+            },
             OptSpec { name: "depth", value: "INT", help: "plain stack: conv layers" },
             OptSpec { name: "c0", value: "INT", help: "plain stack: input channels" },
             OptSpec { name: "k", value: "INT", help: "plain stack: channels per layer" },
@@ -573,6 +584,7 @@ fn cmd_compile() -> Result<()> {
         ],
     )?;
     let seed = a.num_or("seed", 7u64)?;
+    let out = a.opt_str("out").map(str::to_string);
     let net = net_from_args(&a, seed)?;
     a.reject_unknown()?;
 
@@ -620,6 +632,17 @@ fn cmd_compile() -> Result<()> {
         "steady-state runs perform zero program building, zero decoding, \
          zero planner work, zero activation allocation (`cgra serve`)"
     );
+    if let Some(path) = out {
+        let info = compiled.save(std::path::Path::new(&path))?;
+        println!(
+            "\nwrote {path}: {} bytes on disk ({} payload), checksum {:016x}",
+            info.file_bytes, info.payload_bytes, info.checksum
+        );
+        println!(
+            "  net fp {:016x}, session fp {:016x} — load with `cgra serve --artifact {path}`",
+            info.net_fp, info.session_fp
+        );
+    }
     Ok(())
 }
 
@@ -630,6 +653,9 @@ fn cmd_compile() -> Result<()> {
 /// inferences per shared µop walk (DESIGN.md §9) for bulk throughput;
 /// modeled per-inference numbers are unchanged. `--verify` runs the
 /// opt-in golden debug mode and exits non-zero on any divergence.
+/// `--artifact FILE` skips compilation entirely and loads a
+/// `cgra compile --out` artifact instead — zero program builds, zero
+/// µop decodes, zero planner work on the load path.
 fn cmd_serve() -> Result<()> {
     let a = Args::from_env(
         2,
@@ -640,6 +666,12 @@ fn cmd_serve() -> Result<()> {
                 value: "NAME",
                 help: "named network: mobilenet-mini | paper-baseline | vgg-mini \
                        (default: a plain --depth/--c0/--k/--hw conv stack)",
+            },
+            OptSpec {
+                name: "artifact",
+                value: "FILE",
+                help: "load a serialized compiled network instead of compiling \
+                       (see `cgra compile --out`)",
             },
             OptSpec { name: "iters", value: "INT", help: "inferences to serve (default 16)" },
             OptSpec {
@@ -665,18 +697,33 @@ fn cmd_serve() -> Result<()> {
     let batch: usize = a.num_or("batch", 1usize)?;
     let workers = a.num_or("workers", default_workers())?;
     let verify = a.flag("verify");
-    let net = net_from_args(&a, seed)?;
+    let artifact = a.opt_str("artifact").map(str::to_string);
+    let net = if artifact.is_none() { Some(net_from_args(&a, seed)?) } else { None };
     a.reject_unknown()?;
     anyhow::ensure!(iters >= 1, "--iters must be at least 1");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
 
     let engine = engine_with_workers(workers)?;
     let t0 = std::time::Instant::now();
-    let compiled = std::sync::Arc::new(engine.compile_owned(net)?);
+    let compiled = match (&artifact, net) {
+        (Some(path), _) => {
+            let (cn, info) =
+                openedge_cgra::engine::CompiledNet::load(&engine, std::path::Path::new(path))?;
+            println!(
+                "loaded artifact {path}: net '{}' fp {:016x}, session fp {:016x}, \
+                 checksum {:016x} ({} bytes)",
+                info.net, info.net_fp, info.session_fp, info.checksum, info.file_bytes
+            );
+            std::sync::Arc::new(cn)
+        }
+        (None, Some(net)) => std::sync::Arc::new(engine.compile_owned(net)?),
+        (None, None) => unreachable!("net is resolved whenever --artifact is absent"),
+    };
     let compile_s = t0.elapsed().as_secs_f64();
     println!(
-        "compiled '{}' in {:.1} ms ({} launches/inference, {} pre-decoded uops); \
+        "{} '{}' in {:.1} ms ({} launches/inference, {} pre-decoded uops); \
          serving {iters} inferences on {workers} workers{}{}\n",
+        if artifact.is_some() { "loaded" } else { "compiled" },
         compiled.name(),
         compile_s * 1e3,
         compiled.total_launches(),
@@ -822,6 +869,12 @@ fn cmd_daemon() -> Result<()> {
                 help: "attribute walk cycles to bottleneck classes; per-tenant aggregates \
                        appear under 'bottleneck' in stats (off = zero overhead)",
             },
+            OptSpec {
+                name: "artifact-dir",
+                value: "DIR",
+                help: "disk-backed registry tier: load serialized artifacts from (and \
+                       persist fresh compiles to) this directory across restarts",
+            },
         ],
     )?;
     let port: u16 = a.num_or("port", 0u16)?;
@@ -831,19 +884,25 @@ fn cmd_daemon() -> Result<()> {
     let policy =
         openedge_cgra::server::AdmissionPolicy::parse(&a.str_or("admission", "degrade"))?;
     let profiling = a.flag("profile");
+    let artifact_dir = a.opt_str("artifact-dir").map(str::to_string);
     a.reject_unknown()?;
+    if let Some(dir) = &artifact_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating artifact directory {dir}"))?;
+    }
     // Held for the daemon's lifetime: flips the profiler on so worker
     // runs carry per-inference bottleneck deltas into tenant counters.
     let _psession = profiling.then(openedge_cgra::obs::profile::session);
 
-    let daemon = std::sync::Arc::new(
-        openedge_cgra::server::Daemon::builder()
-            .workers(workers)
-            .batch(batch)
-            .capacity(capacity)
-            .admission(policy)
-            .build(),
-    );
+    let mut builder = openedge_cgra::server::Daemon::builder()
+        .workers(workers)
+        .batch(batch)
+        .capacity(capacity)
+        .admission(policy);
+    if let Some(dir) = &artifact_dir {
+        builder = builder.artifact_dir(dir);
+    }
+    let daemon = std::sync::Arc::new(builder.build());
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))
         .with_context(|| format!("binding 127.0.0.1:{port}"))?;
     let addr = listener.local_addr()?;
@@ -858,6 +917,9 @@ fn cmd_daemon() -> Result<()> {
     if profiling {
         println!("bottleneck profiler: on (per-tenant 'bottleneck' aggregates in stats)");
     }
+    if let Some(dir) = &artifact_dir {
+        println!("artifact disk tier: {dir} (compiles persist; restarts load, zero rebuilds)");
+    }
     // The smoke script scrapes the line above from a pipe — make sure
     // it is visible before the first connection is accepted.
     use std::io::Write as _;
@@ -869,7 +931,8 @@ fn cmd_daemon() -> Result<()> {
     println!(
         "daemon stopped after {:.1} s: served {} requests / {} inferences \
          ({:.1} inf/s), rejected {}, degraded {}; registry {} hits / {} misses / \
-         {} evictions / {} compiles; {} walks over {} lanes",
+         {} evictions / {} compiles / {} disk hits / {} disk writes; \
+         {} walks over {} lanes",
         stats.uptime_s,
         stats.served_requests,
         stats.served_inferences,
@@ -880,6 +943,8 @@ fn cmd_daemon() -> Result<()> {
         stats.registry.misses,
         stats.registry.evictions,
         stats.registry.compiles,
+        stats.registry.disk_hits,
+        stats.registry.disk_writes,
         stats.walks,
         stats.walk_lanes,
     );

@@ -39,6 +39,7 @@ pub mod stats;
 pub mod tcp;
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -49,7 +50,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::cgra::CgraConfig;
 use crate::energy::EnergyModel;
-use crate::engine::Engine;
+use crate::engine::{CompiledNet, Engine};
 use crate::nn::{build_preset, Net};
 use crate::obs::trace;
 use crate::planner::PlanObjective;
@@ -244,6 +245,7 @@ pub struct DaemonBuilder {
     capacity: usize,
     shards: usize,
     policy: AdmissionPolicy,
+    artifact_dir: Option<PathBuf>,
 }
 
 impl Default for DaemonBuilder {
@@ -263,6 +265,7 @@ impl DaemonBuilder {
             capacity: 32,
             shards: 4,
             policy: AdmissionPolicy::Degrade,
+            artifact_dir: None,
         }
     }
 
@@ -304,8 +307,24 @@ impl DaemonBuilder {
         self
     }
 
+    /// Enable the registry's disk tier: serialized artifacts
+    /// (DESIGN.md §13) are loaded from — and freshly compiled ones
+    /// persisted to — this directory, keyed by net ⊕ session
+    /// fingerprint. A restarted daemon warms its registry from here
+    /// instead of recompiling.
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> DaemonBuilder {
+        self.artifact_dir = Some(dir.into());
+        self
+    }
+
     /// Spawn the worker pool and return the daemon.
     pub fn build(self) -> Daemon {
+        if let Some(dir) = &self.artifact_dir {
+            // Best-effort: a missing or unwritable directory degrades
+            // the disk tier to a no-op (every load misses, every
+            // persist reports false), it never breaks serving.
+            let _ = std::fs::create_dir_all(dir);
+        }
         let shared = Arc::new(Shared::new());
         let handles = (0..self.workers)
             .map(|_| {
@@ -324,6 +343,7 @@ impl DaemonBuilder {
             shared,
             handles: Mutex::new(handles),
             started: Instant::now(),
+            artifact_dir: self.artifact_dir,
         }
     }
 }
@@ -340,6 +360,7 @@ pub struct Daemon {
     shared: Arc<Shared>,
     handles: Mutex<Vec<JoinHandle<()>>>,
     started: Instant,
+    artifact_dir: Option<PathBuf>,
 }
 
 impl Daemon {
@@ -352,6 +373,11 @@ impl Daemon {
     /// internally).
     pub fn registry(&self) -> &ArtifactRegistry {
         &self.registry
+    }
+
+    /// The disk-tier directory, if the registry has one.
+    pub fn artifact_dir(&self) -> Option<&std::path::Path> {
+        self.artifact_dir.as_deref()
     }
 
     /// Max inference lanes per shared µop walk.
@@ -459,8 +485,37 @@ impl Daemon {
 
         let key = ArtifactKey { net_fp: net.fingerprint(), session_fp: tenant.session_fp };
         let mut gsp = trace::span("registry", "get_or_compile");
-        let (artifact, cache_hit) =
-            self.registry.get_or_compile(key, || tenant.engine.compile_owned(net))?;
+        let (artifact, cache_hit) = match &self.artifact_dir {
+            None => self.registry.get_or_compile(key, || tenant.engine.compile_owned(net))?,
+            Some(dir) => {
+                // Disk tier: fingerprint-named file per artifact. The
+                // load is fully validated (checksum, format, session
+                // fingerprint — see `engine::artifact`); any mismatch
+                // falls back to a fresh compile, which then overwrites
+                // the stale file via `persist`.
+                let path =
+                    dir.join(format!("{:016x}-{:016x}.cgrart", key.net_fp, key.session_fp));
+                let engine = tenant.engine();
+                self.registry.get_or_compile_tiered(
+                    key,
+                    || {
+                        if !path.exists() {
+                            return None;
+                        }
+                        let mut lsp = trace::span("registry", "disk_load");
+                        match CompiledNet::load(engine, &path) {
+                            Ok((cn, _)) => Some(cn),
+                            Err(e) => {
+                                lsp.arg("invalid", format!("{e:#}"));
+                                None
+                            }
+                        }
+                    },
+                    || engine.compile_owned(net),
+                    |cn| cn.save(&path).is_ok(),
+                )?
+            }
+        };
         gsp.arg("hit", cache_hit);
         drop(gsp);
 

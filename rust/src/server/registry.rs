@@ -18,6 +18,12 @@
 //! other keys proceed untouched. Deterministic compile failures
 //! (memory-bound nets) are cached as errors like the point cache's
 //! skip entries, so a doomed net is priced exactly once.
+//!
+//! An optional *disk tier* sits between the memory cache and the
+//! compiler ([`ArtifactRegistry::get_or_compile_tiered`]): a memory
+//! miss first tries to load a serialized artifact (DESIGN.md §13)
+//! before compiling, and freshly compiled artifacts are persisted for
+//! the next process. The daemon enables it with `--artifact-dir`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -62,6 +68,11 @@ pub struct RegistryStats {
     /// Compiles actually executed (≤ misses: evicted-and-refetched
     /// keys recompile, concurrent same-key requests do not).
     pub compiles: u64,
+    /// Memory misses satisfied by loading a disk artifact instead of
+    /// compiling ([`ArtifactRegistry::get_or_compile_tiered`]).
+    pub disk_hits: u64,
+    /// Freshly compiled artifacts persisted to the disk tier.
+    pub disk_writes: u64,
     /// Live entries right now.
     pub entries: usize,
     /// Total capacity (shards × per-shard cap).
@@ -77,6 +88,8 @@ pub struct ArtifactRegistry {
     misses: AtomicU64,
     evictions: AtomicU64,
     compiles: AtomicU64,
+    disk_hits: AtomicU64,
+    disk_writes: AtomicU64,
 }
 
 impl ArtifactRegistry {
@@ -95,6 +108,8 @@ impl ArtifactRegistry {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             compiles: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            disk_writes: AtomicU64::new(0),
         }
     }
 
@@ -105,16 +120,10 @@ impl ArtifactRegistry {
         &self.shards[(h % self.shards.len() as u64) as usize]
     }
 
-    /// Fetch the artifact for `key`, compiling it via `compile` on a
-    /// miss. Returns the shared artifact and whether the lookup was a
-    /// registry hit (an in-flight compile by another thread counts as
-    /// a hit — the work is shared, not repeated). Deterministic compile
-    /// failures are cached and replayed as errors.
-    pub fn get_or_compile(
-        &self,
-        key: ArtifactKey,
-        compile: impl FnOnce() -> Result<CompiledNet>,
-    ) -> Result<(Arc<CompiledNet>, bool)> {
+    /// Find-or-insert the single-flight cell for `key` under the shard
+    /// lock (constant-time bookkeeping only), evicting the shard's LRU
+    /// entry when full. Returns the cell and whether it already existed.
+    fn cell_for(&self, key: ArtifactKey) -> (Cell, bool) {
         let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
         let (cell, hit) = {
             let mut shard = self.shard(&key).lock().unwrap();
@@ -142,14 +151,59 @@ impl ArtifactRegistry {
         } else {
             self.misses.fetch_add(1, Ordering::Relaxed);
         }
-        // Single-flight compile outside the shard lock: the first
-        // caller initializes, concurrent same-key callers block here,
+        (cell, hit)
+    }
+
+    /// Fetch the artifact for `key`, compiling it via `compile` on a
+    /// miss. Returns the shared artifact and whether the lookup was a
+    /// registry hit (an in-flight compile by another thread counts as
+    /// a hit — the work is shared, not repeated). Deterministic compile
+    /// failures are cached and replayed as errors.
+    pub fn get_or_compile(
+        &self,
+        key: ArtifactKey,
+        compile: impl FnOnce() -> Result<CompiledNet>,
+    ) -> Result<(Arc<CompiledNet>, bool)> {
+        self.get_or_compile_tiered(key, || None, compile, |_| false)
+    }
+
+    /// [`ArtifactRegistry::get_or_compile`] with a disk tier between
+    /// the memory cache and the compiler. On a memory miss the
+    /// single-flight winner first tries `load` (a validated
+    /// deserialization of a previously persisted artifact — counted as
+    /// a disk hit); only if that yields nothing does it `compile`, and
+    /// a successful compile is offered to `persist` (return `true` when
+    /// a file was actually written — counted as a disk write). Both
+    /// closures run inside the single-flight cell, so concurrent
+    /// same-key requests never duplicate a load, a compile, or a write.
+    pub fn get_or_compile_tiered(
+        &self,
+        key: ArtifactKey,
+        load: impl FnOnce() -> Option<CompiledNet>,
+        compile: impl FnOnce() -> Result<CompiledNet>,
+        persist: impl FnOnce(&CompiledNet) -> bool,
+    ) -> Result<(Arc<CompiledNet>, bool)> {
+        let (cell, hit) = self.cell_for(key);
+        // Single-flight fill outside the shard lock: the first caller
+        // initializes, concurrent same-key callers block here,
         // different keys never contend.
         let outcome = cell.get_or_init(|| {
+            if let Some(cn) = load() {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::new(cn));
+            }
             self.compiles.fetch_add(1, Ordering::Relaxed);
             let mut csp = trace::span("registry", "compile");
             csp.arg("net_fp", format!("{:#018x}", key.net_fp));
-            compile().map(Arc::new).map_err(|e| format!("{e:#}"))
+            match compile() {
+                Ok(cn) => {
+                    if persist(&cn) {
+                        self.disk_writes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(Arc::new(cn))
+                }
+                Err(e) => Err(format!("{e:#}")),
+            }
         });
         match outcome {
             Ok(artifact) => Ok((artifact.clone(), hit)),
@@ -180,6 +234,8 @@ impl ArtifactRegistry {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             compiles: self.compiles.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            disk_writes: self.disk_writes.load(Ordering::Relaxed),
             entries: self.len(),
             capacity: self.shard_cap * self.shards.len(),
         }

@@ -117,6 +117,8 @@ impl DaemonStats {
             ("misses", self.registry.misses.into()),
             ("evictions", self.registry.evictions.into()),
             ("compiles", self.registry.compiles.into()),
+            ("disk_hits", self.registry.disk_hits.into()),
+            ("disk_writes", self.registry.disk_writes.into()),
             ("entries", self.registry.entries.into()),
             ("capacity", self.registry.capacity.into()),
         ]);
@@ -195,7 +197,16 @@ mod tests {
             degraded: 1,
             walks: 2,
             walk_lanes: 6,
-            registry: RegistryStats { hits: 2, misses: 1, compiles: 1, entries: 1, capacity: 8, ..Default::default() },
+            registry: RegistryStats {
+                hits: 2,
+                misses: 1,
+                compiles: 1,
+                disk_hits: 1,
+                disk_writes: 1,
+                entries: 1,
+                capacity: 8,
+                ..Default::default()
+            },
             queue_wait_us: HistogramSummary::default(),
             exec_us: lat,
             e2e_us: lat,
@@ -218,6 +229,8 @@ mod tests {
         assert_eq!(j.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
         assert_eq!(j.req_i64("served_inferences").unwrap(), 6);
         assert_eq!(j.get("registry").unwrap().req_i64("hits").unwrap(), 2);
+        assert_eq!(j.get("registry").unwrap().req_i64("disk_hits").unwrap(), 1);
+        assert_eq!(j.get("registry").unwrap().req_i64("disk_writes").unwrap(), 1);
         let e2e = j.get("e2e_us").unwrap();
         assert_eq!(e2e.req_i64("count").unwrap(), 2);
         assert_eq!(e2e.req_i64("min").unwrap(), 40);

@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod fmt;
 pub mod json;
+pub mod wire;
 
 pub use cli::{Args, OptSpec};
 pub use json::Json;

@@ -1,0 +1,314 @@
+//! Little-endian binary codec for the AOT artifact payload.
+//!
+//! The offline build environment has no `serde`/`bincode`; this module
+//! is the binary sibling of [`super::json`]: a [`Writer`] that appends
+//! fixed-width little-endian scalars and length-prefixed strings and
+//! vectors, and a bounds-checked [`Reader`] that can never panic on
+//! hostile input — every read is validated against the remaining bytes
+//! and failures name the offset and the wanted width, so a truncated or
+//! corrupted artifact is rejected with an actionable error instead of
+//! an out-of-bounds access.
+//!
+//! Format conventions (DESIGN.md §13): all scalars little-endian;
+//! `usize` travels as `u64`; `bool` as one byte (`0`/`1`, anything else
+//! is an error); strings and `i32` vectors as a `u32` element count
+//! followed by the elements. Length prefixes are validated against the
+//! bytes actually remaining *before* any allocation, so a corrupted
+//! length cannot trigger a huge allocation.
+
+use anyhow::{bail, ensure, Result};
+
+/// Append-only little-endian byte sink for artifact payloads.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// An empty writer.
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer, returning the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a little-endian `u16`.
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `u32`.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `u64`.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `i32`.
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `usize` as a `u64` (the wire format is
+    /// pointer-width-independent).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Append a `bool` as one `0`/`1` byte.
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Append a length-prefixed UTF-8 string (`u32` byte count + bytes).
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed `i32` vector (`u32` element count +
+    /// little-endian elements).
+    pub fn vec_i32(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.i32(x);
+        }
+    }
+}
+
+/// Bounds-checked reader over an artifact payload. Never panics:
+/// every accessor validates the remaining length first and reports the
+/// byte offset on failure.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// A reader positioned at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Current byte offset.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take `n` raw bytes, or fail naming the offset and shortfall.
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "artifact payload truncated: wanted {n} bytes at offset {} but only {} remain \
+             (payload is {} bytes)",
+            self.pos,
+            self.remaining(),
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read a little-endian `i32`.
+    pub fn i32(&mut self) -> Result<i32> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `usize` (stored as `u64`; rejected if it does not fit the
+    /// host pointer width).
+    pub fn usize(&mut self) -> Result<usize> {
+        let at = self.pos;
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| anyhow::anyhow!("value {v} at offset {at} does not fit usize"))
+    }
+
+    /// Read a `bool` (one byte; anything but `0`/`1` is corruption).
+    pub fn bool(&mut self) -> Result<bool> {
+        let at = self.pos;
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b:#04x} at offset {at}"),
+        }
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string ending at offset {}", self.pos))
+    }
+
+    /// Read a length-prefixed `i32` vector. The element count is
+    /// validated against the remaining bytes before any allocation, so
+    /// a corrupted prefix cannot trigger a huge allocation.
+    pub fn vec_i32(&mut self) -> Result<Vec<i32>> {
+        let at = self.pos;
+        let n = self.u32()? as usize;
+        ensure!(
+            n.checked_mul(4).is_some_and(|bytes| bytes <= self.remaining()),
+            "i32 vector at offset {at} claims {n} elements but only {} bytes remain",
+            self.remaining()
+        );
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32()?);
+        }
+        Ok(v)
+    }
+
+    /// Require that the payload was consumed exactly.
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "artifact payload has {} trailing bytes after offset {}",
+            self.remaining(),
+            self.pos
+        );
+        Ok(())
+    }
+}
+
+/// FNV-1a over a byte slice — the artifact checksum (same constants as
+/// every other fingerprint in the crate; this one folds raw bytes, so
+/// any single-bit payload corruption changes it).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u16(513);
+        w.u32(70_000);
+        w.u64(u64::MAX - 1);
+        w.i32(-42);
+        w.usize(12345);
+        w.bool(true);
+        w.bool(false);
+        w.str("hello µop");
+        w.vec_i32(&[1, -2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 513);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.i32().unwrap(), -42);
+        assert_eq!(r.usize().unwrap(), 12345);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "hello µop");
+        assert_eq!(r.vec_i32().unwrap(), vec![1, -2, 3]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_names_offset_and_width() {
+        let mut w = Writer::new();
+        w.u32(9);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..2]);
+        let err = format!("{:#}", r.u32().unwrap_err());
+        assert!(err.contains("truncated") && err.contains("offset 0"), "{err}");
+        assert!(err.contains("wanted 4"), "{err}");
+    }
+
+    #[test]
+    fn hostile_lengths_are_rejected_before_allocation() {
+        // A vec_i32 claiming u32::MAX elements with a 4-byte body.
+        let mut w = Writer::new();
+        w.u32(u32::MAX);
+        w.i32(1);
+        let bytes = w.into_bytes();
+        let err = format!("{:#}", Reader::new(&bytes).vec_i32().unwrap_err());
+        assert!(err.contains("claims"), "{err}");
+        // A string overrunning the buffer.
+        let mut w = Writer::new();
+        w.u32(100);
+        w.u8(b'x');
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).str().is_err());
+    }
+
+    #[test]
+    fn invalid_bool_and_trailing_bytes_are_errors() {
+        let err = format!("{:#}", Reader::new(&[2]).bool().unwrap_err());
+        assert!(err.contains("bool"), "{err}");
+        let r = Reader::new(&[0, 0]);
+        let err = format!("{:#}", r.finish().unwrap_err());
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn checksum_is_bit_sensitive() {
+        let a = fnv1a(b"compiled artifact");
+        let mut flipped = b"compiled artifact".to_vec();
+        flipped[3] ^= 1;
+        assert_ne!(a, fnv1a(&flipped));
+        assert_eq!(a, fnv1a(b"compiled artifact"));
+    }
+}

@@ -1,0 +1,224 @@
+//! The AOT artifact file format (DESIGN.md §13) under fire: a clean
+//! round trip across the preset grid, then a hostile-input suite — a
+//! corrupted or mismatched artifact must always fail with a distinct,
+//! actionable error, never a panic and never a silently-wrong load.
+//!
+//! File layout exercised here (see `engine::artifact`):
+//!
+//! ```text
+//! [ magic "CGRART01" | u32 manifest_len LE | JSON manifest | payload ]
+//! ```
+
+use std::path::PathBuf;
+
+use openedge_cgra::energy::EnergyModel;
+use openedge_cgra::engine::{CompiledNet, Engine, EngineBuilder};
+use openedge_cgra::nn;
+
+fn engine() -> Engine {
+    EngineBuilder::new().workers(1).private_cache().build().unwrap()
+}
+
+/// A per-test scratch directory under the OS temp root.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cgra-artifact-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Serialize a small compiled preset and return (engine, file bytes).
+fn artifact_bytes(preset: &str) -> (Engine, Vec<u8>) {
+    let engine = engine();
+    let net = nn::build_preset(preset, 7).unwrap();
+    let compiled = engine.compile_owned(net).unwrap();
+    (engine, compiled.serialize())
+}
+
+/// Load `bytes` from a temp file and return the error it must produce.
+fn load_err(engine: &Engine, tag: &str, bytes: &[u8]) -> String {
+    let dir = scratch(tag);
+    let path = dir.join("artifact.cgrart");
+    std::fs::write(&path, bytes).unwrap();
+    let err = CompiledNet::load(engine, &path)
+        .err()
+        .unwrap_or_else(|| panic!("corrupted artifact ({tag}) must be rejected"));
+    std::fs::remove_dir_all(&dir).ok();
+    format!("{err:#}")
+}
+
+/// The manifest region of a serialized artifact: (start, end) offsets.
+fn manifest_span(bytes: &[u8]) -> (usize, usize) {
+    let mlen = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+    (12, 12 + mlen)
+}
+
+/// Rebuild an artifact image around a patched manifest string.
+fn with_manifest(bytes: &[u8], manifest: &str) -> Vec<u8> {
+    let (start, end) = manifest_span(bytes);
+    let mut out = Vec::with_capacity(bytes.len());
+    out.extend_from_slice(&bytes[..8]);
+    out.extend_from_slice(&(manifest.len() as u32).to_le_bytes());
+    out.extend_from_slice(manifest.as_bytes());
+    out.extend_from_slice(&bytes[end..]);
+    assert!(start == 12, "header layout drifted");
+    out
+}
+
+#[test]
+fn round_trip_is_bit_identical_across_presets() {
+    let engine = engine();
+    let dir = scratch("roundtrip");
+    for preset in ["mobilenet-mini", "vgg-mini", "paper-baseline"] {
+        let net = nn::build_preset(preset, 7).unwrap();
+        let compiled = engine.compile(&net).unwrap();
+        let path = dir.join(format!("{preset}.cgrart"));
+        let saved = compiled.save(&path).unwrap();
+        assert_eq!(saved.net, preset, "artifact records the net name");
+        assert_eq!(saved.net_fp, net.fingerprint());
+        assert_eq!(saved.session_fp, engine.session_fingerprint());
+        assert_eq!(
+            saved.file_bytes,
+            std::fs::metadata(&path).unwrap().len() as usize,
+            "reported size matches the file"
+        );
+
+        let (loaded, info) = CompiledNet::load(&engine, &path).unwrap();
+        assert_eq!(info, saved, "load reports the identity save recorded");
+
+        // Replays are bit-identical: outputs, cycles and energy.
+        let input = net.random_input(8, 11);
+        let (mut ca, mut cb) = (compiled.new_ctx(), loaded.new_ctx());
+        let ra = compiled.run_verified(&mut ca, &input).unwrap();
+        let rb = loaded.run_verified(&mut cb, &input).unwrap();
+        assert_eq!(ra.exact, Some(true));
+        assert_eq!(rb.exact, Some(true), "{preset}: loaded artifact stays golden-exact");
+        assert_eq!(ra.total_cycles, rb.total_cycles, "{preset}: cycles");
+        assert_eq!(
+            ra.total_energy_uj.to_bits(),
+            rb.total_energy_uj.to_bits(),
+            "{preset}: energy"
+        );
+        assert_eq!(ca.output().data, cb.output().data, "{preset}: outputs");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_files_are_rejected_at_every_cut() {
+    let (engine, bytes) = artifact_bytes("mobilenet-mini");
+
+    // Below the fixed header.
+    let err = load_err(&engine, "trunc-header", &bytes[..7]);
+    assert!(err.contains("too short"), "{err}");
+
+    // Header intact, manifest cut.
+    let (_, mend) = manifest_span(&bytes);
+    let err = load_err(&engine, "trunc-manifest", &bytes[..mend - 3]);
+    assert!(err.contains("manifest truncated"), "{err}");
+
+    // Payload cut: the manifest's promised length catches it before
+    // any payload byte is decoded.
+    let err = load_err(&engine, "trunc-payload", &bytes[..bytes.len() - 5]);
+    assert!(err.contains("truncated or carries trailing garbage"), "{err}");
+
+    // Trailing garbage is the same class of mismatch.
+    let mut padded = bytes.clone();
+    padded.extend_from_slice(b"junk");
+    let err = load_err(&engine, "trailing", &padded);
+    assert!(err.contains("truncated or carries trailing garbage"), "{err}");
+}
+
+#[test]
+fn flipped_payload_byte_fails_the_checksum() {
+    let (engine, mut bytes) = artifact_bytes("mobilenet-mini");
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    let err = load_err(&engine, "checksum", &bytes);
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(err.contains("corrupted"), "{err}");
+}
+
+#[test]
+fn wrong_magic_is_rejected_before_anything_is_parsed() {
+    let (engine, mut bytes) = artifact_bytes("mobilenet-mini");
+    bytes[..8].copy_from_slice(b"NOTCGRA!");
+    let err = load_err(&engine, "magic", &bytes);
+    assert!(err.contains("bad magic"), "{err}");
+}
+
+#[test]
+fn unreadable_manifest_is_rejected() {
+    let (engine, bytes) = artifact_bytes("mobilenet-mini");
+    let (mstart, mend) = manifest_span(&bytes);
+    let mut garbled = bytes.clone();
+    for b in &mut garbled[mstart..mend] {
+        *b = b'x';
+    }
+    let err = load_err(&engine, "manifest-garbage", &garbled);
+    assert!(err.contains("manifest"), "{err}");
+}
+
+#[test]
+fn format_version_bump_demands_a_recompile() {
+    let (engine, bytes) = artifact_bytes("mobilenet-mini");
+    let (mstart, mend) = manifest_span(&bytes);
+    let manifest = std::str::from_utf8(&bytes[mstart..mend]).unwrap();
+    assert!(manifest.contains("\"format_version\":1"), "layout drifted: {manifest}");
+    let patched = manifest.replace("\"format_version\":1", "\"format_version\":99");
+    let err = load_err(&engine, "format-version", &with_manifest(&bytes, &patched));
+    assert!(err.contains("format version 99"), "{err}");
+    assert!(err.contains("recompile"), "{err}");
+}
+
+#[test]
+fn crate_version_mismatch_demands_a_recompile() {
+    let (engine, bytes) = artifact_bytes("mobilenet-mini");
+    let (mstart, mend) = manifest_span(&bytes);
+    let manifest = std::str::from_utf8(&bytes[mstart..mend]).unwrap();
+    let cur = format!("\"crate_version\":\"{}\"", env!("CARGO_PKG_VERSION"));
+    assert!(manifest.contains(&cur), "layout drifted: {manifest}");
+    let patched = manifest.replace(&cur, "\"crate_version\":\"0.0.1\"");
+    let err = load_err(&engine, "crate-version", &with_manifest(&bytes, &patched));
+    assert!(err.contains("crate version 0.0.1"), "{err}");
+    assert!(err.contains("recompile"), "{err}");
+}
+
+#[test]
+fn manifest_net_fingerprint_must_match_the_payload() {
+    let (engine, bytes) = artifact_bytes("mobilenet-mini");
+    let (mstart, mend) = manifest_span(&bytes);
+    let manifest = std::str::from_utf8(&bytes[mstart..mend]).unwrap();
+    // Patch the 16-hex net_fp to a different same-length value.
+    let key = "\"net_fp\":\"";
+    let at = manifest.find(key).unwrap() + key.len();
+    let old = &manifest[at..at + 16];
+    let new: String = old
+        .chars()
+        .map(|c| if c == 'f' { '0' } else { 'f' })
+        .collect();
+    let patched = manifest.replace(&format!("{key}{old}"), &format!("{key}{new}"));
+    let err = load_err(&engine, "net-fp", &with_manifest(&bytes, &patched));
+    assert!(err.contains("manifest and payload disagree"), "{err}");
+}
+
+#[test]
+fn session_fingerprint_mismatch_names_both_sessions() {
+    // Compile under the calibrated session, load under a session with a
+    // doubled memory-access energy: the frozen charges would be wrong,
+    // so the load must refuse and say why.
+    let (_, bytes) = artifact_bytes("mobilenet-mini");
+    let mut hot = EnergyModel::default();
+    hot.e_mem_access_pj *= 2.0;
+    let other = EngineBuilder::new().energy_model(hot).private_cache().build().unwrap();
+    let err = load_err(&other, "session-fp", &bytes);
+    assert!(err.contains("session fingerprint"), "{err}");
+    assert!(err.contains("energy model"), "{err}");
+}
+
+#[test]
+fn missing_file_error_names_the_path() {
+    let engine = engine();
+    let path = std::env::temp_dir().join("cgra-artifact-definitely-missing.cgrart");
+    let err = format!("{:#}", CompiledNet::load(&engine, &path).unwrap_err());
+    assert!(err.contains("cgra-artifact-definitely-missing"), "{err}");
+}

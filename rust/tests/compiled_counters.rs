@@ -8,7 +8,7 @@
 //! would move them. Other integration binaries are separate processes
 //! and cannot interfere.
 
-use openedge_cgra::engine::{EngineBuilder, RunCounters};
+use openedge_cgra::engine::{CompiledNet, EngineBuilder, RunCounters};
 use openedge_cgra::nn;
 use openedge_cgra::obs;
 
@@ -169,4 +169,72 @@ fn warm_compiled_runs_do_zero_compile_side_work() {
     );
     assert_eq!(profile.total.cycles, d.cycles, "the session aggregate saw the same walks");
     assert!(!obs::profile::enabled(), "finishing the session must disable profiling");
+
+    // AOT artifact loads (DESIGN.md §13) extend the contract to disk:
+    // `CompiledNet::load` is a validated copy, not a recompile — the
+    // load itself moves NONE of the counters (no program builds, no
+    // µop decodes, no planner calls, no arena allocation), and warm
+    // runs on the loaded artifact reproduce the freshly compiled
+    // artifact's outputs, cycles and energy bit for bit.
+    let dir = std::env::temp_dir().join(format!("cgra-counters-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mobilenet-mini.cgrart");
+    let saved = compiled.save(&path).unwrap();
+    assert_eq!(saved.net_fp, net.fingerprint());
+    assert_eq!(saved.session_fp, engine.session_fingerprint());
+
+    let load_before = RunCounters::snapshot(&engine);
+    let (loaded, info) = CompiledNet::load(&engine, &path).unwrap();
+    let load_after = RunCounters::snapshot(&engine);
+    assert_eq!(
+        load_after, load_before,
+        "loading an artifact must perform no program building, no µop decoding, \
+         no planner calls and no arena allocation — it is a validated copy"
+    );
+    assert_eq!(info, saved, "load reports the identity save recorded");
+
+    let fresh_output = ctx.output().clone(); // ctx last ran `warmup`
+    let mut lctx = loaded.new_ctx();
+    let lctx_after = RunCounters::snapshot(&engine);
+    assert!(lctx_after.arena_allocs > load_after.arena_allocs, "contexts still allocate");
+
+    let lwarm_before = RunCounters::snapshot(&engine);
+    let lrun = loaded.run(&mut lctx, &warmup).unwrap();
+    let lwarm_after = RunCounters::snapshot(&engine);
+    assert_eq!(
+        lwarm_after, lwarm_before,
+        "a warm run on a LOADED artifact must also do zero compile-side work"
+    );
+    assert_eq!(lrun.total_cycles, first.total_cycles, "cycles bit-identical after round trip");
+    assert_eq!(
+        lrun.total_energy_uj.to_bits(),
+        first.total_energy_uj.to_bits(),
+        "energy bit-identical after round trip"
+    );
+    assert_eq!(lctx.output().data, fresh_output.data, "outputs bit-identical after round trip");
+
+    // The same load contract holds across the preset grid.
+    for preset in ["vgg-mini", "paper-baseline"] {
+        let pnet = nn::build_preset(preset, 7).unwrap();
+        let pcompiled = engine.compile(&pnet).unwrap();
+        let ppath = dir.join(format!("{preset}.cgrart"));
+        pcompiled.save(&ppath).unwrap();
+        let before = RunCounters::snapshot(&engine);
+        let (ploaded, _) = CompiledNet::load(&engine, &ppath).unwrap();
+        assert_eq!(
+            RunCounters::snapshot(&engine),
+            before,
+            "loading the {preset} artifact must do zero compile-side work"
+        );
+        let input = pnet.random_input(8, 3);
+        let (mut ca, mut cb) = (pcompiled.new_ctx(), ploaded.new_ctx());
+        let ra = pcompiled.run(&mut ca, &input).unwrap();
+        let warm = RunCounters::snapshot(&engine);
+        let rb = ploaded.run(&mut cb, &input).unwrap();
+        assert_eq!(RunCounters::snapshot(&engine), warm, "{preset}: loaded warm run clean");
+        assert_eq!(ra.total_cycles, rb.total_cycles, "{preset}: cycles");
+        assert_eq!(ra.total_energy_uj.to_bits(), rb.total_energy_uj.to_bits(), "{preset}: uJ");
+        assert_eq!(ca.output().data, cb.output().data, "{preset}: outputs");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }

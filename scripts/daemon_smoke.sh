@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Smoke-test the `cgra daemon` serving subsystem over its real NDJSON/TCP
 # transport using nothing but bash's /dev/tcp: compile-miss, cache-hit,
-# over-deadline rejection, stats shape (registry hit/miss/eviction
+# over-deadline rejection, stats shape (registry hit/miss/eviction/disk
 # counters + per-tenant bottleneck attribution under --profile), clean
-# shutdown (exit 0).
+# shutdown (exit 0), and disk-tier persistence: a restarted daemon
+# pointed at the same --artifact-dir serves its first request from the
+# serialized artifact (disk hit) instead of recompiling.
 #
 # Usage: scripts/daemon_smoke.sh [path-to-cgra-binary]
 set -euo pipefail
@@ -12,9 +14,10 @@ BIN="${1:-target/release/cgra}"
 [ -x "$BIN" ] || { echo "FAIL: binary '$BIN' not found or not executable" >&2; exit 1; }
 
 LOG="$(mktemp)"
-trap 'kill "$DAEMON_PID" 2>/dev/null || true; rm -f "$LOG"' EXIT
+ARTDIR="$(mktemp -d)"
+trap 'kill "$DAEMON_PID" 2>/dev/null || true; rm -f "$LOG"; rm -rf "$ARTDIR"' EXIT
 
-"$BIN" daemon --port 0 --workers 2 --batch 4 --profile >"$LOG" 2>&1 &
+"$BIN" daemon --port 0 --workers 2 --batch 4 --profile --artifact-dir "$ARTDIR" >"$LOG" 2>&1 &
 DAEMON_PID=$!
 
 # Wait for the OS-assigned port to be announced.
@@ -69,6 +72,8 @@ expect '"registry"' "registry counters present"
 expect '"hits":1' "registry hit counter counted the repeat"
 expect '"misses"' "registry miss counter present"
 expect '"evictions"' "registry eviction counter present"
+expect '"disk_writes":1' "first compile persisted to the artifact disk tier"
+expect '"disk_hits":0' "nothing loaded from disk yet in this process"
 expect '"smoke"' "per-tenant row present"
 expect '"bottleneck"' "per-tenant bottleneck attribution present (--profile)"
 expect '"version"' "daemon reports its crate version"
@@ -95,7 +100,37 @@ if ! wait "$DAEMON_PID"; then
     cat "$LOG" >&2
     exit 1
 fi
-trap 'rm -f "$LOG"' EXIT
-echo "daemon exited cleanly; final summary:"
+echo "daemon exited cleanly"
+
+echo "7. a restarted daemon loads from the disk tier instead of recompiling"
+: >"$LOG"
+"$BIN" daemon --port 0 --workers 2 --batch 4 --profile --artifact-dir "$ARTDIR" >"$LOG" 2>&1 &
+DAEMON_PID=$!
+PORT=""
+for _ in $(seq 1 100); do
+    PORT="$(sed -n 's/.*listening on [0-9.]*:\([0-9]*\).*/\1/p' "$LOG")"
+    [ -n "$PORT" ] && break
+    kill -0 "$DAEMON_PID" 2>/dev/null || { echo "FAIL: restarted daemon died during startup" >&2; cat "$LOG" >&2; exit 1; }
+    sleep 0.1
+done
+[ -n "$PORT" ] || { echo "FAIL: restarted daemon never announced its port" >&2; cat "$LOG" >&2; exit 1; }
+echo "daemon back up on port $PORT"
+
+req "$INFER"
+expect '"ok":true' "request served after restart"
+expect '"cache":"miss"' "in-memory registry is cold after a restart"
+req '{"op":"stats"}'
+expect '"disk_hits":1' "artifact loaded from the disk tier, zero rebuilds"
+expect '"disk_writes":0' "nothing re-persisted — the artifact was already on disk"
+
+req '{"op":"shutdown"}'
+expect '"ok":true' "shutdown acknowledged after restart"
+if ! wait "$DAEMON_PID"; then
+    echo "FAIL: restarted daemon exited non-zero after shutdown" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+trap 'rm -f "$LOG"; rm -rf "$ARTDIR"' EXIT
+echo "restarted daemon exited cleanly; final summary:"
 tail -n +2 "$LOG" | sed 's/^/  /'
 echo "PASS: daemon smoke"
